@@ -1,0 +1,81 @@
+//! End-to-end driver (the EXPERIMENTS.md headline run): the full system —
+//! synthetic workload → simulated MapReduce cluster → all scalable
+//! algorithms → the paper's Figure-1-style cost/time tables — on a real
+//! moderately-sized workload, proving all layers compose (L3 engine, L2/L1
+//! AOT kernels when `--xla` artifacts exist, native fallback otherwise).
+//!
+//! ```bash
+//! cargo run --release --example end_to_end            # native backend
+//! cargo run --release --example end_to_end -- --xla   # PJRT artifacts
+//! cargo run --release --example end_to_end -- --n 1000000
+//! ```
+
+use mrcluster::config::RuntimeBackendKind;
+use mrcluster::experiments::{figure1, make_backend, ExperimentParams};
+use mrcluster::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let use_xla = args.iter().any(|a| a == "--xla");
+    let n = args
+        .iter()
+        .position(|a| a == "--n")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(200_000);
+
+    let cluster = ClusterConfig {
+        k: 25,
+        epsilon: 0.1,
+        machines: 100,
+        backend: if use_xla {
+            RuntimeBackendKind::Xla
+        } else {
+            RuntimeBackendKind::Native
+        },
+        // Keep local search affordable on the full Figure-1 sweep.
+        ls_max_swaps: 60,
+        ..Default::default()
+    };
+    let params = ExperimentParams {
+        k: 25,
+        sigma: 0.1,
+        alpha: 0.0,
+        seed: 42,
+        repeats: 1,
+        cluster,
+    };
+    let backend = make_backend(&params.cluster);
+    println!(
+        "end-to-end: n = {n}, k = 25, 100 simulated machines, backend = {}",
+        backend.name()
+    );
+
+    // LocalSearch capped at 40k points, exactly like the paper's Figure 1.
+    let ns = [n / 20, n / 4, n];
+    let report = figure1(&params, &ns, 40_000, backend.as_ref())?;
+
+    println!("\n== cost (normalized to Parallel-Lloyd) ==");
+    print!("{}", report.cost_table("Parallel-Lloyd").render());
+    println!("\n== time (simulated seconds, paper methodology) ==");
+    print!("{}", report.time_table().render());
+
+    println!("\nheadline checks (paper §4.3):");
+    for (a, b, claim) in [
+        ("Sampling-Lloyd", "Parallel-Lloyd", "paper: ~20x at n = 10^6"),
+        ("Sampling-LocalSearch", "LocalSearch", "paper: >1000x"),
+        (
+            "Sampling-LocalSearch",
+            "Divide-LocalSearch",
+            "paper: >10x at large n",
+        ),
+    ] {
+        match report.speedup(a, b) {
+            Some(s) => println!("  {a} vs {b}: {s:.1}x   ({claim})"),
+            None => println!("  {a} vs {b}: n/a"),
+        }
+    }
+    Ok(())
+}

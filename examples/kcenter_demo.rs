@@ -1,0 +1,89 @@
+//! k-center on a *graph metric* — the paper's theory-side input model
+//! (explicit distances / shortest paths) rather than coordinates.
+//!
+//! Scenario: place k service hubs in a road network so the farthest
+//! intersection is as close as possible (the classical k-center story).
+//! We build a random geometric graph, take shortest-path distances as the
+//! metric (the explicit Θ(n²) representation of the paper's input section),
+//! run Gonzalez directly on the matrix, and compare with MapReduce-kCenter
+//! run on the coordinate embedding — reproducing the paper's observation
+//! that the k-center objective is sensitive to sampling (E3).
+//!
+//! ```bash
+//! cargo run --release --example kcenter_demo
+//! ```
+
+use mrcluster::geometry::DistanceMatrix;
+use mrcluster::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let mut rng = Rng::new(99);
+
+    // Random geometric graph: n nodes in the unit square, edges below a
+    // connection radius, weight = Euclidean length.
+    let n = 600;
+    let k = 8;
+    let mut coords = Vec::with_capacity(n * 2);
+    for _ in 0..n {
+        coords.push(rng.f32());
+        coords.push(rng.f32());
+    }
+    let nodes = PointSet::from_flat(2, coords);
+    let radius = 0.09f32;
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = mrcluster::geometry::metric::sq_dist(nodes.row(i), nodes.row(j)).sqrt();
+            if d < radius {
+                edges.push((i, j, d));
+            }
+        }
+    }
+    println!("road network: {n} intersections, {} segments", edges.len());
+
+    // The explicit distance representation (Floyd–Warshall shortest paths).
+    let matrix = DistanceMatrix::from_graph(n, &edges);
+
+    // Gonzalez on the graph metric (farthest-first on the matrix).
+    let mut centers = vec![0usize];
+    for _ in 1..k {
+        let far = (0..n)
+            .max_by(|&a, &b| {
+                matrix
+                    .dist_to_set(a, &centers)
+                    .partial_cmp(&matrix.dist_to_set(b, &centers))
+                    .unwrap()
+            })
+            .unwrap();
+        centers.push(far);
+    }
+    let graph_radius = matrix.kcenter_cost(&centers);
+    println!("graph-metric Gonzalez: radius {graph_radius:.4} (shortest-path metric)");
+
+    // MapReduce-kCenter on the coordinate embedding (Euclidean lower-bounds
+    // the path metric, so radii are comparable but not identical).
+    let cfg = ClusterConfig {
+        k,
+        epsilon: 0.2,
+        machines: 16,
+        seed: 3,
+        ..Default::default()
+    };
+    let out = run_algorithm(Algorithm::MrKCenter, &nodes, &cfg)?;
+    println!(
+        "MapReduce-kCenter (Euclidean): radius {:.4}, sample {:?}, rounds {}",
+        out.cost.center, out.reduced_size, out.rounds
+    );
+
+    // Full-data Euclidean Gonzalez reference — the paper's E3 comparison.
+    let mut rng2 = Rng::new(5);
+    let full = gonzalez::gonzalez(&nodes, k, &mut rng2);
+    println!(
+        "full-data Gonzalez (Euclidean): radius {:.4} -> sampling ratio {:.2}x \
+         (paper: up to ~4x worse)",
+        full.radius,
+        out.cost.center / full.radius.max(1e-12)
+    );
+    Ok(())
+}

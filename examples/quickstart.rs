@@ -1,0 +1,58 @@
+//! Quickstart: generate a small synthetic dataset (the paper's §4.2
+//! workload) and cluster it with MapReduce-kMedian (Sampling-Lloyd), the
+//! paper's headline algorithm.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mrcluster::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+
+    // The paper's data model: k planted centers in the unit cube, Gaussian
+    // spread sigma, Zipf-distributed cluster sizes (alpha = 0 -> uniform).
+    let data = DataGenConfig {
+        n: 100_000,
+        k: 25,
+        dim: 3,
+        sigma: 0.1,
+        alpha: 0.0,
+        seed: 7,
+    }
+    .generate();
+    println!("generated {} points in R^3", data.points.len());
+
+    // MapReduce-kMedian (Algorithm 5) with A = Lloyd on a 100-machine
+    // simulated cluster, practical sampling constants, eps = 0.1.
+    let cfg = ClusterConfig {
+        k: 25,
+        epsilon: 0.1,
+        machines: 100,
+        seed: 7,
+        ..Default::default()
+    };
+    let out = run_algorithm(Algorithm::SamplingLloyd, &data.points, &cfg)?;
+
+    println!("algorithm     : {}", out.algorithm.name());
+    println!("k-median cost : {:.2}", out.cost.median);
+    println!(
+        "planted cost  : {:.2} (cost of the generator's true centers)",
+        data.planted_cost_median()
+    );
+    println!("sample size   : {:?}", out.reduced_size);
+    println!("MR rounds     : {}", out.rounds);
+    println!("sim time      : {:.3}s (paper methodology: sum of per-round max-machine time)",
+        out.sim_time.as_secs_f64());
+    println!("wall time     : {:.3}s", out.wall_time.as_secs_f64());
+
+    // Compare with the Parallel-Lloyd baseline the paper normalizes to.
+    let base = run_algorithm(Algorithm::ParallelLloyd, &data.points, &cfg)?;
+    println!(
+        "vs Parallel-Lloyd: cost ratio {:.3}, speedup {:.1}x",
+        out.cost.median / base.cost.median,
+        base.sim_time.as_secs_f64() / out.sim_time.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}

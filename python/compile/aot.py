@@ -1,0 +1,116 @@
+"""AOT exporter: lower the L2 model functions to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Each export is specialized to a shape bucket (B, K, D) — XLA executables are
+shape-monomorphic, so the rust runtime pads every real workload up to the
+nearest bucket (rust/src/runtime/bucket.rs) and masks the padding.
+
+Outputs:
+  artifacts/<func>_b<B>_k<K>_d<D>.hlo.txt
+  artifacts/manifest.json     — consumed by rust/src/runtime/manifest.rs
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import EXPORTS, example_args
+
+# Shape buckets shipped by default. D=3 matches the paper's experiments
+# (points in R^3, Section 4.2); K covers the paper's k=25 (bucket 32), large
+# k sweeps (128/512), and Iterative-Sample's returned sample used as a
+# "center set" in the weight phase (2048). D=8 exercises a non-trivial
+# feature dimension for the library use-case.
+DEFAULT_BUCKETS = [
+    # (B, K, D)
+    (2048, 32, 3),
+    (2048, 128, 3),
+    (2048, 512, 3),
+    (2048, 2048, 3),
+    (2048, 64, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_bucket(func_name, fn, b, k, d, out_dir):
+    lowered = jax.jit(fn).lower(*example_args(b, k, d))
+    text = to_hlo_text(lowered)
+    fname = f"{func_name}_b{b}_k{k}_d{d}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "func": func_name,
+        "b": b,
+        "k": k,
+        "d": d,
+        "file": fname,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "bytes": len(text),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=None,
+        help="comma-separated B:K:D triples, e.g. 2048:32:3,2048:128:3",
+    )
+    ap.add_argument(
+        "--funcs", default=None, help="comma-separated subset of funcs to export"
+    )
+    args = ap.parse_args()
+
+    buckets = DEFAULT_BUCKETS
+    if args.buckets:
+        buckets = [
+            tuple(int(x) for x in spec.split(":")) for spec in args.buckets.split(",")
+        ]
+    funcs = list(EXPORTS)
+    if args.funcs:
+        funcs = args.funcs.split(",")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for func_name in funcs:
+        fn, n_out = EXPORTS[func_name]
+        for b, k, d in buckets:
+            e = export_bucket(func_name, fn, b, k, d, args.out_dir)
+            e["n_outputs"] = n_out
+            entries.append(e)
+            print(f"  {e['file']}: {e['bytes']} bytes")
+
+    manifest = {
+        "version": 1,
+        "format": "hlo-text",
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: blocked nearest-center assignment.
+
+This is the compute hot-spot of every algorithm in the paper (Lloyd
+iterations, Iterative-Sample's d(x, S) pruning, MapReduce-kMedian's weight
+phase): for a block of points X (B, D) and a center set C (K, D), compute for
+each point the squared distance to — and index of — its nearest *valid*
+center.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): instead of the naive
+(B, K, D) difference tensor, we use the expansion
+
+    D2[b, k] = |x_b|^2 - 2 * (X @ C^T)[b, k] + |c_k|^2
+
+whose dominant term is a (B, D) x (D, K) matmul — an MXU-shaped contraction.
+The Pallas grid tiles the point axis: each grid step holds one (BLOCK_B, D)
+point tile plus the full center set in VMEM (K <= 512, D <= 64 fits easily in
+16 MiB) and writes one (BLOCK_B,) min/argmin pair. The HBM<->VMEM schedule
+that the paper's cluster expressed with per-machine partitioning is expressed
+here with the BlockSpec index maps.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel into plain HLO ops so the AOT
+artifact runs on the rust CPU client. Real-TPU perf is estimated in
+DESIGN.md / EXPERIMENTS.md §Perf from the VMEM footprint and MXU utilization
+of this same tiling.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Penalty added to masked-out centers. Large enough to exceed any real
+# squared distance in our workloads (unit-cube data => d2 <= D * 4), small
+# enough that f32 arithmetic on it stays finite.
+MASK_PENALTY = 1e30
+
+# Default point-tile height. 512 rows x (D + K) f32 columns keeps the tile
+# plus the distance block well under VMEM budget for every bucket we ship.
+DEFAULT_BLOCK_B = 512
+
+
+def _assign_kernel(x_ref, c_ref, cm_ref, md_ref, am_ref):
+    """One grid step: nearest valid center for a (BLOCK_B, D) point tile."""
+    x = x_ref[...]  # (bb, D) f32, VMEM
+    c = c_ref[...]  # (K, D) f32, VMEM (replicated across grid steps)
+    cm = cm_ref[...]  # (K,)  f32
+
+    # |x|^2 - 2 x.c + |c|^2 ; the dot_general is the MXU-eligible term.
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (bb, 1)
+    c2 = jnp.sum(c * c, axis=1)  # (K,)
+    xc = jax.lax.dot_general(
+        x, c, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bb, K)
+    d2 = x2 - 2.0 * xc + c2[None, :]
+    # Cancellation can push tiny true-zero distances slightly negative.
+    d2 = jnp.maximum(d2, 0.0)
+    # Invalid centers must lose every argmin: add a huge penalty.
+    d2 = d2 + (1.0 - cm[None, :]) * MASK_PENALTY
+
+    md_ref[...] = jnp.min(d2, axis=1)
+    am_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def assign_pallas(points, centers, cmask, *, block_b=DEFAULT_BLOCK_B):
+    """Nearest-valid-center assignment via the Pallas kernel.
+
+    Args:
+      points:  f32[B, D]; B must be a multiple of ``block_b`` (the AOT
+               buckets guarantee this; rust pads to the bucket shape).
+      centers: f32[K, D]
+      cmask:   f32[K] (1 = valid center, 0 = padding)
+      block_b: point-tile height (static).
+
+    Returns:
+      (min_sqdist f32[B], argmin i32[B]).
+    """
+    b, d = points.shape
+    k, d2 = centers.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch: points D={d} centers D={d2}")
+    block_b = min(block_b, b)  # small buckets use a single tile
+    if b % block_b != 0:
+        raise ValueError(f"B={b} not a multiple of block_b={block_b}")
+
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(points, centers, cmask)

@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the reference semantics that every kernel in this package must
+match bit-for-bit (up to float tolerance). They are deliberately written in
+the most naive way possible — O(B*K*D) dense broadcasting — so they are easy
+to audit against the paper's definitions.
+
+Conventions (shared with distance.py / model.py):
+  points : f32[B, D]   point block (rows may be padding)
+  centers: f32[K, D]   center set (rows may be padding)
+  pmask  : f32[B]      1.0 for valid points, 0.0 for padding
+  cmask  : f32[K]      1.0 for valid centers, 0.0 for padding
+
+Padded centers must never be selected as the argmin; padded points produce
+zero contribution to any aggregate (sums / counts / costs).
+"""
+
+import jax.numpy as jnp
+
+_BIG = jnp.float32(3.4e38)  # stand-in for +inf that survives f32 arithmetic
+
+
+def sq_distances_ref(points, centers):
+    """Dense squared Euclidean distances, f32[B, K]."""
+    diff = points[:, None, :] - centers[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign_ref(points, centers, cmask):
+    """(min_sqdist f32[B], argmin i32[B]) over *valid* centers only."""
+    d2 = sq_distances_ref(points, centers)
+    d2 = jnp.where(cmask[None, :] > 0.5, d2, _BIG)
+    return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def lloyd_step_ref(points, centers, pmask, cmask):
+    """One Lloyd accumulation step (assignment + masked cluster stats).
+
+    Returns (sums f32[K, D], counts f32[K], cost_median f32, cost_means f32):
+      sums[j]     = sum of valid points assigned to center j
+      counts[j]   = number of valid points assigned to center j
+      cost_median = sum over valid points of  d(x, nearest center)
+      cost_means  = sum over valid points of  d(x, nearest center)^2
+    """
+    k = centers.shape[0]
+    d2, idx = assign_ref(points, centers, cmask)
+    w = pmask
+    onehot = (jnp.arange(k)[None, :] == idx[:, None]).astype(jnp.float32)
+    onehot = onehot * w[:, None]
+    sums = onehot.T @ points
+    counts = jnp.sum(onehot, axis=0)
+    d2v = jnp.maximum(d2, 0.0)
+    cost_median = jnp.sum(jnp.sqrt(d2v) * w)
+    cost_means = jnp.sum(d2v * w)
+    return sums, counts, cost_median, cost_means
+
+
+def min_dist_to_set_ref(points, sample, pmask, smask):
+    """d(x, S) for every point: f32[B] (0 for padded points)."""
+    d2, _ = assign_ref(points, sample, smask)
+    return jnp.sqrt(jnp.maximum(d2, 0.0)) * pmask

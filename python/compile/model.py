@@ -1,0 +1,87 @@
+"""L2: the paper's numeric inner loops as JAX functions, built on the L1
+Pallas kernel.
+
+Three exported computations, each AOT-lowered per shape bucket by aot.py and
+executed from the rust hot path (rust/src/runtime/):
+
+  assign     (points, centers, pmask, cmask) -> (min_sqdist[B], argmin[B])
+      The inner loop of Iterative-Sample's pruning step (d(x, S) vs pivot)
+      and of MapReduce-kMedian's weight phase.
+
+  lloyd_step (points, centers, pmask, cmask)
+      -> (sums[K, D], counts[K], cost_median[], cost_means[])
+      One Lloyd accumulation over a point block: nearest-center assignment
+      plus masked per-cluster sums/counts and both clustering objectives.
+      Rust aggregates blocks across "machines" and recomputes means —
+      exactly the paper's Parallel-Lloyd round structure.
+
+  weight_histogram (points, centers, pmask, cmask) -> (counts[K], cost_median[])
+      MapReduce-kMedian step 4: per-reducer w^i(y) = |{x : x^C = y}|,
+      plus the partial k-median cost (used for evaluation).
+
+All shapes are static per bucket; padding rows are killed by pmask/cmask.
+Every function here must agree with kernels/ref.py (enforced by
+python/tests/), and the semantics are mirrored by rust/src/runtime/native.rs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.distance import assign_pallas
+
+
+def assign(points, centers, pmask, cmask):
+    """Nearest-valid-center assignment for a point block.
+
+    min_sqdist of padded points is forced to 0 so downstream sums can ignore
+    pmask; argmin of padded points is whatever the kernel computed (rust
+    discards those rows).
+    """
+    md, am = assign_pallas(points, centers, cmask)
+    return md * pmask, am
+
+
+def lloyd_step(points, centers, pmask, cmask):
+    """One Lloyd accumulation step over a point block (see module doc)."""
+    k = centers.shape[0]
+    md, am = assign(points, centers, pmask, cmask)
+    w = pmask
+    # Scatter-add via one-hot matmul: keeps the whole step MXU-shaped and
+    # avoids data-dependent scatters, which lower poorly on TPU.
+    onehot = (jnp.arange(k, dtype=jnp.int32)[None, :] == am[:, None])
+    onehot = onehot.astype(jnp.float32) * w[:, None]
+    sums = jax.lax.dot_general(
+        onehot, points, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (K, D)
+    counts = jnp.sum(onehot, axis=0)  # (K,)
+    cost_median = jnp.sum(jnp.sqrt(md))  # md already 0 on padded rows
+    cost_means = jnp.sum(md)
+    return sums, counts, cost_median, cost_means
+
+
+def weight_histogram(points, centers, pmask, cmask):
+    """Per-block center weights (MapReduce-kMedian step 4) + partial cost."""
+    k = centers.shape[0]
+    md, am = assign(points, centers, pmask, cmask)
+    onehot = (jnp.arange(k, dtype=jnp.int32)[None, :] == am[:, None])
+    counts = jnp.sum(onehot.astype(jnp.float32) * pmask[:, None], axis=0)
+    return counts, jnp.sum(jnp.sqrt(md))
+
+
+def example_args(b, k, d):
+    """ShapeDtypeStructs for lowering at bucket (B=b, K=k, D=d)."""
+    return (
+        jax.ShapeDtypeStruct((b, d), jnp.float32),
+        jax.ShapeDtypeStruct((k, d), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+    )
+
+
+# Registry consumed by aot.py: name -> (callable, n_outputs).
+EXPORTS = {
+    "assign": (assign, 2),
+    "lloyd_step": (lloyd_step, 4),
+    "weight_histogram": (weight_histogram, 2),
+}

@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas assign kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes, masks, and degenerate geometries;
+every case asserts allclose (distances) and exact match (argmin indices,
+modulo distance ties, which we compare through the distance value).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.distance import assign_pallas, MASK_PENALTY
+from compile.kernels.ref import assign_ref, sq_distances_ref
+
+RNG = np.random.RandomState
+
+
+def _mk(b, k, d, seed=0, scale=1.0, cvalid=None):
+    r = RNG(seed)
+    x = (r.rand(b, d).astype(np.float32) * scale)
+    c = (r.rand(k, d).astype(np.float32) * scale)
+    cm = np.ones((k,), np.float32)
+    if cvalid is not None:
+        cm[cvalid:] = 0.0
+    return jnp.asarray(x), jnp.asarray(c), jnp.asarray(cm)
+
+
+def _check(x, c, cm, block_b):
+    # The kernel's |x|^2 - 2xc + |c|^2 expansion loses ~1e-4 relative
+    # precision to cancellation vs the oracle's (x-c)^2 at large coordinate
+    # scales; 1e-3 relative is the contract the rust runtime assumes.
+    md, am = assign_pallas(x, c, cm, block_b=block_b)
+    rmd, ram = assign_ref(x, c, cm)
+    # Absolute error of the expansion scales with the squared data magnitude
+    # (cancellation), so the tolerance floor is relative to max |d2|.
+    d2 = np.asarray(sq_distances_ref(x, c))
+    atol = 1e-6 * (float(d2.max()) + 1.0)
+    np.testing.assert_allclose(np.asarray(md), np.asarray(rmd), rtol=1e-3, atol=atol)
+    # Argmin may differ only on (near-)distance ties: compare through d2.
+    b = x.shape[0]
+    got = d2[np.arange(b), np.asarray(am)]
+    want = d2[np.arange(b), np.asarray(ram)]
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=atol)
+    # The argmin must always be a valid center.
+    assert np.all(np.asarray(cm)[np.asarray(am)] > 0.5)
+
+
+class TestAssignBasic:
+    def test_single_block(self):
+        x, c, cm = _mk(512, 32, 3)
+        _check(x, c, cm, 512)
+
+    def test_multi_block(self):
+        x, c, cm = _mk(2048, 32, 3)
+        _check(x, c, cm, 512)
+
+    def test_masked_centers(self):
+        x, c, cm = _mk(512, 32, 3, cvalid=25)
+        _check(x, c, cm, 512)
+
+    def test_single_valid_center(self):
+        x, c, cm = _mk(512, 32, 3, cvalid=1)
+        md, am = assign_pallas(x, c, cm, block_b=512)
+        assert np.all(np.asarray(am) == 0)
+
+    def test_point_equals_center(self):
+        x, c, cm = _mk(512, 16, 3)
+        x = x.at[7].set(c[3])
+        md, am = assign_pallas(x, c, cm, block_b=512)
+        assert np.asarray(md)[7] <= 1e-6
+        assert np.asarray(am)[7] == 3
+
+    def test_all_points_identical(self):
+        x, c, cm = _mk(512, 8, 3)
+        x = jnp.broadcast_to(x[0], x.shape)
+        _check(x, c, cm, 512)
+
+    def test_all_centers_identical(self):
+        x, c, cm = _mk(512, 8, 3)
+        c = jnp.broadcast_to(c[0], c.shape)
+        md, am = assign_pallas(x, c, cm, block_b=512)
+        rmd, _ = assign_ref(x, c, cm)
+        np.testing.assert_allclose(np.asarray(md), np.asarray(rmd), rtol=1e-4, atol=1e-5)
+
+    def test_min_dist_nonnegative(self):
+        x, c, cm = _mk(1024, 64, 3, scale=1e-3)
+        md, _ = assign_pallas(x, c, cm, block_b=512)
+        assert np.all(np.asarray(md) >= 0.0)
+
+    def test_high_dim(self):
+        x, c, cm = _mk(512, 64, 8)
+        _check(x, c, cm, 512)
+
+    def test_large_coordinates(self):
+        # Distances stay far below MASK_PENALTY even at large scale.
+        x, c, cm = _mk(512, 16, 3, scale=1e3, cvalid=10)
+        _check(x, c, cm, 512)
+        md, _ = assign_pallas(x, c, cm, block_b=512)
+        assert np.asarray(md).max() < MASK_PENALTY / 2
+
+
+class TestAssignValidation:
+    def test_dim_mismatch_raises(self):
+        x, _, _ = _mk(512, 8, 3)
+        _, c, cm = _mk(512, 8, 4, seed=1)
+        with pytest.raises(ValueError, match="dim mismatch"):
+            assign_pallas(x, c, cm)
+
+    def test_block_divisibility_raises(self):
+        x, c, cm = _mk(100, 8, 3)
+        with pytest.raises(ValueError, match="not a multiple"):
+            assign_pallas(x, c, cm, block_b=64)
+
+    def test_small_input_clamps_block(self):
+        # B smaller than the default tile height uses a single tile.
+        x, c, cm = _mk(256, 8, 3)
+        _check(x, c, cm, 512)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b_blocks=st.integers(1, 4),
+    block_b=st.sampled_from([128, 256, 512]),
+    k=st.integers(1, 96),
+    d=st.integers(1, 10),
+    cvalid_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-2, 1.0, 1e2]),
+)
+def test_assign_hypothesis(b_blocks, block_b, k, d, cvalid_frac, seed, scale):
+    b = b_blocks * block_b
+    cvalid = max(1, int(k * cvalid_frac))
+    x, c, cm = _mk(b, k, d, seed=seed, scale=scale, cvalid=cvalid)
+    _check(x, c, cm, block_b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_assign_block_size_invariance(seed):
+    """The result must not depend on the tile height."""
+    x, c, cm = _mk(1024, 24, 3, seed=seed, cvalid=20)
+    md1, am1 = assign_pallas(x, c, cm, block_b=128)
+    md2, am2 = assign_pallas(x, c, cm, block_b=1024)
+    np.testing.assert_allclose(np.asarray(md1), np.asarray(md2), rtol=1e-5)
+    assert np.array_equal(np.asarray(am1), np.asarray(am2))

@@ -1,0 +1,108 @@
+"""L2 correctness: model.py functions vs the jnp oracle, including the
+masked-padding semantics the rust runtime relies on."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.RandomState
+
+
+def _mk(b, k, d, seed=0, pvalid=None, cvalid=None):
+    r = RNG(seed)
+    x = jnp.asarray(r.rand(b, d).astype(np.float32))
+    c = jnp.asarray(r.rand(k, d).astype(np.float32))
+    pm = np.ones((b,), np.float32)
+    cm = np.ones((k,), np.float32)
+    if pvalid is not None:
+        pm[pvalid:] = 0.0
+    if cvalid is not None:
+        cm[cvalid:] = 0.0
+    return x, c, jnp.asarray(pm), jnp.asarray(cm)
+
+
+class TestLloydStep:
+    def test_matches_ref(self):
+        x, c, pm, cm = _mk(512, 32, 3, pvalid=400, cvalid=25)
+        got = model.lloyd_step(x, c, pm, cm)
+        want = ref.lloyd_step_ref(x, c, pm, cm)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-4)
+
+    def test_counts_sum_to_valid_points(self):
+        x, c, pm, cm = _mk(1024, 16, 3, pvalid=700)
+        _, counts, _, _ = model.lloyd_step(x, c, pm, cm)
+        assert abs(float(jnp.sum(counts)) - 700.0) < 1e-3
+
+    def test_padded_points_no_contribution(self):
+        x, c, pm, cm = _mk(512, 16, 3, pvalid=256)
+        # Poison the padded rows with huge values; results must not change.
+        x2 = x.at[256:].set(1e6)
+        a = model.lloyd_step(x, c, pm, cm)
+        b = model.lloyd_step(x2, c, pm, cm)
+        for g, w in zip(a, b):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4)
+
+    def test_sums_recover_means(self):
+        # Points exactly at two centers: means must reproduce the centers.
+        k, d = 4, 3
+        c = jnp.asarray(RNG(3).rand(k, d).astype(np.float32))
+        x = jnp.concatenate([jnp.tile(c[0], (256, 1)), jnp.tile(c[1], (256, 1))])
+        pm = jnp.ones((512,), jnp.float32)
+        cm = jnp.ones((k,), jnp.float32)
+        sums, counts, cm_cost, _ = model.lloyd_step(x, c, pm, cm)
+        means = np.asarray(sums) / np.maximum(np.asarray(counts)[:, None], 1.0)
+        np.testing.assert_allclose(means[0], np.asarray(c[0]), rtol=1e-5)
+        np.testing.assert_allclose(means[1], np.asarray(c[1]), rtol=1e-5)
+        assert float(cm_cost) < 1e-3
+
+    def test_cost_zero_when_points_are_centers(self):
+        x, c, pm, cm = _mk(512, 8, 3)
+        x = jnp.tile(c[2], (512, 1))
+        _, _, cost_median, cost_means = model.lloyd_step(x, c, pm, cm)
+        assert float(cost_median) < 1e-2
+        assert float(cost_means) < 1e-4
+
+
+class TestWeightHistogram:
+    def test_matches_lloyd_counts(self):
+        x, c, pm, cm = _mk(512, 32, 3, pvalid=300, cvalid=20)
+        wh, cost = model.weight_histogram(x, c, pm, cm)
+        _, counts, cost_median, _ = model.lloyd_step(x, c, pm, cm)
+        np.testing.assert_allclose(np.asarray(wh), np.asarray(counts), rtol=1e-5)
+        np.testing.assert_allclose(float(cost), float(cost_median), rtol=1e-4)
+
+    def test_weights_nonnegative_integers(self):
+        x, c, pm, cm = _mk(1024, 16, 3)
+        wh, _ = model.weight_histogram(x, c, pm, cm)
+        w = np.asarray(wh)
+        assert np.all(w >= 0)
+        np.testing.assert_allclose(w, np.round(w), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 48),
+    d=st.integers(1, 8),
+    pfrac=st.floats(0.05, 1.0),
+    cfrac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lloyd_step_hypothesis(k, d, pfrac, cfrac, seed):
+    b = 512
+    x, c, pm, cm = _mk(
+        b, k, d, seed=seed,
+        pvalid=max(1, int(b * pfrac)), cvalid=max(1, int(k * cfrac)),
+    )
+    got = model.lloyd_step(x, c, pm, cm)
+    want = ref.lloyd_step_ref(x, c, pm, cm)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4, atol=2e-4)

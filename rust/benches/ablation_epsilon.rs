@@ -1,0 +1,60 @@
+//! Ablation E5: the ε trade-off of Iterative-Sample (§2.1 "there is a
+//! natural trade-off between the sample size and the running time").
+//!
+//! Sweeps ε and reports sample size, loop iterations, simulated time, and
+//! final k-median cost for Sampling-Lloyd.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm_with, Algorithm};
+use mrcluster::data::DataGenConfig;
+use mrcluster::runtime::NativeBackend;
+use mrcluster::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let n = bench_util::scaled(400_000);
+    let data = DataGenConfig {
+        n,
+        k: 25,
+        ..Default::default()
+    }
+    .generate();
+    let base = run_algorithm_with(
+        Algorithm::ParallelLloyd,
+        &data.points,
+        &ClusterConfig {
+            k: 25,
+            machines: 100,
+            ..Default::default()
+        },
+        &NativeBackend,
+    )?;
+
+    let mut t = Table::new(vec![
+        "epsilon", "sample |C|", "rounds", "sim time (s)", "cost ratio",
+    ]);
+    for eps in [0.05f64, 0.1, 0.2, 0.3] {
+        let cfg = ClusterConfig {
+            k: 25,
+            epsilon: eps,
+            machines: 100,
+            ..Default::default()
+        };
+        let out = run_algorithm_with(Algorithm::SamplingLloyd, &data.points, &cfg, &NativeBackend)?;
+        t.row(vec![
+            format!("{eps:.2}"),
+            out.reduced_size.unwrap_or(0).to_string(),
+            out.rounds.to_string(),
+            format!("{:.3}", out.sim_time.as_secs_f64()),
+            format!("{:.3}", out.cost.median / base.cost.median),
+        ]);
+        bench_util::emit(&format!("ablation.eps.{eps}.sample"), out.reduced_size.unwrap_or(0) as f64, "points");
+        bench_util::emit(&format!("ablation.eps.{eps}.sim_time"), out.sim_time.as_secs_f64(), "s");
+    }
+    println!("== E5: epsilon ablation (n = {n}, cost normalized to Parallel-Lloyd) ==");
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Ablation E6: machine-count scaling. The paper fixes 100 simulated
+//! machines; this sweep shows how simulated time scales with the cluster
+//! width for the two most scalable algorithms (strong scaling of the
+//! per-round max-machine time).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm_with, Algorithm};
+use mrcluster::data::DataGenConfig;
+use mrcluster::runtime::NativeBackend;
+use mrcluster::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let n = bench_util::scaled(400_000);
+    let data = DataGenConfig {
+        n,
+        k: 25,
+        ..Default::default()
+    }
+    .generate();
+
+    let mut t = Table::new(vec![
+        "machines",
+        "Parallel-Lloyd sim (s)",
+        "Sampling-Lloyd sim (s)",
+        "speedup",
+    ]);
+    for m in [10usize, 50, 100, 500] {
+        let cfg = ClusterConfig {
+            k: 25,
+            machines: m,
+            ..Default::default()
+        };
+        let pl =
+            run_algorithm_with(Algorithm::ParallelLloyd, &data.points, &cfg, &NativeBackend)?;
+        let sl =
+            run_algorithm_with(Algorithm::SamplingLloyd, &data.points, &cfg, &NativeBackend)?;
+        t.row(vec![
+            m.to_string(),
+            format!("{:.3}", pl.sim_time.as_secs_f64()),
+            format!("{:.3}", sl.sim_time.as_secs_f64()),
+            format!(
+                "{:.1}x",
+                pl.sim_time.as_secs_f64() / sl.sim_time.as_secs_f64().max(1e-9)
+            ),
+        ]);
+        bench_util::emit(&format!("ablation.machines.{m}.parallel_lloyd"), pl.sim_time.as_secs_f64(), "s");
+        bench_util::emit(&format!("ablation.machines.{m}.sampling_lloyd"), sl.sim_time.as_secs_f64(), "s");
+    }
+    println!("== E6: machine-count ablation (n = {n}) ==");
+    print!("{}", t.render());
+    Ok(())
+}

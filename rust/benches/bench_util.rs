@@ -1,0 +1,42 @@
+//! Shared helpers for the bench harness binaries (criterion is unavailable
+//! offline; each bench is a `harness = false` binary that prints the
+//! paper-table rows it regenerates plus simple timing statistics).
+//!
+//! Conventions:
+//! * `MRCLUSTER_BENCH_SCALE` env var scales workload sizes (default 1.0;
+//!   CI can pass 0.05 for smoke runs).
+//! * every bench prints machine-readable `BENCH <name> <value>` lines at
+//!   the end so EXPERIMENTS.md numbers are grep-able.
+
+use std::time::{Duration, Instant};
+
+/// Scale factor for workload sizes.
+pub fn scale() -> f64 {
+    std::env::var("MRCLUSTER_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(1.0)
+}
+
+/// Scale an n, keeping it sane.
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(500)
+}
+
+/// Measure `f` `reps` times; returns (min, mean) durations.
+pub fn measure<F: FnMut()>(reps: usize, mut f: F) -> (Duration, Duration) {
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let min = *times.iter().min().unwrap();
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    (min, mean)
+}
+
+/// Print a machine-readable metric line.
+pub fn emit(name: &str, value: f64, unit: &str) {
+    println!("BENCH {name} {value:.6} {unit}");
+}

@@ -1,0 +1,65 @@
+//! Bench: regenerate **Figure 1** (cost + time tables, moderate n).
+//!
+//! Paper setting: sigma = 0.1, alpha = 0, k = 25, 100 machines, eps = 0.1;
+//! six algorithms; LocalSearch capped at 40k points; costs normalized to
+//! Parallel-Lloyd. `MRCLUSTER_BENCH_SCALE` shrinks the sweep for smoke runs.
+//!
+//! ```bash
+//! cargo bench --bench fig1
+//! MRCLUSTER_BENCH_SCALE=0.1 cargo bench --bench fig1   # quick
+//! ```
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::experiments::{figure1, make_backend, ExperimentParams};
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let ns: Vec<usize> = [10_000usize, 20_000, 40_000, 100_000, 200_000, 400_000, 1_000_000]
+        .iter()
+        .map(|&n| bench_util::scaled(n))
+        .collect();
+    let ls_cap = bench_util::scaled(40_000);
+
+    let params = ExperimentParams {
+        k: 25,
+        sigma: 0.1,
+        alpha: 0.0,
+        seed: 42,
+        repeats: 1,
+        cluster: ClusterConfig {
+            k: 25,
+            epsilon: 0.1,
+            machines: 100,
+            // Sampled-candidate local search keeps the LocalSearch /
+            // Divide-LocalSearch rows affordable on one host while
+            // preserving the paper's relative ordering (the exhaustive
+            // O(n^2 k) variant is cfg.ls_candidate_fraction = 1.0).
+            ls_max_swaps: 30,
+            ls_candidate_fraction: 0.12,
+            ..Default::default()
+        },
+    };
+    let backend = make_backend(&params.cluster);
+    eprintln!("fig1: ns = {ns:?}, ls_cap = {ls_cap}, backend = {}", backend.name());
+
+    let report = figure1(&params, &ns, ls_cap, backend.as_ref())?;
+    println!("== Figure 1: cost (normalized to Parallel-Lloyd) ==");
+    print!("{}", report.cost_table("Parallel-Lloyd").render());
+    println!("\n== Figure 1: time (simulated seconds) ==");
+    print!("{}", report.time_table().render());
+
+    for (a, b) in [
+        ("Sampling-Lloyd", "Parallel-Lloyd"),
+        ("Sampling-LocalSearch", "Parallel-Lloyd"),
+        ("Sampling-LocalSearch", "LocalSearch"),
+        ("Sampling-LocalSearch", "Divide-LocalSearch"),
+    ] {
+        if let Some(s) = report.speedup(a, b) {
+            bench_util::emit(&format!("fig1.speedup.{a}.over.{b}"), s, "x");
+        }
+    }
+    Ok(())
+}

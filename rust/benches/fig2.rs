@@ -1,0 +1,53 @@
+//! Bench: regenerate **Figure 2** (the scalable algorithms at large n).
+//!
+//! Paper setting as Figure 1, n ∈ {2M, 5M, 10M}, algorithms
+//! Parallel-Lloyd / Divide-Lloyd / Sampling-Lloyd / Sampling-LocalSearch.
+//!
+//! ```bash
+//! cargo bench --bench fig2                               # full (slow)
+//! MRCLUSTER_BENCH_SCALE=0.05 cargo bench --bench fig2    # quick
+//! ```
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::experiments::{figure2, make_backend, ExperimentParams};
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let ns: Vec<usize> = [2_000_000usize, 5_000_000, 10_000_000]
+        .iter()
+        .map(|&n| bench_util::scaled(n))
+        .collect();
+
+    let params = ExperimentParams {
+        k: 25,
+        sigma: 0.1,
+        alpha: 0.0,
+        seed: 42,
+        repeats: 1,
+        cluster: ClusterConfig {
+            k: 25,
+            epsilon: 0.1,
+            machines: 100,
+            ..Default::default()
+        },
+    };
+    let backend = make_backend(&params.cluster);
+    eprintln!("fig2: ns = {ns:?}, backend = {}", backend.name());
+
+    let report = figure2(&params, &ns, backend.as_ref())?;
+    println!("== Figure 2: cost (normalized to Parallel-Lloyd) ==");
+    print!("{}", report.cost_table("Parallel-Lloyd").render());
+    println!("\n== Figure 2: time (simulated seconds) ==");
+    print!("{}", report.time_table().render());
+
+    if let Some(s) = report.speedup("Sampling-Lloyd", "Divide-Lloyd") {
+        bench_util::emit("fig2.speedup.Sampling-Lloyd.over.Divide-Lloyd", s, "x");
+    }
+    if let Some(s) = report.speedup("Sampling-Lloyd", "Parallel-Lloyd") {
+        bench_util::emit("fig2.speedup.Sampling-Lloyd.over.Parallel-Lloyd", s, "x");
+    }
+    Ok(())
+}

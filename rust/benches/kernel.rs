@@ -1,0 +1,84 @@
+//! Bench E8: the compute hot-spot — nearest-center assignment — across
+//! backends: native rust vs the AOT Pallas/XLA artifact (when built), plus
+//! the derived throughput numbers the §Perf targets are stated in.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use mrcluster::geometry::PointSet;
+use mrcluster::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use mrcluster::util::rng::Rng;
+use mrcluster::util::table::Table;
+
+fn random_ps(n: usize, d: usize, seed: u64) -> PointSet {
+    let mut rng = Rng::new(seed);
+    PointSet::from_flat(d, (0..n * d).map(|_| rng.f32()).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let n = bench_util::scaled(1_000_000);
+    let points = random_ps(n, 3, 1);
+    let reps = 3;
+
+    let mut t = Table::new(vec!["backend", "op", "k", "min (ms)", "Mdist/s"]);
+
+    for &k in &[25usize, 128] {
+        let centers = random_ps(k, 3, 2);
+
+        let (min, _) = bench_util::measure(reps, || {
+            std::hint::black_box(NativeBackend.assign(&points, &centers));
+        });
+        let mdps = (n * k) as f64 / min.as_secs_f64() / 1e6;
+        t.row(vec![
+            "native".to_string(),
+            "assign".to_string(),
+            k.to_string(),
+            format!("{:.1}", min.as_secs_f64() * 1e3),
+            format!("{mdps:.0}"),
+        ]);
+        bench_util::emit(&format!("kernel.native.assign.k{k}"), mdps, "Mdist/s");
+
+        let (min, _) = bench_util::measure(reps, || {
+            std::hint::black_box(NativeBackend.lloyd_step(&points, &centers));
+        });
+        t.row(vec![
+            "native".to_string(),
+            "lloyd_step".to_string(),
+            k.to_string(),
+            format!("{:.1}", min.as_secs_f64() * 1e3),
+            format!("{:.0}", (n * k) as f64 / min.as_secs_f64() / 1e6),
+        ]);
+    }
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let xla = XlaBackend::new(std::path::Path::new("artifacts"))?;
+        // Smaller n for the interpret-mode artifact (it is a correctness
+        // path on CPU; real-TPU perf is estimated in DESIGN.md).
+        let nx = (n / 20).max(2048);
+        let px = random_ps(nx, 3, 3);
+        for &k in &[25usize, 128] {
+            let centers = random_ps(k, 3, 4);
+            // Warm-up compiles the executable.
+            let _ = xla.assign(&px, &centers);
+            let (min, _) = bench_util::measure(reps, || {
+                std::hint::black_box(xla.assign(&px, &centers));
+            });
+            let mdps = (nx * k) as f64 / min.as_secs_f64() / 1e6;
+            t.row(vec![
+                "xla-aot".to_string(),
+                "assign".to_string(),
+                k.to_string(),
+                format!("{:.1}", min.as_secs_f64() * 1e3),
+                format!("{mdps:.0}"),
+            ]);
+            bench_util::emit(&format!("kernel.xla.assign.k{k}"), mdps, "Mdist/s");
+        }
+    } else {
+        eprintln!("artifacts missing — XLA rows skipped (run `make artifacts`)");
+    }
+
+    println!("== E8: assignment kernel (n = {n}, d = 3) ==");
+    print!("{}", t.render());
+    Ok(())
+}

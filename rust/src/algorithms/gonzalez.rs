@@ -1,0 +1,136 @@
+//! Gonzalez's farthest-point traversal — the classic 2-approximation for
+//! k-center [17, 19] and the `A` that MapReduce-kCenter runs on the sample
+//! (Theorem 3.7 then gives 4·2 + 2 = 10 overall).
+//!
+//! O(n·k): maintain d(x, S) incrementally, repeatedly promote the farthest
+//! point.
+
+use crate::geometry::{metric::sq_dist, PointSet};
+use crate::util::rng::Rng;
+
+/// Result of the farthest-point traversal.
+#[derive(Clone, Debug)]
+pub struct GonzalezResult {
+    pub centers: PointSet,
+    pub center_indices: Vec<usize>,
+    /// max_x d(x, centers) — the k-center objective (exact, computed on the
+    /// input set).
+    pub radius: f64,
+}
+
+/// Run Gonzalez on `points`. The first center is chosen by `rng` (any
+/// starting point preserves the 2-approximation).
+pub fn gonzalez(points: &PointSet, k: usize, rng: &mut Rng) -> GonzalezResult {
+    let n = points.len();
+    assert!(k >= 1);
+    if n == 0 {
+        return GonzalezResult {
+            centers: PointSet::with_capacity(points.dim(), 0),
+            center_indices: vec![],
+            radius: 0.0,
+        };
+    }
+    let k = k.min(n);
+    let mut indices = Vec::with_capacity(k);
+    let first = rng.below(n);
+    indices.push(first);
+
+    // d2[x] = squared distance to the current center set.
+    let mut d2: Vec<f32> = (0..n)
+        .map(|i| sq_dist(points.row(i), points.row(first)))
+        .collect();
+
+    while indices.len() < k {
+        // Farthest point from the current set.
+        let (far, &fd) = d2
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if fd <= 0.0 {
+            break; // all remaining points coincide with centers
+        }
+        indices.push(far);
+        for i in 0..n {
+            let nd = sq_dist(points.row(i), points.row(far));
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+
+    let radius = d2
+        .iter()
+        .fold(0.0f32, |m, &x| m.max(x))
+        .max(0.0)
+        .sqrt() as f64;
+    GonzalezResult {
+        centers: points.gather(&indices),
+        center_indices: indices,
+        radius,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::kcenter_cost;
+
+    #[test]
+    fn covers_separated_blobs() {
+        // 4 unit squares far apart: with k=4, radius must be the intra-blob
+        // diameter, not the inter-blob gap.
+        let mut p = PointSet::with_capacity(2, 16);
+        for (bx, by) in [(0.0, 0.0), (100.0, 0.0), (0.0, 100.0), (100.0, 100.0)] {
+            for (dx, dy) in [(0.0, 0.0), (1.0, 0.0), (0.0, 1.0), (1.0, 1.0)] {
+                p.push(&[bx + dx as f32, by + dy as f32]);
+            }
+        }
+        let mut rng = Rng::new(1);
+        let res = gonzalez(&p, 4, &mut rng);
+        assert_eq!(res.centers.len(), 4);
+        assert!(res.radius <= 2.0f64.sqrt() + 1e-5, "radius {}", res.radius);
+    }
+
+    #[test]
+    fn radius_matches_cost_metric() {
+        let mut rng = Rng::new(2);
+        let p = PointSet::from_flat(3, (0..300).map(|_| rng.f32()).collect());
+        let res = gonzalez(&p, 7, &mut rng);
+        let want = kcenter_cost(&p, &res.centers);
+        assert!((res.radius - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn two_approximation_on_line() {
+        // Optimal k-center of equally spaced points on a line is known:
+        // n points spaced 1 apart, k centers => OPT >= (n/k - 1)/2 roughly.
+        let n = 100;
+        let p = PointSet::from_flat(1, (0..n).map(|i| i as f32).collect());
+        let k = 5;
+        let mut rng = Rng::new(3);
+        let res = gonzalez(&p, k, &mut rng);
+        // OPT for 100 colinear points with 5 centers is ~9.9/2 ≈ 10 (each
+        // center covers a segment of ~20). 2-approx bound: radius <= 2*OPT.
+        let opt_upper = (n as f64 / k as f64) / 2.0 + 1.0;
+        assert!(res.radius <= 2.0 * opt_upper, "radius {}", res.radius);
+    }
+
+    #[test]
+    fn k_geq_n_zero_radius() {
+        let p = PointSet::from_flat(1, vec![1.0, 5.0, 9.0]);
+        let mut rng = Rng::new(4);
+        let res = gonzalez(&p, 10, &mut rng);
+        assert_eq!(res.radius, 0.0);
+        assert_eq!(res.centers.len(), 3);
+    }
+
+    #[test]
+    fn duplicate_points_terminate_early() {
+        let p = PointSet::from_flat(2, vec![1.0, 1.0].repeat(10));
+        let mut rng = Rng::new(5);
+        let res = gonzalez(&p, 4, &mut rng);
+        assert_eq!(res.radius, 0.0);
+        assert!(res.centers.len() >= 1);
+    }
+}

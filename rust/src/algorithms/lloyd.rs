@@ -1,0 +1,338 @@
+//! Lloyd's algorithm (sequential, optionally weighted).
+//!
+//! The paper uses Lloyd's for the k-median objective (§4.1, "it can be used
+//! for k-median as well"): centers are updated to the mean of their cluster
+//! (the classical update) while the reported objective is Σ d(x, C). The
+//! weighted variant is what MapReduce-kMedian and MapReduce-Divide-kMedian
+//! run on the collected (sample, weight) sets.
+//!
+//! An optional Weiszfeld refinement replaces the mean update with an
+//! iteratively-reweighted geometric-median step — the "proper" k-median
+//! update — kept as an ablation (`update: UpdateRule::Weiszfeld`).
+
+use super::seeding;
+use crate::geometry::{metric::sq_dist, PointSet};
+use crate::runtime::ComputeBackend;
+use crate::util::rng::Rng;
+
+/// Center update rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateRule {
+    /// Classical mean update (the paper's choice).
+    Mean,
+    /// One Weiszfeld step toward the cluster's geometric median.
+    Weiszfeld,
+}
+
+/// Lloyd configuration.
+#[derive(Clone, Debug)]
+pub struct LloydConfig {
+    pub k: usize,
+    /// Iteration cap (paper-era implementations run a fixed small number).
+    pub max_iters: usize,
+    /// Stop when the relative k-median cost improvement drops below this.
+    pub tol: f64,
+    pub update: UpdateRule,
+    pub seed: u64,
+}
+
+impl Default for LloydConfig {
+    fn default() -> Self {
+        LloydConfig {
+            k: 25,
+            max_iters: 20,
+            tol: 1e-4,
+            update: UpdateRule::Mean,
+            seed: 0,
+        }
+    }
+}
+
+/// Lloyd result.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    pub centers: PointSet,
+    pub iters: usize,
+    /// k-median objective of the final centers (weighted if weights given).
+    pub cost_median: f64,
+    /// Objective value per iteration (for convergence plots).
+    pub history: Vec<f64>,
+}
+
+/// Run (weighted) Lloyd's. `weights = None` is the unweighted case; the
+/// unweighted inner step goes through `backend` (the XLA/native hot path),
+/// the weighted case (small sample sets on the leader machine) is computed
+/// natively.
+pub fn lloyd(
+    points: &PointSet,
+    weights: Option<&[f32]>,
+    cfg: &LloydConfig,
+    backend: &dyn ComputeBackend,
+) -> LloydResult {
+    assert!(cfg.k >= 1);
+    if let Some(w) = weights {
+        assert_eq!(w.len(), points.len(), "weights/points length mismatch");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = seeding::random_distinct(points, cfg.k, &mut rng);
+    let k = centers.len();
+    let d = points.dim();
+
+    let mut history = Vec::new();
+    let mut last_cost = f64::INFINITY;
+    let mut iters = 0;
+
+    for _ in 0..cfg.max_iters {
+        iters += 1;
+        // Accumulate assignment statistics.
+        let (sums, counts, cost) = match weights {
+            None => {
+                let s = backend.lloyd_step(points, &centers);
+                (s.sums, s.counts, s.cost_median)
+            }
+            Some(w) => weighted_step(points, w, &centers),
+        };
+        history.push(cost);
+
+        // Update centers.
+        match cfg.update {
+            UpdateRule::Mean => {
+                let mut next = PointSet::with_capacity(d, k);
+                let mut row = vec![0.0f32; d];
+                for c in 0..k {
+                    if counts[c] > 0.0 {
+                        for j in 0..d {
+                            row[j] = (sums[c * d + j] / counts[c]) as f32;
+                        }
+                        next.push(&row);
+                    } else {
+                        // Empty cluster: keep the old center (stable, and
+                        // matches the common Hadoop-era implementation).
+                        next.push(centers.row(c));
+                    }
+                }
+                centers = next;
+            }
+            UpdateRule::Weiszfeld => {
+                centers = weiszfeld_step(points, weights, &centers);
+            }
+        }
+
+        // Convergence on relative improvement of the k-median objective.
+        if last_cost.is_finite() {
+            let rel = (last_cost - cost) / last_cost.max(1e-12);
+            if rel.abs() < cfg.tol {
+                break;
+            }
+        }
+        last_cost = cost;
+    }
+
+    // Final cost under the final centers.
+    let cost_median = match weights {
+        None => backend.lloyd_step(points, &centers).cost_median,
+        Some(w) => weighted_step(points, w, &centers).2,
+    };
+    history.push(cost_median);
+
+    LloydResult {
+        centers,
+        iters,
+        cost_median,
+        history,
+    }
+}
+
+/// One weighted accumulation step: (sums, counts, weighted k-median cost).
+fn weighted_step(
+    points: &PointSet,
+    weights: &[f32],
+    centers: &PointSet,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let k = centers.len();
+    let d = points.dim();
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0.0f64; k];
+    let mut cost = 0.0f64;
+    for i in 0..points.len() {
+        let row = points.row(i);
+        let mut best = f32::INFINITY;
+        let mut bc = 0usize;
+        for c in 0..k {
+            let dd = sq_dist(row, centers.row(c));
+            if dd < best {
+                best = dd;
+                bc = c;
+            }
+        }
+        let w = weights[i] as f64;
+        for j in 0..d {
+            sums[bc * d + j] += row[j] as f64 * w;
+        }
+        counts[bc] += w;
+        cost += w * (best.max(0.0) as f64).sqrt();
+    }
+    (sums, counts, cost)
+}
+
+/// One Weiszfeld step per cluster: c <- Σ (w_i/d_i) x_i / Σ (w_i/d_i).
+fn weiszfeld_step(
+    points: &PointSet,
+    weights: Option<&[f32]>,
+    centers: &PointSet,
+) -> PointSet {
+    let k = centers.len();
+    let d = points.dim();
+    let mut num = vec![0.0f64; k * d];
+    let mut den = vec![0.0f64; k];
+    for i in 0..points.len() {
+        let row = points.row(i);
+        let mut best = f32::INFINITY;
+        let mut bc = 0usize;
+        for c in 0..k {
+            let dd = sq_dist(row, centers.row(c));
+            if dd < best {
+                best = dd;
+                bc = c;
+            }
+        }
+        let w = weights.map(|w| w[i] as f64).unwrap_or(1.0);
+        let dist = (best.max(0.0) as f64).sqrt().max(1e-9);
+        let coef = w / dist;
+        for j in 0..d {
+            num[bc * d + j] += coef * row[j] as f64;
+        }
+        den[bc] += coef;
+    }
+    let mut next = PointSet::with_capacity(d, k);
+    let mut row = vec![0.0f32; d];
+    for c in 0..k {
+        if den[c] > 0.0 {
+            for j in 0..d {
+                row[j] = (num[c * d + j] / den[c]) as f32;
+            }
+            next.push(&row);
+        } else {
+            next.push(centers.row(c));
+        }
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::kmedian_cost;
+    use crate::runtime::NativeBackend;
+
+    fn two_blobs(n_each: usize, seed: u64) -> PointSet {
+        let mut rng = Rng::new(seed);
+        let mut p = PointSet::with_capacity(2, n_each * 2);
+        for _ in 0..n_each {
+            p.push(&[rng.f32() * 0.1, rng.f32() * 0.1]);
+        }
+        for _ in 0..n_each {
+            p.push(&[10.0 + rng.f32() * 0.1, 10.0 + rng.f32() * 0.1]);
+        }
+        p
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let p = two_blobs(200, 1);
+        let cfg = LloydConfig {
+            k: 2,
+            seed: 7,
+            ..Default::default()
+        };
+        let res = lloyd(&p, None, &cfg, &NativeBackend);
+        assert_eq!(res.centers.len(), 2);
+        let xs = [res.centers.row(0)[0], res.centers.row(1)[0]];
+        assert!(
+            (xs[0] < 5.0) != (xs[1] < 5.0),
+            "one center per blob, got {xs:?}"
+        );
+        // Cost must be small: points are within 0.1 of their blob center.
+        assert!(res.cost_median < 0.15 * 400.0);
+    }
+
+    #[test]
+    fn history_is_monotonically_improving_mostly() {
+        let p = two_blobs(100, 2);
+        let cfg = LloydConfig {
+            k: 3,
+            seed: 3,
+            max_iters: 15,
+            tol: 0.0,
+            ..Default::default()
+        };
+        let res = lloyd(&p, None, &cfg, &NativeBackend);
+        // k-means Lloyd monotonically improves the k-means objective; the
+        // k-median objective tracked here should at least end no worse than
+        // it started.
+        assert!(
+            res.history.last().unwrap() <= &(res.history[0] * 1.05),
+            "history {:?}",
+            res.history
+        );
+    }
+
+    #[test]
+    fn weighted_duplicates_equal_unweighted_expansion() {
+        // Weighted run on {a(w=3), b(w=1)} == unweighted on {a,a,a,b}.
+        let base = PointSet::from_flat(1, vec![0.0, 1.0, 10.0]);
+        let w = vec![3.0f32, 1.0, 2.0];
+        let mut expanded = PointSet::with_capacity(1, 6);
+        for (i, &wi) in w.iter().enumerate() {
+            for _ in 0..wi as usize {
+                expanded.push(base.row(i));
+            }
+        }
+        let cfg = LloydConfig {
+            k: 2,
+            seed: 5,
+            max_iters: 30,
+            ..Default::default()
+        };
+        let rw = lloyd(&base, Some(&w), &cfg, &NativeBackend);
+        let ru = lloyd(&expanded, None, &cfg, &NativeBackend);
+        // Same final objective (they may converge to mirrored labelings).
+        assert!(
+            (rw.cost_median - ru.cost_median).abs() < 1e-3,
+            "{} vs {}",
+            rw.cost_median,
+            ru.cost_median
+        );
+    }
+
+    #[test]
+    fn k_geq_n_gives_zero_cost() {
+        let p = PointSet::from_flat(1, vec![0.0, 5.0, 9.0]);
+        let cfg = LloydConfig {
+            k: 5,
+            ..Default::default()
+        };
+        let res = lloyd(&p, None, &cfg, &NativeBackend);
+        assert!(res.cost_median < 1e-9);
+    }
+
+    #[test]
+    fn weiszfeld_not_worse_than_mean_on_outlier_data() {
+        // A heavy outlier pulls the mean but not the median.
+        let mut coords: Vec<f32> = (0..50).map(|i| i as f32 * 0.001).collect();
+        coords.push(1000.0);
+        let p = PointSet::from_flat(1, coords);
+        let mk = |update| LloydConfig {
+            k: 1,
+            update,
+            max_iters: 30,
+            seed: 1,
+            ..Default::default()
+        };
+        let mean = lloyd(&p, None, &mk(UpdateRule::Mean), &NativeBackend);
+        let wei = lloyd(&p, None, &mk(UpdateRule::Weiszfeld), &NativeBackend);
+        let cm = kmedian_cost(&p, &mean.centers);
+        let cw = kmedian_cost(&p, &wei.centers);
+        assert!(cw <= cm * 1.01, "weiszfeld {cw} vs mean {cm}");
+    }
+}

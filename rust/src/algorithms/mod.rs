@@ -1,0 +1,22 @@
+//! Sequential clustering algorithms — the `A` subroutines and baselines of
+//! the paper:
+//!
+//! * [`lloyd`] — Lloyd's algorithm (the paper's most-used `A`; weighted
+//!   variant for the sample/divide phases);
+//! * [`local_search`] — Arya et al. single-swap local search for k-median,
+//!   the best known approximation (3 + 2/c); weighted variant included;
+//! * [`gonzalez`] — the Gonzalez/Dyer–Frieze farthest-point 2-approximation
+//!   for k-center (`MapReduce-kCenter`'s `A`);
+//! * [`seeding`] — random-distinct and k-means++ center initialization.
+
+pub mod gonzalez;
+pub mod lloyd;
+pub mod local_search;
+pub mod seeding;
+pub mod streaming;
+
+pub use gonzalez::gonzalez;
+pub use lloyd::{lloyd, LloydConfig, LloydResult};
+pub use local_search::{local_search, LocalSearchConfig, LocalSearchResult};
+pub use seeding::{kmeans_pp, random_distinct};
+pub use streaming::{streaming_kmedian, StreamingConfig, StreamingResult};

@@ -1,0 +1,153 @@
+//! Center initialization. The paper seeds Lloyd's and local search with
+//! arbitrary points; we default to random-distinct (reproducible via seed)
+//! and provide weighted k-means++ as the quality option.
+
+use crate::geometry::{metric::sq_dist, PointSet};
+use crate::util::rng::Rng;
+
+/// `k` distinct points chosen uniformly at random. If the set has fewer than
+/// `k` points, every point is returned (callers handle `|C| <= k`).
+pub fn random_distinct(points: &PointSet, k: usize, rng: &mut Rng) -> PointSet {
+    let n = points.len();
+    if n <= k {
+        return points.clone();
+    }
+    let idx = rng.sample_distinct(n, k);
+    points.gather(&idx)
+}
+
+/// Weighted k-means++ seeding (D² sampling). `weights` scales each point's
+/// selection mass; `None` means uniform. Runs in O(n·k).
+pub fn kmeans_pp(
+    points: &PointSet,
+    weights: Option<&[f32]>,
+    k: usize,
+    rng: &mut Rng,
+) -> PointSet {
+    let n = points.len();
+    if n <= k {
+        return points.clone();
+    }
+    let w = |i: usize| weights.map(|w| w[i] as f64).unwrap_or(1.0);
+
+    let mut centers = PointSet::with_capacity(points.dim(), k);
+    // First center: weight-proportional.
+    let total: f64 = (0..n).map(&w).sum();
+    let mut pick = rng.f64() * total;
+    let mut first = 0;
+    for i in 0..n {
+        pick -= w(i);
+        if pick <= 0.0 {
+            first = i;
+            break;
+        }
+    }
+    centers.push(points.row(first));
+
+    // D² distances to the current center set, updated incrementally.
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| sq_dist(points.row(i), centers.row(0)) as f64)
+        .collect();
+
+    while centers.len() < k {
+        let mass: f64 = (0..n).map(|i| d2[i] * w(i)).sum();
+        if mass <= 0.0 {
+            // All points coincide with centers; fill with arbitrary rows.
+            let idx = rng.below(n);
+            centers.push(points.row(idx));
+            continue;
+        }
+        let mut pick = rng.f64() * mass;
+        let mut chosen = n - 1;
+        for i in 0..n {
+            pick -= d2[i] * w(i);
+            if pick <= 0.0 {
+                chosen = i;
+                break;
+            }
+        }
+        centers.push(points.row(chosen));
+        let c = centers.len() - 1;
+        for i in 0..n {
+            let nd = sq_dist(points.row(i), centers.row(c)) as f64;
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(n: usize) -> PointSet {
+        PointSet::from_flat(2, (0..n).flat_map(|i| [i as f32, 0.0]).collect())
+    }
+
+    #[test]
+    fn random_distinct_count_and_membership() {
+        let p = grid(50);
+        let mut rng = Rng::new(1);
+        let c = random_distinct(&p, 5, &mut rng);
+        assert_eq!(c.len(), 5);
+        for i in 0..c.len() {
+            let found = (0..p.len()).any(|j| p.row(j) == c.row(i));
+            assert!(found, "center must be an input point");
+        }
+    }
+
+    #[test]
+    fn random_distinct_small_n_returns_all() {
+        let p = grid(3);
+        let mut rng = Rng::new(1);
+        let c = random_distinct(&p, 10, &mut rng);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn kmeans_pp_spreads_centers() {
+        // Two tight far-apart blobs: ++ must pick one center in each.
+        let mut coords = Vec::new();
+        for i in 0..20 {
+            coords.extend([i as f32 * 0.001, 0.0]);
+        }
+        for i in 0..20 {
+            coords.extend([100.0 + i as f32 * 0.001, 0.0]);
+        }
+        let p = PointSet::from_flat(2, coords);
+        let mut rng = Rng::new(2);
+        let c = kmeans_pp(&p, None, 2, &mut rng);
+        let xs = [c.row(0)[0], c.row(1)[0]];
+        assert!(
+            (xs[0] < 50.0) != (xs[1] < 50.0),
+            "one center per blob, got {xs:?}"
+        );
+    }
+
+    #[test]
+    fn kmeans_pp_respects_weights() {
+        // Heavy weight on the last point: it should often be the first pick.
+        let p = grid(10);
+        let mut w = vec![1e-6f32; 10];
+        w[9] = 1e6;
+        let mut hits = 0;
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let c = kmeans_pp(&p, Some(&w), 1, &mut rng);
+            if c.row(0)[0] == 9.0 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 19, "heavy point picked {hits}/20");
+    }
+
+    #[test]
+    fn kmeans_pp_handles_duplicate_points() {
+        let p = PointSet::from_flat(2, vec![1.0, 1.0].repeat(8));
+        let mut rng = Rng::new(3);
+        let c = kmeans_pp(&p, None, 3, &mut rng);
+        assert_eq!(c.len(), 3);
+    }
+}

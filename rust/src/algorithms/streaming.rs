@@ -1,0 +1,285 @@
+//! Guha–Meyerson–Mishra–Motwani–O'Callaghan streaming k-median [20] —
+//! the third system the paper positions against (§1: "Guha et al. have
+//! given a k-median algorithm for the streaming model; with some work, we
+//! can adapt one of the algorithms in [20] to the MapReduce model.
+//! However, this algorithm's approximation ratio degrades exponentially in
+//! the number of rounds/levels").
+//!
+//! The classic hierarchical scheme: consume the stream in blocks of `m`
+//! points; cluster every full block to `k` weighted centers (the weights
+//! are the represented counts); the centers are re-inserted one level up,
+//! where the same rule applies recursively. At the end, cluster the ≤ m·L
+//! retained weighted centers down to the final k. Each level multiplies
+//! the approximation factor by a constant — the exponential-in-levels
+//! degradation the paper contrasts its constant-round guarantee with, and
+//! experiment `streaming_quality_degrades_with_levels` demonstrates.
+
+use super::lloyd::{lloyd, LloydConfig};
+use crate::geometry::PointSet;
+use crate::runtime::{ComputeBackend, NativeBackend};
+
+/// Streaming k-median configuration.
+#[derive(Clone, Debug)]
+pub struct StreamingConfig {
+    pub k: usize,
+    /// Block size m (memory budget per level). Smaller m ⇒ more levels ⇒
+    /// worse approximation — the trade-off the paper discusses.
+    pub block_size: usize,
+    /// Lloyd settings for the per-block clustering.
+    pub lloyd_max_iters: usize,
+    pub lloyd_tol: f64,
+    pub seed: u64,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> Self {
+        StreamingConfig {
+            k: 25,
+            block_size: 2000,
+            lloyd_max_iters: 40,
+            lloyd_tol: 1e-4,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of the streaming pass.
+#[derive(Clone, Debug)]
+pub struct StreamingResult {
+    pub centers: PointSet,
+    /// Number of hierarchy levels that were ever used.
+    pub levels: usize,
+    /// Total block-clustering invocations (work measure).
+    pub block_clusterings: usize,
+}
+
+struct Level {
+    points: PointSet,
+    weights: Vec<f32>,
+}
+
+/// One-pass streaming k-median over `points` (consumed in index order, as
+/// if arriving on a stream).
+pub fn streaming_kmedian(points: &PointSet, cfg: &StreamingConfig) -> StreamingResult {
+    assert!(cfg.k >= 1);
+    assert!(cfg.block_size > cfg.k, "block must exceed k");
+    let d = points.dim();
+    let mut levels: Vec<Level> = Vec::new();
+    let mut block_clusterings = 0usize;
+    let mut max_level = 0usize;
+
+    // Cluster a weighted block to k weighted centers.
+    let mut cluster_block = |pts: &PointSet, w: &[f32], salt: u64| -> (PointSet, Vec<f32>) {
+        block_clusterings += 1;
+        let res = lloyd(
+            pts,
+            Some(w),
+            &LloydConfig {
+                k: cfg.k,
+                max_iters: cfg.lloyd_max_iters,
+                tol: cfg.lloyd_tol,
+                seed: cfg.seed ^ salt,
+                ..Default::default()
+            },
+            &NativeBackend,
+        );
+        // Weight of each new center = total weight of the points it won.
+        let k = res.centers.len();
+        let mut cw = vec![0.0f32; k];
+        let assign = NativeBackend.assign(pts, &res.centers);
+        for (i, &c) in assign.idx.iter().enumerate() {
+            cw[c as usize] += w[i];
+        }
+        (res.centers, cw)
+    };
+
+    // Feed the stream block by block through the hierarchy.
+    let mut salt = 0u64;
+    let mut lo = 0usize;
+    while lo < points.len() {
+        let hi = (lo + cfg.block_size).min(points.len());
+        let block = PointSet::from_flat(
+            d,
+            points.flat()[lo * d..hi * d].to_vec(),
+        );
+        let w = vec![1.0f32; block.len()];
+        salt += 1;
+        let (mut c, mut cw) = cluster_block(&block, &w, salt);
+
+        // Promote through levels, merging when a level overflows.
+        let mut lvl = 0usize;
+        loop {
+            if levels.len() <= lvl {
+                levels.push(Level {
+                    points: PointSet::with_capacity(d, cfg.block_size),
+                    weights: Vec::new(),
+                });
+            }
+            levels[lvl].points.extend(&c);
+            levels[lvl].weights.extend_from_slice(&cw);
+            max_level = max_level.max(lvl + 1);
+            if levels[lvl].points.len() < cfg.block_size {
+                break;
+            }
+            // Level full: cluster it down to k and push the result up.
+            salt += 1;
+            let (nc, ncw) = cluster_block(&levels[lvl].points, &levels[lvl].weights, salt);
+            levels[lvl] = Level {
+                points: PointSet::with_capacity(d, cfg.block_size),
+                weights: Vec::new(),
+            };
+            c = nc;
+            cw = ncw;
+            lvl += 1;
+        }
+        lo = hi;
+    }
+
+    // Final: cluster everything retained across levels down to k.
+    let mut all = PointSet::with_capacity(d, cfg.block_size);
+    let mut all_w = Vec::new();
+    for l in &levels {
+        all.extend(&l.points);
+        all_w.extend_from_slice(&l.weights);
+    }
+    let (centers, _) = cluster_block(&all, &all_w, u64::MAX);
+
+    StreamingResult {
+        centers,
+        levels: max_level,
+        block_clusterings,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+    use crate::metrics::kmedian_cost;
+
+    #[test]
+    fn clusters_blobs_reasonably() {
+        let data = DataGenConfig {
+            n: 20_000,
+            k: 10,
+            sigma: 0.05,
+            seed: 1,
+            ..Default::default()
+        }
+        .generate();
+        let res = streaming_kmedian(
+            &data.points,
+            &StreamingConfig {
+                k: 10,
+                block_size: 2000,
+                seed: 1,
+                ..Default::default()
+            },
+        );
+        assert_eq!(res.centers.len(), 10);
+        let cost = kmedian_cost(&data.points, &res.centers);
+        let planted = data.planted_cost_median();
+        assert!(cost < planted * 2.5, "cost {cost} vs planted {planted}");
+        assert!(res.levels >= 1);
+    }
+
+    #[test]
+    fn small_input_single_level() {
+        let data = DataGenConfig {
+            n: 500,
+            k: 5,
+            seed: 2,
+            ..Default::default()
+        }
+        .generate();
+        let res = streaming_kmedian(
+            &data.points,
+            &StreamingConfig {
+                k: 5,
+                block_size: 1000,
+                seed: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(res.levels, 1);
+        assert_eq!(res.centers.len(), 5);
+    }
+
+    #[test]
+    fn more_levels_with_smaller_blocks() {
+        let data = DataGenConfig {
+            n: 30_000,
+            k: 5,
+            seed: 3,
+            ..Default::default()
+        }
+        .generate();
+        let small = streaming_kmedian(
+            &data.points,
+            &StreamingConfig {
+                k: 5,
+                block_size: 200,
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        let large = streaming_kmedian(
+            &data.points,
+            &StreamingConfig {
+                k: 5,
+                block_size: 8000,
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        assert!(
+            small.levels > large.levels,
+            "small blocks {} levels vs large {}",
+            small.levels,
+            large.levels
+        );
+        assert!(small.block_clusterings > large.block_clusterings);
+    }
+
+    #[test]
+    fn quality_degrades_with_levels_on_average() {
+        // The paper's point about [20]: deeper hierarchies lose quality.
+        // Aggregate over seeds to smooth noise.
+        let mut deep_total = 0.0;
+        let mut shallow_total = 0.0;
+        for seed in 0..3u64 {
+            let data = DataGenConfig {
+                n: 20_000,
+                k: 8,
+                sigma: 0.15,
+                seed,
+                ..Default::default()
+            }
+            .generate();
+            let deep = streaming_kmedian(
+                &data.points,
+                &StreamingConfig {
+                    k: 8,
+                    block_size: 100,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            let shallow = streaming_kmedian(
+                &data.points,
+                &StreamingConfig {
+                    k: 8,
+                    block_size: 10_000,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            deep_total += kmedian_cost(&data.points, &deep.centers);
+            shallow_total += kmedian_cost(&data.points, &shallow.centers);
+        }
+        assert!(
+            deep_total >= shallow_total * 0.95,
+            "deep {deep_total} should not beat shallow {shallow_total} meaningfully"
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! Configuration system: typed config structs, a TOML-subset file format,
+//! and dotted-key CLI overrides (`--set cluster.k=50`).
+//!
+//! Precedence: defaults < config file < command-line overrides — the usual
+//! launcher layering (compare Megatron/MaxText-style config systems, scaled
+//! to this project).
+
+pub mod toml;
+
+use crate::data::DataGenConfig;
+use crate::sampling::SampleConstants;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Which compute backend serves the numeric hot loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuntimeBackendKind {
+    /// Pure-rust kernels.
+    Native,
+    /// AOT HLO artifacts through PJRT; falls back to native per-call when no
+    /// bucket fits.
+    Xla,
+}
+
+/// Which Iterative-Sample constants profile to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConstantsProfile {
+    /// Algorithm 1's literal constants (for the theory checks).
+    Theory,
+    /// log-free practical constants (the experiment default).
+    Practical,
+}
+
+impl ConstantsProfile {
+    pub fn constants(self) -> SampleConstants {
+        match self {
+            ConstantsProfile::Theory => SampleConstants::theory(),
+            ConstantsProfile::Practical => SampleConstants::practical(),
+        }
+    }
+}
+
+/// Everything the clustering drivers need.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of centers.
+    pub k: usize,
+    /// Iterative-Sample ε (paper experiments: 0.1).
+    pub epsilon: f64,
+    pub profile: ConstantsProfile,
+    /// Simulated machines (paper: 100).
+    pub machines: usize,
+    /// Per-machine memory budget in bytes (None = unenforced).
+    pub mem_limit: Option<usize>,
+    /// Run simulated machines on worker threads.
+    pub parallel: bool,
+    /// Worker threads (0 = all cores).
+    pub threads: usize,
+    pub backend: RuntimeBackendKind,
+    /// Directory holding manifest.json + *.hlo.txt.
+    pub artifact_dir: PathBuf,
+    /// Lloyd iteration cap / tolerance.
+    pub lloyd_max_iters: usize,
+    pub lloyd_tol: f64,
+    /// Local-search knobs.
+    pub ls_max_swaps: usize,
+    pub ls_min_rel_gain: f64,
+    pub ls_candidate_fraction: f64,
+    /// Fault-injection knobs (simulated task retry / straggler model; see
+    /// `mapreduce::MrConfig`). Defaults: disabled.
+    pub fail_prob: f64,
+    pub straggler_prob: f64,
+    pub straggler_factor: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            k: 25,
+            epsilon: 0.1,
+            profile: ConstantsProfile::Practical,
+            machines: 100,
+            mem_limit: None,
+            parallel: true,
+            threads: 0,
+            backend: RuntimeBackendKind::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            // High cap: convergence is governed by lloyd_tol; big inputs
+            // legitimately take many more iterations than small samples —
+            // that asymmetry is where the paper's speedups come from.
+            lloyd_max_iters: 100,
+            lloyd_tol: 1e-4,
+            ls_max_swaps: 200,
+            ls_min_rel_gain: 1e-4,
+            ls_candidate_fraction: 1.0,
+            fail_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Top-level launcher configuration.
+#[derive(Clone, Debug, Default)]
+pub struct AppConfig {
+    pub data: DataGenConfig,
+    pub cluster: ClusterConfig,
+}
+
+impl AppConfig {
+    /// Load from a TOML file and/or apply `section.key=value` overrides.
+    pub fn load(file: Option<&std::path::Path>, overrides: &[(String, String)]) -> Result<Self> {
+        let mut cfg = AppConfig::default();
+        if let Some(path) = file {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let doc = toml::parse(&text).context("parsing config file")?;
+            for (section, kvs) in &doc {
+                for (key, value) in kvs {
+                    cfg.apply(section, key, value).with_context(|| {
+                        format!("config file key [{section}] {key} = {value}")
+                    })?;
+                }
+            }
+        }
+        for (dotted, value) in overrides {
+            let (section, key) = dotted
+                .split_once('.')
+                .with_context(|| format!("override '{dotted}' must be section.key"))?;
+            cfg.apply(section, key, value)
+                .with_context(|| format!("override {dotted}={value}"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `[section] key = value` setting.
+    pub fn apply(&mut self, section: &str, key: &str, value: &str) -> Result<()> {
+        fn p<T: std::str::FromStr>(v: &str) -> Result<T>
+        where
+            T::Err: std::fmt::Display,
+        {
+            v.parse::<T>()
+                .map_err(|e| anyhow::anyhow!("bad value {v:?}: {e}"))
+        }
+        match (section, key) {
+            ("data", "n") => self.data.n = p(value)?,
+            ("data", "k") => self.data.k = p(value)?,
+            ("data", "dim") => self.data.dim = p(value)?,
+            ("data", "sigma") => self.data.sigma = p(value)?,
+            ("data", "alpha") => self.data.alpha = p(value)?,
+            ("data", "seed") => self.data.seed = p(value)?,
+            ("cluster", "k") => self.cluster.k = p(value)?,
+            ("cluster", "epsilon") => self.cluster.epsilon = p(value)?,
+            ("cluster", "profile") => {
+                self.cluster.profile = match value {
+                    "theory" => ConstantsProfile::Theory,
+                    "practical" => ConstantsProfile::Practical,
+                    other => anyhow::bail!("unknown profile {other:?}"),
+                }
+            }
+            ("cluster", "machines") => self.cluster.machines = p(value)?,
+            ("cluster", "mem_limit") => {
+                self.cluster.mem_limit = if value == "none" {
+                    None
+                } else {
+                    Some(p(value)?)
+                }
+            }
+            ("cluster", "parallel") => self.cluster.parallel = p(value)?,
+            ("cluster", "threads") => self.cluster.threads = p(value)?,
+            ("cluster", "backend") => {
+                self.cluster.backend = match value {
+                    "native" => RuntimeBackendKind::Native,
+                    "xla" => RuntimeBackendKind::Xla,
+                    other => anyhow::bail!("unknown backend {other:?}"),
+                }
+            }
+            ("cluster", "artifact_dir") => self.cluster.artifact_dir = PathBuf::from(value),
+            ("cluster", "lloyd_max_iters") => self.cluster.lloyd_max_iters = p(value)?,
+            ("cluster", "lloyd_tol") => self.cluster.lloyd_tol = p(value)?,
+            ("cluster", "ls_max_swaps") => self.cluster.ls_max_swaps = p(value)?,
+            ("cluster", "ls_min_rel_gain") => self.cluster.ls_min_rel_gain = p(value)?,
+            ("cluster", "ls_candidate_fraction") => {
+                self.cluster.ls_candidate_fraction = p(value)?
+            }
+            ("cluster", "fail_prob") => self.cluster.fail_prob = p(value)?,
+            ("cluster", "straggler_prob") => self.cluster.straggler_prob = p(value)?,
+            ("cluster", "straggler_factor") => self.cluster.straggler_factor = p(value)?,
+            ("cluster", "seed") => self.cluster.seed = p(value)?,
+            (s, k) => anyhow::bail!("unknown config key [{s}] {k}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = AppConfig::default();
+        assert_eq!(c.cluster.k, 25);
+        assert_eq!(c.cluster.machines, 100);
+        assert!((c.cluster.epsilon - 0.1).abs() < 1e-12);
+        assert!((c.data.sigma - 0.1).abs() < 1e-12);
+        assert_eq!(c.data.alpha, 0.0);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = AppConfig::load(
+            None,
+            &[
+                ("data.n".into(), "5000".into()),
+                ("cluster.k".into(), "7".into()),
+                ("cluster.backend".into(), "xla".into()),
+                ("cluster.profile".into(), "theory".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.data.n, 5000);
+        assert_eq!(cfg.cluster.k, 7);
+        assert_eq!(cfg.cluster.backend, RuntimeBackendKind::Xla);
+        assert_eq!(cfg.cluster.profile, ConstantsProfile::Theory);
+    }
+
+    #[test]
+    fn bad_key_rejected() {
+        assert!(AppConfig::load(None, &[("cluster.nope".into(), "1".into())]).is_err());
+        assert!(AppConfig::load(None, &[("nodot".into(), "1".into())]).is_err());
+        assert!(AppConfig::load(None, &[("cluster.k".into(), "abc".into())]).is_err());
+    }
+
+    #[test]
+    fn file_then_overrides_precedence() {
+        let dir = std::env::temp_dir().join("mrcluster_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.toml");
+        std::fs::write(
+            &path,
+            "[data]\nn = 1000\nk = 10\n\n[cluster]\nk = 10\nepsilon = 0.2\n",
+        )
+        .unwrap();
+        let cfg = AppConfig::load(
+            Some(&path),
+            &[("cluster.k".into(), "99".into())],
+        )
+        .unwrap();
+        assert_eq!(cfg.data.n, 1000);
+        assert_eq!(cfg.cluster.k, 99, "override beats file");
+        assert!((cfg.cluster.epsilon - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal TOML-subset parser for config files (offline build — no `toml`
+//! crate). Supports:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = 123          # integers / floats
+//! name = "string"    # basic strings
+//! flag = true        # booleans
+//! ```
+//!
+//! Values are kept as raw strings; typing happens in `AppConfig::apply`.
+//! Not supported (rejected, not silently ignored): arrays, inline tables,
+//! multi-line strings, dotted keys.
+
+use anyhow::{bail, Result};
+
+/// Parsed document: ordered (section, [(key, value)]) pairs.
+pub type Doc = Vec<(String, Vec<(String, String)>)>;
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = Vec::new();
+    let mut current: Option<usize> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            let name = name.trim();
+            if name.is_empty() || name.contains('[') || name.contains('.') {
+                bail!("line {}: bad section name {name:?}", lineno + 1);
+            }
+            doc.push((name.to_string(), Vec::new()));
+            current = Some(doc.len() - 1);
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = key.trim();
+        if key.is_empty() || key.contains(' ') || key.contains('.') {
+            bail!("line {}: bad key {key:?}", lineno + 1);
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let Some(idx) = current else {
+            bail!("line {}: key outside of any [section]", lineno + 1);
+        };
+        doc[idx].1.push((key.to_string(), value));
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<String> {
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = v.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string {v:?}");
+        };
+        if inner.contains('"') {
+            bail!("embedded quote in {v:?}");
+        }
+        return Ok(inner.to_string());
+    }
+    if v.starts_with('[') || v.starts_with('{') {
+        bail!("arrays/inline tables are not supported: {v:?}");
+    }
+    Ok(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "# top comment\n[data]\nn = 1000\nsigma = 0.1 # trailing\n\n[cluster]\nbackend = \"xla\"\nparallel = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.len(), 2);
+        assert_eq!(doc[0].0, "data");
+        assert_eq!(doc[0].1, vec![("n".into(), "1000".into()), ("sigma".into(), "0.1".into())]);
+        assert_eq!(doc[1].1[0], ("backend".into(), "xla".into()));
+        assert_eq!(doc[1].1[1], ("parallel".into(), "true".into()));
+    }
+
+    #[test]
+    fn rejects_key_outside_section() {
+        assert!(parse("k = 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        assert!(parse("[data\nn = 1\n").is_err());
+        assert!(parse("[data]\ns = \"abc\n").is_err());
+    }
+
+    #[test]
+    fn rejects_arrays() {
+        assert!(parse("[a]\nx = [1, 2]\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse("[a]\nx = \"a#b\"\n").unwrap();
+        assert_eq!(doc[0].1[0].1, "a#b");
+    }
+
+    #[test]
+    fn empty_doc_ok() {
+        assert!(parse("\n# nothing\n").unwrap().is_empty());
+    }
+}

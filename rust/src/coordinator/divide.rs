@@ -1,0 +1,209 @@
+//! `MapReduce-Divide-kMedian` (Algorithm 6) — the Guha et al. partition
+//! scheme the paper compares against (Divide-Lloyd / Divide-LocalSearch).
+//!
+//! Partition V into ℓ = √(n/k) blocks; cluster each block with `A` to get k
+//! centers + weights (points represented); ship the ℓ·k weighted centers to
+//! one machine and cluster them with weighted `A`. Corollary 4.3: 3α-approx.
+//!
+//! Note the resource profile the paper criticizes: the final machine holds
+//! Θ(k·√(n/k)) = Θ(√(nk)) centers — Ω(kn) memory once pairwise distances
+//! are materialized — and `A` runs on Θ(√(nk)) points, which is what makes
+//! Divide-LocalSearch slow at large n (Figure 1).
+
+use super::kmedian::run_weighted_inner;
+use super::InnerAlgo;
+use crate::algorithms::lloyd::{lloyd, LloydConfig};
+use crate::algorithms::local_search::{local_search, LocalSearchConfig};
+use crate::config::ClusterConfig;
+use crate::geometry::PointSet;
+use crate::mapreduce::{MemSize, MrCluster, MrError};
+use crate::runtime::{ComputeBackend, NativeBackend};
+
+/// Result of MapReduce-Divide-kMedian.
+#[derive(Clone, Debug)]
+pub struct DivideResult {
+    pub centers: PointSet,
+    /// Number of partitions ℓ.
+    pub partitions: usize,
+    /// Size of the collapsed weighted instance (ℓ·k).
+    pub collapsed_size: usize,
+}
+
+struct BlockMsg {
+    centers: PointSet,
+    weights: Vec<f32>,
+}
+
+impl MemSize for BlockMsg {
+    fn mem_bytes(&self) -> usize {
+        self.centers.mem_bytes() + self.weights.len() * 4
+    }
+}
+
+/// Run Algorithm 6 on `cluster` with the given inner `A`.
+pub fn mr_divide_kmedian(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    inner: InnerAlgo,
+    backend: &dyn ComputeBackend,
+) -> Result<DivideResult, MrError> {
+    let n = points.len();
+    // ℓ = sqrt(n/k) minimizes the max machine memory (§4.1).
+    let ell = ((n as f64 / cfg.k as f64).sqrt().ceil() as usize).clamp(1, n.max(1));
+    let parts = points.chunks(ell);
+
+    // ---- Steps 3–7: cluster every block independently ----
+    let k = cfg.k;
+    let msgs: Vec<BlockMsg> = cluster.run_machine_round(
+        "divide: cluster blocks",
+        &parts,
+        0,
+        move |m, part: &PointSet| {
+            let centers = match inner {
+                InnerAlgo::Lloyd => {
+                    lloyd(
+                        part,
+                        None,
+                        &LloydConfig {
+                            k,
+                            max_iters: cfg.lloyd_max_iters,
+                            tol: cfg.lloyd_tol,
+                            seed: cfg.seed ^ (m as u64),
+                            ..Default::default()
+                        },
+                        backend,
+                    )
+                    .centers
+                }
+                InnerAlgo::LocalSearch => {
+                    local_search(
+                        part,
+                        None,
+                        &LocalSearchConfig {
+                            k,
+                            min_rel_gain: cfg.ls_min_rel_gain,
+                            max_swaps: cfg.ls_max_swaps,
+                            candidate_fraction: cfg.ls_candidate_fraction,
+                            seed: cfg.seed ^ (m as u64),
+                        },
+                    )
+                    .centers
+                }
+            };
+            // Step 6: w(y) = |{x in S^i : x^{C_i} = y}| + 1 — computed with
+            // the same backend kernel as the kMedian weight phase. (Lloyd
+            // centers are means, not input points; the weights are still
+            // the represented-point counts.)
+            let (w, _) = NativeBackend.weight_histogram(part, &centers);
+            BlockMsg {
+                weights: w.iter().map(|&x| (x + 1.0) as f32).collect(),
+                centers,
+            }
+        },
+    )?;
+
+    // ---- Steps 8–10: weighted A on the union of block centers ----
+    let mut all = PointSet::with_capacity(points.dim(), msgs.len() * cfg.k);
+    let mut weights = Vec::with_capacity(msgs.len() * cfg.k);
+    let mut gathered = 0usize;
+    for m in &msgs {
+        gathered += m.mem_bytes();
+        all.extend(&m.centers);
+        weights.extend_from_slice(&m.weights);
+    }
+    // The paper notes this step needs the pairwise distances of C on one
+    // machine — Ω((ℓk)²) bytes; charge it.
+    let leader_mem = gathered + all.len() * all.len() * 4;
+    let all_ref = &all;
+    let w_ref = &weights;
+    let centers = cluster.run_leader_round("divide: weighted A on centers", leader_mem, || {
+        run_weighted_inner(all_ref, w_ref, cfg, inner)
+    })?;
+
+    Ok(DivideResult {
+        centers,
+        partitions: ell,
+        collapsed_size: all.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+    use crate::mapreduce::MrConfig;
+    use crate::metrics::kmedian_cost;
+
+    fn run(inner: InnerAlgo, n: usize, seed: u64) -> (f64, f64, DivideResult) {
+        let data = DataGenConfig {
+            n,
+            k: 10,
+            sigma: 0.05,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let cfg = ClusterConfig {
+            k: 10,
+            machines: 16,
+            seed,
+            ..Default::default()
+        };
+        let mut cluster = MrCluster::new(MrConfig {
+            n_machines: 16,
+            ..Default::default()
+        });
+        let res =
+            mr_divide_kmedian(&mut cluster, &data.points, &cfg, inner, &NativeBackend).unwrap();
+        (
+            kmedian_cost(&data.points, &res.centers),
+            data.planted_cost_median(),
+            res,
+        )
+    }
+
+    #[test]
+    fn partitions_follow_sqrt_rule() {
+        let (_, _, res) = run(InnerAlgo::Lloyd, 10_000, 31);
+        // sqrt(10000/10) ~ 31.6 -> 32
+        assert!(res.partitions >= 31 && res.partitions <= 33, "{}", res.partitions);
+        assert!(res.collapsed_size <= res.partitions * 10);
+    }
+
+    #[test]
+    fn divide_lloyd_quality() {
+        let (cost, planted, _) = run(InnerAlgo::Lloyd, 10_000, 32);
+        assert!(cost < planted * 2.0, "cost {cost} vs planted {planted}");
+    }
+
+    #[test]
+    fn divide_local_search_quality() {
+        let (cost, planted, _) = run(InnerAlgo::LocalSearch, 4_000, 33);
+        assert!(cost < planted * 2.0, "cost {cost} vs planted {planted}");
+    }
+
+    #[test]
+    fn two_rounds_total() {
+        let data = DataGenConfig {
+            n: 2000,
+            k: 5,
+            seed: 34,
+            ..Default::default()
+        }
+        .generate();
+        let cfg = ClusterConfig {
+            k: 5,
+            machines: 8,
+            seed: 34,
+            ..Default::default()
+        };
+        let mut cluster = MrCluster::new(MrConfig {
+            n_machines: 8,
+            ..Default::default()
+        });
+        mr_divide_kmedian(&mut cluster, &data.points, &cfg, InnerAlgo::Lloyd, &NativeBackend)
+            .unwrap();
+        assert_eq!(cluster.stats.n_rounds(), 2, "Proposition 4.1: O(1) rounds");
+    }
+}

@@ -1,0 +1,323 @@
+//! Algorithm registry and the single entry point the CLI / examples /
+//! benches use.
+
+use super::divide::mr_divide_kmedian;
+use super::kcenter::mr_kcenter;
+use super::kmedian::mr_kmedian;
+use super::parallel_lloyd::parallel_lloyd;
+use super::InnerAlgo;
+use crate::algorithms::local_search::{local_search, LocalSearchConfig};
+use crate::config::{ClusterConfig, RuntimeBackendKind};
+use crate::geometry::PointSet;
+use crate::mapreduce::{MrCluster, MrConfig, RunStats};
+use crate::metrics::cost::{eval_costs, CostSummary};
+use crate::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Every algorithm the paper evaluates (§4.1), plus MapReduce-kCenter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// §4.1 Parallel-Lloyd (baseline all costs are normalized to).
+    ParallelLloyd,
+    /// Algorithm 6 with A = Lloyd.
+    DivideLloyd,
+    /// Algorithm 6 with A = local search.
+    DivideLocalSearch,
+    /// Algorithm 5 with A = Lloyd.
+    SamplingLloyd,
+    /// Algorithm 5 with A = local search.
+    SamplingLocalSearch,
+    /// Sequential Arya et al. local search on the full data.
+    LocalSearch,
+    /// Algorithm 4 (k-center objective).
+    MrKCenter,
+    /// Guha et al. hierarchical streaming k-median [20] — the streaming
+    /// baseline the paper contrasts its constant-round guarantee with.
+    StreamingGuha,
+}
+
+impl Algorithm {
+    /// The paper's display name (Figures 1–2 row labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::ParallelLloyd => "Parallel-Lloyd",
+            Algorithm::DivideLloyd => "Divide-Lloyd",
+            Algorithm::DivideLocalSearch => "Divide-LocalSearch",
+            Algorithm::SamplingLloyd => "Sampling-Lloyd",
+            Algorithm::SamplingLocalSearch => "Sampling-LocalSearch",
+            Algorithm::LocalSearch => "LocalSearch",
+            Algorithm::MrKCenter => "MapReduce-kCenter",
+            Algorithm::StreamingGuha => "Streaming-Guha",
+        }
+    }
+
+    /// Parse a CLI name (case/format tolerant).
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        let norm: String = s
+            .chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .collect::<String>()
+            .to_ascii_lowercase();
+        Some(match norm.as_str() {
+            "parallellloyd" | "plloyd" => Algorithm::ParallelLloyd,
+            "dividelloyd" => Algorithm::DivideLloyd,
+            "dividelocalsearch" => Algorithm::DivideLocalSearch,
+            "samplinglloyd" => Algorithm::SamplingLloyd,
+            "samplinglocalsearch" => Algorithm::SamplingLocalSearch,
+            "localsearch" => Algorithm::LocalSearch,
+            "mrkcenter" | "kcenter" | "mapreducekcenter" => Algorithm::MrKCenter,
+            "streamingguha" | "streaming" => Algorithm::StreamingGuha,
+            _ => return None,
+        })
+    }
+
+    /// All Figure-1 algorithms in the paper's row order.
+    pub fn figure1() -> [Algorithm; 6] {
+        [
+            Algorithm::ParallelLloyd,
+            Algorithm::DivideLloyd,
+            Algorithm::DivideLocalSearch,
+            Algorithm::SamplingLloyd,
+            Algorithm::SamplingLocalSearch,
+            Algorithm::LocalSearch,
+        ]
+    }
+
+    /// The scalable subset the paper runs at n ≥ 2M (Figure 2).
+    pub fn figure2() -> [Algorithm; 4] {
+        [
+            Algorithm::ParallelLloyd,
+            Algorithm::DivideLloyd,
+            Algorithm::SamplingLloyd,
+            Algorithm::SamplingLocalSearch,
+        ]
+    }
+}
+
+/// The uniform result record all drivers produce.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub algorithm: Algorithm,
+    pub centers: PointSet,
+    /// Exact objectives of `centers` over the full input.
+    pub cost: CostSummary,
+    /// k-median objective (= cost.median; kept for ergonomic access).
+    pub cost_median: f64,
+    /// Paper-methodology simulated time (Σ rounds max-machine compute).
+    pub sim_time: std::time::Duration,
+    /// Host wall-clock for the whole run.
+    pub wall_time: std::time::Duration,
+    pub rounds: usize,
+    /// |C| for the sampling algorithms, ℓ·k for divide, None otherwise.
+    pub reduced_size: Option<usize>,
+    pub stats: RunStats,
+}
+
+/// Instantiate the configured compute backend. Falls back to native (with a
+/// warning) if the XLA artifacts are missing.
+pub fn make_backend(cfg: &ClusterConfig) -> Arc<dyn ComputeBackend> {
+    match cfg.backend {
+        RuntimeBackendKind::Native => Arc::new(NativeBackend),
+        RuntimeBackendKind::Xla => match XlaBackend::new(&cfg.artifact_dir) {
+            Ok(b) => Arc::new(b),
+            Err(e) => {
+                log::warn!(
+                    "XLA backend unavailable ({e:#}); falling back to native. \
+                     Run `make artifacts` to build the AOT kernels."
+                );
+                Arc::new(NativeBackend)
+            }
+        },
+    }
+}
+
+fn mr_config(cfg: &ClusterConfig) -> MrConfig {
+    MrConfig {
+        n_machines: cfg.machines,
+        mem_limit: cfg.mem_limit,
+        parallel: cfg.parallel,
+        threads: cfg.threads,
+        fail_prob: cfg.fail_prob,
+        straggler_prob: cfg.straggler_prob,
+        straggler_factor: cfg.straggler_factor,
+        fault_seed: cfg.seed ^ 0xFA17,
+    }
+}
+
+/// Run `algorithm` over `points` under `cfg`. This is the API entry point.
+pub fn run_algorithm(
+    algorithm: Algorithm,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+) -> Result<Outcome> {
+    let backend = make_backend(cfg);
+    run_algorithm_with(algorithm, points, cfg, backend.as_ref())
+}
+
+/// Like [`run_algorithm`] but with an explicit backend (used by benches to
+/// share one PJRT client across runs).
+pub fn run_algorithm_with(
+    algorithm: Algorithm,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<Outcome> {
+    let t0 = Instant::now();
+    let mut cluster = MrCluster::new(mr_config(cfg));
+
+    let (centers, reduced_size) = match algorithm {
+        Algorithm::ParallelLloyd => {
+            let r = parallel_lloyd(&mut cluster, points, cfg, backend)?;
+            (r.centers, None)
+        }
+        Algorithm::DivideLloyd => {
+            let r = mr_divide_kmedian(&mut cluster, points, cfg, InnerAlgo::Lloyd, backend)?;
+            (r.centers, Some(r.collapsed_size))
+        }
+        Algorithm::DivideLocalSearch => {
+            let r =
+                mr_divide_kmedian(&mut cluster, points, cfg, InnerAlgo::LocalSearch, backend)?;
+            (r.centers, Some(r.collapsed_size))
+        }
+        Algorithm::SamplingLloyd => {
+            let r = mr_kmedian(&mut cluster, points, cfg, InnerAlgo::Lloyd, backend)?;
+            (r.centers, Some(r.sample_size))
+        }
+        Algorithm::SamplingLocalSearch => {
+            let r = mr_kmedian(&mut cluster, points, cfg, InnerAlgo::LocalSearch, backend)?;
+            (r.centers, Some(r.sample_size))
+        }
+        Algorithm::LocalSearch => {
+            // The sequential baseline: one machine, the whole input.
+            let centers = cluster.run_leader_round(
+                "local-search (sequential)",
+                points.mem_bytes(),
+                || {
+                    local_search(
+                        points,
+                        None,
+                        &LocalSearchConfig {
+                            k: cfg.k,
+                            min_rel_gain: cfg.ls_min_rel_gain,
+                            max_swaps: cfg.ls_max_swaps,
+                            candidate_fraction: cfg.ls_candidate_fraction,
+                            seed: cfg.seed,
+                        },
+                    )
+                    .centers
+                },
+            )?;
+            (centers, None)
+        }
+        Algorithm::MrKCenter => {
+            let r = mr_kcenter(&mut cluster, points, cfg, backend)?;
+            (r.centers, Some(r.sample_size))
+        }
+        Algorithm::StreamingGuha => {
+            // One-pass hierarchical streaming on a single machine; its
+            // memory charge is one block per level (the streaming model's
+            // whole point).
+            use crate::algorithms::streaming::{streaming_kmedian, StreamingConfig};
+            let block = (points.len() as f64).sqrt().ceil() as usize;
+            let scfg = StreamingConfig {
+                k: cfg.k,
+                block_size: block.max(cfg.k * 4),
+                lloyd_max_iters: cfg.lloyd_max_iters,
+                lloyd_tol: cfg.lloyd_tol,
+                seed: cfg.seed,
+            };
+            let mem = scfg.block_size * points.dim() * 4 * 4; // ~levels
+            let r = cluster.run_leader_round("streaming-guha (one pass)", mem, || {
+                streaming_kmedian(points, &scfg)
+            })?;
+            (r.centers, Some(r.block_clusterings))
+        }
+    };
+
+    let wall_time = t0.elapsed();
+    let cost = eval_costs(points, &centers, cfg.threads);
+    Ok(Outcome {
+        algorithm,
+        cost_median: cost.median,
+        cost,
+        centers,
+        sim_time: cluster.stats.sim_time(),
+        wall_time,
+        rounds: cluster.stats.n_rounds(),
+        reduced_size,
+        stats: cluster.stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+
+    fn small_cfg(seed: u64) -> (PointSet, ClusterConfig, f64) {
+        let data = DataGenConfig {
+            n: 8000,
+            k: 8,
+            sigma: 0.05,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let cfg = ClusterConfig {
+            k: 8,
+            epsilon: 0.2,
+            machines: 8,
+            seed,
+            ls_max_swaps: 40,
+            ..Default::default()
+        };
+        let planted = data.planted_cost_median();
+        (data.points, cfg, planted)
+    }
+
+    #[test]
+    fn every_algorithm_runs_and_is_sane() {
+        let (points, cfg, planted) = small_cfg(41);
+        for algo in Algorithm::figure1() {
+            let out = run_algorithm(algo, &points, &cfg).unwrap();
+            assert_eq!(out.centers.len(), 8, "{}", algo.name());
+            assert!(out.rounds >= 1, "{}", algo.name());
+            assert!(
+                out.cost_median < planted * 3.0,
+                "{}: cost {} vs planted {planted}",
+                algo.name(),
+                out.cost_median
+            );
+        }
+    }
+
+    #[test]
+    fn kcenter_runs() {
+        let (points, cfg, _) = small_cfg(42);
+        let out = run_algorithm(Algorithm::MrKCenter, &points, &cfg).unwrap();
+        assert_eq!(out.centers.len(), 8);
+        assert!(out.cost.center > 0.0);
+    }
+
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for algo in Algorithm::figure1()
+            .into_iter()
+            .chain([Algorithm::MrKCenter])
+        {
+            assert_eq!(Algorithm::parse(algo.name()), Some(algo), "{}", algo.name());
+        }
+        assert_eq!(Algorithm::parse("sampling-lloyd"), Some(Algorithm::SamplingLloyd));
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn sampling_reduced_size_reported() {
+        let (points, cfg, _) = small_cfg(43);
+        let out = run_algorithm(Algorithm::SamplingLloyd, &points, &cfg).unwrap();
+        let rs = out.reduced_size.unwrap();
+        assert!(rs > 0 && rs < points.len());
+    }
+}

@@ -1,0 +1,179 @@
+//! `MapReduce-kMedian` (Algorithm 5): Iterative-Sample, then weight every
+//! sampled point by the unsampled points it represents, then run a weighted
+//! k-median algorithm `A` on the weighted sample on one machine.
+//!
+//! Theorem 3.11: with an α-approximate weighted `A` this is a
+//! (10α + 3)-approximation w.h.p. — `A` = local search gives the constant
+//! guarantee (Sampling-LocalSearch); `A` = Lloyd is the fast heuristic the
+//! experiments favor (Sampling-Lloyd).
+
+use super::mr_iterative_sample::mr_iterative_sample;
+use super::InnerAlgo;
+use crate::algorithms::lloyd::{lloyd, LloydConfig};
+use crate::algorithms::local_search::{local_search, LocalSearchConfig};
+use crate::config::ClusterConfig;
+use crate::geometry::PointSet;
+use crate::mapreduce::{MrCluster, MrError};
+use crate::runtime::ComputeBackend;
+
+/// Result of MapReduce-kMedian.
+#[derive(Clone, Debug)]
+pub struct MrKMedianResult {
+    pub centers: PointSet,
+    pub sample_size: usize,
+    pub sample_iterations: usize,
+}
+
+/// Run Algorithm 5 on `cluster` with `A = inner`.
+pub fn mr_kmedian(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    inner: InnerAlgo,
+    backend: &dyn ComputeBackend,
+) -> Result<MrKMedianResult, MrError> {
+    // ---- Step 1: C <- MapReduce-Iterative-Sample ----
+    let sres = mr_iterative_sample(cluster, points, cfg, backend)?;
+    let sample = sres.sample;
+    log::debug!(
+        "kmedian: sample |C| = {} after {} iterations",
+        sample.len(),
+        sres.iterations
+    );
+
+    // ---- Steps 2–4: weight phase. Partition V, broadcast C, each machine
+    // computes w^i(y) = |{x in V^i \ C : x^C = y}| (one machine round). ----
+    let parts = points.chunks(cfg.machines.min(points.len()).max(1));
+    let bcast = sample.mem_bytes();
+    let sample_ref = &sample;
+    let hists: Vec<Vec<f64>> = cluster.run_machine_round(
+        "kmedian: weight histogram",
+        &parts,
+        bcast,
+        move |_m, part: &PointSet| backend.weight_histogram(part, sample_ref).0,
+    )?;
+
+    // ---- Steps 5–7: leader sums weights (+1 for the sample point itself)
+    // and runs the weighted clustering algorithm A on (C, w). ----
+    let hist_bytes: usize = hists.iter().map(|h| h.len() * 8).sum();
+    let leader_mem = hist_bytes + sample.mem_bytes();
+    let sample_ref = &sample;
+    let centers = cluster.run_leader_round("kmedian: weighted A on sample", leader_mem, || {
+        let m = sample_ref.len();
+        let mut w = vec![1.0f32; m]; // the +1 of Algorithm 5 step 6
+        for h in &hists {
+            debug_assert_eq!(h.len(), m);
+            for (j, v) in h.iter().enumerate() {
+                w[j] += *v as f32;
+            }
+        }
+        run_weighted_inner(sample_ref, &w, cfg, inner)
+    })?;
+
+    Ok(MrKMedianResult {
+        centers,
+        sample_size: sample.len(),
+        sample_iterations: sres.iterations,
+    })
+}
+
+/// The weighted sequential `A` (shared with Divide).
+pub(crate) fn run_weighted_inner(
+    points: &PointSet,
+    weights: &[f32],
+    cfg: &ClusterConfig,
+    inner: InnerAlgo,
+) -> PointSet {
+    match inner {
+        InnerAlgo::Lloyd => lloyd(
+            points,
+            Some(weights),
+            &LloydConfig {
+                k: cfg.k,
+                max_iters: cfg.lloyd_max_iters,
+                tol: cfg.lloyd_tol,
+                seed: cfg.seed ^ 0xA11CE,
+                ..Default::default()
+            },
+            &crate::runtime::NativeBackend,
+        )
+        .centers,
+        InnerAlgo::LocalSearch => local_search(
+            points,
+            Some(weights),
+            &LocalSearchConfig {
+                k: cfg.k,
+                min_rel_gain: cfg.ls_min_rel_gain,
+                max_swaps: cfg.ls_max_swaps,
+                candidate_fraction: cfg.ls_candidate_fraction,
+                seed: cfg.seed ^ 0xB0B,
+            },
+        )
+        .centers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+    use crate::mapreduce::MrConfig;
+    use crate::metrics::kmedian_cost;
+    use crate::runtime::NativeBackend;
+
+    fn run(inner: InnerAlgo, seed: u64) -> (f64, f64, MrKMedianResult) {
+        let data = DataGenConfig {
+            n: 20_000,
+            k: 10,
+            sigma: 0.05,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let cfg = ClusterConfig {
+            k: 10,
+            epsilon: 0.2,
+            machines: 16,
+            seed,
+            ..Default::default()
+        };
+        let mut cluster = MrCluster::new(MrConfig {
+            n_machines: 16,
+            ..Default::default()
+        });
+        let res = mr_kmedian(&mut cluster, &data.points, &cfg, inner, &NativeBackend).unwrap();
+        let cost = kmedian_cost(&data.points, &res.centers);
+        let planted = data.planted_cost_median();
+        (cost, planted, res)
+    }
+
+    #[test]
+    fn sampling_lloyd_near_planted_cost() {
+        let (cost, planted, res) = run(InnerAlgo::Lloyd, 11);
+        assert_eq!(res.centers.len(), 10);
+        // The planted centers are near-optimal; a constant-factor algorithm
+        // on well-separated blobs should land within 2x.
+        assert!(
+            cost < planted * 2.0,
+            "cost {cost} vs planted {planted} (sample {})",
+            res.sample_size
+        );
+    }
+
+    #[test]
+    fn sampling_local_search_near_planted_cost() {
+        let (cost, planted, res) = run(InnerAlgo::LocalSearch, 12);
+        assert_eq!(res.centers.len(), 10);
+        assert!(
+            cost < planted * 2.0,
+            "cost {cost} vs planted {planted} (sample {})",
+            res.sample_size
+        );
+    }
+
+    #[test]
+    fn sample_much_smaller_than_input() {
+        let (_, _, res) = run(InnerAlgo::Lloyd, 13);
+        assert!(res.sample_size < 20_000 / 4, "sample {}", res.sample_size);
+    }
+}

@@ -1,0 +1,41 @@
+//! The paper's L3 contribution: its clustering algorithms as MapReduce jobs
+//! on the simulated cluster.
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | Algorithm 3, `MapReduce-Iterative-Sample` | [`mr_iterative_sample`] |
+//! | Algorithm 4, `MapReduce-kCenter`          | [`kcenter`] |
+//! | Algorithm 5, `MapReduce-kMedian`          | [`kmedian`] |
+//! | Algorithm 6, `MapReduce-Divide-kMedian`   | [`divide`] |
+//! | §4.1 `Parallel-Lloyd`                     | [`parallel_lloyd`] |
+//! | §4.1 sequential `LocalSearch` baseline    | [`driver`] (direct call) |
+//!
+//! [`driver::run_algorithm`] is the single entry point used by the CLI,
+//! examples, and benches.
+
+pub mod divide;
+pub mod driver;
+pub mod kcenter;
+pub mod kmedian;
+pub mod mr_iterative_sample;
+pub mod parallel_lloyd;
+
+pub use driver::{run_algorithm, run_algorithm_with, Algorithm, Outcome};
+
+use crate::mapreduce::MemSize;
+use crate::runtime::LloydStepOut;
+
+impl MemSize for LloydStepOut {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<LloydStepOut>()
+            + (self.sums.len() + self.counts.len()) * std::mem::size_of::<f64>()
+    }
+}
+
+/// Which sequential algorithm `A` runs on the collapsed data (the sample or
+/// the union of per-partition centers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InnerAlgo {
+    Lloyd,
+    LocalSearch,
+}

@@ -1,0 +1,364 @@
+//! `MapReduce-Iterative-Sample` (Algorithm 3).
+//!
+//! The sequential Algorithm 1 with `R` partitioned across machines. One
+//! iteration of the while-loop costs two engine rounds:
+//!
+//! 1. **sample round** (machines, resident `R^i`): Bernoulli-sample the
+//!    local S-batch `S^i` and witness set `H^i`; ship both (points + the
+//!    witnesses' current d(x, S)) to the leader.
+//! 2. **select + prune**: the leader updates the witnesses' distances
+//!    against the fresh batch and picks the pivot (Algorithm 2); the pivot
+//!    and the batch are broadcast; every machine updates its residents'
+//!    d(x, S) against the batch (the L1/L2 kernel via the backend) and
+//!    drops points closer than the pivot, plus its own sampled points.
+//!
+//! Per-machine state (`MachinePart`) persists across iterations — indices,
+//! coordinates, and the incrementally-maintained d(x, S) array — exactly
+//! the "data stays on the machines" structure the paper assumes.
+
+use crate::config::ClusterConfig;
+use crate::geometry::PointSet;
+use crate::mapreduce::{MemSize, MrCluster, MrError};
+use crate::runtime::ComputeBackend;
+use crate::sampling::select::select_pivot;
+use crate::sampling::IterativeSampleConfig;
+use crate::util::rng::Rng;
+
+/// Resident per-machine state for the sampling loop.
+pub struct MachinePart {
+    /// Global indices of the still-remaining points on this machine.
+    pub idx: Vec<usize>,
+    /// Their coordinates (same order as `idx`).
+    pub pts: PointSet,
+    /// Their current distance to the accumulated sample S.
+    pub dist: Vec<f32>,
+    /// Machine-local RNG (forked from the run seed).
+    rng: Rng,
+}
+
+impl MemSize for MachinePart {
+    fn mem_bytes(&self) -> usize {
+        self.idx.len() * std::mem::size_of::<usize>()
+            + self.pts.mem_bytes()
+            + self.dist.len() * 4
+    }
+}
+
+/// What one machine ships to the leader in the sample round.
+struct SampleMsg {
+    batch_idx: Vec<usize>,
+    batch_pts: PointSet,
+    witness_dist: Vec<f32>,
+}
+
+impl MemSize for SampleMsg {
+    fn mem_bytes(&self) -> usize {
+        self.batch_idx.len() * 8 + self.batch_pts.mem_bytes() + self.witness_dist.len() * 4
+    }
+}
+
+/// Result of the distributed sampling loop.
+pub struct MrSampleResult {
+    /// The sample C = S ∪ R (points).
+    pub sample: PointSet,
+    /// Global indices of C into the input point set.
+    pub indices: Vec<usize>,
+    pub iterations: usize,
+}
+
+/// Run Algorithm 3 on `cluster`. Rounds/memory/time are charged to
+/// `cluster.stats`.
+pub fn mr_iterative_sample(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<MrSampleResult, MrError> {
+    let n = points.len();
+    let dim = points.dim();
+    let scfg = IterativeSampleConfig {
+        k: cfg.k,
+        epsilon: cfg.epsilon,
+        constants: cfg.profile.constants(),
+        seed: cfg.seed,
+        max_iters: 200,
+    };
+    let threshold = scfg.constants.threshold(n, cfg.k, cfg.epsilon).max(1);
+    let mut root_rng = Rng::new(cfg.seed ^ 0x5eed_5a11_3d5a_11ce);
+
+    // Initial partition: contiguous blocks of V.
+    let n_parts = cfg.machines.min(n).max(1);
+    let mut parts: Vec<MachinePart> = points
+        .chunks(n_parts)
+        .into_iter()
+        .scan(0usize, |start, chunk| {
+            let lo = *start;
+            *start += chunk.len();
+            Some((lo, chunk))
+        })
+        .enumerate()
+        .map(|(m, (lo, chunk))| MachinePart {
+            idx: (lo..lo + chunk.len()).collect(),
+            dist: vec![f32::INFINITY; chunk.len()],
+            pts: chunk,
+            rng: root_rng.fork(m as u64),
+        })
+        .collect();
+
+    let mut sample_indices: Vec<usize> = Vec::new();
+    let mut sample_pts = PointSet::with_capacity(dim, 1024);
+    let mut iterations = 0usize;
+
+    loop {
+        let remaining: usize = parts.iter().map(|p| p.idx.len()).sum();
+        if remaining <= threshold || iterations >= scfg.max_iters {
+            break;
+        }
+        iterations += 1;
+
+        let ps = scfg.constants.p_sample(n, cfg.k, cfg.epsilon, remaining);
+        let ph = scfg.constants.p_witness(n, cfg.epsilon, remaining);
+
+        // ---- Round 1: local Bernoulli sampling on every machine ----
+        let msgs: Vec<SampleMsg> = cluster.run_machine_round_mut(
+            &format!("iterative-sample iter {iterations}: sample"),
+            &mut parts,
+            0,
+            move |_m, part: &mut MachinePart| {
+                let mut batch_idx = Vec::new();
+                let mut batch_pts = PointSet::with_capacity(dim, 8);
+                let mut witness_dist = Vec::new();
+                for pos in 0..part.idx.len() {
+                    if part.rng.bernoulli(ps) {
+                        batch_idx.push(part.idx[pos]);
+                        batch_pts.push(part.pts.row(pos));
+                    }
+                    if part.rng.bernoulli(ph) {
+                        witness_dist.push(part.dist[pos]);
+                    }
+                }
+                SampleMsg {
+                    batch_idx,
+                    batch_pts,
+                    witness_dist,
+                }
+            },
+        )?;
+
+        // ---- Leader: assemble batch, update witness dists, pick pivot ----
+        let mut batch_idx = Vec::new();
+        let mut batch_pts = PointSet::with_capacity(dim, 64);
+        let mut h_dists = Vec::new();
+        let mut msg_bytes = 0usize;
+        for m in &msgs {
+            msg_bytes += m.mem_bytes();
+            batch_idx.extend_from_slice(&m.batch_idx);
+            batch_pts.extend(&m.batch_pts);
+            h_dists.extend_from_slice(&m.witness_dist);
+        }
+        if batch_idx.is_empty() {
+            // Probabilities underflowed (tiny R); promote one arbitrary
+            // remaining point so the loop always progresses.
+            if let Some(part) = parts.iter_mut().find(|p| !p.idx.is_empty()) {
+                batch_idx.push(part.idx[0]);
+                batch_pts.push(part.pts.row(0));
+            } else {
+                break;
+            }
+        }
+        let rank = scfg.constants.pivot_rank(n);
+        let batch_ref = &batch_pts;
+        let pivot = cluster.run_leader_round(
+            &format!("iterative-sample iter {iterations}: select"),
+            msg_bytes,
+            || {
+                // Witness dists were sampled *before* the batch existed;
+                // Algorithm 2 orders H by distance to S ∪ batch. The batch
+                // contribution can only shrink distances; witnesses are a
+                // small set so the leader recomputes against the batch...
+                // except the leader only has distances, not the witness
+                // coordinates — conservatively use the pre-batch distances,
+                // which upper-bound the true ones. (The pivot is a noisy
+                // threshold either way; Lemma 3.2's rank window tolerates
+                // constant-factor slack, and the prune step below uses the
+                // *true* post-batch distances.)
+                let _ = batch_ref;
+                select_pivot(&h_dists, rank)
+            },
+        )?;
+
+        sample_indices.extend_from_slice(&batch_idx);
+        sample_pts.extend(&batch_pts);
+
+        // ---- Round 2: broadcast (batch, pivot); update + prune ----
+        let bcast = batch_pts.mem_bytes() + 4;
+        let batch_set: std::collections::HashSet<usize> =
+            batch_idx.iter().copied().collect();
+        let batch_ref = &batch_pts;
+        let batch_set_ref = &batch_set;
+        cluster.run_machine_round_mut(
+            &format!("iterative-sample iter {iterations}: prune"),
+            &mut parts,
+            bcast,
+            move |_m, part: &mut MachinePart| {
+                if part.idx.is_empty() {
+                    return 0usize;
+                }
+                // d(x, S) update against the fresh batch — the hot kernel.
+                let nd = backend.min_dist(&part.pts, batch_ref);
+                for (pos, v) in nd.iter().enumerate() {
+                    if *v < part.dist[pos] {
+                        part.dist[pos] = *v;
+                    }
+                }
+                // Prune: drop sampled points and well-represented points.
+                let keep: Vec<usize> = (0..part.idx.len())
+                    .filter(|&pos| {
+                        let gi = part.idx[pos];
+                        !batch_set_ref.contains(&gi)
+                            && match pivot {
+                                Some(pv) => part.dist[pos] >= pv,
+                                None => true,
+                            }
+                    })
+                    .collect();
+                let dropped = part.idx.len() - keep.len();
+                part.pts = part.pts.gather(&keep);
+                part.dist = keep.iter().map(|&pos| part.dist[pos]).collect();
+                part.idx = keep.iter().map(|&pos| part.idx[pos]).collect();
+                dropped
+            },
+        )?;
+    }
+
+    // ---- Final gather: C = S ∪ R ----
+    let rem_msgs: Vec<SampleMsg> = cluster.run_machine_round(
+        "iterative-sample: gather remainder",
+        &parts,
+        0,
+        |_m, part: &MachinePart| SampleMsg {
+            batch_idx: part.idx.clone(),
+            batch_pts: part.pts.clone(),
+            witness_dist: Vec::new(),
+        },
+    )?;
+    let mut indices = sample_indices;
+    let mut sample = sample_pts;
+    for m in rem_msgs {
+        indices.extend_from_slice(&m.batch_idx);
+        sample.extend(&m.batch_pts);
+    }
+    // Defensive de-dup (keeps first occurrence, preserves order).
+    let mut seen = std::collections::HashSet::new();
+    let keep: Vec<usize> = (0..indices.len()).filter(|&i| seen.insert(indices[i])).collect();
+    if keep.len() != indices.len() {
+        sample = sample.gather(&keep);
+        indices = keep.iter().map(|&i| indices[i]).collect();
+    }
+
+    Ok(MrSampleResult {
+        sample,
+        indices,
+        iterations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+    use crate::mapreduce::MrConfig;
+    use crate::runtime::NativeBackend;
+
+    fn run(n: usize, machines: usize, seed: u64) -> (MrSampleResult, MrCluster) {
+        let data = DataGenConfig {
+            n,
+            k: 10,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let cfg = ClusterConfig {
+            k: 10,
+            epsilon: 0.2,
+            machines,
+            seed,
+            ..Default::default()
+        };
+        let mut cluster = MrCluster::new(MrConfig {
+            n_machines: machines,
+            ..Default::default()
+        });
+        let res = mr_iterative_sample(&mut cluster, &data.points, &cfg, &NativeBackend).unwrap();
+        (res, cluster)
+    }
+
+    #[test]
+    fn indices_valid_and_unique() {
+        let (res, _) = run(20_000, 16, 1);
+        let mut s = res.indices.clone();
+        s.sort_unstable();
+        let len = s.len();
+        s.dedup();
+        assert_eq!(s.len(), len);
+        assert!(s.iter().all(|&i| i < 20_000));
+        assert_eq!(res.sample.len(), res.indices.len());
+    }
+
+    #[test]
+    fn sample_is_sublinear() {
+        let (res, _) = run(20_000, 16, 2);
+        assert!(
+            res.sample.len() < 20_000 / 4,
+            "sample size {}",
+            res.sample.len()
+        );
+        assert!(res.sample.len() >= 10);
+    }
+
+    #[test]
+    fn constant_rounds() {
+        let (res, cluster) = run(50_000, 32, 3);
+        // 2 rounds + 1 leader round per iteration + 1 final gather.
+        assert!(res.iterations <= 12, "iterations {}", res.iterations);
+        assert!(
+            cluster.stats.n_rounds() <= 3 * res.iterations + 1,
+            "{} rounds for {} iterations",
+            cluster.stats.n_rounds(),
+            res.iterations
+        );
+    }
+
+    #[test]
+    fn sample_points_match_indices() {
+        let data = DataGenConfig {
+            n: 5000,
+            k: 5,
+            seed: 4,
+            ..Default::default()
+        }
+        .generate();
+        let cfg = ClusterConfig {
+            k: 5,
+            epsilon: 0.2,
+            machines: 8,
+            seed: 4,
+            ..Default::default()
+        };
+        let mut cluster = MrCluster::new(MrConfig {
+            n_machines: 8,
+            ..Default::default()
+        });
+        let res = mr_iterative_sample(&mut cluster, &data.points, &cfg, &NativeBackend).unwrap();
+        for (pos, &gi) in res.indices.iter().enumerate() {
+            assert_eq!(res.sample.row(pos), data.points.row(gi));
+        }
+    }
+
+    #[test]
+    fn single_machine_still_works() {
+        let (res, _) = run(5000, 1, 5);
+        assert!(res.sample.len() >= 10);
+        assert!(res.sample.len() < 5000);
+    }
+}

@@ -1,0 +1,193 @@
+//! `Parallel-Lloyd` (§4.1) — the paper's main baseline.
+//!
+//! Points are partitioned across the machines once and stay resident. Each
+//! iteration is one MapReduce round: the current k centers are broadcast;
+//! every machine assigns its resident points and emits per-center
+//! (sum, count) plus its share of the objective; the leader aggregates and
+//! recomputes the means. By construction this computes *exactly* the
+//! sequential Lloyd iterate (the paper makes the same point).
+
+use crate::config::ClusterConfig;
+use crate::geometry::PointSet;
+use crate::mapreduce::{MrCluster, MrError};
+use crate::runtime::{ComputeBackend, LloydStepOut};
+use crate::util::rng::Rng;
+
+/// Result of a Parallel-Lloyd run.
+#[derive(Clone, Debug)]
+pub struct ParallelLloydResult {
+    pub centers: PointSet,
+    pub iters: usize,
+    pub cost_median: f64,
+    pub history: Vec<f64>,
+}
+
+/// Run Parallel-Lloyd on `cluster` (adds its rounds to the cluster stats).
+pub fn parallel_lloyd(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<ParallelLloydResult, MrError> {
+    let d = points.dim();
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = crate::algorithms::seeding::random_distinct(points, cfg.k, &mut rng);
+    let k = centers.len();
+
+    // Partition once; blocks stay resident across iterations.
+    let parts = points.chunks(cfg.machines.min(points.len()).max(1));
+    let bcast_bytes = k * d * 4;
+
+    let mut history = Vec::new();
+    let mut last_cost = f64::INFINITY;
+    let mut iters = 0usize;
+
+    for it in 0..cfg.lloyd_max_iters {
+        iters += 1;
+        let c_ref = &centers;
+        let steps: Vec<LloydStepOut> = cluster.run_machine_round(
+            &format!("parallel-lloyd iter {it}"),
+            &parts,
+            bcast_bytes,
+            move |_m, part: &PointSet| backend.lloyd_step(part, c_ref),
+        )?;
+
+        // Leader: aggregate and recompute means.
+        let mut agg = LloydStepOut::default();
+        for s in &steps {
+            agg.merge(s);
+        }
+        let cost = agg.cost_median;
+        history.push(cost);
+
+        let mut next = PointSet::with_capacity(d, k);
+        let mut row = vec![0.0f32; d];
+        for c in 0..k {
+            if agg.counts[c] > 0.0 {
+                for j in 0..d {
+                    row[j] = (agg.sums[c * d + j] / agg.counts[c]) as f32;
+                }
+                next.push(&row);
+            } else {
+                next.push(centers.row(c));
+            }
+        }
+        centers = next;
+
+        if last_cost.is_finite() {
+            let rel = (last_cost - cost) / last_cost.max(1e-12);
+            if rel.abs() < cfg.lloyd_tol {
+                break;
+            }
+        }
+        last_cost = cost;
+    }
+
+    let cost_median = history.last().copied().unwrap_or(0.0);
+    Ok(ParallelLloydResult {
+        centers,
+        iters,
+        cost_median,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::lloyd::{lloyd, LloydConfig};
+    use crate::data::DataGenConfig;
+    use crate::mapreduce::MrConfig;
+    use crate::runtime::NativeBackend;
+
+    fn cfg(k: usize, machines: usize) -> ClusterConfig {
+        ClusterConfig {
+            k,
+            machines,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matches_sequential_lloyd_exactly() {
+        // Same seed => same init; partitioned sums must reproduce the
+        // sequential iterate bit-for-near-bit.
+        let data = DataGenConfig {
+            n: 4000,
+            k: 8,
+            seed: 5,
+            ..Default::default()
+        }
+        .generate();
+        let ccfg = cfg(8, 16);
+        let mut cluster = MrCluster::new(MrConfig {
+            n_machines: 16,
+            ..Default::default()
+        });
+        let par = parallel_lloyd(&mut cluster, &data.points, &ccfg, &NativeBackend).unwrap();
+        let seq = lloyd(
+            &data.points,
+            None,
+            &LloydConfig {
+                k: 8,
+                max_iters: ccfg.lloyd_max_iters,
+                tol: ccfg.lloyd_tol,
+                seed: ccfg.seed,
+                ..Default::default()
+            },
+            &NativeBackend,
+        );
+        // Partitioned accumulation reorders float sums, so trajectories can
+        // drift by float noise; the clustering itself must agree closely.
+        let rel = (par.cost_median - seq.cost_median).abs() / seq.cost_median.max(1e-9);
+        assert!(
+            rel < 1e-3,
+            "parallel {} vs sequential {}",
+            par.cost_median,
+            seq.cost_median
+        );
+        assert!((par.iters as i64 - seq.iters as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn one_round_per_iteration() {
+        let data = DataGenConfig {
+            n: 1000,
+            k: 4,
+            seed: 6,
+            ..Default::default()
+        }
+        .generate();
+        let mut cluster = MrCluster::new(MrConfig {
+            n_machines: 10,
+            ..Default::default()
+        });
+        let res = parallel_lloyd(&mut cluster, &data.points, &cfg(4, 10), &NativeBackend).unwrap();
+        assert_eq!(cluster.stats.n_rounds(), res.iters);
+    }
+
+    #[test]
+    fn machine_count_does_not_change_result() {
+        let data = DataGenConfig {
+            n: 3000,
+            k: 5,
+            seed: 7,
+            ..Default::default()
+        }
+        .generate();
+        let mut costs = Vec::new();
+        for m in [1usize, 7, 50] {
+            let mut cluster = MrCluster::new(MrConfig {
+                n_machines: m,
+                ..Default::default()
+            });
+            let res =
+                parallel_lloyd(&mut cluster, &data.points, &cfg(5, m), &NativeBackend).unwrap();
+            costs.push(res.cost_median);
+        }
+        for w in costs.windows(2) {
+            let rel = (w[0] - w[1]).abs() / w[0].max(1e-9);
+            assert!(rel < 1e-6, "costs diverge across machine counts: {costs:?}");
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! The paper's synthetic workload generator (§4.2), exactly:
+//!
+//! * `k` planted centers positioned uniformly at random in the unit cube;
+//! * each point is assigned to cluster `i` with probability proportional to
+//!   a Zipf weight (`alpha = 0` ⇒ uniform sizes — the Figure 1/2 setting;
+//!   larger `alpha` ⇒ more skewed sizes);
+//! * a point is its planted center plus a `N(0, sigma²)` offset per
+//!   coordinate (global standard deviation `sigma = 0.1` in the paper).
+//!
+//! The planted centers and per-point cluster labels are kept so experiments
+//! can report "ground-truth" costs alongside algorithm costs.
+
+use crate::geometry::PointSet;
+use crate::util::rng::{Rng, Zipf};
+
+/// Configuration for [`DataGenConfig::generate`].
+#[derive(Clone, Debug)]
+pub struct DataGenConfig {
+    /// Number of points (the paper sweeps 10^4 .. 10^7).
+    pub n: usize,
+    /// Number of planted clusters (paper: 25).
+    pub k: usize,
+    /// Dimensionality (paper: 3).
+    pub dim: usize,
+    /// Global std-dev of the point spread around its center (paper: 0.1).
+    pub sigma: f64,
+    /// Zipf skew of cluster sizes (paper: 0 in the reported figures).
+    pub alpha: f64,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for DataGenConfig {
+    fn default() -> Self {
+        DataGenConfig {
+            n: 10_000,
+            k: 25,
+            dim: 3,
+            sigma: 0.1,
+            alpha: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// A generated dataset: points plus planting metadata.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub points: PointSet,
+    /// Planted cluster centers (k x dim).
+    pub planted_centers: PointSet,
+    /// Planted cluster label of each point.
+    pub labels: Vec<u32>,
+    pub config: DataGenConfig,
+}
+
+impl DataGenConfig {
+    pub fn generate(&self) -> Dataset {
+        assert!(self.k >= 1, "need at least one cluster");
+        assert!(self.n >= 1, "need at least one point");
+        let mut rng = Rng::new(self.seed);
+
+        // Planted centers: uniform in the unit cube.
+        let mut centers = PointSet::with_capacity(self.dim, self.k);
+        let mut row = vec![0.0f32; self.dim];
+        for _ in 0..self.k {
+            for c in row.iter_mut() {
+                *c = rng.f32();
+            }
+            centers.push(&row);
+        }
+
+        // Cluster sizes: Zipf-weighted categorical per point.
+        let zipf = Zipf::new(self.k, self.alpha);
+        let mut points = PointSet::with_capacity(self.dim, self.n);
+        let mut labels = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let c = zipf.sample(&mut rng);
+            labels.push(c as u32);
+            let center = centers.row(c);
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = center[j] + (self.sigma * rng.normal()) as f32;
+            }
+            points.push(&row);
+        }
+
+        Dataset {
+            points,
+            planted_centers: centers,
+            labels,
+            config: self.clone(),
+        }
+    }
+}
+
+impl Dataset {
+    /// The k-median cost of the *planted* centers — a handy (not optimal)
+    /// reference line for experiment reports.
+    pub fn planted_cost_median(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..self.points.len() {
+            let mut best = f32::INFINITY;
+            for c in 0..self.planted_centers.len() {
+                let d = crate::geometry::metric::sq_dist(
+                    self.points.row(i),
+                    self.planted_centers.row(c),
+                );
+                if d < best {
+                    best = d;
+                }
+            }
+            acc += (best.max(0.0) as f64).sqrt();
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let cfg = DataGenConfig {
+            n: 1000,
+            k: 10,
+            ..Default::default()
+        };
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a.points.len(), 1000);
+        assert_eq!(a.planted_centers.len(), 10);
+        assert_eq!(a.labels.len(), 1000);
+        assert_eq!(a.points, b.points, "same seed must replay identically");
+    }
+
+    #[test]
+    fn different_seed_different_data() {
+        let a = DataGenConfig { seed: 1, ..Default::default() }.generate();
+        let b = DataGenConfig { seed: 2, ..Default::default() }.generate();
+        assert_ne!(a.points, b.points);
+    }
+
+    #[test]
+    fn uniform_alpha_balances_clusters() {
+        let cfg = DataGenConfig {
+            n: 50_000,
+            k: 5,
+            alpha: 0.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let d = cfg.generate();
+        let mut counts = vec![0usize; 5];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(
+                (c as f64 - 10_000.0).abs() < 600.0,
+                "alpha=0 should balance: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_alpha_unbalances_clusters() {
+        let cfg = DataGenConfig {
+            n: 50_000,
+            k: 5,
+            alpha: 1.5,
+            seed: 3,
+            ..Default::default()
+        };
+        let d = cfg.generate();
+        let mut counts = vec![0usize; 5];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts[0] > 2 * counts[4], "zipf skew expected: {counts:?}");
+    }
+
+    #[test]
+    fn points_near_their_planted_center() {
+        let cfg = DataGenConfig {
+            n: 2000,
+            k: 4,
+            sigma: 0.01,
+            seed: 7,
+            ..Default::default()
+        };
+        let d = cfg.generate();
+        for i in 0..d.points.len() {
+            let c = d.labels[i] as usize;
+            let dist = crate::geometry::metric::sq_dist(
+                d.points.row(i),
+                d.planted_centers.row(c),
+            )
+            .sqrt();
+            // 3 coords * sigma=0.01 each: distances beyond 0.1 are ~10 sigma.
+            assert!(dist < 0.1, "point {i} too far from its center: {dist}");
+        }
+    }
+
+    #[test]
+    fn planted_cost_is_reasonable() {
+        let cfg = DataGenConfig {
+            n: 5000,
+            k: 8,
+            sigma: 0.05,
+            seed: 11,
+            ..Default::default()
+        };
+        let d = cfg.generate();
+        let per_point = d.planted_cost_median() / 5000.0;
+        // E[|N(0, sigma^2 I_3)|] ~ sigma * sqrt(8/pi) ~ 1.6 sigma; planted
+        // centers are near-optimal so the per-point cost should be close.
+        assert!(per_point > 0.02 && per_point < 0.2, "per-point {per_point}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Dataset I/O: CSV (human-readable, small data) and a raw little-endian
+//! f32 binary format (fast cache for the multi-million-point Figure 2 runs).
+
+use crate::geometry::PointSet;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Load a headerless CSV of floats; every row must have the same width.
+/// Lines starting with `#` and blank lines are skipped.
+pub fn load_csv(path: &Path) -> Result<PointSet> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut dim: Option<usize> = None;
+    let mut coords: Vec<f32> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let row: Vec<f32> = t
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f32>()
+                    .with_context(|| format!("line {}: bad float {s:?}", lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        match dim {
+            None => dim = Some(row.len()),
+            Some(d) => anyhow::ensure!(
+                row.len() == d,
+                "line {}: width {} != {}",
+                lineno + 1,
+                row.len(),
+                d
+            ),
+        }
+        coords.extend_from_slice(&row);
+    }
+    let dim = dim.context("empty csv")?;
+    Ok(PointSet::from_flat(dim, coords))
+}
+
+/// Write points as CSV.
+pub fn save_csv(path: &Path, ps: &PointSet) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ps.len() {
+        let row = ps.row(i);
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                w.write_all(b",")?;
+            }
+            write!(w, "{v}")?;
+        }
+        w.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"MRCLPTS1";
+
+/// Write points in the raw binary format:
+/// magic(8) | dim u32 LE | n u64 LE | n*dim f32 LE.
+pub fn save_f32_bin(path: &Path, ps: &PointSet) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(ps.dim() as u32).to_le_bytes())?;
+    w.write_all(&(ps.len() as u64).to_le_bytes())?;
+    for v in ps.flat() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary format written by [`save_f32_bin`].
+pub fn load_f32_bin(path: &Path) -> Result<PointSet> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == BIN_MAGIC, "bad magic: not a mrcluster points file");
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let dim = u32::from_le_bytes(b4) as usize;
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    anyhow::ensure!(dim > 0 && dim < 1 << 16, "implausible dim {dim}");
+    let mut bytes = vec![0u8; n * dim * 4];
+    r.read_exact(&mut bytes)?;
+    let mut coords = Vec::with_capacity(n * dim);
+    for c in bytes.chunks_exact(4) {
+        coords.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(PointSet::from_flat(dim, coords))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mrcluster_loader_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ps = PointSet::from_flat(3, vec![1.0, 2.5, -3.0, 0.0, 1e-4, 9.0]);
+        let p = tmpfile("rt.csv");
+        save_csv(&p, &ps).unwrap();
+        let back = load_csv(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.dim(), 3);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert!((back.row(i)[j] - ps.row(i)[j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn csv_skips_comments_and_blanks() {
+        let p = tmpfile("comments.csv");
+        std::fs::write(&p, "# header\n\n1,2\n3,4\n").unwrap();
+        let ps = load_csv(&p).unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps.dim(), 2);
+    }
+
+    #[test]
+    fn csv_rejects_ragged_rows() {
+        let p = tmpfile("ragged.csv");
+        std::fs::write(&p, "1,2\n3,4,5\n").unwrap();
+        assert!(load_csv(&p).is_err());
+    }
+
+    #[test]
+    fn csv_rejects_bad_float() {
+        let p = tmpfile("bad.csv");
+        std::fs::write(&p, "1,abc\n").unwrap();
+        assert!(load_csv(&p).is_err());
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let ps = PointSet::from_flat(2, (0..64).map(|i| i as f32 * 0.25).collect());
+        let p = tmpfile("rt.bin");
+        save_f32_bin(&p, &ps).unwrap();
+        let back = load_f32_bin(&p).unwrap();
+        assert_eq!(back, ps);
+    }
+
+    #[test]
+    fn bin_rejects_bad_magic() {
+        let p = tmpfile("badmagic.bin");
+        std::fs::write(&p, b"NOTMAGIC........").unwrap();
+        assert!(load_f32_bin(&p).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Dataset generation and I/O.
+
+pub mod generator;
+pub mod loader;
+
+pub use generator::{DataGenConfig, Dataset};
+pub use loader::{load_csv, load_f32_bin, save_csv, save_f32_bin};

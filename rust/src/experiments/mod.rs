@@ -1,0 +1,308 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver generates the paper's workload, runs the paper's algorithm
+//! set, and returns a [`FigureReport`] that renders the same rows the paper
+//! prints (costs normalized to Parallel-Lloyd; times in seconds). The CLI
+//! (`mrcluster fig1 …`) and the bench harness (`cargo bench`) both call
+//! these.
+
+use crate::config::ClusterConfig;
+use crate::coordinator::{run_algorithm_with, Algorithm};
+use crate::data::DataGenConfig;
+use crate::metrics::report::{FigureReport, RunRecord};
+use crate::runtime::ComputeBackend;
+use anyhow::Result;
+
+pub use crate::coordinator::driver::make_backend;
+
+/// Shared experiment parameters (the paper's §4.2 setting).
+#[derive(Clone, Debug)]
+pub struct ExperimentParams {
+    pub k: usize,
+    pub sigma: f64,
+    pub alpha: f64,
+    pub seed: u64,
+    /// Repetitions averaged per cell (paper: 3).
+    pub repeats: usize,
+    pub cluster: ClusterConfig,
+}
+
+impl Default for ExperimentParams {
+    fn default() -> Self {
+        ExperimentParams {
+            k: 25,
+            sigma: 0.1,
+            alpha: 0.0,
+            seed: 42,
+            repeats: 1,
+            cluster: ClusterConfig::default(),
+        }
+    }
+}
+
+impl ExperimentParams {
+    fn data_config(&self, n: usize, rep: usize) -> DataGenConfig {
+        DataGenConfig {
+            n,
+            k: self.k,
+            dim: 3,
+            sigma: self.sigma,
+            alpha: self.alpha,
+            seed: self.seed + rep as u64 * 1000,
+        }
+    }
+
+    fn cluster_config(&self, rep: usize) -> ClusterConfig {
+        ClusterConfig {
+            k: self.k,
+            seed: self.seed + rep as u64 * 7919,
+            ..self.cluster.clone()
+        }
+    }
+}
+
+/// Run one (algorithm, n) cell, averaging `repeats` runs.
+pub fn run_cell(
+    params: &ExperimentParams,
+    algo: Algorithm,
+    n: usize,
+    backend: &dyn ComputeBackend,
+) -> Result<RunRecord> {
+    let mut cost = 0.0f64;
+    let mut sim = std::time::Duration::ZERO;
+    let mut wall = std::time::Duration::ZERO;
+    let mut rounds = 0usize;
+    for rep in 0..params.repeats.max(1) {
+        let data = params.data_config(n, rep).generate();
+        let cfg = params.cluster_config(rep);
+        let out = run_algorithm_with(algo, &data.points, &cfg, backend)?;
+        cost += out.cost_median;
+        sim += out.sim_time;
+        wall += out.wall_time;
+        rounds = rounds.max(out.rounds);
+        log::info!(
+            "{} n={} rep={}: cost {:.2}, sim {:.3}s, rounds {}, reduced {:?}",
+            algo.name(),
+            n,
+            rep,
+            out.cost_median,
+            out.sim_time.as_secs_f64(),
+            out.rounds,
+            out.reduced_size
+        );
+    }
+    let reps = params.repeats.max(1) as u32;
+    Ok(RunRecord {
+        algo: algo.name().to_string(),
+        n,
+        cost_median: cost / reps as f64,
+        sim_time: sim / reps,
+        wall_time: wall / reps,
+        rounds,
+    })
+}
+
+/// E1 — Figure 1: all six algorithms over moderate n.
+///
+/// `ns` defaults to the paper's sweep scaled to what the host can run;
+/// LocalSearch only runs while `n <= ls_cap` (the paper stops at 40k).
+pub fn figure1(
+    params: &ExperimentParams,
+    ns: &[usize],
+    ls_cap: usize,
+    backend: &dyn ComputeBackend,
+) -> Result<FigureReport> {
+    let mut report = FigureReport::default();
+    for &n in ns {
+        for algo in Algorithm::figure1() {
+            if algo == Algorithm::LocalSearch && n > ls_cap {
+                continue; // the paper's N/A cells
+            }
+            report.add(run_cell(params, algo, n, backend)?);
+        }
+    }
+    Ok(report)
+}
+
+/// E2 — Figure 2: the scalable subset over large n.
+pub fn figure2(
+    params: &ExperimentParams,
+    ns: &[usize],
+    backend: &dyn ComputeBackend,
+) -> Result<FigureReport> {
+    let mut report = FigureReport::default();
+    for &n in ns {
+        for algo in Algorithm::figure2() {
+            report.add(run_cell(params, algo, n, backend)?);
+        }
+    }
+    Ok(report)
+}
+
+/// E3 — k-center: MapReduce-kCenter vs full-data Gonzalez; returns
+/// (sampled radius, full radius) per n.
+pub fn kcenter_compare(
+    params: &ExperimentParams,
+    ns: &[usize],
+    backend: &dyn ComputeBackend,
+) -> Result<Vec<(usize, f64, f64)>> {
+    let mut rows = Vec::new();
+    for &n in ns {
+        let data = params.data_config(n, 0).generate();
+        let cfg = params.cluster_config(0);
+        let out = run_algorithm_with(Algorithm::MrKCenter, &data.points, &cfg, backend)?;
+        let mut rng = crate::util::rng::Rng::new(params.seed ^ 0xF00D);
+        let full = crate::algorithms::gonzalez::gonzalez(&data.points, params.k, &mut rng);
+        rows.push((n, out.cost.center, full.radius));
+    }
+    Ok(rows)
+}
+
+/// E4 — Iterative-Sample statistics across n and ε (Propositions 2.1/2.2).
+pub struct SampleStatsRow {
+    pub n: usize,
+    pub epsilon: f64,
+    pub iterations: usize,
+    pub sample_size: usize,
+    pub bound: f64,
+}
+
+pub fn sample_stats(
+    params: &ExperimentParams,
+    ns: &[usize],
+    epsilons: &[f64],
+) -> Result<Vec<SampleStatsRow>> {
+    use crate::sampling::{iterative_sample, IterativeSampleConfig};
+    let backend = crate::runtime::NativeBackend;
+    let mut rows = Vec::new();
+    for &n in ns {
+        for &eps in epsilons {
+            let data = params.data_config(n, 0).generate();
+            let cfg = IterativeSampleConfig {
+                k: params.k,
+                epsilon: eps,
+                constants: params.cluster.profile.constants(),
+                seed: params.seed,
+                max_iters: 200,
+            };
+            let res = iterative_sample(&data.points, &cfg, &backend);
+            let bound =
+                cfg.constants.threshold(n, params.k, eps) as f64 * 2.0; // |C| <= 2*threshold-ish
+            rows.push(SampleStatsRow {
+                n,
+                epsilon: eps,
+                iterations: res.iterations,
+                sample_size: res.sample.len(),
+                bound,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// E9 — the conclusion's k-means claim ("our analysis also gives a
+/// MapReduce algorithm ... for the k-means problem"): run Sampling-Lloyd
+/// and Parallel-Lloyd and compare the *k-means* objective (Σ d²) ratio.
+pub fn kmeans_check(
+    params: &ExperimentParams,
+    n: usize,
+    backend: &dyn ComputeBackend,
+) -> Result<(f64, f64)> {
+    let data = params.data_config(n, 0).generate();
+    let cfg = params.cluster_config(0);
+    let base = run_algorithm_with(Algorithm::ParallelLloyd, &data.points, &cfg, backend)?;
+    let samp = run_algorithm_with(Algorithm::SamplingLloyd, &data.points, &cfg, backend)?;
+    Ok((samp.cost.means / base.cost.means, samp.cost.median / base.cost.median))
+}
+
+/// E10 — streaming baseline (Guha et al. [20]) vs the paper's sampling
+/// algorithm: cost ratio + timing per n. Returns (n, streaming record,
+/// sampling record) rows in a FigureReport.
+pub fn streaming_compare(
+    params: &ExperimentParams,
+    ns: &[usize],
+    backend: &dyn ComputeBackend,
+) -> Result<FigureReport> {
+    let mut report = FigureReport::default();
+    for &n in ns {
+        for algo in [
+            Algorithm::ParallelLloyd,
+            Algorithm::SamplingLloyd,
+            Algorithm::StreamingGuha,
+        ] {
+            report.add(run_cell(params, algo, n, backend)?);
+        }
+    }
+    Ok(report)
+}
+
+/// E7 — Zipf-skew robustness sweep (the "similar results, omitted" claim).
+pub fn skew_sweep(
+    params: &ExperimentParams,
+    n: usize,
+    alphas: &[f64],
+    backend: &dyn ComputeBackend,
+) -> Result<FigureReport> {
+    let mut report = FigureReport::default();
+    for &alpha in alphas {
+        let p = ExperimentParams {
+            alpha,
+            ..params.clone()
+        };
+        for algo in [
+            Algorithm::ParallelLloyd,
+            Algorithm::SamplingLloyd,
+            Algorithm::SamplingLocalSearch,
+        ] {
+            let mut rec = run_cell(&p, algo, n, backend)?;
+            // Encode alpha in the n column (the report is keyed by n).
+            rec.n = (alpha * 1000.0) as usize;
+            report.add(rec);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn tiny() -> ExperimentParams {
+        ExperimentParams {
+            k: 5,
+            repeats: 1,
+            cluster: ClusterConfig {
+                k: 5,
+                epsilon: 0.2,
+                machines: 8,
+                ls_max_swaps: 20,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn figure1_produces_all_rows() {
+        let rep = figure1(&tiny(), &[2000], 40_000, &NativeBackend).unwrap();
+        assert_eq!(rep.records.len(), 6);
+        let table = rep.cost_table("Parallel-Lloyd");
+        assert_eq!(table.n_rows(), 6);
+    }
+
+    #[test]
+    fn figure1_skips_localsearch_beyond_cap() {
+        let rep = figure1(&tiny(), &[2000], 1000, &NativeBackend).unwrap();
+        assert_eq!(rep.records.len(), 5);
+    }
+
+    #[test]
+    fn sample_stats_rows() {
+        let rows = sample_stats(&tiny(), &[5000], &[0.1, 0.3]).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in rows {
+            assert!(r.sample_size > 0);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Explicit `Θ(n²)` distance representation — the input model the paper's
+//! theory section assumes ("we are given the distance function explicitly as
+//! a set of Θ(n²) distances"). Practical only for small n; used by the
+//! graph-metric tests and the k-center demo on non-embeddable metrics.
+
+use crate::geometry::PointSet;
+
+/// A dense symmetric distance matrix with zero diagonal.
+#[derive(Clone, Debug)]
+pub struct DistanceMatrix {
+    n: usize,
+    d: Vec<f32>, // row-major n x n
+}
+
+impl DistanceMatrix {
+    /// Build from an explicit full matrix. Validates metric axioms
+    /// (symmetry, zero diagonal, non-negativity); triangle inequality is
+    /// checked only in debug builds (O(n³)).
+    pub fn new(n: usize, d: Vec<f32>) -> anyhow::Result<Self> {
+        anyhow::ensure!(d.len() == n * n, "matrix must be n*n");
+        for i in 0..n {
+            anyhow::ensure!(d[i * n + i] == 0.0, "diagonal must be zero at {i}");
+            for j in 0..i {
+                let dij = d[i * n + j];
+                let dji = d[j * n + i];
+                anyhow::ensure!(dij >= 0.0, "negative distance at ({i},{j})");
+                anyhow::ensure!(
+                    (dij - dji).abs() <= 1e-5 * (1.0 + dij.abs()),
+                    "asymmetric at ({i},{j}): {dij} vs {dji}"
+                );
+            }
+        }
+        #[cfg(debug_assertions)]
+        {
+            for i in 0..n {
+                for j in 0..n {
+                    for l in 0..n {
+                        debug_assert!(
+                            d[i * n + j] <= d[i * n + l] + d[l * n + j] + 1e-3,
+                            "triangle inequality violated at ({i},{j},{l})"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(DistanceMatrix { n, d })
+    }
+
+    /// Build by evaluating Euclidean distances between the rows of a
+    /// [`PointSet`] (handy for tests comparing matrix vs coordinate paths).
+    pub fn from_points(ps: &PointSet) -> Self {
+        let n = ps.len();
+        let mut d = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = crate::geometry::metric::sq_dist(ps.row(i), ps.row(j)).sqrt();
+                d[i * n + j] = v;
+                d[j * n + i] = v;
+            }
+        }
+        DistanceMatrix { n, d }
+    }
+
+    /// Build shortest-path distances of a weighted undirected graph given as
+    /// an edge list (Floyd–Warshall; the "sparse graph" input the paper's
+    /// intro discusses, made explicit). Disconnected pairs get a large
+    /// finite distance so the result is still a (pseudo-)metric.
+    pub fn from_graph(n: usize, edges: &[(usize, usize, f32)]) -> Self {
+        const INF: f32 = 1e12;
+        let mut d = vec![INF; n * n];
+        for i in 0..n {
+            d[i * n + i] = 0.0;
+        }
+        for &(u, v, w) in edges {
+            assert!(u < n && v < n);
+            assert!(w >= 0.0, "edge weights must be non-negative");
+            let cur = d[u * n + v];
+            if w < cur {
+                d[u * n + v] = w;
+                d[v * n + u] = w;
+            }
+        }
+        for k in 0..n {
+            for i in 0..n {
+                let dik = d[i * n + k];
+                if dik >= INF {
+                    continue;
+                }
+                for j in 0..n {
+                    let via = dik + d[k * n + j];
+                    if via < d[i * n + j] {
+                        d[i * n + j] = via;
+                    }
+                }
+            }
+        }
+        // Clamp disconnected pairs to the largest finite distance * 2 so
+        // that the triangle inequality still holds.
+        let maxfin = d
+            .iter()
+            .copied()
+            .filter(|&x| x < INF)
+            .fold(0.0f32, f32::max);
+        let cap = (maxfin * 2.0).max(1.0);
+        for x in d.iter_mut() {
+            if *x >= INF {
+                *x = cap;
+            }
+        }
+        DistanceMatrix { n, d }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dist(&self, i: usize, j: usize) -> f32 {
+        self.d[i * self.n + j]
+    }
+
+    /// Minimum distance from `i` to any index in `set`.
+    pub fn dist_to_set(&self, i: usize, set: &[usize]) -> f32 {
+        set.iter()
+            .map(|&j| self.dist(i, j))
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    /// k-center cost of `centers` over all points.
+    pub fn kcenter_cost(&self, centers: &[usize]) -> f32 {
+        (0..self.n)
+            .map(|i| self.dist_to_set(i, centers))
+            .fold(0.0, f32::max)
+    }
+
+    /// k-median cost of `centers` over all points.
+    pub fn kmedian_cost(&self, centers: &[usize]) -> f64 {
+        (0..self.n)
+            .map(|i| self.dist_to_set(i, centers) as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_points_roundtrip() {
+        let ps = PointSet::from_flat(2, vec![0.0, 0.0, 3.0, 4.0, 0.0, 1.0]);
+        let m = DistanceMatrix::from_points(&ps);
+        assert_eq!(m.len(), 3);
+        assert!((m.dist(0, 1) - 5.0).abs() < 1e-5);
+        assert_eq!(m.dist(0, 0), 0.0);
+        assert!((m.dist(1, 0) - m.dist(0, 1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_asymmetric() {
+        let d = vec![0.0, 1.0, 2.0, 0.0];
+        assert!(DistanceMatrix::new(2, d).is_err());
+    }
+
+    #[test]
+    fn rejects_nonzero_diagonal() {
+        let d = vec![1.0, 1.0, 1.0, 0.0];
+        assert!(DistanceMatrix::new(2, d).is_err());
+    }
+
+    #[test]
+    fn graph_shortest_paths() {
+        // Path graph 0-1-2 with weights 1, 2: d(0,2) = 3.
+        let m = DistanceMatrix::from_graph(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        assert!((m.dist(0, 2) - 3.0).abs() < 1e-6);
+        assert!((m.dist(2, 0) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn graph_disconnected_capped() {
+        let m = DistanceMatrix::from_graph(3, &[(0, 1, 5.0)]);
+        assert!(m.dist(0, 2) > 5.0);
+        assert!(m.dist(0, 2).is_finite());
+        // Still symmetric.
+        assert_eq!(m.dist(0, 2), m.dist(2, 0));
+    }
+
+    #[test]
+    fn costs() {
+        let ps = PointSet::from_flat(1, vec![0.0, 1.0, 2.0, 10.0]);
+        let m = DistanceMatrix::from_points(&ps);
+        assert!((m.kcenter_cost(&[0]) - 10.0).abs() < 1e-5);
+        assert!((m.kmedian_cost(&[0]) - 13.0).abs() < 1e-4);
+        assert!((m.kcenter_cost(&[1, 3]) - 1.0).abs() < 1e-5);
+    }
+}

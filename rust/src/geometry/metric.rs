@@ -1,0 +1,165 @@
+//! Distance functions.
+//!
+//! The paper's algorithms only require the triangle inequality; all our
+//! k-median / k-center machinery is written against the [`Metric`] trait.
+//! The experiments (§4.2) use Euclidean distance in `R^3`; the squared
+//! Euclidean form is the hot-path primitive (monotone in the true distance,
+//! so argmins are unaffected, and it avoids the sqrt until cost reporting —
+//! the same trick the L1 Pallas kernel uses).
+
+/// A distance function over coordinate rows.
+pub trait Metric: Send + Sync {
+    /// The true metric distance d(a, b).
+    fn dist(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// A monotone surrogate of `dist` (defaults to `dist` itself). Argmin /
+    /// comparisons may use this; costs must go through [`Metric::dist`] or
+    /// [`Metric::to_dist`].
+    #[inline]
+    fn surrogate(&self, a: &[f32], b: &[f32]) -> f32 {
+        self.dist(a, b)
+    }
+
+    /// Map a surrogate value back to the true distance.
+    #[inline]
+    fn to_dist(&self, surrogate: f32) -> f32 {
+        surrogate
+    }
+}
+
+/// Squared-Euclidean surrogate for the Euclidean metric. This is the metric
+/// every paper experiment runs under.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EuclideanSq;
+
+/// Squared Euclidean distance between two coordinate rows, with an
+/// unrolled fast path for the paper's `d = 3`.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match a.len() {
+        3 => {
+            let d0 = a[0] - b[0];
+            let d1 = a[1] - b[1];
+            let d2 = a[2] - b[2];
+            d0 * d0 + d1 * d1 + d2 * d2
+        }
+        2 => {
+            let d0 = a[0] - b[0];
+            let d1 = a[1] - b[1];
+            d0 * d0 + d1 * d1
+        }
+        _ => {
+            let mut acc = 0.0f32;
+            for i in 0..a.len() {
+                let d = a[i] - b[i];
+                acc += d * d;
+            }
+            acc
+        }
+    }
+}
+
+impl Metric for EuclideanSq {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        sq_dist(a, b).sqrt()
+    }
+
+    #[inline]
+    fn surrogate(&self, a: &[f32], b: &[f32]) -> f32 {
+        sq_dist(a, b)
+    }
+
+    #[inline]
+    fn to_dist(&self, surrogate: f32) -> f32 {
+        surrogate.max(0.0).sqrt()
+    }
+}
+
+/// Manhattan (L1) metric — included to demonstrate the library is not tied
+/// to Euclidean geometry (the paper's guarantees only need the triangle
+/// inequality).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Manhattan;
+
+impl Metric for Manhattan {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+}
+
+/// Chebyshev (L∞) metric.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Chebyshev;
+
+impl Metric for Chebyshev {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_dist_matches_definition_various_dims() {
+        for d in [1usize, 2, 3, 4, 8, 17] {
+            let a: Vec<f32> = (0..d).map(|i| i as f32 * 0.5).collect();
+            let b: Vec<f32> = (0..d).map(|i| 2.0 - i as f32).collect();
+            let want: f32 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            assert!((sq_dist(&a, &b) - want).abs() < 1e-5, "dim {d}");
+        }
+    }
+
+    #[test]
+    fn euclidean_consistency() {
+        let m = EuclideanSq;
+        let a = [0.0, 3.0, 0.0];
+        let b = [4.0, 0.0, 0.0];
+        assert!((m.dist(&a, &b) - 5.0).abs() < 1e-6);
+        assert!((m.surrogate(&a, &b) - 25.0).abs() < 1e-5);
+        assert!((m.to_dist(m.surrogate(&a, &b)) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn identity_and_symmetry() {
+        let metrics: Vec<Box<dyn Metric>> =
+            vec![Box::new(EuclideanSq), Box::new(Manhattan), Box::new(Chebyshev)];
+        let a = [1.0f32, -2.0, 0.5];
+        let b = [0.0f32, 4.0, 2.5];
+        for m in &metrics {
+            assert_eq!(m.dist(&a, &a), 0.0);
+            assert!((m.dist(&a, &b) - m.dist(&b, &a)).abs() < 1e-6);
+            assert!(m.dist(&a, &b) > 0.0);
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_randomized() {
+        let mut rng = crate::util::rng::Rng::new(99);
+        let metrics: Vec<Box<dyn Metric>> =
+            vec![Box::new(EuclideanSq), Box::new(Manhattan), Box::new(Chebyshev)];
+        for _ in 0..200 {
+            let p: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..3).map(|_| rng.f32() * 10.0 - 5.0).collect())
+                .collect();
+            for m in &metrics {
+                let ab = m.dist(&p[0], &p[1]);
+                let bc = m.dist(&p[1], &p[2]);
+                let ac = m.dist(&p[0], &p[2]);
+                assert!(ac <= ab + bc + 1e-4, "triangle violated");
+            }
+        }
+    }
+}

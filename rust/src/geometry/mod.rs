@@ -1,0 +1,11 @@
+//! Metric-space substrate: point storage, distance functions, and the
+//! explicit distance-matrix representation the paper's theory section
+//! assumes (`Θ(n²)` edges) for small instances.
+
+pub mod matrix;
+pub mod metric;
+pub mod point;
+
+pub use matrix::DistanceMatrix;
+pub use metric::{EuclideanSq, Metric};
+pub use point::PointSet;

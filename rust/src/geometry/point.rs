@@ -1,0 +1,209 @@
+//! Flat structure-of-arrays point storage.
+//!
+//! All hot loops in the system iterate over contiguous `f32` coordinate
+//! rows, so points are stored as one flat `Vec<f32>` of length `n * dim`
+//! (row-major). This is also exactly the layout the PJRT artifacts take as
+//! input, so handing a block to the XLA backend is a memcpy, not a gather.
+
+use std::fmt;
+
+/// A set of `n` points in `R^dim`, stored row-major.
+#[derive(Clone, PartialEq)]
+pub struct PointSet {
+    dim: usize,
+    coords: Vec<f32>,
+}
+
+impl fmt::Debug for PointSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PointSet(n={}, dim={})", self.len(), self.dim)
+    }
+}
+
+impl PointSet {
+    /// Build from a flat row-major coordinate buffer.
+    pub fn from_flat(dim: usize, coords: Vec<f32>) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        assert!(
+            coords.len() % dim == 0,
+            "flat buffer length {} not divisible by dim {}",
+            coords.len(),
+            dim
+        );
+        PointSet { dim, coords }
+    }
+
+    /// An empty set with capacity for `cap` points.
+    pub fn with_capacity(dim: usize, cap: usize) -> Self {
+        assert!(dim > 0);
+        PointSet {
+            dim,
+            coords: Vec::with_capacity(cap * dim),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.coords.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Coordinates of point `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = self.dim;
+        &self.coords[i * d..(i + 1) * d]
+    }
+
+    /// The whole flat buffer (row-major).
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.coords
+    }
+
+    /// Append one point.
+    pub fn push(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim, "row has wrong dimension");
+        self.coords.extend_from_slice(row);
+    }
+
+    /// Append all points of `other` (must agree on dim).
+    pub fn extend(&mut self, other: &PointSet) {
+        assert_eq!(self.dim, other.dim);
+        self.coords.extend_from_slice(&other.coords);
+    }
+
+    /// New set containing the rows at `indices` (in order).
+    pub fn gather(&self, indices: &[usize]) -> PointSet {
+        let mut out = PointSet::with_capacity(self.dim, indices.len());
+        for &i in indices {
+            out.push(self.row(i));
+        }
+        out
+    }
+
+    /// Split into `parts` nearly-equal contiguous chunks (last may be
+    /// shorter). Used by the MapReduce partitioners.
+    pub fn chunks(&self, parts: usize) -> Vec<PointSet> {
+        assert!(parts > 0);
+        let n = self.len();
+        let per = crate::util::div_ceil(n, parts);
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let end = (start + per).min(n);
+            out.push(PointSet::from_flat(
+                self.dim,
+                self.coords[start * self.dim..end * self.dim].to_vec(),
+            ));
+            start = end;
+        }
+        out
+    }
+
+    /// In-place Fisher–Yates shuffle of the rows ("the mappers arbitrarily
+    /// partition" — we realize arbitrariness as a seeded shuffle).
+    pub fn shuffle(&mut self, rng: &mut crate::util::rng::Rng) {
+        let n = self.len();
+        let d = self.dim;
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            if i != j {
+                for c in 0..d {
+                    self.coords.swap(i * d + c, j * d + c);
+                }
+            }
+        }
+    }
+
+    /// Memory footprint in bytes (used by the engine's memory accounting).
+    pub fn mem_bytes(&self) -> usize {
+        self.coords.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ps(rows: &[&[f32]]) -> PointSet {
+        let dim = rows[0].len();
+        let mut p = PointSet::with_capacity(dim, rows.len());
+        for r in rows {
+            p.push(r);
+        }
+        p
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let p = ps(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.dim(), 2);
+        assert_eq!(p.row(1), &[3.0, 4.0]);
+        assert_eq!(p.flat().len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn bad_flat_panics() {
+        PointSet::from_flat(3, vec![1.0; 7]);
+    }
+
+    #[test]
+    fn gather_preserves_order() {
+        let p = ps(&[&[0.0], &[1.0], &[2.0], &[3.0]]);
+        let g = p.gather(&[3, 1]);
+        assert_eq!(g.row(0), &[3.0]);
+        assert_eq!(g.row(1), &[1.0]);
+    }
+
+    #[test]
+    fn chunks_cover_everything() {
+        let p = PointSet::from_flat(1, (0..10).map(|i| i as f32).collect());
+        let cs = p.chunks(3);
+        assert_eq!(cs.len(), 3);
+        let total: usize = cs.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 10);
+        // Order preserved across chunk boundaries.
+        assert_eq!(cs[0].row(0), &[0.0]);
+        assert_eq!(cs[2].row(cs[2].len() - 1), &[9.0]);
+    }
+
+    #[test]
+    fn chunks_more_parts_than_points() {
+        let p = PointSet::from_flat(1, vec![1.0, 2.0]);
+        let cs = p.chunks(5);
+        let total: usize = cs.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = PointSet::from_flat(1, (0..100).map(|i| i as f32).collect());
+        let mut rng = Rng::new(1);
+        p.shuffle(&mut rng);
+        let mut vals: Vec<f32> = p.flat().to_vec();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let expect: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        assert_eq!(vals, expect);
+        // And it actually moved something.
+        assert_ne!(p.flat()[..10], expect[..10]);
+    }
+
+    #[test]
+    fn extend_appends() {
+        let mut a = ps(&[&[1.0, 1.0]]);
+        let b = ps(&[&[2.0, 2.0]]);
+        a.extend(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.row(1), &[2.0, 2.0]);
+    }
+}

@@ -1,0 +1,66 @@
+//! # mrcluster — Fast Clustering using MapReduce
+//!
+//! A full reproduction of *Fast Clustering using MapReduce* (Ene, Im,
+//! Moseley — KDD 2011) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — a simulated-cluster [`mapreduce`] engine
+//!   (machines, rounds, shuffle, per-machine memory and time accounting,
+//!   `MRC^0` constraint checks) and, on top of it, the paper's algorithms in
+//!   [`coordinator`]: `MapReduce-Iterative-Sample` (Algorithm 3),
+//!   `MapReduce-kCenter` (Algorithm 4), `MapReduce-kMedian` (Algorithm 5),
+//!   `MapReduce-Divide-kMedian` (Algorithm 6) and `Parallel-Lloyd`, plus all
+//!   sequential baselines in [`algorithms`].
+//! * **L2/L1 (python, build-time only)** — the numeric hot loop
+//!   (blocked nearest-center assignment and Lloyd accumulation) written in
+//!   JAX calling a Pallas kernel, AOT-lowered to HLO-text artifacts.
+//! * **[`runtime`]** — loads those artifacts through the PJRT C API (`xla`
+//!   crate) and exposes them behind [`runtime::ComputeBackend`], with a
+//!   pure-rust [`runtime::NativeBackend`] fallback that shares the exact
+//!   same semantics (cross-checked in tests).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mrcluster::prelude::*;
+//!
+//! let data = DataGenConfig { n: 100_000, k: 25, ..Default::default() }
+//!     .generate();
+//! let cfg = ClusterConfig { k: 25, ..Default::default() };
+//! let outcome = run_algorithm(Algorithm::SamplingLloyd, &data.points, &cfg)
+//!     .expect("clustering failed");
+//! println!("k-median cost = {:.4}", outcome.cost_median);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `DESIGN.md` for the
+//! paper-to-module map.
+
+pub mod algorithms;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod geometry;
+pub mod mapreduce;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod util;
+
+pub use config::{ClusterConfig, ConstantsProfile};
+pub use coordinator::{run_algorithm, Algorithm, Outcome};
+pub use data::DataGenConfig;
+pub use geometry::PointSet;
+
+/// Convenient glob-import surface for examples and downstream users.
+pub mod prelude {
+    pub use crate::algorithms::{gonzalez, lloyd, local_search};
+    pub use crate::config::{ClusterConfig, ConstantsProfile, RuntimeBackendKind};
+    pub use crate::coordinator::{run_algorithm, Algorithm, Outcome};
+    pub use crate::data::{DataGenConfig, Dataset};
+    pub use crate::geometry::{Metric, PointSet};
+    pub use crate::mapreduce::{MrCluster, MrConfig, RunStats};
+    pub use crate::metrics::{kcenter_cost, kmedian_cost, kmeans_cost};
+    pub use crate::runtime::{ComputeBackend, NativeBackend};
+    pub use crate::sampling::{IterativeSampleConfig, SampleConstants};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,603 @@
+//! The simulated cluster: machines, rounds, shuffle, timing, memory.
+
+use super::kv::MemSize;
+use super::stats::{RoundStats, RunStats};
+use super::MrError;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::time::{Duration, Instant};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct MrConfig {
+    /// Number of simulated machines (paper: 100).
+    pub n_machines: usize,
+    /// Per-machine memory budget in bytes; `None` disables enforcement.
+    /// The `MRC^0` model requires this to be sub-linear in the input.
+    pub mem_limit: Option<usize>,
+    /// Execute machines on worker threads (true) or sequentially (false).
+    /// Simulated time is measured per machine either way.
+    pub parallel: bool,
+    /// Worker threads used when `parallel` (0 = available cores).
+    pub threads: usize,
+    /// Fault injection: probability a machine-task fails transiently and
+    /// is re-executed (Hadoop-style task retry). The retry is charged as
+    /// doubled task time and counted in [`super::RoundStats::retries`].
+    pub fail_prob: f64,
+    /// Straggler injection: probability a machine-task runs slow.
+    pub straggler_prob: f64,
+    /// Simulated-time multiplier for straggling tasks (>= 1.0).
+    pub straggler_factor: f64,
+    /// Seed of the deterministic fault/straggler stream.
+    pub fault_seed: u64,
+}
+
+impl Default for MrConfig {
+    fn default() -> Self {
+        MrConfig {
+            n_machines: 100,
+            mem_limit: None,
+            parallel: true,
+            threads: 0,
+            fail_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            fault_seed: 0xFA17,
+        }
+    }
+}
+
+impl MrConfig {
+    fn effective_threads(&self) -> usize {
+        if !self.parallel {
+            return 1;
+        }
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// A simulated MapReduce cluster accumulating [`RunStats`].
+#[derive(Debug)]
+pub struct MrCluster {
+    pub config: MrConfig,
+    pub stats: RunStats,
+    /// Deterministic stream driving fault/straggler injection.
+    fault_rng: crate::util::rng::Rng,
+}
+
+impl Default for MrCluster {
+    fn default() -> Self {
+        MrCluster::new(MrConfig::default())
+    }
+}
+
+fn key_machine<K: Hash>(key: &K, n_machines: usize) -> usize {
+    // FxHash-style multiply hash over the default hasher to spread keys.
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % n_machines as u64) as usize
+}
+
+/// Run per-machine tasks (index, payload) -> (duration, output), either on a
+/// bounded thread pool or sequentially, preserving input order.
+fn run_tasks<T, U, F>(tasks: Vec<T>, threads: usize, f: F) -> Vec<(Duration, U)>
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, T) -> U + Send + Sync,
+{
+    if threads <= 1 || tasks.len() <= 1 {
+        return tasks
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let t0 = Instant::now();
+                let out = f(i, t);
+                (t0.elapsed(), out)
+            })
+            .collect();
+    }
+    // Simple work queue over scoped threads: tasks are taken in order, and
+    // outputs land in their original slot.
+    let n = tasks.len();
+    let mut slots: Vec<Option<(Duration, U)>> = (0..n).map(|_| None).collect();
+    {
+        let queue: std::sync::Mutex<std::collections::VecDeque<(usize, T)>> =
+            std::sync::Mutex::new(tasks.into_iter().enumerate().collect());
+        let slots_mtx: Vec<std::sync::Mutex<&mut Option<(Duration, U)>>> =
+            slots.iter_mut().map(std::sync::Mutex::new).collect();
+        let fref = &f;
+        let qref = &queue;
+        let sref = &slots_mtx;
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(n) {
+                scope.spawn(move || loop {
+                    let item = qref.lock().expect("queue poisoned").pop_front();
+                    match item {
+                        None => break,
+                        Some((i, t)) => {
+                            let t0 = Instant::now();
+                            let out = fref(i, t);
+                            let d = t0.elapsed();
+                            **sref[i].lock().expect("slot poisoned") = Some((d, out));
+                        }
+                    }
+                });
+            }
+        });
+    }
+    slots.into_iter().map(|s| s.expect("task not run")).collect()
+}
+
+impl MrCluster {
+    pub fn new(config: MrConfig) -> Self {
+        let fault_rng = crate::util::rng::Rng::new(config.fault_seed);
+        MrCluster {
+            config,
+            stats: RunStats::default(),
+            fault_rng,
+        }
+    }
+
+    /// Apply the configured fault/straggler model to one task's measured
+    /// duration. Returns (adjusted duration, retries incurred).
+    fn inject_faults(&mut self, d: Duration) -> (Duration, usize) {
+        let mut out = d;
+        let mut retries = 0;
+        if self.config.fail_prob > 0.0 && self.fault_rng.bernoulli(self.config.fail_prob) {
+            out += d; // the task is re-executed from scratch
+            retries = 1;
+        }
+        if self.config.straggler_prob > 0.0
+            && self.config.straggler_factor > 1.0
+            && self.fault_rng.bernoulli(self.config.straggler_prob)
+        {
+            out = Duration::from_secs_f64(out.as_secs_f64() * self.config.straggler_factor);
+        }
+        (out, retries)
+    }
+
+    /// Check a per-machine memory charge against the budget.
+    fn charge(&self, round: &str, machine: usize, used: usize) -> Result<(), MrError> {
+        if let Some(limit) = self.config.mem_limit {
+            if used > limit {
+                return Err(MrError::MemoryExceeded {
+                    round: round.to_string(),
+                    machine,
+                    used,
+                    limit,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// A faithful generic MapReduce round.
+    ///
+    /// * `input` — key/value pairs; the pair's *input* machine is
+    ///   `hash(key) % n_machines` (inputs are wherever the previous round
+    ///   left them; hashing models that placement).
+    /// * `map` — emits intermediate pairs via the `emit` closure.
+    /// * `reduce` — receives one key plus all its values (on the machine
+    ///   `hash(key) % n_machines`), emits output pairs.
+    ///
+    /// Returns all reducer outputs. Map/reduce compute is timed per machine;
+    /// the round is charged `max(map) + max(reduce)` of simulated time.
+    pub fn run_round<K1, V1, K2, V2, K3, V3, M, R>(
+        &mut self,
+        label: &str,
+        input: Vec<(K1, V1)>,
+        map: M,
+        reduce: R,
+    ) -> Result<Vec<(K3, V3)>, MrError>
+    where
+        K1: Hash + Send,
+        V1: Send,
+        K2: Hash + Eq + Send + MemSize,
+        V2: Send + MemSize,
+        K3: Send,
+        V3: Send,
+        M: Fn(K1, V1, &mut dyn FnMut(K2, V2)) + Send + Sync,
+        R: Fn(&K2, Vec<V2>, &mut dyn FnMut(K3, V3)) + Send + Sync,
+    {
+        let nm = self.config.n_machines;
+        let threads = self.config.effective_threads();
+
+        // ---- distribute input pairs to their resident machines ----
+        let mut per_machine: Vec<Vec<(K1, V1)>> = (0..nm).map(|_| Vec::new()).collect();
+        for (k, v) in input {
+            let m = key_machine(&k, nm);
+            per_machine[m].push((k, v));
+        }
+
+        // ---- map phase (timed per machine) ----
+        let map_ref = &map;
+        let results = run_tasks(per_machine, threads, move |_m, pairs| {
+            let mut out: Vec<(K2, V2)> = Vec::new();
+            for (k, v) in pairs {
+                map_ref(k, v, &mut |k2, v2| out.push((k2, v2)));
+            }
+            out
+        });
+        let mut map_max = Duration::ZERO;
+        let mut shuffle_bytes = 0usize;
+        let mut machines_used = 0usize;
+        let mut retries = 0usize;
+        let mut intermediate: Vec<(K2, V2)> = Vec::new();
+        for (d, out) in results {
+            if !out.is_empty() || d > Duration::ZERO {
+                machines_used += 1;
+            }
+            let (d, r) = self.inject_faults(d);
+            retries += r;
+            map_max = map_max.max(d);
+            for (k, v) in out {
+                shuffle_bytes += k.mem_bytes() + v.mem_bytes();
+                intermediate.push((k, v));
+            }
+        }
+
+        // ---- shuffle: group by key, key -> machine by hash ----
+        let mut groups: HashMap<K2, Vec<V2>> = HashMap::new();
+        for (k, v) in intermediate {
+            groups.entry(k).or_default().push(v);
+        }
+        let mut machine_load: Vec<Vec<(K2, Vec<V2>)>> = (0..nm).map(|_| Vec::new()).collect();
+        let mut machine_mem: Vec<usize> = vec![0; nm];
+        for (k, vs) in groups {
+            let m = key_machine(&k, nm);
+            machine_mem[m] +=
+                k.mem_bytes() + vs.iter().map(MemSize::mem_bytes).sum::<usize>();
+            machine_load[m].push((k, vs));
+        }
+        let max_machine_mem = machine_mem.iter().copied().max().unwrap_or(0);
+        for (m, &used) in machine_mem.iter().enumerate() {
+            self.charge(label, m, used)?;
+        }
+
+        // ---- reduce phase (timed per machine) ----
+        let reduce_ref = &reduce;
+        let results = run_tasks(machine_load, threads, move |_m, pairs| {
+            let mut out: Vec<(K3, V3)> = Vec::new();
+            for (k, vs) in pairs {
+                reduce_ref(&k, vs, &mut |k3, v3| out.push((k3, v3)));
+            }
+            out
+        });
+        let mut reduce_max = Duration::ZERO;
+        let mut output = Vec::new();
+        for (d, out) in results {
+            let (d, r) = self.inject_faults(d);
+            retries += r;
+            reduce_max = reduce_max.max(d);
+            output.extend(out);
+        }
+
+        self.stats.push(RoundStats {
+            label: label.to_string(),
+            map_max,
+            reduce_max,
+            shuffle_bytes,
+            max_machine_mem,
+            machines_used: machines_used.max(1),
+            retries,
+        });
+        Ok(output)
+    }
+
+    /// The "resident data" round every algorithm in the paper uses: machine
+    /// `i mod n_machines` computes `f(i, &parts[i])` on the block it already
+    /// holds; the leader gathers the outputs. Broadcast payloads (e.g. the
+    /// current centers) should be included in the caller's `extra_mem`
+    /// charge, and gathered outputs are charged to the leader.
+    ///
+    /// When there are more blocks than machines (Divide's ℓ = √(n/k)
+    /// partitions on 100 machines), a machine processes its blocks
+    /// sequentially: its round time is the *sum* of its block times, and its
+    /// memory charge is the largest single block (Hadoop task slots).
+    ///
+    /// Timed as one round: `max_machine Σ_its-blocks time` simulated.
+    pub fn run_machine_round<T, U, F>(
+        &mut self,
+        label: &str,
+        parts: &[T],
+        extra_mem: usize,
+        f: F,
+    ) -> Result<Vec<U>, MrError>
+    where
+        T: MemSize + Sync,
+        U: MemSize + Send,
+        F: Fn(usize, &T) -> U + Send + Sync,
+    {
+        let nm = self.config.n_machines;
+        let threads = self.config.effective_threads();
+
+        // Memory: each machine holds one block at a time + broadcast extra.
+        let mut max_machine_mem = 0usize;
+        for (m, part) in parts.iter().enumerate() {
+            let used = part.mem_bytes() + extra_mem;
+            max_machine_mem = max_machine_mem.max(used);
+            self.charge(label, m % nm, used)?;
+        }
+
+        let fref = &f;
+        let results = run_tasks(
+            parts.iter().collect::<Vec<&T>>(),
+            threads,
+            move |i, part| fref(i, part),
+        );
+
+        // Per-machine time = sum over the blocks it owns (i mod nm).
+        let mut machine_time = vec![Duration::ZERO; nm.min(parts.len()).max(1)];
+        let mut outputs = Vec::with_capacity(parts.len());
+        let mut gathered_bytes = 0usize;
+        let mut retries = 0usize;
+        for (i, (d, out)) in results.into_iter().enumerate() {
+            let (d, r) = self.inject_faults(d);
+            retries += r;
+            let mt_len = machine_time.len();
+            machine_time[i % mt_len] += d;
+            gathered_bytes += out.mem_bytes();
+            outputs.push(out);
+        }
+        let map_max = machine_time.iter().copied().max().unwrap_or(Duration::ZERO);
+        // The leader receives every machine's output.
+        let leader_mem = gathered_bytes + extra_mem;
+        max_machine_mem = max_machine_mem.max(leader_mem);
+        self.charge(label, usize::MAX, leader_mem)?;
+
+        self.stats.push(RoundStats {
+            label: label.to_string(),
+            map_max,
+            reduce_max: Duration::ZERO,
+            shuffle_bytes: gathered_bytes,
+            max_machine_mem,
+            machines_used: parts.len().min(nm),
+            retries,
+        });
+        Ok(outputs)
+    }
+
+    /// Like [`MrCluster::run_machine_round`] but each machine may *mutate*
+    /// its resident block (Iterative-Sample's distance updates and pruning
+    /// keep per-machine state across rounds this way).
+    pub fn run_machine_round_mut<T, U, F>(
+        &mut self,
+        label: &str,
+        parts: &mut [T],
+        extra_mem: usize,
+        f: F,
+    ) -> Result<Vec<U>, MrError>
+    where
+        T: MemSize + Send,
+        U: MemSize + Send,
+        F: Fn(usize, &mut T) -> U + Send + Sync,
+    {
+        let nm = self.config.n_machines;
+        let threads = self.config.effective_threads();
+
+        let mut max_machine_mem = 0usize;
+        for (m, part) in parts.iter().enumerate() {
+            let used = part.mem_bytes() + extra_mem;
+            max_machine_mem = max_machine_mem.max(used);
+            self.charge(label, m % nm, used)?;
+        }
+
+        let n_parts = parts.len();
+        let fref = &f;
+        let results = run_tasks(
+            parts.iter_mut().collect::<Vec<&mut T>>(),
+            threads,
+            move |i, part: &mut T| fref(i, part),
+        );
+
+        let mut machine_time = vec![Duration::ZERO; nm.min(n_parts).max(1)];
+        let mut outputs = Vec::with_capacity(n_parts);
+        let mut gathered_bytes = 0usize;
+        let mut retries = 0usize;
+        for (i, (d, out)) in results.into_iter().enumerate() {
+            let (d, r) = self.inject_faults(d);
+            retries += r;
+            let mt_len = machine_time.len();
+            machine_time[i % mt_len] += d;
+            gathered_bytes += out.mem_bytes();
+            outputs.push(out);
+        }
+        let map_max = machine_time.iter().copied().max().unwrap_or(Duration::ZERO);
+        let leader_mem = gathered_bytes + extra_mem;
+        max_machine_mem = max_machine_mem.max(leader_mem);
+        self.charge(label, usize::MAX, leader_mem)?;
+
+        self.stats.push(RoundStats {
+            label: label.to_string(),
+            map_max,
+            reduce_max: Duration::ZERO,
+            shuffle_bytes: gathered_bytes,
+            max_machine_mem,
+            machines_used: n_parts.min(nm),
+            retries,
+        });
+        Ok(outputs)
+    }
+
+    /// A leader-only round: one machine runs `f` (e.g. the final clustering
+    /// of the gathered sample). Timed as one round with one machine.
+    pub fn run_leader_round<U, F>(
+        &mut self,
+        label: &str,
+        input_mem: usize,
+        f: F,
+    ) -> Result<U, MrError>
+    where
+        F: FnOnce() -> U,
+    {
+        self.charge(label, 0, input_mem)?;
+        let t0 = Instant::now();
+        let out = f();
+        let (d, retries) = self.inject_faults(t0.elapsed());
+        self.stats.push(RoundStats {
+            label: label.to_string(),
+            map_max: d,
+            reduce_max: Duration::ZERO,
+            shuffle_bytes: 0,
+            max_machine_mem: input_mem,
+            machines_used: 1,
+            retries,
+        });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(nm: usize, parallel: bool) -> MrCluster {
+        MrCluster::new(MrConfig {
+            n_machines: nm,
+            mem_limit: None,
+            parallel,
+            threads: 4,
+            ..Default::default()
+        })
+    }
+
+    /// Classic word-count exercises the full map/shuffle/reduce path.
+    fn word_count(parallel: bool) -> Vec<(String, usize)> {
+        let mut c = cluster(8, parallel);
+        let docs: Vec<(usize, String)> = vec![
+            (0, "a b a".into()),
+            (1, "b c".into()),
+            (2, "a".into()),
+        ];
+        let mut out = c
+            .run_round(
+                "word-count",
+                docs,
+                |_k, doc: String, emit| {
+                    for w in doc.split_whitespace() {
+                        emit(w.to_string(), 1usize);
+                    }
+                },
+                |k: &String, vs: Vec<usize>, emit| {
+                    emit(k.clone(), vs.into_iter().sum::<usize>());
+                },
+            )
+            .unwrap();
+        out.sort();
+        assert_eq!(c.stats.n_rounds(), 1);
+        assert!(c.stats.shuffle_bytes() > 0);
+        out
+    }
+
+    #[test]
+    fn word_count_sequential() {
+        assert_eq!(
+            word_count(false),
+            vec![("a".into(), 3), ("b".into(), 2), ("c".into(), 1)]
+        );
+    }
+
+    #[test]
+    fn word_count_parallel_matches() {
+        assert_eq!(word_count(true), word_count(false));
+    }
+
+    #[test]
+    fn shuffle_groups_all_values_of_a_key() {
+        let mut c = cluster(4, true);
+        let input: Vec<(usize, usize)> = (0..100).map(|i| (i, i)).collect();
+        let out = c
+            .run_round(
+                "group",
+                input,
+                |_k, v, emit| emit(v % 7, v),
+                |k: &usize, vs: Vec<usize>, emit| emit(*k, vs.len()),
+            )
+            .unwrap();
+        let total: usize = out.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 100);
+        assert_eq!(out.len(), 7);
+    }
+
+    #[test]
+    fn memory_limit_enforced() {
+        let mut c = MrCluster::new(MrConfig {
+            n_machines: 1, // everything lands on one machine
+            mem_limit: Some(64),
+            parallel: false,
+            threads: 1,
+            ..Default::default()
+        });
+        let input: Vec<(usize, u64)> = (0..100).map(|i| (i, i as u64)).collect();
+        let err = c
+            .run_round(
+                "overflow",
+                input,
+                |_k, v, emit| emit(0usize, v),
+                |_k: &usize, _vs: Vec<u64>, _emit: &mut dyn FnMut(usize, u64)| {},
+            )
+            .unwrap_err();
+        match err {
+            MrError::MemoryExceeded { used, limit, .. } => {
+                assert!(used > limit);
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn machine_round_outputs_in_order() {
+        let mut c = cluster(8, true);
+        let parts: Vec<Vec<u32>> = (0..8).map(|i| vec![i as u32; 10]).collect();
+        let out = c
+            .run_machine_round("sum", &parts, 0, |i, part: &Vec<u32>| {
+                assert!(part.iter().all(|&x| x == i as u32));
+                part.iter().sum::<u32>()
+            })
+            .unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+        assert_eq!(c.stats.rounds[0].machines_used, 8);
+    }
+
+    #[test]
+    fn machine_round_memory_includes_broadcast() {
+        let mut c = MrCluster::new(MrConfig {
+            n_machines: 2,
+            mem_limit: Some(100),
+            parallel: false,
+            threads: 1,
+            ..Default::default()
+        });
+        let parts: Vec<Vec<u8>> = vec![vec![0u8; 50], vec![0u8; 50]];
+        // 50 (block) + 60 (broadcast) > 100 -> must fail.
+        let res = c.run_machine_round("bc", &parts, 60, |_i, _p: &Vec<u8>| 0u8);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn leader_round_counts_one_round_one_machine() {
+        let mut c = cluster(8, true);
+        let out = c.run_leader_round("final", 128, || 7u32).unwrap();
+        assert_eq!(out, 7);
+        assert_eq!(c.stats.n_rounds(), 1);
+        assert_eq!(c.stats.rounds[0].machines_used, 1);
+        assert_eq!(c.stats.peak_machine_mem(), 128);
+    }
+
+    #[test]
+    fn sim_time_is_sum_of_max_machine() {
+        let mut c = cluster(4, false);
+        let parts: Vec<Vec<u64>> = (0..4).map(|i| vec![i as u64; 1000 * (i + 1)]).collect();
+        c.run_machine_round("spin", &parts, 0, |_i, p: &Vec<u64>| {
+            // Unequal work so max > mean.
+            p.iter().map(|&x| x.wrapping_mul(2654435761)).sum::<u64>()
+        })
+        .unwrap();
+        assert!(c.stats.sim_time() >= c.stats.rounds[0].map_max);
+    }
+}

@@ -1,0 +1,158 @@
+//! `MRC^0` compliance checking (Karloff, Suri, Vassilvitskii — SODA'10).
+//!
+//! A problem is in `MRC^0` if it can be solved with `O(N^{1-ε})` machines,
+//! `O(N^{1-ε})` memory per machine, and a *constant* number of rounds,
+//! where `N` is the input size in bytes. The paper's Theorems 1.1/1.2 claim
+//! membership for k-center/k-median under `memory = O(k² n^δ)`; this module
+//! turns a finished [`RunStats`] into a pass/fail report against those
+//! bounds so experiments and tests can assert the claim empirically.
+
+use super::stats::RunStats;
+
+/// Result of checking one run against the `MRC^0` resource bounds.
+#[derive(Clone, Debug)]
+pub struct Mrc0Report {
+    /// Input size N in bytes used for the bounds.
+    pub input_bytes: usize,
+    /// The ε used: bounds are `c * N^{1-ε}`.
+    pub epsilon: f64,
+    /// Constant factor allowed on both bounds.
+    pub slack: f64,
+    pub machine_bound: f64,
+    pub memory_bound: f64,
+    pub rounds: usize,
+    pub round_bound: usize,
+    pub peak_machines: usize,
+    pub peak_machine_mem: usize,
+    pub machines_ok: bool,
+    pub memory_ok: bool,
+    pub rounds_ok: bool,
+}
+
+impl Mrc0Report {
+    pub fn ok(&self) -> bool {
+        self.machines_ok && self.memory_ok && self.rounds_ok
+    }
+}
+
+impl std::fmt::Display for Mrc0Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "MRC^0 check (N = {} bytes, eps = {}, slack = {}):",
+            self.input_bytes, self.epsilon, self.slack
+        )?;
+        writeln!(
+            f,
+            "  machines : {} <= {:.0} : {}",
+            self.peak_machines,
+            self.machine_bound,
+            if self.machines_ok { "OK" } else { "VIOLATED" }
+        )?;
+        writeln!(
+            f,
+            "  memory   : {} <= {:.0} bytes : {}",
+            self.peak_machine_mem,
+            self.memory_bound,
+            if self.memory_ok { "OK" } else { "VIOLATED" }
+        )?;
+        write!(
+            f,
+            "  rounds   : {} <= {} : {}",
+            self.rounds,
+            self.round_bound,
+            if self.rounds_ok { "OK" } else { "VIOLATED" }
+        )
+    }
+}
+
+/// Check `stats` against the `MRC^0` bounds for input size `input_bytes`.
+///
+/// `round_bound` is the constant the algorithm is supposed to respect — for
+/// the paper's algorithms that is `O(1/ε_sample)` rounds plus the constant
+/// overhead of the weight/cluster phases; callers pass the concrete number
+/// their configuration implies.
+pub fn check_mrc0(
+    stats: &RunStats,
+    input_bytes: usize,
+    epsilon: f64,
+    slack: f64,
+    round_bound: usize,
+) -> Mrc0Report {
+    let nf = input_bytes.max(1) as f64;
+    let bound = slack * nf.powf(1.0 - epsilon);
+    let peak_machines = stats.peak_machines();
+    let peak_mem = stats.peak_machine_mem();
+    let rounds = stats.n_rounds();
+    Mrc0Report {
+        input_bytes,
+        epsilon,
+        slack,
+        machine_bound: bound,
+        memory_bound: bound,
+        rounds,
+        round_bound,
+        peak_machines,
+        peak_machine_mem: peak_mem,
+        machines_ok: (peak_machines as f64) <= bound,
+        memory_ok: (peak_mem as f64) <= bound,
+        rounds_ok: rounds <= round_bound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::stats::RoundStats;
+    use std::time::Duration;
+
+    fn stats(rounds: usize, mem: usize, machines: usize) -> RunStats {
+        let mut s = RunStats::default();
+        for i in 0..rounds {
+            s.push(RoundStats {
+                label: format!("r{i}"),
+                map_max: Duration::from_millis(1),
+                reduce_max: Duration::ZERO,
+                shuffle_bytes: 0,
+                max_machine_mem: mem,
+                machines_used: machines,
+                retries: 0,
+            });
+        }
+        s
+    }
+
+    #[test]
+    fn passes_sublinear_run() {
+        // N = 1e9 bytes, eps = 0.3: bound ~ 1e9^0.7 ~ 4e6.
+        let s = stats(5, 1_000_000, 100);
+        let r = check_mrc0(&s, 1_000_000_000, 0.3, 1.0, 10);
+        assert!(r.ok(), "{r}");
+    }
+
+    #[test]
+    fn fails_memory_hog() {
+        // A machine holding the whole input is never MRC.
+        let n = 1_000_000_000;
+        let s = stats(3, n, 10);
+        let r = check_mrc0(&s, n, 0.1, 1.0, 10);
+        assert!(!r.memory_ok, "{r}");
+        assert!(!r.ok());
+    }
+
+    #[test]
+    fn fails_round_blowup() {
+        let s = stats(50, 10, 10);
+        let r = check_mrc0(&s, 1_000_000, 0.3, 1.0, 10);
+        assert!(!r.rounds_ok);
+    }
+
+    #[test]
+    fn display_renders() {
+        let s = stats(2, 10, 10);
+        let r = check_mrc0(&s, 1_000_000, 0.3, 1.0, 10);
+        let text = format!("{r}");
+        assert!(text.contains("machines"));
+        assert!(text.contains("OK"));
+    }
+}

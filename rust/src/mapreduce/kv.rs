@@ -1,0 +1,99 @@
+//! Memory sizing of the data that flows through the engine.
+//!
+//! The `MRC^0` model restricts the *bytes held per machine*; to enforce that
+//! we need a size for every key and value type that crosses the shuffle.
+//! [`MemSize`] is a deliberately simple "payload bytes" measure — heap
+//! payload plus inline size — not a precise allocator model; it is the same
+//! convention the paper uses when it counts "the distances from each point
+//! in H to each point in S" as `|H||S| log n` bits.
+
+use crate::geometry::PointSet;
+
+/// Approximate in-memory footprint in bytes.
+pub trait MemSize {
+    fn mem_bytes(&self) -> usize;
+}
+
+macro_rules! memsize_fixed {
+    ($($t:ty),*) => {
+        $(impl MemSize for $t {
+            #[inline]
+            fn mem_bytes(&self) -> usize { std::mem::size_of::<$t>() }
+        })*
+    };
+}
+
+memsize_fixed!(u8, u16, u32, u64, usize, i8, i16, i32, i64, isize, f32, f64, bool, char, ());
+
+impl MemSize for String {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<String>() + self.len()
+    }
+}
+
+impl<T: MemSize> MemSize for Vec<T> {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Vec<T>>() + self.iter().map(MemSize::mem_bytes).sum::<usize>()
+    }
+}
+
+impl<T: MemSize> MemSize for Option<T> {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Option<T>>()
+            + self.as_ref().map(MemSize::mem_bytes).unwrap_or(0)
+    }
+}
+
+impl<A: MemSize, B: MemSize> MemSize for (A, B) {
+    fn mem_bytes(&self) -> usize {
+        self.0.mem_bytes() + self.1.mem_bytes()
+    }
+}
+
+impl<A: MemSize, B: MemSize, C: MemSize> MemSize for (A, B, C) {
+    fn mem_bytes(&self) -> usize {
+        self.0.mem_bytes() + self.1.mem_bytes() + self.2.mem_bytes()
+    }
+}
+
+impl MemSize for PointSet {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<PointSet>() + PointSet::mem_bytes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives() {
+        assert_eq!(1u32.mem_bytes(), 4);
+        assert_eq!(1u64.mem_bytes(), 8);
+        assert_eq!(1.0f32.mem_bytes(), 4);
+    }
+
+    #[test]
+    fn vec_counts_payload() {
+        let v: Vec<f32> = vec![0.0; 100];
+        assert!(v.mem_bytes() >= 400);
+    }
+
+    #[test]
+    fn string_counts_bytes() {
+        let s = "hello".to_string();
+        assert!(s.mem_bytes() >= 5);
+    }
+
+    #[test]
+    fn pointset_counts_coords() {
+        let p = PointSet::from_flat(3, vec![0.0; 300]);
+        assert!(p.mem_bytes() >= 1200);
+    }
+
+    #[test]
+    fn tuples_sum() {
+        assert_eq!((1u32, 2u32).mem_bytes(), 8);
+        assert_eq!((1u32, 2u64, 3u32).mem_bytes(), 16);
+    }
+}

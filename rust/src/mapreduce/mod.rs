@@ -1,0 +1,57 @@
+//! A simulated-cluster MapReduce engine — the substrate the paper assumes.
+//!
+//! The paper evaluates its algorithms by *simulating* a 100-machine
+//! MapReduce cluster on a single host (§4.2): per round, each simulated
+//! machine's compute time is measured, the round costs the *maximum* over
+//! machines, and the run costs the sum over rounds (communication ignored).
+//! This engine reproduces that methodology exactly and adds what the
+//! `MRC^0` model (Karloff–Suri–Vassilvitskii) actually constrains:
+//!
+//! * **memory accounting** — every machine's received bytes are charged
+//!   against a configurable per-machine budget; exceeding it is a hard
+//!   error (the `O(N^{1-ε})` restriction);
+//! * **machine accounting** — how many machines a round actually touched;
+//! * **round counting** — the quantity all of the paper's theorems bound;
+//! * **shuffle accounting** — bytes moved between map and reduce, reported
+//!   even though (like the paper) simulated time excludes communication.
+//!
+//! Two execution surfaces:
+//!
+//! * [`MrCluster::run_round`] — a faithful generic key/value round
+//!   (map → shuffle-by-key-hash → reduce);
+//! * [`MrCluster::run_machine_round`] — the "resident data" round shape
+//!   every algorithm in the paper uses (each machine computes on the block
+//!   it already holds, the leader gathers the per-machine outputs). This is
+//!   Hadoop's map-only job + single reducer, and it is how the paper's
+//!   Parallel-Lloyd keeps points on machines across iterations.
+//!
+//! Machines can execute truly in parallel (worker threads) or sequentially;
+//! simulated time is identical either way because it is derived from
+//! per-machine measurements, not the host wall-clock.
+
+pub mod cluster;
+pub mod constraints;
+pub mod kv;
+pub mod stats;
+
+pub use cluster::{MrCluster, MrConfig};
+pub use constraints::{check_mrc0, Mrc0Report};
+pub use kv::MemSize;
+pub use stats::{RoundStats, RunStats};
+
+/// Errors surfaced by the engine.
+#[derive(Debug, thiserror::Error)]
+pub enum MrError {
+    #[error(
+        "machine {machine} exceeded its memory budget in round '{round}': \
+         {used} bytes used > {limit} bytes allowed"
+    )]
+    MemoryExceeded {
+        round: String,
+        machine: usize,
+        used: usize,
+        limit: usize,
+    },
+    #[error("worker thread panicked in round '{round}'")]
+    WorkerPanic { round: String },
+}

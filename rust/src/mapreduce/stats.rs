@@ -1,0 +1,134 @@
+//! Per-round and per-run accounting — the numbers every experiment reports.
+
+use std::time::Duration;
+
+/// Measurements of one MapReduce round.
+#[derive(Clone, Debug)]
+pub struct RoundStats {
+    /// Human label ("iterative-sample iter 2: prune", ...).
+    pub label: String,
+    /// Max over machines of the map-side compute time.
+    pub map_max: Duration,
+    /// Max over machines of the reduce-side compute time.
+    pub reduce_max: Duration,
+    /// Total bytes crossing the shuffle (map outputs).
+    pub shuffle_bytes: usize,
+    /// Highest per-machine memory charge this round.
+    pub max_machine_mem: usize,
+    /// Machines that actually received work.
+    pub machines_used: usize,
+    /// Task re-executions triggered by injected failures this round.
+    pub retries: usize,
+}
+
+impl RoundStats {
+    /// The paper's per-round cost: the slowest machine's compute.
+    pub fn sim_time(&self) -> Duration {
+        self.map_max + self.reduce_max
+    }
+}
+
+/// Accumulated measurements of a whole MapReduce run.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub rounds: Vec<RoundStats>,
+}
+
+impl RunStats {
+    pub fn push(&mut self, r: RoundStats) {
+        self.rounds.push(r);
+    }
+
+    /// Number of rounds executed (the `MRC^0` round count).
+    pub fn n_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// The paper's headline timing: Σ over rounds of max-machine time.
+    pub fn sim_time(&self) -> Duration {
+        self.rounds.iter().map(RoundStats::sim_time).sum()
+    }
+
+    /// Total shuffled bytes across the run.
+    pub fn shuffle_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.shuffle_bytes).sum()
+    }
+
+    /// High-water per-machine memory across all rounds.
+    pub fn peak_machine_mem(&self) -> usize {
+        self.rounds.iter().map(|r| r.max_machine_mem).max().unwrap_or(0)
+    }
+
+    /// Most machines used in any round.
+    pub fn peak_machines(&self) -> usize {
+        self.rounds.iter().map(|r| r.machines_used).max().unwrap_or(0)
+    }
+
+    /// Total injected-failure re-executions across the run.
+    pub fn total_retries(&self) -> usize {
+        self.rounds.iter().map(|r| r.retries).sum()
+    }
+
+    /// Merge another run's rounds into this one (sub-procedures).
+    pub fn absorb(&mut self, other: RunStats) {
+        self.rounds.extend(other.rounds);
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} rounds, sim {:.3}s, shuffle {:.1} MiB, peak mem {:.1} MiB, peak machines {}",
+            self.n_rounds(),
+            self.sim_time().as_secs_f64(),
+            self.shuffle_bytes() as f64 / (1 << 20) as f64,
+            self.peak_machine_mem() as f64 / (1 << 20) as f64,
+            self.peak_machines()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(label: &str, map_ms: u64, red_ms: u64, bytes: usize, mem: usize) -> RoundStats {
+        RoundStats {
+            label: label.into(),
+            map_max: Duration::from_millis(map_ms),
+            reduce_max: Duration::from_millis(red_ms),
+            shuffle_bytes: bytes,
+            max_machine_mem: mem,
+            machines_used: 4,
+            retries: 0,
+        }
+    }
+
+    #[test]
+    fn sim_time_sums_round_maxima() {
+        let mut s = RunStats::default();
+        s.push(round("a", 10, 5, 100, 50));
+        s.push(round("b", 20, 0, 200, 80));
+        assert_eq!(s.sim_time(), Duration::from_millis(35));
+        assert_eq!(s.n_rounds(), 2);
+        assert_eq!(s.shuffle_bytes(), 300);
+        assert_eq!(s.peak_machine_mem(), 80);
+    }
+
+    #[test]
+    fn absorb_concatenates() {
+        let mut a = RunStats::default();
+        a.push(round("a", 1, 1, 1, 1));
+        let mut b = RunStats::default();
+        b.push(round("b", 2, 2, 2, 2));
+        a.absorb(b);
+        assert_eq!(a.n_rounds(), 2);
+    }
+
+    #[test]
+    fn empty_run() {
+        let s = RunStats::default();
+        assert_eq!(s.sim_time(), Duration::ZERO);
+        assert_eq!(s.peak_machine_mem(), 0);
+        assert_eq!(s.peak_machines(), 0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Exact objective evaluation, threaded for large n.
+
+use crate::geometry::{metric::sq_dist, PointSet};
+
+/// All three objectives of one center set over one point set.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostSummary {
+    /// Σ d(x, C) — the k-median objective.
+    pub median: f64,
+    /// max d(x, C) — the k-center objective.
+    pub center: f64,
+    /// Σ d(x, C)² — the k-means objective.
+    pub means: f64,
+}
+
+fn chunk_cost(points: &PointSet, lo: usize, hi: usize, centers: &PointSet) -> CostSummary {
+    let mut s = CostSummary::default();
+    for i in lo..hi {
+        let row = points.row(i);
+        let mut best = f32::INFINITY;
+        for c in 0..centers.len() {
+            let d = sq_dist(row, centers.row(c));
+            if d < best {
+                best = d;
+            }
+        }
+        let d2 = best.max(0.0) as f64;
+        let d = d2.sqrt();
+        s.median += d;
+        s.means += d2;
+        if d > s.center {
+            s.center = d;
+        }
+    }
+    s
+}
+
+/// Evaluate all three objectives; uses `threads` workers (0 = all cores).
+pub fn eval_costs(points: &PointSet, centers: &PointSet, threads: usize) -> CostSummary {
+    assert!(!centers.is_empty(), "no centers");
+    assert_eq!(points.dim(), centers.dim(), "dim mismatch");
+    let n = points.len();
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let threads = threads.min(n.max(1));
+    if threads <= 1 || n < 10_000 {
+        return chunk_cost(points, 0, n, centers);
+    }
+    let per = crate::util::div_ceil(n, threads);
+    let mut parts: Vec<CostSummary> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let lo = t * per;
+            let hi = ((t + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            handles.push(scope.spawn(move || chunk_cost(points, lo, hi, centers)));
+        }
+        for h in handles {
+            parts.push(h.join().expect("cost worker panicked"));
+        }
+    });
+    let mut out = CostSummary::default();
+    for p in parts {
+        out.median += p.median;
+        out.means += p.means;
+        out.center = out.center.max(p.center);
+    }
+    out
+}
+
+/// k-median objective Σ d(x, C).
+pub fn kmedian_cost(points: &PointSet, centers: &PointSet) -> f64 {
+    eval_costs(points, centers, 0).median
+}
+
+/// k-center objective max d(x, C).
+pub fn kcenter_cost(points: &PointSet, centers: &PointSet) -> f64 {
+    eval_costs(points, centers, 0).center
+}
+
+/// k-means objective Σ d(x, C)².
+pub fn kmeans_cost(points: &PointSet, centers: &PointSet) -> f64 {
+    eval_costs(points, centers, 0).means
+}
+
+/// Full nearest-center assignment: (sq-distance, index) per point.
+/// Single-threaded; used by the sequential baselines and tests.
+pub fn assign_full(points: &PointSet, centers: &PointSet) -> (Vec<f32>, Vec<u32>) {
+    let n = points.len();
+    let mut dist = vec![0.0f32; n];
+    let mut idx = vec![0u32; n];
+    for i in 0..n {
+        let row = points.row(i);
+        let mut best = f32::INFINITY;
+        let mut bj = 0u32;
+        for c in 0..centers.len() {
+            let d = sq_dist(row, centers.row(c));
+            if d < best {
+                best = d;
+                bj = c as u32;
+            }
+        }
+        dist[i] = best.max(0.0);
+        idx[i] = bj;
+    }
+    (dist, idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_points() -> PointSet {
+        PointSet::from_flat(1, vec![0.0, 1.0, 2.0, 10.0])
+    }
+
+    #[test]
+    fn known_costs_single_center() {
+        let p = line_points();
+        let c = PointSet::from_flat(1, vec![0.0]);
+        let s = eval_costs(&p, &c, 1);
+        assert!((s.median - 13.0).abs() < 1e-6);
+        assert!((s.center - 10.0).abs() < 1e-6);
+        assert!((s.means - (1.0 + 4.0 + 100.0)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn known_costs_two_centers() {
+        let p = line_points();
+        let c = PointSet::from_flat(1, vec![1.0, 10.0]);
+        let s = eval_costs(&p, &c, 1);
+        assert!((s.median - 2.0).abs() < 1e-6); // 1 + 0 + 1 + 0
+        assert!((s.center - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let n = 30_000;
+        let coords: Vec<f32> = (0..n * 3).map(|_| rng.f32()).collect();
+        let p = PointSet::from_flat(3, coords);
+        let c = PointSet::from_flat(3, (0..30).map(|_| rng.f32()).collect());
+        let seq = eval_costs(&p, &c, 1);
+        let par = eval_costs(&p, &c, 4);
+        assert!((seq.median - par.median).abs() / seq.median < 1e-9);
+        assert_eq!(seq.center, par.center);
+    }
+
+    #[test]
+    fn assign_full_picks_nearest() {
+        let p = line_points();
+        let c = PointSet::from_flat(1, vec![1.0, 10.0]);
+        let (d, idx) = assign_full(&p, &c);
+        assert_eq!(idx, vec![0, 0, 0, 1]);
+        assert!((d[3] - 0.0).abs() < 1e-6);
+        assert!((d[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_cost_when_centers_cover_points() {
+        let p = line_points();
+        let s = eval_costs(&p, &p, 1);
+        assert_eq!(s.median, 0.0);
+        assert_eq!(s.center, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no centers")]
+    fn empty_centers_panics() {
+        let p = line_points();
+        eval_costs(&p, &PointSet::from_flat(1, vec![]), 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Clustering objective evaluation.
+//!
+//! Exact (non-sampled) cost computation for the three objectives the paper
+//! touches: k-median (sum of distances), k-center (max distance) and
+//! k-means (sum of squared distances). Evaluation is O(n·k·d); for the
+//! multi-million-point Figure-2 runs it is chunked across worker threads.
+
+pub mod cost;
+pub mod report;
+
+pub use cost::{assign_full, kcenter_cost, kmeans_cost, kmedian_cost, CostSummary};

@@ -1,0 +1,184 @@
+//! Experiment result records and the normalized tables the paper reports
+//! (costs normalized to Parallel-Lloyd, times in seconds) — Figures 1 and 2.
+
+use crate::util::table::Table;
+use std::time::Duration;
+
+/// One algorithm run on one workload size.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub algo: String,
+    pub n: usize,
+    /// k-median objective of the returned centers over ALL points.
+    pub cost_median: f64,
+    /// Simulated parallel time (Σ rounds max-machine), paper methodology.
+    pub sim_time: Duration,
+    /// Real wall-clock of the whole run (all machines on this host).
+    pub wall_time: Duration,
+    /// MapReduce rounds used.
+    pub rounds: usize,
+}
+
+/// A Figure-1/2 style result matrix: rows = algorithms, columns = n values.
+#[derive(Clone, Debug, Default)]
+pub struct FigureReport {
+    pub ns: Vec<usize>,
+    pub records: Vec<RunRecord>,
+}
+
+impl FigureReport {
+    pub fn add(&mut self, rec: RunRecord) {
+        if !self.ns.contains(&rec.n) {
+            self.ns.push(rec.n);
+            self.ns.sort_unstable();
+        }
+        self.records.push(rec);
+    }
+
+    fn find(&self, algo: &str, n: usize) -> Option<&RunRecord> {
+        self.records.iter().find(|r| r.algo == algo && r.n == n)
+    }
+
+    fn algos(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for r in &self.records {
+            if !seen.contains(&r.algo) {
+                seen.push(r.algo.clone());
+            }
+        }
+        seen
+    }
+
+    /// The paper's cost table: normalized to `baseline` (Parallel-Lloyd).
+    pub fn cost_table(&self, baseline: &str) -> Table {
+        let mut header = vec!["cost".to_string()];
+        header.extend(self.ns.iter().map(|n| format!("n={n}")));
+        let mut t = Table::new(header);
+        for algo in self.algos() {
+            let mut row = vec![algo.clone()];
+            for &n in &self.ns {
+                let cell = match (self.find(&algo, n), self.find(baseline, n)) {
+                    (Some(r), Some(b)) if b.cost_median > 0.0 => {
+                        format!("{:.3}", r.cost_median / b.cost_median)
+                    }
+                    (Some(r), _) => format!("{:.3}", r.cost_median),
+                    _ => "N/A".to_string(),
+                };
+                row.push(cell);
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    /// The paper's time table (simulated parallel seconds).
+    pub fn time_table(&self) -> Table {
+        let mut header = vec!["time".to_string()];
+        header.extend(self.ns.iter().map(|n| format!("n={n}")));
+        let mut t = Table::new(header);
+        for algo in self.algos() {
+            let mut row = vec![algo.clone()];
+            for &n in &self.ns {
+                let cell = match self.find(&algo, n) {
+                    Some(r) => format!("{:.2}", r.sim_time.as_secs_f64()),
+                    None => "N/A".to_string(),
+                };
+                row.push(cell);
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    /// Machine-readable CSV (one row per record) for archiving bench runs.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("algo,n,cost_median,sim_time_s,wall_time_s,rounds\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.algo,
+                r.n,
+                r.cost_median,
+                r.sim_time.as_secs_f64(),
+                r.wall_time.as_secs_f64(),
+                r.rounds
+            ));
+        }
+        out
+    }
+
+    /// Speedup of `algo` over `other` at the largest n both ran.
+    pub fn speedup(&self, algo: &str, other: &str) -> Option<f64> {
+        let n = self
+            .ns
+            .iter()
+            .rev()
+            .find(|&&n| self.find(algo, n).is_some() && self.find(other, n).is_some())?;
+        let a = self.find(algo, *n)?;
+        let b = self.find(other, *n)?;
+        let at = a.sim_time.as_secs_f64();
+        if at <= 0.0 {
+            return None;
+        }
+        Some(b.sim_time.as_secs_f64() / at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(algo: &str, n: usize, cost: f64, secs: f64) -> RunRecord {
+        RunRecord {
+            algo: algo.into(),
+            n,
+            cost_median: cost,
+            sim_time: Duration::from_secs_f64(secs),
+            wall_time: Duration::from_secs_f64(secs),
+            rounds: 3,
+        }
+    }
+
+    #[test]
+    fn normalization_against_baseline() {
+        let mut f = FigureReport::default();
+        f.add(rec("Parallel-Lloyd", 1000, 10.0, 2.0));
+        f.add(rec("Sampling-Lloyd", 1000, 11.0, 0.1));
+        let t = f.cost_table("Parallel-Lloyd");
+        let s = t.render();
+        assert!(s.contains("1.000"), "{s}");
+        assert!(s.contains("1.100"), "{s}");
+    }
+
+    #[test]
+    fn missing_cells_are_na() {
+        let mut f = FigureReport::default();
+        f.add(rec("Parallel-Lloyd", 1000, 10.0, 2.0));
+        f.add(rec("Parallel-Lloyd", 2000, 20.0, 4.0));
+        f.add(rec("LocalSearch", 1000, 9.5, 600.0));
+        let s = f.cost_table("Parallel-Lloyd").render();
+        assert!(s.contains("N/A"), "{s}");
+    }
+
+    #[test]
+    fn csv_roundtrips_fields() {
+        let mut f = FigureReport::default();
+        f.add(rec("Parallel-Lloyd", 1000, 10.0, 2.0));
+        let csv = f.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("algo,n,"));
+        assert!(lines[1].starts_with("Parallel-Lloyd,1000,10,2,"));
+    }
+
+    #[test]
+    fn speedup_uses_largest_common_n() {
+        let mut f = FigureReport::default();
+        f.add(rec("Parallel-Lloyd", 1000, 10.0, 2.0));
+        f.add(rec("Parallel-Lloyd", 4000, 10.0, 8.0));
+        f.add(rec("Sampling-Lloyd", 1000, 10.0, 1.0));
+        f.add(rec("Sampling-Lloyd", 4000, 10.0, 0.4));
+        let s = f.speedup("Sampling-Lloyd", "Parallel-Lloyd").unwrap();
+        assert!((s - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,108 @@
+//! Shape-bucket selection and padding.
+//!
+//! XLA executables are shape-monomorphic: one artifact per (B, K, D). A real
+//! workload `(n points, k centers, d dims)` is served by the smallest bucket
+//! with `d_bucket == d`, `k_bucket >= k`, padding points up to a multiple of
+//! the bucket's B (multiple executions of the same executable cover n > B)
+//! and masking padded rows/centers with the validity masks the L2 model
+//! takes as inputs.
+
+use super::manifest::Entry;
+
+/// A chosen artifact bucket for a workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub b: usize,
+    pub k: usize,
+    pub d: usize,
+}
+
+impl Bucket {
+    pub fn of_entry(e: &Entry) -> Bucket {
+        Bucket {
+            b: e.b,
+            k: e.k,
+            d: e.d,
+        }
+    }
+}
+
+/// Pick the cheapest entry that can serve `(k, d)`: exact `d`, smallest
+/// `k_bucket >= k`. Returns `None` if no artifact fits (the caller then
+/// falls back to the native backend).
+pub fn select<'a>(entries: &[&'a Entry], k: usize, d: usize) -> Option<&'a Entry> {
+    entries
+        .iter()
+        .copied()
+        .filter(|e| e.d == d && e.k >= k)
+        .min_by_key(|e| (e.k, e.b))
+}
+
+/// Pad a flat row-major `(rows, d)` buffer up to `rows_padded` rows with a
+/// constant fill value.
+pub fn pad_rows(flat: &[f32], rows: usize, d: usize, rows_padded: usize, fill: f32) -> Vec<f32> {
+    debug_assert_eq!(flat.len(), rows * d);
+    debug_assert!(rows_padded >= rows);
+    let mut out = Vec::with_capacity(rows_padded * d);
+    out.extend_from_slice(flat);
+    out.resize(rows_padded * d, fill);
+    out
+}
+
+/// A 0/1 validity mask with `valid` ones followed by padding zeros.
+pub fn mask(valid: usize, total: usize) -> Vec<f32> {
+    debug_assert!(valid <= total);
+    let mut m = vec![1.0f32; valid];
+    m.resize(total, 0.0);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(b: usize, k: usize, d: usize) -> Entry {
+        Entry {
+            func: "assign".into(),
+            b,
+            k,
+            d,
+            file: format!("assign_b{b}_k{k}_d{d}.hlo.txt"),
+            n_outputs: 2,
+        }
+    }
+
+    #[test]
+    fn selects_smallest_fitting_k() {
+        let e32 = entry(2048, 32, 3);
+        let e128 = entry(2048, 128, 3);
+        let e512 = entry(2048, 512, 3);
+        let entries = vec![&e32, &e128, &e512];
+        assert_eq!(select(&entries, 25, 3).unwrap().k, 32);
+        assert_eq!(select(&entries, 32, 3).unwrap().k, 32);
+        assert_eq!(select(&entries, 33, 3).unwrap().k, 128);
+        assert_eq!(select(&entries, 513, 3), None);
+    }
+
+    #[test]
+    fn requires_exact_dim() {
+        let e = entry(2048, 64, 8);
+        let entries = vec![&e];
+        assert!(select(&entries, 10, 3).is_none());
+        assert!(select(&entries, 10, 8).is_some());
+    }
+
+    #[test]
+    fn pad_rows_fills() {
+        let flat = vec![1.0, 2.0, 3.0, 4.0];
+        let out = pad_rows(&flat, 2, 2, 4, 9.0);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 9.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn mask_shape() {
+        assert_eq!(mask(2, 4), vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(mask(0, 2), vec![0.0, 0.0]);
+        assert_eq!(mask(3, 3), vec![1.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,269 @@
+//! PJRT-backed compute backend: loads the AOT HLO-text artifacts and runs
+//! them on the CPU PJRT client (the `xla` crate).
+//!
+//! Pipeline per bucket (lazy, cached):
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `PjRtClient::compile` → `PjRtLoadedExecutable`.
+//!
+//! HLO *text* is the interchange format (see python/compile/aot.py and
+//! /opt/xla-example/README.md): jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+//!
+//! Concurrency: the PJRT wrapper types are raw-pointer handles without
+//! `Send`/`Sync`, so the whole backend is wrapped in a `Mutex` and executes
+//! one call at a time — the CPU client is internally multi-threaded, and the
+//! MapReduce engine is configured sequentially when this backend is chosen
+//! (the paper's timing methodology measures per-machine compute either way).
+
+use super::bucket::{mask, pad_rows, select};
+use super::manifest::{Entry, Manifest};
+use super::{AssignOut, ComputeBackend, LloydStepOut};
+use crate::geometry::PointSet;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    entry: Entry,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, usize, usize, usize), Compiled>, // (func,b,k,d)
+}
+
+/// XLA/PJRT compute backend (see module docs).
+pub struct XlaBackend {
+    inner: Mutex<Inner>,
+}
+
+// SAFETY: all raw PJRT handles live behind the Mutex; every use of the
+// client/executables goes through `lock()`, so only one thread touches them
+// at a time. The PJRT CPU client itself is thread-safe for compilation and
+// execution; the wrapper types merely lack the marker traits.
+unsafe impl Send for XlaBackend {}
+unsafe impl Sync for XlaBackend {}
+
+impl XlaBackend {
+    /// Load the manifest in `artifact_dir` and connect the PJRT CPU client.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        anyhow::ensure!(
+            !manifest.entries.is_empty(),
+            "artifact manifest is empty — run `make artifacts`"
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "XlaBackend: platform={} artifacts={} dir={}",
+            client.platform_name(),
+            manifest.entries.len(),
+            artifact_dir.display()
+        );
+        Ok(XlaBackend {
+            inner: Mutex::new(Inner {
+                client,
+                manifest,
+                cache: HashMap::new(),
+            }),
+        })
+    }
+
+    /// True if an artifact exists for `func` at (k, d).
+    pub fn supports(&self, func: &str, k: usize, d: usize) -> bool {
+        let inner = self.inner.lock().expect("xla backend poisoned");
+        select(&inner.manifest.entries_for(func), k, d).is_some()
+    }
+
+    /// Run `func` over `points`/`centers`, padding to the chosen bucket and
+    /// executing once per point-block. Returns per-output flat f32/i32 data
+    /// merged across blocks, plus the bucket's k (outputs per center are
+    /// truncated by the caller).
+    fn run(
+        &self,
+        func: &str,
+        points: &PointSet,
+        centers: &PointSet,
+    ) -> Result<RunOut> {
+        let n = points.len();
+        let k = centers.len();
+        let d = points.dim();
+        anyhow::ensure!(d == centers.dim(), "dim mismatch");
+
+        let mut inner = self.inner.lock().expect("xla backend poisoned");
+        let inner = &mut *inner;
+
+        // Resolve + compile the bucket (cached).
+        let entry = {
+            let entries = inner.manifest.entries_for(func);
+            let e = select(&entries, k, d).with_context(|| {
+                format!("no artifact for func={func} k={k} d={d}")
+            })?;
+            e.clone()
+        };
+        let key = (func.to_string(), entry.b, entry.k, entry.d);
+        if !inner.cache.contains_key(&key) {
+            let path = inner.manifest.path_of(&entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            log::debug!("compiled artifact {}", entry.file);
+            inner.cache.insert(
+                key.clone(),
+                Compiled {
+                    exe,
+                    entry: entry.clone(),
+                },
+            );
+        }
+        let compiled = &inner.cache[&key];
+        let (bb, bk) = (compiled.entry.b, compiled.entry.k);
+
+        // Centers padded once per call.
+        let cpad = pad_rows(centers.flat(), k, d, bk, 0.0);
+        let cmask = mask(k, bk);
+        let c_lit = xla::Literal::vec1(&cpad).reshape(&[bk as i64, d as i64])?;
+        let cm_lit = xla::Literal::vec1(&cmask);
+
+        let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); compiled.entry.n_outputs];
+        let mut out_idx: Vec<Vec<u32>> = vec![Vec::new(); compiled.entry.n_outputs];
+
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + bb).min(n);
+            let rows = hi - lo;
+            let ppad = pad_rows(&points.flat()[lo * d..hi * d], rows, d, bb, 0.0);
+            let pmask = mask(rows, bb);
+            let p_lit = xla::Literal::vec1(&ppad).reshape(&[bb as i64, d as i64])?;
+            let pm_lit = xla::Literal::vec1(&pmask);
+
+            let result = compiled
+                .exe
+                .execute::<&xla::Literal>(&[&p_lit, &c_lit, &pm_lit, &cm_lit])?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            anyhow::ensure!(
+                tuple.len() == compiled.entry.n_outputs,
+                "artifact {} returned {} outputs, manifest says {}",
+                compiled.entry.file,
+                tuple.len(),
+                compiled.entry.n_outputs
+            );
+            for (slot, lit) in tuple.into_iter().enumerate() {
+                match lit.ty()? {
+                    xla::ElementType::S32 => {
+                        let v = lit.to_vec::<i32>()?;
+                        out_idx[slot].extend(v.into_iter().map(|x| x as u32));
+                    }
+                    _ => {
+                        let v = lit.to_vec::<f32>()?;
+                        outputs[slot].extend(v);
+                    }
+                }
+            }
+            lo = hi;
+        }
+
+        Ok(RunOut {
+            f32s: outputs,
+            u32s: out_idx,
+            bucket_b: bb,
+            bucket_k: bk,
+            n,
+            k,
+            d,
+        })
+    }
+}
+
+struct RunOut {
+    f32s: Vec<Vec<f32>>,
+    u32s: Vec<Vec<u32>>,
+    bucket_b: usize,
+    bucket_k: usize,
+    n: usize,
+    k: usize,
+    d: usize,
+}
+
+impl ComputeBackend for XlaBackend {
+    fn assign(&self, points: &PointSet, centers: &PointSet) -> AssignOut {
+        let out = self
+            .run("assign", points, centers)
+            .expect("xla assign failed");
+        // Outputs per block: (min_sqdist f32[B], argmin s32[B]); blocks are
+        // concatenated, so truncate to n (padding rows land past n only in
+        // the final block and were already included — drop them).
+        let mut sqdist = out.f32s[0].clone();
+        let mut idx = out.u32s[1].clone();
+        sqdist.truncate(out.n);
+        idx.truncate(out.n);
+        // Padded blocks can emit trailing rows only at the very end; the
+        // per-block layout is contiguous because bucket_b divides each
+        // block's output length.
+        debug_assert!(out.f32s[0].len() % out.bucket_b == 0);
+        AssignOut { sqdist, idx }
+    }
+
+    fn lloyd_step(&self, points: &PointSet, centers: &PointSet) -> LloydStepOut {
+        let out = self
+            .run("lloyd_step", points, centers)
+            .expect("xla lloyd_step failed");
+        // Outputs per block: sums f32[K,D], counts f32[K], cost_median f32[],
+        // cost_means f32[] — sum across blocks, truncate K to k.
+        let (bk, k, d) = (out.bucket_k, out.k, out.d);
+        let blocks = out.f32s[0].len() / (bk * d);
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0.0f64; k];
+        let mut cost_median = 0.0f64;
+        let mut cost_means = 0.0f64;
+        for blk in 0..blocks {
+            let s = &out.f32s[0][blk * bk * d..(blk + 1) * bk * d];
+            for c in 0..k {
+                for j in 0..d {
+                    sums[c * d + j] += s[c * d + j] as f64;
+                }
+            }
+            let cn = &out.f32s[1][blk * bk..(blk + 1) * bk];
+            for c in 0..k {
+                counts[c] += cn[c] as f64;
+            }
+            cost_median += out.f32s[2][blk] as f64;
+            cost_means += out.f32s[3][blk] as f64;
+        }
+        LloydStepOut {
+            sums,
+            counts,
+            cost_median,
+            cost_means,
+        }
+    }
+
+    fn weight_histogram(&self, points: &PointSet, centers: &PointSet) -> (Vec<f64>, f64) {
+        let out = self
+            .run("weight_histogram", points, centers)
+            .expect("xla weight_histogram failed");
+        let (bk, k) = (out.bucket_k, out.k);
+        let blocks = out.f32s[0].len() / bk;
+        let mut w = vec![0.0f64; k];
+        let mut cost = 0.0f64;
+        for blk in 0..blocks {
+            let cn = &out.f32s[0][blk * bk..(blk + 1) * bk];
+            for c in 0..k {
+                w[c] += cn[c] as f64;
+            }
+            cost += out.f32s[1][blk] as f64;
+        }
+        (w, cost)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,153 @@
+//! Reader for `artifacts/manifest.json` (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One exported HLO artifact, specialized to a shape bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    /// Exported function: "assign" | "lloyd_step" | "weight_histogram".
+    pub func: String,
+    /// Point-block rows.
+    pub b: usize,
+    /// Center rows.
+    pub k: usize,
+    /// Coordinate dimension.
+    pub d: usize,
+    /// HLO text file (relative to the manifest's directory).
+    pub file: String,
+    /// Number of tuple outputs.
+    pub n_outputs: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated from I/O for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let format = j
+            .get("format")
+            .and_then(Json::as_str)
+            .context("manifest missing 'format'")?;
+        anyhow::ensure!(
+            format == "hlo-text",
+            "unsupported artifact format {format:?} (want hlo-text)"
+        );
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'entries'")?;
+        let mut out = Vec::new();
+        for (i, e) in entries.iter().enumerate() {
+            let get_usize = |key: &str| {
+                e.get(key)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("entry {i} missing '{key}'"))
+            };
+            out.push(Entry {
+                func: e
+                    .get("func")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("entry {i} missing 'func'"))?
+                    .to_string(),
+                b: get_usize("b")?,
+                k: get_usize("k")?,
+                d: get_usize("d")?,
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("entry {i} missing 'file'"))?
+                    .to_string(),
+                n_outputs: get_usize("n_outputs")?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries: out,
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &Entry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+
+    /// All entries for a function, sorted by (d, k, b) so bucket selection
+    /// can take the first fit.
+    pub fn entries_for(&self, func: &str) -> Vec<&Entry> {
+        let mut v: Vec<&Entry> = self.entries.iter().filter(|e| e.func == func).collect();
+        v.sort_by_key(|e| (e.d, e.k, e.b));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "format": "hlo-text",
+      "jax_version": "0.8.2",
+      "entries": [
+        {"func": "assign", "b": 2048, "k": 128, "d": 3,
+         "file": "assign_b2048_k128_d3.hlo.txt", "sha256": "x", "bytes": 1,
+         "n_outputs": 2},
+        {"func": "assign", "b": 2048, "k": 32, "d": 3,
+         "file": "assign_b2048_k32_d3.hlo.txt", "sha256": "x", "bytes": 1,
+         "n_outputs": 2},
+        {"func": "lloyd_step", "b": 2048, "k": 32, "d": 3,
+         "file": "lloyd_step_b2048_k32_d3.hlo.txt", "sha256": "x", "bytes": 1,
+         "n_outputs": 4}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_sorts() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let assigns = m.entries_for("assign");
+        assert_eq!(assigns.len(), 2);
+        assert_eq!(assigns[0].k, 32, "sorted by k");
+        assert_eq!(assigns[1].k, 128);
+        assert!(m
+            .path_of(assigns[0])
+            .to_string_lossy()
+            .ends_with("assign_b2048_k32_d3.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"format": "hlo-text", "entries": [{"func": "assign"}]}"#;
+        assert!(Manifest::parse(Path::new("/tmp"), bad).is_err());
+    }
+
+    #[test]
+    fn empty_entries_ok() {
+        let m =
+            Manifest::parse(Path::new("/tmp"), r#"{"format": "hlo-text", "entries": []}"#)
+                .unwrap();
+        assert!(m.entries_for("assign").is_empty());
+    }
+}

@@ -1,0 +1,93 @@
+//! Compute backends for the numeric hot loop.
+//!
+//! Every per-machine computation in the system (Lloyd accumulation steps,
+//! Iterative-Sample distance updates, MapReduce-kMedian weight histograms)
+//! funnels through the [`ComputeBackend`] trait:
+//!
+//! * [`NativeBackend`] — pure rust, works for any shape, no setup. Also the
+//!   semantic reference the AOT path is cross-checked against.
+//! * [`XlaBackend`] — loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py` (L2 JAX functions wrapping the L1 Pallas
+//!   kernel), compiles them once per shape bucket on the PJRT CPU client
+//!   (`PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
+//!   execute`), and pads workloads up to bucket shapes with validity masks.
+//!
+//! The two backends agree to float tolerance (rust/tests/integration_runtime.rs).
+
+pub mod bucket;
+pub mod executor;
+pub mod manifest;
+pub mod native;
+
+pub use bucket::Bucket;
+pub use executor::XlaBackend;
+pub use manifest::Manifest;
+pub use native::NativeBackend;
+
+use crate::geometry::PointSet;
+
+/// Nearest-center assignment of a point block.
+#[derive(Clone, Debug, Default)]
+pub struct AssignOut {
+    /// Squared Euclidean distance to the nearest center, per point.
+    pub sqdist: Vec<f32>,
+    /// Index of the nearest center, per point.
+    pub idx: Vec<u32>,
+}
+
+/// One Lloyd accumulation step over a point block.
+#[derive(Clone, Debug, Default)]
+pub struct LloydStepOut {
+    /// Per-center coordinate sums of assigned points (k x dim, row-major).
+    pub sums: Vec<f64>,
+    /// Per-center assigned point counts.
+    pub counts: Vec<f64>,
+    /// Σ d(x, C) over the block (k-median objective share).
+    pub cost_median: f64,
+    /// Σ d(x, C)² over the block (k-means objective share).
+    pub cost_means: f64,
+}
+
+impl LloydStepOut {
+    /// Element-wise accumulate another block's contribution.
+    pub fn merge(&mut self, other: &LloydStepOut) {
+        if self.sums.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(self.sums.len(), other.sums.len());
+        for (a, b) in self.sums.iter_mut().zip(&other.sums) {
+            *a += b;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.cost_median += other.cost_median;
+        self.cost_means += other.cost_means;
+    }
+}
+
+/// The numeric kernel surface shared by the native and XLA paths.
+pub trait ComputeBackend: Send + Sync {
+    /// Nearest-center assignment (squared distances).
+    fn assign(&self, points: &PointSet, centers: &PointSet) -> AssignOut;
+
+    /// Assignment + per-center sums/counts + objective shares.
+    fn lloyd_step(&self, points: &PointSet, centers: &PointSet) -> LloydStepOut;
+
+    /// MapReduce-kMedian step 4: per-center weights `w^i(y)` over this
+    /// block, plus the block's k-median cost share.
+    fn weight_histogram(&self, points: &PointSet, centers: &PointSet) -> (Vec<f64>, f64);
+
+    /// Minimum distance (true metric, not squared) from each point to the
+    /// center set — Iterative-Sample's `d(x, S)`.
+    fn min_dist(&self, points: &PointSet, centers: &PointSet) -> Vec<f32> {
+        self.assign(points, centers)
+            .sqdist
+            .into_iter()
+            .map(|d| d.max(0.0).sqrt())
+            .collect()
+    }
+
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,284 @@
+//! Pure-rust reference backend.
+//!
+//! Shares exact semantics with the L2 JAX model (`python/compile/model.py`):
+//! nearest-center assignment by squared Euclidean distance, first index wins
+//! ties, per-center sums/counts of assigned points, and both objective
+//! shares. Works for any (n, k, d); this is also what the XLA path is
+//! cross-checked against in tests.
+//!
+//! The assign inner loop is the library's single hottest piece of code (it
+//! is what the paper's cluster spent its time on too), so it gets a blocked,
+//! d=3-specialized implementation; see EXPERIMENTS.md §Perf.
+
+use super::{AssignOut, ComputeBackend, LloydStepOut};
+use crate::geometry::PointSet;
+
+/// Pure-rust compute backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+/// Tile height for the blocked assign loop: big enough to amortize the
+/// center-loop setup, small enough that a (tile × k) walk stays in L1/L2.
+const TILE: usize = 256;
+
+#[inline(always)]
+fn assign_rows_generic(
+    points: &PointSet,
+    centers: &PointSet,
+    lo: usize,
+    hi: usize,
+    sqdist: &mut [f32],
+    idx: &mut [u32],
+) {
+    let d = points.dim();
+    let k = centers.len();
+    for i in lo..hi {
+        let row = points.row(i);
+        let mut best = f32::INFINITY;
+        let mut bj = 0u32;
+        for c in 0..k {
+            let crow = centers.row(c);
+            let mut acc = 0.0f32;
+            for j in 0..d {
+                let t = row[j] - crow[j];
+                acc += t * t;
+            }
+            if acc < best {
+                best = acc;
+                bj = c as u32;
+            }
+        }
+        sqdist[i] = best.max(0.0);
+        idx[i] = bj;
+    }
+}
+
+/// d = 3 fast path, SoA-tiled for SIMD.
+///
+/// The row-major (x,y,z) interleave defeats auto-vectorization of the
+/// center loop, so each tile is transposed once into coordinate planes
+/// (xs/ys/zs); the inner loop then walks *points* for a fixed center —
+/// a branch-free select over contiguous lanes that LLVM vectorizes to
+/// AVX-512 masked min/blend (with `-C target-cpu=native`). Measured
+/// 1943 Mdist/s at k=25 vs 326 for the scalar point-major loop — ~6x
+/// (EXPERIMENTS.md §Perf has the full iteration log).
+#[inline(always)]
+fn assign_rows_d3(
+    points: &[f32],
+    centers: &[f32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    sqdist: &mut [f32],
+    idx: &mut [u32],
+) {
+    let n = hi - lo;
+    let mut xs = [0.0f32; TILE];
+    let mut ys = [0.0f32; TILE];
+    let mut zs = [0.0f32; TILE];
+    debug_assert!(n <= TILE);
+    for i in 0..n {
+        let base = (lo + i) * 3;
+        xs[i] = points[base];
+        ys[i] = points[base + 1];
+        zs[i] = points[base + 2];
+    }
+    let mut best = [f32::INFINITY; TILE];
+    let mut bidx = [0u32; TILE];
+    for c in 0..k {
+        let cx = centers[c * 3];
+        let cy = centers[c * 3 + 1];
+        let cz = centers[c * 3 + 2];
+        let cid = c as u32;
+        // Branch-free select over contiguous lanes: vectorizes cleanly.
+        for i in 0..n {
+            let dx = xs[i] - cx;
+            let dy = ys[i] - cy;
+            let dz = zs[i] - cz;
+            let d = dx * dx + dy * dy + dz * dz;
+            let better = d < best[i];
+            best[i] = if better { d } else { best[i] };
+            bidx[i] = if better { cid } else { bidx[i] };
+        }
+    }
+    for i in 0..n {
+        sqdist[lo + i] = best[i].max(0.0);
+        idx[lo + i] = bidx[i];
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn assign(&self, points: &PointSet, centers: &PointSet) -> AssignOut {
+        assert_eq!(points.dim(), centers.dim(), "dim mismatch");
+        assert!(!centers.is_empty(), "no centers");
+        let n = points.len();
+        let mut out = AssignOut {
+            sqdist: vec![0.0; n],
+            idx: vec![0; n],
+        };
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + TILE).min(n);
+            if points.dim() == 3 {
+                assign_rows_d3(
+                    points.flat(),
+                    centers.flat(),
+                    centers.len(),
+                    lo,
+                    hi,
+                    &mut out.sqdist,
+                    &mut out.idx,
+                );
+            } else {
+                assign_rows_generic(points, centers, lo, hi, &mut out.sqdist, &mut out.idx);
+            }
+            lo = hi;
+        }
+        out
+    }
+
+    fn lloyd_step(&self, points: &PointSet, centers: &PointSet) -> LloydStepOut {
+        let a = self.assign(points, centers);
+        let k = centers.len();
+        let d = points.dim();
+        let mut out = LloydStepOut {
+            sums: vec![0.0; k * d],
+            counts: vec![0.0; k],
+            cost_median: 0.0,
+            cost_means: 0.0,
+        };
+        // Costs first: a straight-line pass LLVM can pipeline (f32 sqrt per
+        // point, f64 accumulators — per-point sqrt error is << the f32
+        // distance error itself).
+        let n = points.len();
+        for i in 0..n {
+            let d2 = a.sqdist[i];
+            out.cost_means += d2 as f64;
+            out.cost_median += d2.sqrt() as f64;
+        }
+        // Scatter-add of coordinate sums; flat d=3 path avoids the row()
+        // slice construction in the hot loop.
+        if d == 3 {
+            let flat = points.flat();
+            for i in 0..n {
+                let c = a.idx[i] as usize * 3;
+                let b = i * 3;
+                out.sums[c] += flat[b] as f64;
+                out.sums[c + 1] += flat[b + 1] as f64;
+                out.sums[c + 2] += flat[b + 2] as f64;
+                out.counts[a.idx[i] as usize] += 1.0;
+            }
+        } else {
+            for i in 0..n {
+                let c = a.idx[i] as usize;
+                let row = points.row(i);
+                for j in 0..d {
+                    out.sums[c * d + j] += row[j] as f64;
+                }
+                out.counts[c] += 1.0;
+            }
+        }
+        out
+    }
+
+    fn weight_histogram(&self, points: &PointSet, centers: &PointSet) -> (Vec<f64>, f64) {
+        let a = self.assign(points, centers);
+        let mut w = vec![0.0f64; centers.len()];
+        let mut cost = 0.0f64;
+        for i in 0..points.len() {
+            w[a.idx[i] as usize] += 1.0;
+            cost += (a.sqdist[i] as f64).sqrt();
+        }
+        (w, cost)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_ps(n: usize, d: usize, seed: u64) -> PointSet {
+        let mut rng = Rng::new(seed);
+        PointSet::from_flat(d, (0..n * d).map(|_| rng.f32()).collect())
+    }
+
+    #[test]
+    fn assign_matches_bruteforce_d3_and_generic() {
+        for d in [1usize, 2, 3, 5, 8] {
+            let p = random_ps(500, d, 1);
+            let c = random_ps(17, d, 2);
+            let got = NativeBackend.assign(&p, &c);
+            let (want_d, want_i) = crate::metrics::cost::assign_full(&p, &c);
+            assert_eq!(got.idx, want_i, "dim {d}");
+            for (a, b) in got.sqdist.iter().zip(&want_d) {
+                assert!((a - b).abs() < 1e-5, "dim {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn assign_first_index_wins_ties() {
+        let p = PointSet::from_flat(3, vec![0.0, 0.0, 0.0]);
+        // Two identical centers: index 0 must win.
+        let c = PointSet::from_flat(3, vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        let out = NativeBackend.assign(&p, &c);
+        assert_eq!(out.idx, vec![0]);
+    }
+
+    #[test]
+    fn lloyd_step_counts_and_sums() {
+        // 4 points, 2 centers on a line; split 2/2.
+        let p = PointSet::from_flat(1, vec![0.0, 0.2, 1.0, 1.2]);
+        let c = PointSet::from_flat(1, vec![0.0, 1.0]);
+        let out = NativeBackend.lloyd_step(&p, &c);
+        assert_eq!(out.counts, vec![2.0, 2.0]);
+        assert!((out.sums[0] - 0.2).abs() < 1e-6);
+        assert!((out.sums[1] - 2.2).abs() < 1e-6);
+        assert!((out.cost_median - 0.4).abs() < 1e-5);
+        assert!((out.cost_means - (0.04 + 0.04)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lloyd_step_merge() {
+        let p = random_ps(400, 3, 3);
+        let c = random_ps(8, 3, 4);
+        let whole = NativeBackend.lloyd_step(&p, &c);
+        let parts = p.chunks(3);
+        let mut merged = LloydStepOut::default();
+        for part in &parts {
+            merged.merge(&NativeBackend.lloyd_step(part, &c));
+        }
+        assert!((whole.cost_median - merged.cost_median).abs() < 1e-6);
+        for (a, b) in whole.sums.iter().zip(&merged.sums) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(whole.counts, merged.counts);
+    }
+
+    #[test]
+    fn weight_histogram_matches_lloyd_counts() {
+        let p = random_ps(1000, 3, 5);
+        let c = random_ps(16, 3, 6);
+        let (w, cost) = NativeBackend.weight_histogram(&p, &c);
+        let step = NativeBackend.lloyd_step(&p, &c);
+        assert_eq!(w, step.counts);
+        assert!((cost - step.cost_median).abs() < 1e-6);
+        assert!((w.iter().sum::<f64>() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_dist_is_sqrt_of_assign() {
+        let p = random_ps(100, 3, 7);
+        let c = random_ps(5, 3, 8);
+        let md = NativeBackend.min_dist(&p, &c);
+        let a = NativeBackend.assign(&p, &c);
+        for (m, d2) in md.iter().zip(&a.sqdist) {
+            assert!((m * m - d2).abs() < 1e-5);
+        }
+    }
+}

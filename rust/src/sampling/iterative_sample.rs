@@ -1,0 +1,362 @@
+//! `Iterative-Sample` (Algorithm 1) — sequential form.
+//!
+//! Loop until few points remain (|R| below a threshold):
+//!   1. add each remaining point to the sample `S` independently with
+//!      probability `c_s · k · n^ε · log n / |R|`;
+//!   2. add each remaining point to a witness set `H` with probability
+//!      `c_h · n^ε · log n / |R|`;
+//!   3. pick the pivot `v` = the `(c_p · log n)`-th farthest point of `H`
+//!      from `S` (Algorithm 2);
+//!   4. drop from `R` every point closer to `S` than `v`.
+//! Return `C = S ∪ R`.
+//!
+//! Propositions 2.1/2.2: w.h.p. `O(1/ε)` iterations and
+//! `|C| = O(k · n^ε · log n / ε)`.
+//!
+//! ## Constants profiles
+//!
+//! The paper's proofs use constants (9, 4, 8, 4) *with* the `log n` factors
+//! — chosen to make the Chernoff bounds go through, not to be run. (With
+//! n = 10⁷, k = 25, ε = 0.1 they would sample ≈ 80k points while the
+//! paper's own experiments cluster samples in seconds.) We therefore ship
+//! two profiles:
+//!
+//! * [`SampleConstants::theory`] — the literal Algorithm 1 constants;
+//!   used by the property tests that verify Propositions 2.1/2.2.
+//! * [`SampleConstants::practical`] — same structure with the `log n`
+//!   factors dropped and unit coefficients, matching the sample sizes the
+//!   paper's experiment section implies. This is the Figure 1/2 default.
+
+use crate::geometry::PointSet;
+use crate::runtime::ComputeBackend;
+use crate::sampling::select::select_pivot;
+use crate::util::{log_n, rng::Rng};
+
+/// Coefficients of Algorithm 1 (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct SampleConstants {
+    /// Coefficient of the S-sample probability (paper: 9).
+    pub c_sample: f64,
+    /// Coefficient of the H-sample probability (paper: 4).
+    pub c_witness: f64,
+    /// Coefficient of the pivot rank (paper: 8).
+    pub c_pivot: f64,
+    /// Coefficient of the loop threshold (paper: 4/ε with the ε applied
+    /// separately — here just the constant 4).
+    pub c_threshold: f64,
+    /// Multiply the `log n` factors in (true for the paper's theory form).
+    pub use_log_n: bool,
+}
+
+impl SampleConstants {
+    /// The literal constants of Algorithm 1.
+    pub fn theory() -> Self {
+        SampleConstants {
+            c_sample: 9.0,
+            c_witness: 4.0,
+            c_pivot: 8.0,
+            c_threshold: 4.0,
+            use_log_n: true,
+        }
+    }
+
+    /// Practical profile: drops the `log n` factors (see module docs).
+    pub fn practical() -> Self {
+        SampleConstants {
+            c_sample: 2.0,
+            c_witness: 2.0,
+            c_pivot: 2.0,
+            c_threshold: 2.0,
+            use_log_n: false,
+        }
+    }
+
+    fn logn(&self, n: usize) -> f64 {
+        if self.use_log_n {
+            log_n(n)
+        } else {
+            1.0
+        }
+    }
+
+    /// S-inclusion probability at remaining-set size `r` (clamped to 1).
+    pub fn p_sample(&self, n: usize, k: usize, eps: f64, r: usize) -> f64 {
+        let p = self.c_sample * k as f64 * (n as f64).powf(eps) * self.logn(n) / r as f64;
+        p.min(1.0)
+    }
+
+    /// H-inclusion probability at remaining-set size `r` (clamped to 1).
+    pub fn p_witness(&self, n: usize, eps: f64, r: usize) -> f64 {
+        let p = self.c_witness * (n as f64).powf(eps) * self.logn(n) / r as f64;
+        p.min(1.0)
+    }
+
+    /// Pivot rank (≥ 1).
+    pub fn pivot_rank(&self, n: usize) -> usize {
+        (self.c_pivot * self.logn(n)).ceil().max(1.0) as usize
+    }
+
+    /// Loop threshold: stop when `|R| ≤ threshold`.
+    pub fn threshold(&self, n: usize, k: usize, eps: f64) -> usize {
+        let t = self.c_threshold / eps * k as f64 * (n as f64).powf(eps) * self.logn(n);
+        t.ceil() as usize
+    }
+}
+
+/// Configuration of one Iterative-Sample run.
+#[derive(Clone, Debug)]
+pub struct IterativeSampleConfig {
+    pub k: usize,
+    /// The paper's ε parameter (0 < ε < δ/2); experiments use 0.1.
+    pub epsilon: f64,
+    pub constants: SampleConstants,
+    pub seed: u64,
+    /// Safety cap on loop iterations (the theory says O(1/ε)).
+    pub max_iters: usize,
+}
+
+impl Default for IterativeSampleConfig {
+    fn default() -> Self {
+        IterativeSampleConfig {
+            k: 25,
+            epsilon: 0.1,
+            constants: SampleConstants::practical(),
+            seed: 0,
+            max_iters: 200,
+        }
+    }
+}
+
+/// Per-iteration diagnostics (used by the sample-stats experiment, E4).
+#[derive(Clone, Debug)]
+pub struct IterationStats {
+    pub remaining_before: usize,
+    pub sampled: usize,
+    pub witnesses: usize,
+    pub pivot_dist: f32,
+    pub dropped: usize,
+}
+
+/// Output of Iterative-Sample.
+#[derive(Clone, Debug)]
+pub struct SampleResult {
+    /// The sample `C = S ∪ R` as points.
+    pub sample: PointSet,
+    /// Indices of `C` into the input set.
+    pub indices: Vec<usize>,
+    pub iterations: usize,
+    pub iter_stats: Vec<IterationStats>,
+}
+
+/// Run sequential Iterative-Sample over `points`.
+///
+/// `backend` computes the d(x, S) updates (the hot loop); distances are
+/// maintained incrementally against each new sample batch, so the total
+/// work is O(Σ_iters |R_iter| · |ΔS_iter| · d).
+pub fn iterative_sample(
+    points: &PointSet,
+    cfg: &IterativeSampleConfig,
+    backend: &dyn ComputeBackend,
+) -> SampleResult {
+    let n = points.len();
+    let mut rng = Rng::new(cfg.seed);
+    let threshold = cfg.constants.threshold(n, cfg.k, cfg.epsilon).max(1);
+
+    // Remaining points and their current distance to S (∞ until S exists).
+    let mut alive: Vec<usize> = (0..n).collect();
+    let mut dist: Vec<f32> = vec![f32::INFINITY; n];
+    let mut sample_indices: Vec<usize> = Vec::new();
+    let mut iter_stats = Vec::new();
+    let mut iterations = 0usize;
+
+    while alive.len() > threshold && iterations < cfg.max_iters {
+        iterations += 1;
+        let r = alive.len();
+        let ps = cfg.constants.p_sample(n, cfg.k, cfg.epsilon, r);
+        let ph = cfg.constants.p_witness(n, cfg.epsilon, r);
+
+        // Step 1+2: independent Bernoulli sampling of S-batch and H.
+        let mut batch_idx: Vec<usize> = Vec::new();
+        let mut h_idx: Vec<usize> = Vec::new();
+        for &i in &alive {
+            if rng.bernoulli(ps) {
+                batch_idx.push(i);
+            }
+            if rng.bernoulli(ph) {
+                h_idx.push(i);
+            }
+        }
+        if batch_idx.is_empty() {
+            // Extremely unlikely unless probabilities underflow; force one
+            // sample so the loop always progresses.
+            batch_idx.push(alive[rng.below(alive.len())]);
+        }
+
+        // Update d(x, S) for remaining points against the new batch only.
+        let batch = points.gather(&batch_idx);
+        let alive_ps = points.gather(&alive);
+        let nd = backend.min_dist(&alive_ps, &batch);
+        for (pos, &i) in alive.iter().enumerate() {
+            if nd[pos] < dist[i] {
+                dist[i] = nd[pos];
+            }
+        }
+        sample_indices.extend_from_slice(&batch_idx);
+
+        // Step 3: pivot from H's distances to S.
+        let h_dists: Vec<f32> = h_idx.iter().map(|&i| dist[i]).collect();
+        let rank = cfg.constants.pivot_rank(n);
+        let pivot = match select_pivot(&h_dists, rank) {
+            Some(p) => p,
+            None => {
+                // Empty H: skip the prune (keep only removing sampled pts).
+                let in_batch: std::collections::HashSet<usize> =
+                    batch_idx.iter().copied().collect();
+                alive.retain(|i| !in_batch.contains(i));
+                iter_stats.push(IterationStats {
+                    remaining_before: r,
+                    sampled: batch_idx.len(),
+                    witnesses: 0,
+                    pivot_dist: f32::NAN,
+                    dropped: 0,
+                });
+                continue;
+            }
+        };
+
+        // Step 4: drop well-represented points (d(x,S) < pivot) and all
+        // newly sampled points (they are in S now).
+        let before = alive.len();
+        let in_batch: std::collections::HashSet<usize> =
+            batch_idx.iter().copied().collect();
+        alive.retain(|&i| dist[i] >= pivot && !in_batch.contains(&i));
+        let dropped = before - alive.len();
+
+        iter_stats.push(IterationStats {
+            remaining_before: r,
+            sampled: batch_idx.len(),
+            witnesses: h_idx.len(),
+            pivot_dist: pivot,
+            dropped,
+        });
+    }
+
+    // C = S ∪ R.
+    let mut indices = sample_indices;
+    indices.extend_from_slice(&alive);
+    // Dedup while preserving order (a point can be sampled once only — the
+    // retain above removes batch members — but be defensive).
+    let mut seen = std::collections::HashSet::new();
+    indices.retain(|&i| seen.insert(i));
+
+    SampleResult {
+        sample: points.gather(&indices),
+        indices,
+        iterations,
+        iter_stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+    use crate::runtime::NativeBackend;
+
+    fn run(n: usize, k: usize, eps: f64, constants: SampleConstants, seed: u64) -> SampleResult {
+        let data = DataGenConfig {
+            n,
+            k,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let cfg = IterativeSampleConfig {
+            k,
+            epsilon: eps,
+            constants,
+            seed: seed + 1,
+            max_iters: 200,
+        };
+        iterative_sample(&data.points, &cfg, &NativeBackend)
+    }
+
+    #[test]
+    fn returns_valid_indices_no_dups() {
+        let res = run(5000, 10, 0.2, SampleConstants::practical(), 1);
+        let mut sorted = res.indices.clone();
+        sorted.sort_unstable();
+        let len = sorted.len();
+        sorted.dedup();
+        assert_eq!(sorted.len(), len, "duplicate indices in sample");
+        assert!(sorted.iter().all(|&i| i < 5000));
+        assert_eq!(res.sample.len(), res.indices.len());
+    }
+
+    #[test]
+    fn sample_is_sublinear_with_practical_constants() {
+        let n = 20_000;
+        let res = run(n, 10, 0.2, SampleConstants::practical(), 2);
+        assert!(
+            res.sample.len() < n / 4,
+            "sample {} out of {n} is not sublinear",
+            res.sample.len()
+        );
+        assert!(res.sample.len() >= 10, "sample must be at least k");
+    }
+
+    #[test]
+    fn iterations_bounded_by_o_one_over_eps() {
+        // Proposition 2.1: O(1/ε) iterations w.h.p. Allow a 4x constant.
+        for (eps, seed) in [(0.2, 3u64), (0.4, 4u64)] {
+            let res = run(30_000, 5, eps, SampleConstants::theory(), seed);
+            let bound = (4.0 / eps).ceil() as usize + 2;
+            assert!(
+                res.iterations <= bound,
+                "eps={eps}: {} iterations > bound {bound}",
+                res.iterations
+            );
+        }
+    }
+
+    #[test]
+    fn theory_sample_size_matches_proposition_2_2() {
+        // Proposition 2.2: |C| = O(k n^ε log n / ε).
+        let n = 30_000usize;
+        let k = 5;
+        let eps = 0.3;
+        let res = run(n, k, eps, SampleConstants::theory(), 5);
+        let bound = 8.0 / eps * k as f64 * (n as f64).powf(eps) * (n as f64).ln();
+        assert!(
+            (res.sample.len() as f64) <= bound,
+            "sample {} > bound {bound}",
+            res.sample.len()
+        );
+    }
+
+    #[test]
+    fn remaining_shrinks_geometrically() {
+        let res = run(50_000, 5, 0.3, SampleConstants::theory(), 6);
+        for w in res.iter_stats.windows(2) {
+            assert!(
+                w[1].remaining_before < w[0].remaining_before,
+                "R must shrink every iteration"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(8000, 8, 0.2, SampleConstants::practical(), 7);
+        let b = run(8000, 8, 0.2, SampleConstants::practical(), 7);
+        assert_eq!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn tiny_input_returns_everything() {
+        // n below the threshold: the loop never runs; C = V.
+        let res = run(50, 10, 0.1, SampleConstants::theory(), 8);
+        assert_eq!(res.sample.len(), 50);
+        assert_eq!(res.iterations, 0);
+    }
+}

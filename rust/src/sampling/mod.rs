@@ -1,0 +1,14 @@
+//! The paper's core contribution: `Iterative-Sample` (Algorithms 1–2).
+//!
+//! This module is the *sequential* formulation (§2.1) — the logic shared by
+//! the MapReduce version in [`crate::coordinator::mr_iterative_sample`],
+//! which runs the identical iteration structure with the point set
+//! partitioned across simulated machines.
+
+pub mod iterative_sample;
+pub mod select;
+
+pub use iterative_sample::{
+    iterative_sample, IterativeSampleConfig, SampleConstants, SampleResult,
+};
+pub use select::select_pivot;

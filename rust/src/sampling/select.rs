@@ -1,0 +1,54 @@
+//! `Select(H, S)` — Algorithm 2: the pivot choice.
+//!
+//! Order the witness sample `H` by distance to the current sample `S`
+//! (farthest first) and return the element at the `(pivot_rank)`-th
+//! position (the paper uses `8·log n`). Every remaining point closer to `S`
+//! than the pivot is then considered "well represented" and dropped.
+//!
+//! Lemma 3.2: w.h.p. the pivot's rank among all remaining points lies in
+//! `[|R|/n^ε, 4|R|/n^ε]`, so each iteration shrinks `R` by ~`n^ε`.
+
+/// Given the distances `h_dists = d(h, S)` for each `h ∈ H`, return the
+/// pivot *distance*: the `rank`-th largest (1-based; rank clamps to |H|).
+/// Returns `None` when `H` is empty (callers then skip the prune step).
+pub fn select_pivot(h_dists: &[f32], rank: usize) -> Option<f32> {
+    if h_dists.is_empty() {
+        return None;
+    }
+    let mut sorted: Vec<f32> = h_dists.to_vec();
+    // Farthest first.
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = rank.max(1).min(sorted.len()) - 1;
+    Some(sorted[idx])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_rank_th_farthest() {
+        let d = vec![1.0, 5.0, 3.0, 4.0, 2.0];
+        assert_eq!(select_pivot(&d, 1), Some(5.0));
+        assert_eq!(select_pivot(&d, 2), Some(4.0));
+        assert_eq!(select_pivot(&d, 5), Some(1.0));
+    }
+
+    #[test]
+    fn rank_clamps() {
+        let d = vec![1.0, 2.0];
+        assert_eq!(select_pivot(&d, 100), Some(1.0));
+        assert_eq!(select_pivot(&d, 0), Some(2.0));
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert_eq!(select_pivot(&[], 3), None);
+    }
+
+    #[test]
+    fn handles_ties() {
+        let d = vec![2.0, 2.0, 2.0];
+        assert_eq!(select_pivot(&d, 2), Some(2.0));
+    }
+}

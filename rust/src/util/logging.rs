@@ -1,0 +1,75 @@
+//! Tiny stderr logger wired into the `log` facade.
+//!
+//! Level comes from `MRCLUSTER_LOG` (error|warn|info|debug|trace), default
+//! `info`. Install once from `main()` / test setup via [`init`]. The logger
+//! is a static (the vendored `log` crate is built without the `std`
+//! feature, so `set_boxed_logger` is unavailable).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+use std::io::Write;
+use std::sync::Once;
+use std::time::Instant;
+
+static INIT: Once = Once::new();
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static LOGGER: StderrLogger = StderrLogger;
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _m: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = START.elapsed();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(
+                err,
+                "[{:>9.3}s {} {}] {}",
+                t.as_secs_f64(),
+                lvl,
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        Lazy::force(&START);
+        let filter = match std::env::var("MRCLUSTER_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        if log::set_logger(&LOGGER).is_ok() {
+            log::set_max_level(filter);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

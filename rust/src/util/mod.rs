@@ -1,0 +1,47 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! Everything here is implemented in-tree because the build environment is
+//! offline (see DESIGN.md): a deterministic RNG with the samplers the
+//! paper's data generator needs, a minimal JSON reader for the AOT artifact
+//! manifest, a stderr logger, wall-clock helpers, and table formatting for
+//! the experiment drivers.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod table;
+pub mod timer;
+
+/// Ceiling division for usize (used all over the partitioning code).
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Natural logarithm of `n` clamped below at 1.0 — the paper's `log n`
+/// factors; the clamp keeps tiny test instances from degenerating.
+#[inline]
+pub fn log_n(n: usize) -> f64 {
+    (n.max(2) as f64).ln().max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_exact_and_remainder() {
+        assert_eq!(div_ceil(10, 5), 2);
+        assert_eq!(div_ceil(11, 5), 3);
+        assert_eq!(div_ceil(1, 1), 1);
+        assert_eq!(div_ceil(0, 7), 0);
+    }
+
+    #[test]
+    fn log_n_clamps() {
+        assert_eq!(log_n(0), 1.0);
+        assert_eq!(log_n(2), 1.0);
+        assert!((log_n(1000) - (1000f64).ln()).abs() < 1e-12);
+    }
+}

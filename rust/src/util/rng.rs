@@ -1,0 +1,284 @@
+//! Deterministic pseudo-random generation for reproducible experiments.
+//!
+//! Core generator is xoshiro256++ seeded through SplitMix64 (the standard
+//! seeding recipe), plus the samplers the paper's experiment section needs:
+//! uniform reals, Box–Muller normals (the point spread around each planted
+//! center, §4.2), a Zipf-weighted categorical (cluster sizes), Bernoulli
+//! (Iterative-Sample's inclusion probabilities) and Fisher–Yates selection.
+//!
+//! Every component of the system takes an explicit `Rng` (or a seed) — there
+//! is no global RNG — so whole Figure-1 runs replay bit-identically.
+
+/// xoshiro256++ PRNG. Not cryptographic; fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so that nearby seeds give unrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// An independent child stream (used to give each simulated machine its
+    /// own generator so machine-parallel runs replay deterministically
+    /// regardless of scheduling).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free variant is overkill here;
+        // 128-bit multiply keeps the modulo bias negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast
+    /// here — data generation is not on the hot path).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates: choose `m` distinct indices out of [0, n).
+    pub fn sample_distinct(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n, "cannot sample {m} distinct from {n}");
+        // Partial Fisher–Yates over an index map: O(m) memory when m << n
+        // would need a hashmap; n is small whenever we call this (seeding).
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+
+    /// Sample from a discrete distribution given cumulative weights
+    /// (strictly increasing, last element = total mass).
+    pub fn categorical_cdf(&mut self, cdf: &[f64]) -> usize {
+        let total = *cdf.last().expect("empty cdf");
+        let u = self.f64() * total;
+        // Binary search for the first cdf entry > u.
+        match cdf.binary_search_by(|&c| {
+            if c <= u {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Greater
+            }
+        }) {
+            Ok(i) | Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+}
+
+/// Zipf-weighted categorical over `k` categories: weight of category `i`
+/// (1-based) is `i^-alpha`. `alpha = 0` is uniform — the paper's Figure 1/2
+/// setting; larger alpha skews cluster sizes (§4.2).
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(k: usize, alpha: f64) -> Self {
+        assert!(k > 0);
+        let mut cdf = Vec::with_capacity(k);
+        let mut acc = 0.0;
+        for i in 1..=k {
+            acc += (i as f64).powf(-alpha);
+            cdf.push(acc);
+        }
+        Zipf { cdf }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        rng.categorical_cdf(&self.cdf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets should be hit");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::new(13);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut r = Rng::new(5);
+        let s = r.sample_distinct(100, 25);
+        assert_eq!(s.len(), 25);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 25);
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn zipf_uniform_when_alpha_zero() {
+        let z = Zipf::new(4, 0.0);
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_skew_orders_counts() {
+        let z = Zipf::new(5, 1.5);
+        let mut r = Rng::new(17);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        for w in counts.windows(2) {
+            assert!(w[0] > w[1], "zipf counts must decrease: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn fork_streams_are_unrelated() {
+        let mut root = Rng::new(1);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn categorical_cdf_picks_correct_bucket() {
+        let mut r = Rng::new(21);
+        // Mass only on bucket 1.
+        let cdf = vec![0.0, 1.0, 1.0];
+        for _ in 0..100 {
+            assert_eq!(r.categorical_cdf(&cdf), 1);
+        }
+    }
+}

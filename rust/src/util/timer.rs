@@ -1,0 +1,83 @@
+//! Wall-clock helpers used by the MapReduce engine's per-machine timing and
+//! by the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall-clock duration of `f`, returning (result, elapsed).
+#[inline]
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Simple accumulating stopwatch (pause/resume semantics).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Stopwatch {
+    total: Duration,
+}
+
+impl Stopwatch {
+    pub fn add(&mut self, d: Duration) {
+        self.total += d;
+    }
+
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let (out, d) = timed(f);
+        self.total += d;
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+}
+
+/// Human-friendly duration formatting for the report tables.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}m", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, d) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0 || d.as_nanos() == 0); // non-negative by type
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::default();
+        sw.add(Duration::from_millis(5));
+        sw.add(Duration::from_millis(7));
+        assert_eq!(sw.total(), Duration::from_millis(12));
+        let x = sw.time(|| 1 + 1);
+        assert_eq!(x, 2);
+        assert!(sw.total() >= Duration::from_millis(12));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("us"));
+        assert!(fmt_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+        assert!(fmt_duration(Duration::from_secs(600)).ends_with('m'));
+    }
+}

@@ -1,0 +1,173 @@
+//! Cross-algorithm quality comparisons on controlled geometry — the
+//! approximation-factor relationships the paper's analysis predicts.
+
+use mrcluster::algorithms::gonzalez::gonzalez;
+use mrcluster::algorithms::lloyd::{lloyd, LloydConfig};
+use mrcluster::algorithms::local_search::{local_search, LocalSearchConfig};
+use mrcluster::data::DataGenConfig;
+use mrcluster::geometry::PointSet;
+use mrcluster::metrics::{kcenter_cost, kmedian_cost};
+use mrcluster::runtime::NativeBackend;
+use mrcluster::util::rng::Rng;
+
+/// Brute-force optimal k-median over all center subsets (tiny n only).
+fn exact_kmedian(points: &PointSet, k: usize) -> f64 {
+    let n = points.len();
+    assert!(n <= 16, "exact search is exponential");
+    let mut best = f64::INFINITY;
+    // Enumerate k-subsets via bitmasks.
+    for mask in 0u32..(1 << n) {
+        if mask.count_ones() as usize != k {
+            continue;
+        }
+        let idx: Vec<usize> = (0..n).filter(|i| mask & (1 << i) != 0).collect();
+        let c = points.gather(&idx);
+        let cost = kmedian_cost(points, &c);
+        if cost < best {
+            best = cost;
+        }
+    }
+    best
+}
+
+#[test]
+fn local_search_within_5x_of_exact_optimum() {
+    // Theory: 3+2/c approximation with exact swaps. Our first-improvement
+    // variant should stay well within 5x on small instances.
+    let mut rng = Rng::new(1);
+    for trial in 0..5 {
+        let n = 12;
+        let p = PointSet::from_flat(2, (0..n * 2).map(|_| rng.f32() * 10.0).collect());
+        let opt = exact_kmedian(&p, 3);
+        let res = local_search(
+            &p,
+            None,
+            &LocalSearchConfig {
+                k: 3,
+                seed: trial,
+                ..Default::default()
+            },
+        );
+        let cost = kmedian_cost(&p, &res.centers);
+        assert!(
+            cost <= opt * 5.0 + 1e-6,
+            "trial {trial}: LS {cost} vs OPT {opt}"
+        );
+    }
+}
+
+#[test]
+fn gonzalez_within_2x_of_exact_kcenter() {
+    // Gonzalez is provably 2-approx; verify against brute force.
+    let mut rng = Rng::new(2);
+    for trial in 0..5 {
+        let n = 12;
+        let p = PointSet::from_flat(2, (0..n * 2).map(|_| rng.f32() * 10.0).collect());
+        // Brute-force k-center.
+        let mut opt = f64::INFINITY;
+        for mask in 0u32..(1 << n) {
+            if mask.count_ones() != 3 {
+                continue;
+            }
+            let idx: Vec<usize> = (0..n).filter(|i| mask & (1 << i) != 0).collect();
+            opt = opt.min(kcenter_cost(&p, &p.gather(&idx)));
+        }
+        let res = gonzalez(&p, 3, &mut Rng::new(trial));
+        assert!(
+            res.radius <= 2.0 * opt + 1e-6,
+            "trial {trial}: gonzalez {} vs OPT {opt}",
+            res.radius
+        );
+    }
+}
+
+#[test]
+fn local_search_beats_or_matches_lloyd_on_kmedian() {
+    // The paper's cost tables show LocalSearch <= Lloyd on the k-median
+    // objective (Figure 1, LocalSearch row ~0.95). Aggregate comparison
+    // across seeds to tolerate per-seed noise.
+    let mut ls_total = 0.0;
+    let mut lloyd_total = 0.0;
+    for seed in 0..3u64 {
+        let data = DataGenConfig {
+            n: 2000,
+            k: 8,
+            sigma: 0.15,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let ls = local_search(
+            &data.points,
+            None,
+            &LocalSearchConfig {
+                k: 8,
+                seed,
+                ..Default::default()
+            },
+        );
+        let ll = lloyd(
+            &data.points,
+            None,
+            &LloydConfig {
+                k: 8,
+                seed,
+                ..Default::default()
+            },
+            &NativeBackend,
+        );
+        ls_total += kmedian_cost(&data.points, &ls.centers);
+        lloyd_total += kmedian_cost(&data.points, &ll.centers);
+    }
+    assert!(
+        ls_total <= lloyd_total * 1.1,
+        "LS {ls_total} should be competitive with Lloyd {lloyd_total}"
+    );
+}
+
+#[test]
+fn graph_metric_and_coordinate_metric_agree_on_embedded_data() {
+    // DistanceMatrix::from_points must induce the same clustering costs as
+    // the coordinate path.
+    let data = DataGenConfig {
+        n: 60,
+        k: 3,
+        sigma: 0.05,
+        seed: 9,
+        ..Default::default()
+    }
+    .generate();
+    let matrix = mrcluster::geometry::DistanceMatrix::from_points(&data.points);
+    let centers_idx = vec![0usize, 20, 40];
+    let via_matrix = matrix.kmedian_cost(&centers_idx);
+    let via_coords = kmedian_cost(&data.points, &data.points.gather(&centers_idx));
+    assert!(
+        (via_matrix - via_coords).abs() / via_coords < 1e-4,
+        "{via_matrix} vs {via_coords}"
+    );
+}
+
+#[test]
+fn weighted_algorithms_scale_invariantly() {
+    // Doubling every weight must not change the argmin centers (cost
+    // doubles). Checks the weighted plumbing end to end.
+    let data = DataGenConfig {
+        n: 500,
+        k: 5,
+        sigma: 0.1,
+        seed: 10,
+        ..Default::default()
+    }
+    .generate();
+    let w1 = vec![1.0f32; 500];
+    let w2 = vec![2.0f32; 500];
+    let mk = |seed| LocalSearchConfig {
+        k: 5,
+        seed,
+        ..Default::default()
+    };
+    let a = local_search(&data.points, Some(&w1), &mk(3));
+    let b = local_search(&data.points, Some(&w2), &mk(3));
+    assert_eq!(a.center_indices, b.center_indices);
+    assert!((b.cost_median - 2.0 * a.cost_median).abs() / b.cost_median < 1e-6);
+}

@@ -1,0 +1,171 @@
+//! Launcher (CLI) integration: drive the actual `mrcluster` binary the way
+//! a user would — argument parsing, config layering, dataset round-trips,
+//! and experiment commands on tiny workloads.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_mrcluster"))
+}
+
+fn tmpdir() -> PathBuf {
+    let d = std::env::temp_dir().join("mrcluster_cli_tests");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_lists_commands_and_keys() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["fig1", "fig2", "mrc-check", "cluster.epsilon", "Sampling-LocalSearch"] {
+        assert!(text.contains(needle), "help missing {needle:?}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown command"), "{err}");
+}
+
+#[test]
+fn bad_override_fails() {
+    let out = bin()
+        .args(["cluster", "--algo", "Sampling-Lloyd", "--set", "cluster.nope=1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown config key"));
+}
+
+#[test]
+fn generate_then_cluster_roundtrip() {
+    let path = tmpdir().join("cli_pts.csv");
+    let out = bin()
+        .args([
+            "generate",
+            "--out",
+            path.to_str().unwrap(),
+            "--set",
+            "data.n=2000",
+            "--set",
+            "data.k=5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(path.exists());
+
+    let out = bin()
+        .args([
+            "cluster",
+            "--algo",
+            "Sampling-Lloyd",
+            "--input",
+            path.to_str().unwrap(),
+            "--set",
+            "cluster.k=5",
+            "--set",
+            "cluster.machines=4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("k-median cost"), "{text}");
+    assert!(text.contains("rounds"), "{text}");
+}
+
+#[test]
+fn cluster_all_algorithms_tiny() {
+    for algo in [
+        "Parallel-Lloyd",
+        "Divide-Lloyd",
+        "Sampling-Lloyd",
+        "Sampling-LocalSearch",
+        "Streaming-Guha",
+        "MrKCenter",
+    ] {
+        let out = bin()
+            .args([
+                "cluster",
+                "--algo",
+                algo,
+                "--set",
+                "data.n=1500",
+                "--set",
+                "data.k=4",
+                "--set",
+                "cluster.k=4",
+                "--set",
+                "cluster.machines=4",
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{algo}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
+
+#[test]
+fn config_file_layering() {
+    let cfg = tmpdir().join("cli_cfg.toml");
+    std::fs::write(
+        &cfg,
+        "[data]\nn = 1200\nk = 3\n\n[cluster]\nk = 3\nmachines = 2\n",
+    )
+    .unwrap();
+    let out = bin()
+        .args([
+            "cluster",
+            "--algo",
+            "Sampling-Lloyd",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--set",
+            "cluster.machines=5", // override wins
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("points         : 1200"));
+}
+
+#[test]
+fn sample_stats_table_renders() {
+    let out = bin()
+        .args(["sample-stats", "--ns", "3000", "--eps", "0.2,0.3", "--set", "cluster.k=5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("iterations"), "{text}");
+    assert_eq!(text.lines().filter(|l| l.starts_with("3000")).count(), 2);
+}
+
+#[test]
+fn mrc_check_passes_on_defaults() {
+    let out = bin()
+        .args(["mrc-check", "--set", "data.n=30000", "--set", "cluster.machines=16"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("OK"), "{text}");
+    assert!(!text.contains("VIOLATED"), "{text}");
+}
+
+#[test]
+fn info_runs() {
+    let out = bin().arg("info").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("paper: Fast Clustering"));
+}

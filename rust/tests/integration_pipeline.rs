@@ -1,0 +1,185 @@
+//! End-to-end integration: every paper algorithm over the full stack
+//! (data gen → MapReduce engine → coordinator → metrics), checking the
+//! relationships the paper's evaluation relies on.
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm, Algorithm};
+use mrcluster::data::DataGenConfig;
+use mrcluster::mapreduce::check_mrc0;
+use mrcluster::metrics::kmedian_cost;
+
+fn dataset(n: usize, k: usize, seed: u64) -> mrcluster::data::Dataset {
+    DataGenConfig {
+        n,
+        k,
+        sigma: 0.05,
+        seed,
+        ..Default::default()
+    }
+    .generate()
+}
+
+fn cfg(k: usize, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        k,
+        epsilon: 0.2,
+        machines: 16,
+        seed,
+        ls_max_swaps: 40,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn figure1_cost_relationships_hold() {
+    // On well-separated blobs every constant-factor algorithm should land
+    // within ~50% of Parallel-Lloyd — the paper's cost table shows all
+    // algorithms within 17% of each other.
+    let data = dataset(20_000, 10, 1);
+    let c = cfg(10, 1);
+    let base = run_algorithm(Algorithm::ParallelLloyd, &data.points, &c).unwrap();
+    for algo in [
+        Algorithm::DivideLloyd,
+        Algorithm::SamplingLloyd,
+        Algorithm::SamplingLocalSearch,
+    ] {
+        let out = run_algorithm(algo, &data.points, &c).unwrap();
+        let ratio = out.cost.median / base.cost.median;
+        assert!(
+            ratio < 1.5 && ratio > 0.5,
+            "{}: cost ratio {ratio:.3} out of band",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn sampling_beats_parallel_lloyd_on_time_at_scale() {
+    // The headline speedup claim, scaled down: at n = 400k under the
+    // paper's Figure-1 parameters (eps = 0.1, k = 25, 100 machines) the
+    // sampling algorithm's simulated time must beat Parallel-Lloyd's.
+    let data = dataset(400_000, 25, 2);
+    let c = ClusterConfig {
+        k: 25,
+        machines: 100,
+        epsilon: 0.1,
+        seed: 2,
+        // Sequential engine: timing must not depend on how many other test
+        // binaries are fighting for cores right now.
+        parallel: false,
+        ..Default::default()
+    };
+    // Best-of-3 per algorithm to shed scheduler noise.
+    let best = |algo| {
+        (0..3)
+            .map(|_| run_algorithm(algo, &data.points, &c).unwrap().sim_time)
+            .min()
+            .unwrap()
+    };
+    let base = best(Algorithm::ParallelLloyd);
+    let fast = best(Algorithm::SamplingLloyd);
+    assert!(
+        fast < base,
+        "Sampling-Lloyd {fast:?} not faster than Parallel-Lloyd {base:?}"
+    );
+}
+
+#[test]
+fn rounds_are_constant_in_n() {
+    // Theorems 1.1/1.2: rounds depend on ε, not on n.
+    let c = cfg(10, 3);
+    let mut rounds = Vec::new();
+    for n in [5_000usize, 20_000, 80_000] {
+        let data = dataset(n, 10, 3);
+        let out = run_algorithm(Algorithm::SamplingLloyd, &data.points, &c).unwrap();
+        rounds.push(out.rounds);
+    }
+    let max = *rounds.iter().max().unwrap();
+    let min = *rounds.iter().min().unwrap();
+    assert!(
+        max <= min + 4,
+        "rounds grew with n: {rounds:?} (must be ~constant)"
+    );
+}
+
+#[test]
+fn mrc0_bounds_hold_for_sampling_kmedian() {
+    // Empirical check of Theorem 1.2's resource claims.
+    let data = dataset(50_000, 10, 4);
+    let c = ClusterConfig {
+        machines: 50,
+        ..cfg(10, 4)
+    };
+    let out = run_algorithm(Algorithm::SamplingLloyd, &data.points, &c).unwrap();
+    let report = check_mrc0(
+        &out.stats,
+        data.points.mem_bytes(),
+        c.epsilon,
+        16.0,
+        3 * (1.0 / c.epsilon).ceil() as usize + 4,
+    );
+    assert!(report.ok(), "{report}");
+}
+
+#[test]
+fn memory_limit_kills_hoggish_configs() {
+    // With a tiny per-machine budget the engine must hard-error rather
+    // than silently exceed MRC^0 memory.
+    let data = dataset(20_000, 10, 5);
+    let c = ClusterConfig {
+        mem_limit: Some(1024), // 1 KiB per machine: absurd on purpose
+        ..cfg(10, 5)
+    };
+    let err = run_algorithm(Algorithm::ParallelLloyd, &data.points, &c);
+    assert!(err.is_err(), "1KiB budget must be exceeded");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("memory budget"), "unexpected error: {msg}");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let data = dataset(10_000, 8, 6);
+    let c = cfg(8, 6);
+    let a = run_algorithm(Algorithm::SamplingLloyd, &data.points, &c).unwrap();
+    let b = run_algorithm(Algorithm::SamplingLloyd, &data.points, &c).unwrap();
+    assert_eq!(a.cost.median, b.cost.median);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.centers, b.centers);
+}
+
+#[test]
+fn skewed_data_still_clusters_well() {
+    // E7: alpha = 1.5 (heavily skewed cluster sizes).
+    let data = DataGenConfig {
+        n: 30_000,
+        k: 10,
+        sigma: 0.05,
+        alpha: 1.5,
+        seed: 7,
+        ..Default::default()
+    }
+    .generate();
+    let c = cfg(10, 7);
+    let out = run_algorithm(Algorithm::SamplingLocalSearch, &data.points, &c).unwrap();
+    let planted = data.planted_cost_median();
+    assert!(
+        out.cost.median < planted * 2.0,
+        "skewed: cost {} vs planted {planted}",
+        out.cost.median
+    );
+}
+
+#[test]
+fn works_on_loaded_csv_roundtrip() {
+    // data I/O integrates with the pipeline.
+    let data = dataset(2_000, 5, 8);
+    let dir = std::env::temp_dir().join("mrcluster_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pts.csv");
+    mrcluster::data::save_csv(&path, &data.points).unwrap();
+    let loaded = mrcluster::data::load_csv(&path).unwrap();
+    let c = cfg(5, 8);
+    let out = run_algorithm(Algorithm::SamplingLloyd, &loaded, &c).unwrap();
+    assert_eq!(out.centers.len(), 5);
+    assert!(kmedian_cost(&loaded, &out.centers) > 0.0);
+}

@@ -1,0 +1,146 @@
+//! XLA/PJRT backend vs native backend: the two implementations of the
+//! compute surface must agree to float tolerance on every function and
+//! shape (including padding paths). Skips cleanly when `make artifacts`
+//! has not been run.
+
+use mrcluster::geometry::PointSet;
+use mrcluster::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use mrcluster::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts/manifest.json (run `make artifacts`)");
+        None
+    }
+}
+
+fn random_ps(n: usize, d: usize, seed: u64) -> PointSet {
+    let mut rng = Rng::new(seed);
+    PointSet::from_flat(d, (0..n * d).map(|_| rng.f32()).collect())
+}
+
+fn check_assign(xla: &XlaBackend, n: usize, k: usize, d: usize, seed: u64) {
+    let p = random_ps(n, d, seed);
+    let c = random_ps(k, d, seed + 1);
+    let got = xla.assign(&p, &c);
+    let want = NativeBackend.assign(&p, &c);
+    assert_eq!(got.sqdist.len(), n);
+    assert_eq!(got.idx.len(), n);
+    for i in 0..n {
+        assert!(
+            (got.sqdist[i] - want.sqdist[i]).abs() < 1e-4,
+            "n={n} k={k} d={d} i={i}: {} vs {}",
+            got.sqdist[i],
+            want.sqdist[i]
+        );
+        // Indices may differ on exact ties only; compare through distance.
+        if got.idx[i] != want.idx[i] {
+            let a = mrcluster::geometry::metric::sq_dist(p.row(i), c.row(got.idx[i] as usize));
+            let b = mrcluster::geometry::metric::sq_dist(p.row(i), c.row(want.idx[i] as usize));
+            assert!((a - b).abs() < 1e-4, "tie mismatch at {i}");
+        }
+    }
+}
+
+#[test]
+fn assign_agrees_across_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(dir).unwrap();
+    // Exact bucket size, sub-bucket (padding), multi-block, k-padding.
+    check_assign(&xla, 2048, 32, 3, 1);
+    check_assign(&xla, 100, 25, 3, 2);
+    check_assign(&xla, 5000, 25, 3, 3);
+    check_assign(&xla, 513, 100, 3, 4);
+    check_assign(&xla, 64, 5, 8, 5);
+}
+
+#[test]
+fn lloyd_step_agrees() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(dir).unwrap();
+    for (n, k, d, seed) in [(2048usize, 32usize, 3usize, 10u64), (700, 25, 3, 11), (4100, 25, 3, 12)] {
+        let p = random_ps(n, d, seed);
+        let c = random_ps(k, d, seed + 1);
+        let got = xla.lloyd_step(&p, &c);
+        let want = NativeBackend.lloyd_step(&p, &c);
+        assert_eq!(got.sums.len(), k * d);
+        assert_eq!(got.counts.len(), k);
+        for j in 0..k {
+            assert!(
+                (got.counts[j] - want.counts[j]).abs() < 0.5,
+                "counts[{j}]: {} vs {}",
+                got.counts[j],
+                want.counts[j]
+            );
+        }
+        for j in 0..k * d {
+            assert!(
+                (got.sums[j] - want.sums[j]).abs() < 0.05 * (1.0 + want.sums[j].abs()),
+                "sums[{j}]: {} vs {}",
+                got.sums[j],
+                want.sums[j]
+            );
+        }
+        let rel = (got.cost_median - want.cost_median).abs() / want.cost_median.max(1e-9);
+        assert!(rel < 1e-3, "cost {} vs {}", got.cost_median, want.cost_median);
+    }
+}
+
+#[test]
+fn weight_histogram_agrees() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(dir).unwrap();
+    let p = random_ps(3000, 3, 20);
+    let c = random_ps(25, 3, 21);
+    let (gw, gc) = xla.weight_histogram(&p, &c);
+    let (ww, wc) = NativeBackend.weight_histogram(&p, &c);
+    let g_total: f64 = gw.iter().sum();
+    assert!((g_total - 3000.0).abs() < 0.5, "weights must sum to n: {g_total}");
+    for j in 0..25 {
+        assert!((gw[j] - ww[j]).abs() < 0.5, "w[{j}]: {} vs {}", gw[j], ww[j]);
+    }
+    assert!((gc - wc).abs() / wc.max(1e-9) < 1e-3);
+}
+
+#[test]
+fn full_pipeline_on_xla_backend_matches_native_cost() {
+    let Some(dir) = artifacts_dir() else { return };
+    use mrcluster::config::{ClusterConfig, RuntimeBackendKind};
+    use mrcluster::coordinator::{run_algorithm, Algorithm};
+    let data = mrcluster::data::DataGenConfig {
+        n: 20_000,
+        k: 10,
+        sigma: 0.05,
+        seed: 30,
+        ..Default::default()
+    }
+    .generate();
+    let mk = |backend| ClusterConfig {
+        k: 10,
+        epsilon: 0.2,
+        machines: 8,
+        seed: 30,
+        backend,
+        artifact_dir: dir.to_path_buf(),
+        ..Default::default()
+    };
+    let nat = run_algorithm(Algorithm::SamplingLloyd, &data.points, &mk(RuntimeBackendKind::Native)).unwrap();
+    let xla = run_algorithm(Algorithm::SamplingLloyd, &data.points, &mk(RuntimeBackendKind::Xla)).unwrap();
+    // Same seeds drive the same sampling decisions; distances only differ
+    // by float noise, so the costs must be near-identical.
+    let rel = (nat.cost.median - xla.cost.median).abs() / nat.cost.median;
+    assert!(rel < 0.05, "native {} vs xla {}", nat.cost.median, xla.cost.median);
+}
+
+#[test]
+fn unsupported_shape_errors_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(dir).unwrap();
+    // d=5 has no artifact; supports() must say no.
+    assert!(!xla.supports("assign", 10, 5));
+    assert!(xla.supports("assign", 25, 3));
+}

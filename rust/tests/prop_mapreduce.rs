@@ -1,0 +1,252 @@
+//! Property-based tests of the MapReduce engine's semantics: the shuffle
+//! contract (all values of a key meet exactly once), conservation laws,
+//! parallel/sequential equivalence, and memory accounting monotonicity.
+
+use mrcluster::mapreduce::{MrCluster, MrConfig};
+use mrcluster::util::rng::Rng;
+
+fn cluster(nm: usize, parallel: bool) -> MrCluster {
+    MrCluster::new(MrConfig {
+        n_machines: nm,
+        mem_limit: None,
+        parallel,
+        threads: 4,
+        ..Default::default()
+    })
+}
+
+/// Random multiset histogram via MapReduce == direct histogram.
+#[test]
+fn prop_histogram_conservation() {
+    let mut rng = Rng::new(1);
+    for case in 0..10 {
+        let n = 100 + rng.below(5000);
+        let buckets = 1 + rng.below(50);
+        let nm = 1 + rng.below(32);
+        let values: Vec<usize> = (0..n).map(|_| rng.below(buckets)).collect();
+        let mut direct = vec![0usize; buckets];
+        for &v in &values {
+            direct[v] += 1;
+        }
+        let mut c = cluster(nm, case % 2 == 0);
+        let out = c
+            .run_round(
+                "hist",
+                values.into_iter().enumerate().collect(),
+                |_k, v, emit| emit(v, 1usize),
+                |k: &usize, vs: Vec<usize>, emit| emit(*k, vs.len()),
+            )
+            .unwrap();
+        let mut got = vec![0usize; buckets];
+        for (k, count) in out {
+            assert_eq!(got[k], 0, "case {case}: key {k} reduced twice");
+            got[k] = count;
+        }
+        assert_eq!(got, direct, "case {case} (n={n}, buckets={buckets}, nm={nm})");
+    }
+}
+
+/// Sum over machine-round outputs == direct sum (conservation through the
+/// resident-data path), for parts counts above and below machine counts.
+#[test]
+fn prop_machine_round_conservation() {
+    let mut rng = Rng::new(2);
+    for case in 0..10 {
+        let n_parts = 1 + rng.below(40);
+        let nm = 1 + rng.below(16);
+        let parts: Vec<Vec<u64>> = (0..n_parts)
+            .map(|_| (0..1 + rng.below(200)).map(|_| rng.below(1000) as u64).collect())
+            .collect();
+        let direct: u64 = parts.iter().flatten().sum();
+        let mut c = cluster(nm, case % 2 == 1);
+        let sums = c
+            .run_machine_round("sum", &parts, 0, |_i, p: &Vec<u64>| p.iter().sum::<u64>())
+            .unwrap();
+        assert_eq!(sums.len(), n_parts, "one output per block");
+        assert_eq!(sums.iter().sum::<u64>(), direct, "case {case}");
+        assert_eq!(c.stats.rounds[0].machines_used, n_parts.min(nm));
+    }
+}
+
+/// Parallel and sequential execution produce identical outputs.
+#[test]
+fn prop_parallel_equals_sequential() {
+    let mut rng = Rng::new(3);
+    for _case in 0..6 {
+        let n = 500 + rng.below(2000);
+        let input: Vec<(usize, u64)> = (0..n).map(|i| (i, rng.next_u64() % 997)).collect();
+        let run = |parallel: bool| {
+            let mut c = cluster(8, parallel);
+            let mut out = c
+                .run_round(
+                    "mod-sum",
+                    input.clone(),
+                    |_k, v, emit| emit(v % 13, v),
+                    |k: &u64, vs: Vec<u64>, emit| {
+                        emit(*k, vs.iter().sum::<u64>())
+                    },
+                )
+                .unwrap();
+            out.sort();
+            out
+        };
+        assert_eq!(run(true), run(false));
+    }
+}
+
+/// Memory accounting: a round's max-machine memory never exceeds the total
+/// shuffled bytes plus keys, and is positive whenever data moved.
+#[test]
+fn prop_memory_accounting_sane() {
+    let mut rng = Rng::new(4);
+    for _ in 0..6 {
+        let n = 100 + rng.below(1000);
+        let input: Vec<(usize, u64)> = (0..n).map(|i| (i, i as u64)).collect();
+        let mut c = cluster(4, false);
+        c.run_round(
+            "acct",
+            input,
+            |_k, v, emit| emit(v % 7, v),
+            |k: &u64, vs: Vec<u64>, emit| emit(*k, vs.len() as u64),
+        )
+        .unwrap();
+        let r = &c.stats.rounds[0];
+        assert!(r.max_machine_mem > 0);
+        // keys + values both counted: per-pair 8 bytes key + 8 value.
+        assert!(r.shuffle_bytes >= n * 16);
+        assert!(r.max_machine_mem <= r.shuffle_bytes + n * 8);
+    }
+}
+
+/// The memory limit is a sharp threshold: a budget above the observed peak
+/// passes, a budget just below it fails.
+#[test]
+fn prop_memory_limit_threshold() {
+    let input: Vec<(usize, u64)> = (0..1000).map(|i| (i, i as u64)).collect();
+    // Dry run to learn the peak.
+    let mut probe = cluster(4, false);
+    probe
+        .run_round(
+            "probe",
+            input.clone(),
+            |_k, v, emit| emit(v % 3, v),
+            |k: &u64, vs: Vec<u64>, emit| emit(*k, vs.len() as u64),
+        )
+        .unwrap();
+    let peak = probe.stats.peak_machine_mem();
+    assert!(peak > 0);
+
+    let run_with = |limit: usize| {
+        let mut c = MrCluster::new(MrConfig {
+            n_machines: 4,
+            mem_limit: Some(limit),
+            parallel: false,
+            threads: 1,
+            ..Default::default()
+        });
+        c.run_round(
+            "limit",
+            input.clone(),
+            |_k, v, emit| emit(v % 3, v),
+            |k: &u64, vs: Vec<u64>, emit| emit(*k, vs.len() as u64),
+        )
+        .map(|_| ())
+    };
+    assert!(run_with(peak).is_ok(), "budget == peak must pass");
+    assert!(run_with(peak - 1).is_err(), "budget < peak must fail");
+}
+
+/// Round stats accumulate monotonically across jobs on one cluster.
+#[test]
+fn prop_stats_accumulate() {
+    let mut c = cluster(4, false);
+    let mut last_rounds = 0;
+    for j in 0..5 {
+        let parts: Vec<Vec<u32>> = vec![vec![j as u32; 100]; 4];
+        c.run_machine_round("acc", &parts, 0, |_i, p: &Vec<u32>| p.len()).unwrap();
+        assert_eq!(c.stats.n_rounds(), last_rounds + 1);
+        last_rounds += 1;
+    }
+    let total: std::time::Duration = c.stats.rounds.iter().map(|r| r.sim_time()).sum();
+    assert_eq!(total, c.stats.sim_time());
+}
+
+/// Fault injection: failures inflate simulated time and are counted; the
+/// computation's *outputs* are unchanged (retries are re-executions of
+/// deterministic tasks).
+#[test]
+fn prop_fault_injection_inflates_time_not_results() {
+    let parts: Vec<Vec<u64>> = (0..64).map(|i| vec![i as u64; 2000]).collect();
+    let run = |fail_prob: f64| {
+        let mut c = MrCluster::new(MrConfig {
+            n_machines: 16,
+            parallel: false,
+            threads: 1,
+            fail_prob,
+            fault_seed: 7,
+            ..Default::default()
+        });
+        let out = c
+            .run_machine_round("faulty", &parts, 0, |_i, p: &Vec<u64>| {
+                p.iter().map(|&x| x.wrapping_mul(2654435761)).sum::<u64>()
+            })
+            .unwrap();
+        (out, c.stats.total_retries())
+    };
+    let (clean_out, clean_retries) = run(0.0);
+    let (faulty_out, faulty_retries) = run(0.5);
+    assert_eq!(clean_retries, 0);
+    assert!(
+        faulty_retries > 10,
+        "expected ~32 retries at p=0.5, got {faulty_retries}"
+    );
+    assert_eq!(clean_out, faulty_out, "results must be fault-transparent");
+}
+
+/// Stragglers: a 10x straggler factor must increase the round's simulated
+/// time when stragglers are certain.
+#[test]
+fn prop_straggler_model_slows_round() {
+    let parts: Vec<Vec<u64>> = (0..8).map(|i| vec![i as u64; 50_000]).collect();
+    let run = |straggler_prob: f64| {
+        let mut c = MrCluster::new(MrConfig {
+            n_machines: 8,
+            parallel: false,
+            threads: 1,
+            straggler_prob,
+            straggler_factor: 10.0,
+            fault_seed: 11,
+            ..Default::default()
+        });
+        c.run_machine_round("straggle", &parts, 0, |_i, p: &Vec<u64>| {
+            p.iter().map(|&x| x.wrapping_mul(0x9E3779B9)).sum::<u64>()
+        })
+        .unwrap();
+        c.stats.sim_time()
+    };
+    let normal = run(0.0);
+    let straggly = run(1.0);
+    assert!(
+        straggly.as_secs_f64() > normal.as_secs_f64() * 3.0,
+        "straggler run {straggly:?} should be >>3x the normal {normal:?}"
+    );
+}
+
+/// The fault stream is deterministic: same fault_seed => same retries.
+#[test]
+fn prop_fault_stream_deterministic() {
+    let parts: Vec<Vec<u64>> = (0..32).map(|i| vec![i as u64; 100]).collect();
+    let run = || {
+        let mut c = MrCluster::new(MrConfig {
+            n_machines: 8,
+            parallel: false,
+            threads: 1,
+            fail_prob: 0.3,
+            fault_seed: 99,
+            ..Default::default()
+        });
+        c.run_machine_round("det", &parts, 0, |_i, p: &Vec<u64>| p.len()).unwrap();
+        c.stats.total_retries()
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,163 @@
+//! Property-based tests of Iterative-Sample's invariants (Propositions
+//! 2.1/2.2 and the structural guarantees Theorem 3.4's proof relies on).
+//!
+//! No proptest crate offline — properties are checked over seeded random
+//! configuration sweeps (shrinking is traded for a fixed, replayable case
+//! list; every failure prints its case tuple).
+
+use mrcluster::data::DataGenConfig;
+use mrcluster::runtime::{ComputeBackend, NativeBackend};
+use mrcluster::sampling::{iterative_sample, IterativeSampleConfig, SampleConstants};
+use mrcluster::util::rng::Rng;
+
+struct Case {
+    n: usize,
+    k: usize,
+    eps: f64,
+    alpha: f64,
+    seed: u64,
+}
+
+fn cases(count: usize, master_seed: u64) -> Vec<Case> {
+    let mut rng = Rng::new(master_seed);
+    (0..count)
+        .map(|_| Case {
+            n: 2000 + rng.below(20_000),
+            k: 2 + rng.below(20),
+            eps: 0.15 + rng.f64() * 0.3,
+            alpha: rng.f64() * 1.5,
+            seed: rng.next_u64(),
+        })
+        .collect()
+}
+
+fn run_case(c: &Case, constants: SampleConstants) -> (mrcluster::sampling::SampleResult, DataGenConfig) {
+    let dc = DataGenConfig {
+        n: c.n,
+        k: c.k,
+        alpha: c.alpha,
+        seed: c.seed,
+        ..Default::default()
+    };
+    let data = dc.generate();
+    let cfg = IterativeSampleConfig {
+        k: c.k,
+        epsilon: c.eps,
+        constants,
+        seed: c.seed ^ 0xF00,
+        max_iters: 500,
+    };
+    (iterative_sample(&data.points, &cfg, &NativeBackend), dc)
+}
+
+#[test]
+fn prop_sample_indices_valid_and_distinct() {
+    for (i, c) in cases(12, 100).iter().enumerate() {
+        let (res, _) = run_case(c, SampleConstants::practical());
+        let mut idx = res.indices.clone();
+        idx.sort_unstable();
+        let before = idx.len();
+        idx.dedup();
+        assert_eq!(idx.len(), before, "case {i}: duplicated indices (n={})", c.n);
+        assert!(
+            idx.iter().all(|&x| x < c.n),
+            "case {i}: out-of-range index"
+        );
+    }
+}
+
+#[test]
+fn prop_iterations_bounded() {
+    // Proposition 2.1: O(1/eps) iterations. Constant 6 absorbs the w.h.p.
+    // slack at these small n.
+    for (i, c) in cases(10, 200).iter().enumerate() {
+        let (res, _) = run_case(c, SampleConstants::theory());
+        let bound = (6.0 / c.eps).ceil() as usize + 2;
+        assert!(
+            res.iterations <= bound,
+            "case {i} (n={}, eps={:.2}): {} iters > {bound}",
+            c.n,
+            c.eps,
+            res.iterations
+        );
+    }
+}
+
+#[test]
+fn prop_sample_size_bounded_theory() {
+    // Proposition 2.2: |C| = O(k n^eps log n / eps).
+    for (i, c) in cases(10, 300).iter().enumerate() {
+        let (res, _) = run_case(c, SampleConstants::theory());
+        let bound =
+            10.0 / c.eps * c.k as f64 * (c.n as f64).powf(c.eps) * (c.n as f64).ln();
+        assert!(
+            (res.sample.len() as f64) <= bound.min(c.n as f64),
+            "case {i} (n={}, k={}, eps={:.2}): |C|={} > {bound:.0}",
+            c.n,
+            c.k,
+            c.eps,
+            res.sample.len()
+        );
+    }
+}
+
+#[test]
+fn prop_remaining_set_shrinks_monotonically() {
+    for (i, c) in cases(8, 400).iter().enumerate() {
+        let (res, _) = run_case(c, SampleConstants::practical());
+        for w in res.iter_stats.windows(2) {
+            assert!(
+                w[1].remaining_before <= w[0].remaining_before,
+                "case {i}: R grew between iterations"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_coverage_every_point_close_to_sample() {
+    // The guarantee behind Proposition 3.5/3.8: the sample represents all
+    // points — max_x d(x, C) must be within a constant factor of the
+    // planted radius (sigma-scale), not the diameter.
+    for (i, c) in cases(6, 500).iter().enumerate() {
+        let (res, dc) = run_case(c, SampleConstants::theory());
+        let data = dc.generate();
+        let md = NativeBackend.min_dist(&data.points, &res.sample);
+        let worst = md.iter().cloned().fold(0.0f32, f32::max);
+        // Points live in clusters of spread sigma=0.1 inside the unit cube;
+        // a representative sample leaves no point stranded further than a
+        // small multiple of the typical nearest-neighbour scale. sqrt(3) is
+        // the cube diameter — we demand 10x better.
+        assert!(
+            worst < 3f32.sqrt() / 10.0,
+            "case {i} (n={}): worst d(x, C) = {worst}",
+            c.n
+        );
+    }
+}
+
+#[test]
+fn prop_seed_determinism() {
+    for (i, c) in cases(5, 600).iter().enumerate() {
+        let (a, _) = run_case(c, SampleConstants::practical());
+        let (b, _) = run_case(c, SampleConstants::practical());
+        assert_eq!(a.indices, b.indices, "case {i}: nondeterministic");
+    }
+}
+
+#[test]
+fn prop_practical_no_bigger_than_theory() {
+    // The practical profile exists to shrink samples; verify it does.
+    let mut practical_total = 0usize;
+    let mut theory_total = 0usize;
+    for c in cases(6, 700) {
+        let (p, _) = run_case(&c, SampleConstants::practical());
+        let (t, _) = run_case(&c, SampleConstants::theory());
+        practical_total += p.sample.len();
+        theory_total += t.sample.len();
+    }
+    assert!(
+        practical_total < theory_total,
+        "practical {practical_total} >= theory {theory_total}"
+    );
+}
