@@ -72,7 +72,6 @@ def test_exported_hlo_numerics_match_source(exported):
     import jax
 
     backend = jax.devices("cpu")[0].client
-    devices = xc.DeviceList(tuple(jax.devices("cpu")))
     r = np.random.RandomState(7)
     x = r.rand(512, 3).astype(np.float32)
     c = r.rand(32, 3).astype(np.float32)
@@ -87,9 +86,13 @@ def test_exported_hlo_numerics_match_source(exported):
         # Rebuild an XlaComputation from the parsed module proto — this is
         # exactly the id-reassignment round-trip the rust loader depends on.
         comp = xc.XlaComputation(mod.as_serialized_hlo_module_proto())
-        exe = backend.compile_and_load(
-            xc._xla.mlir.xla_computation_to_mlir_module(comp), devices
-        )
+        mlir_module = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+        if hasattr(backend, "compile_and_load"):
+            # jaxlib >= 0.5 splits compile from load.
+            devices = xc.DeviceList(tuple(jax.devices("cpu")))
+            exe = backend.compile_and_load(mlir_module, devices)
+        else:
+            exe = backend.compile(mlir_module)
         outs = exe.execute([backend.buffer_from_pyval(a) for a in (x, c, pm, cm)])
         got = [np.asarray(o) for o in outs]
         fn = model.EXPORTS[e["func"]][0]

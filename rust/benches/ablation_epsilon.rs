@@ -51,8 +51,10 @@ fn main() -> anyhow::Result<()> {
             format!("{:.3}", out.sim_time.as_secs_f64()),
             format!("{:.3}", out.cost.median / base.cost.median),
         ]);
-        bench_util::emit(&format!("ablation.eps.{eps}.sample"), out.reduced_size.unwrap_or(0) as f64, "points");
-        bench_util::emit(&format!("ablation.eps.{eps}.sim_time"), out.sim_time.as_secs_f64(), "s");
+        let sample = out.reduced_size.unwrap_or(0) as f64;
+        let sim_s = out.sim_time.as_secs_f64();
+        bench_util::emit(&format!("ablation.eps.{eps}.sample"), sample, "points");
+        bench_util::emit(&format!("ablation.eps.{eps}.sim_time"), sim_s, "s");
     }
     println!("== E5: epsilon ablation (n = {n}, cost normalized to Parallel-Lloyd) ==");
     print!("{}", t.render());

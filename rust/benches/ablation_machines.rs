@@ -47,8 +47,9 @@ fn main() -> anyhow::Result<()> {
                 pl.sim_time.as_secs_f64() / sl.sim_time.as_secs_f64().max(1e-9)
             ),
         ]);
-        bench_util::emit(&format!("ablation.machines.{m}.parallel_lloyd"), pl.sim_time.as_secs_f64(), "s");
-        bench_util::emit(&format!("ablation.machines.{m}.sampling_lloyd"), sl.sim_time.as_secs_f64(), "s");
+        let (pl_s, sl_s) = (pl.sim_time.as_secs_f64(), sl.sim_time.as_secs_f64());
+        bench_util::emit(&format!("ablation.machines.{m}.parallel_lloyd"), pl_s, "s");
+        bench_util::emit(&format!("ablation.machines.{m}.sampling_lloyd"), sl_s, "s");
     }
     println!("== E6: machine-count ablation (n = {n}) ==");
     print!("{}", t.render());

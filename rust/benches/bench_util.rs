@@ -8,6 +8,10 @@
 //! * every bench prints machine-readable `BENCH <name> <value>` lines at
 //!   the end so EXPERIMENTS.md numbers are grep-able.
 
+// Each bench binary includes this file as a module and uses a subset of the
+// helpers; the unused remainder is expected.
+#![allow(dead_code)]
+
 use std::time::{Duration, Instant};
 
 /// Scale factor for workload sizes.

@@ -6,13 +6,61 @@
 mod bench_util;
 
 use mrcluster::geometry::PointSet;
-use mrcluster::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use mrcluster::runtime::{ComputeBackend, NativeBackend};
 use mrcluster::util::rng::Rng;
 use mrcluster::util::table::Table;
 
 fn random_ps(n: usize, d: usize, seed: u64) -> PointSet {
     let mut rng = Rng::new(seed);
     PointSet::from_flat(d, (0..n * d).map(|_| rng.f32()).collect())
+}
+
+/// XLA rows (artifact path), compiled only with `--features xla`.
+#[cfg(feature = "xla")]
+fn bench_xla_rows(t: &mut Table, n: usize, reps: usize) -> anyhow::Result<()> {
+    use mrcluster::runtime::XlaBackend;
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts missing — XLA rows skipped (run `make artifacts`)");
+        return Ok(());
+    }
+    // Degrade like every other XLA-request path: log and keep the native
+    // rows rather than aborting the bench (the default vendor/xla stub
+    // always lands here even when artifacts exist).
+    let xla = match XlaBackend::new(std::path::Path::new("artifacts")) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("XLA backend unavailable ({e:#}) — XLA rows skipped");
+            return Ok(());
+        }
+    };
+    // Smaller n for the interpret-mode artifact (it is a correctness
+    // path on CPU; real-TPU perf is estimated in DESIGN.md).
+    let nx = (n / 20).max(2048);
+    let px = random_ps(nx, 3, 3);
+    for &k in &[25usize, 128] {
+        let centers = random_ps(k, 3, 4);
+        // Warm-up compiles the executable.
+        let _ = xla.assign(&px, &centers);
+        let (min, _) = bench_util::measure(reps, || {
+            std::hint::black_box(xla.assign(&px, &centers));
+        });
+        let mdps = (nx * k) as f64 / min.as_secs_f64() / 1e6;
+        t.row(vec![
+            "xla-aot".to_string(),
+            "assign".to_string(),
+            k.to_string(),
+            format!("{:.1}", min.as_secs_f64() * 1e3),
+            format!("{mdps:.0}"),
+        ]);
+        bench_util::emit(&format!("kernel.xla.assign.k{k}"), mdps, "Mdist/s");
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn bench_xla_rows(_t: &mut Table, _n: usize, _reps: usize) -> anyhow::Result<()> {
+    eprintln!("built without the `xla` feature — XLA rows skipped");
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -51,32 +99,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let xla = XlaBackend::new(std::path::Path::new("artifacts"))?;
-        // Smaller n for the interpret-mode artifact (it is a correctness
-        // path on CPU; real-TPU perf is estimated in DESIGN.md).
-        let nx = (n / 20).max(2048);
-        let px = random_ps(nx, 3, 3);
-        for &k in &[25usize, 128] {
-            let centers = random_ps(k, 3, 4);
-            // Warm-up compiles the executable.
-            let _ = xla.assign(&px, &centers);
-            let (min, _) = bench_util::measure(reps, || {
-                std::hint::black_box(xla.assign(&px, &centers));
-            });
-            let mdps = (nx * k) as f64 / min.as_secs_f64() / 1e6;
-            t.row(vec![
-                "xla-aot".to_string(),
-                "assign".to_string(),
-                k.to_string(),
-                format!("{:.1}", min.as_secs_f64() * 1e3),
-                format!("{mdps:.0}"),
-            ]);
-            bench_util::emit(&format!("kernel.xla.assign.k{k}"), mdps, "Mdist/s");
-        }
-    } else {
-        eprintln!("artifacts missing — XLA rows skipped (run `make artifacts`)");
-    }
+    bench_xla_rows(&mut t, n, reps)?;
 
     println!("== E8: assignment kernel (n = {n}, d = 3) ==");
     print!("{}", t.render());

@@ -43,8 +43,10 @@ fn main() -> anyhow::Result<()> {
     );
     println!("sample size   : {:?}", out.reduced_size);
     println!("MR rounds     : {}", out.rounds);
-    println!("sim time      : {:.3}s (paper methodology: sum of per-round max-machine time)",
-        out.sim_time.as_secs_f64());
+    println!(
+        "sim time      : {:.3}s (paper methodology: sum of per-round max-machine time)",
+        out.sim_time.as_secs_f64()
+    );
     println!("wall time     : {:.3}s", out.wall_time.as_secs_f64());
 
     // Compare with the Parallel-Lloyd baseline the paper normalizes to.

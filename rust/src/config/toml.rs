@@ -94,10 +94,9 @@ mod tests {
 
     #[test]
     fn parses_sections_and_types() {
-        let doc = parse(
-            "# top comment\n[data]\nn = 1000\nsigma = 0.1 # trailing\n\n[cluster]\nbackend = \"xla\"\nparallel = true\n",
-        )
-        .unwrap();
+        let text = "# top comment\n[data]\nn = 1000\nsigma = 0.1 # trailing\n\n\
+                    [cluster]\nbackend = \"xla\"\nparallel = true\n";
+        let doc = parse(text).unwrap();
         assert_eq!(doc.len(), 2);
         assert_eq!(doc[0].0, "data");
         assert_eq!(doc[0].1, vec![("n".into(), "1000".into()), ("sigma".into(), "0.1".into())]);

@@ -11,7 +11,7 @@ use crate::config::{ClusterConfig, RuntimeBackendKind};
 use crate::geometry::PointSet;
 use crate::mapreduce::{MrCluster, MrConfig, RunStats};
 use crate::metrics::cost::{eval_costs, CostSummary};
-use crate::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use crate::runtime::{ComputeBackend, NativeBackend};
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
@@ -115,12 +115,15 @@ pub struct Outcome {
     pub stats: RunStats,
 }
 
-/// Instantiate the configured compute backend. Falls back to native (with a
-/// warning) if the XLA artifacts are missing.
+/// Instantiate the configured compute backend. Requesting XLA never fails
+/// the run: without the `xla` cargo feature, or when the PJRT runtime /
+/// AOT artifacts are missing, it falls back to [`NativeBackend`] with a
+/// logged warning (see `runtime` module docs).
 pub fn make_backend(cfg: &ClusterConfig) -> Arc<dyn ComputeBackend> {
     match cfg.backend {
         RuntimeBackendKind::Native => Arc::new(NativeBackend),
-        RuntimeBackendKind::Xla => match XlaBackend::new(&cfg.artifact_dir) {
+        #[cfg(feature = "xla")]
+        RuntimeBackendKind::Xla => match crate::runtime::XlaBackend::new(&cfg.artifact_dir) {
             Ok(b) => Arc::new(b),
             Err(e) => {
                 log::warn!(
@@ -130,6 +133,14 @@ pub fn make_backend(cfg: &ClusterConfig) -> Arc<dyn ComputeBackend> {
                 Arc::new(NativeBackend)
             }
         },
+        #[cfg(not(feature = "xla"))]
+        RuntimeBackendKind::Xla => {
+            log::warn!(
+                "XLA backend requested but this build has no `xla` feature; \
+                 falling back to native. Rebuild with `--features xla`."
+            );
+            Arc::new(NativeBackend)
+        }
     }
 }
 

@@ -91,7 +91,10 @@ fn params_from(cfg: &AppConfig, repeats: usize) -> ExperimentParams {
     }
 }
 
-fn load_points(cfg: &AppConfig, flags: &std::collections::BTreeMap<String, String>) -> Result<mrcluster::PointSet> {
+fn load_points(
+    cfg: &AppConfig,
+    flags: &std::collections::BTreeMap<String, String>,
+) -> Result<mrcluster::PointSet> {
     if let Some(path) = flags.get("input") {
         let p = PathBuf::from(path);
         return if path.ends_with(".csv") {

@@ -40,18 +40,37 @@ pub use kv::MemSize;
 pub use stats::{RoundStats, RunStats};
 
 /// Errors surfaced by the engine.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MrError {
-    #[error(
-        "machine {machine} exceeded its memory budget in round '{round}': \
-         {used} bytes used > {limit} bytes allowed"
-    )]
     MemoryExceeded {
         round: String,
         machine: usize,
         used: usize,
         limit: usize,
     },
-    #[error("worker thread panicked in round '{round}'")]
-    WorkerPanic { round: String },
+    WorkerPanic {
+        round: String,
+    },
 }
+
+impl std::fmt::Display for MrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MrError::MemoryExceeded {
+                round,
+                machine,
+                used,
+                limit,
+            } => write!(
+                f,
+                "machine {machine} exceeded its memory budget in round '{round}': \
+                 {used} bytes used > {limit} bytes allowed"
+            ),
+            MrError::WorkerPanic { round } => {
+                write!(f, "worker thread panicked in round '{round}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MrError {}

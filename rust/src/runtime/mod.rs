@@ -6,20 +6,40 @@
 //!
 //! * [`NativeBackend`] — pure rust, works for any shape, no setup. Also the
 //!   semantic reference the AOT path is cross-checked against.
-//! * [`XlaBackend`] — loads the HLO-text artifacts produced by
-//!   `python/compile/aot.py` (L2 JAX functions wrapping the L1 Pallas
-//!   kernel), compiles them once per shape bucket on the PJRT CPU client
-//!   (`PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
-//!   execute`), and pads workloads up to bucket shapes with validity masks.
+//! * `XlaBackend` (behind the `xla` cargo feature) — loads the HLO-text
+//!   artifacts produced by `python/compile/aot.py` (L2 JAX functions
+//!   wrapping the L1 Pallas kernel), compiles them once per shape bucket on
+//!   the PJRT CPU client (`PjRtClient::cpu() ->
+//!   HloModuleProto::from_text_file -> compile -> execute`), and pads
+//!   workloads up to bucket shapes with validity masks.
 //!
 //! The two backends agree to float tolerance (rust/tests/integration_runtime.rs).
+//!
+//! ## Backend selection and fallback
+//!
+//! `coordinator::driver::make_backend` resolves `cluster.backend` from the
+//! config. Requesting the `xla` backend **never** aborts a run; it degrades
+//! to [`NativeBackend`] with a `log::warn!` in every failure mode:
+//!
+//! * built without the `xla` feature — the executor module is not compiled
+//!   at all, so the request falls straight through to native;
+//! * built with the feature but without a linked PJRT runtime (the default
+//!   `vendor/xla` stub) — `XlaBackend::new` reports the runtime as
+//!   unavailable;
+//! * runtime present but `artifacts/manifest.json` missing or empty (the
+//!   AOT pipeline has not been run) — `XlaBackend::new` fails cleanly.
+//!
+//! Per-call, a compiled `XlaBackend` additionally falls back shape-by-shape
+//! when no artifact bucket fits (see [`bucket::select`]).
 
 pub mod bucket;
+#[cfg(feature = "xla")]
 pub mod executor;
 pub mod manifest;
 pub mod native;
 
 pub use bucket::Bucket;
+#[cfg(feature = "xla")]
 pub use executor::XlaBackend;
 pub use manifest::Manifest;
 pub use native::NativeBackend;

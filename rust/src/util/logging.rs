@@ -2,18 +2,21 @@
 //!
 //! Level comes from `MRCLUSTER_LOG` (error|warn|info|debug|trace), default
 //! `info`. Install once from `main()` / test setup via [`init`]. The logger
-//! is a static (the vendored `log` crate is built without the `std`
-//! feature, so `set_boxed_logger` is unavailable).
+//! is a static (the vendored `log` crate has no `set_boxed_logger`).
 
 use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::Lazy;
 use std::io::Write;
-use std::sync::Once;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 static INIT: Once = Once::new();
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static LOGGER: StderrLogger = StderrLogger;
+
+/// Process-relative time origin (first call wins; [`init`] pins it early).
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct StderrLogger;
 
@@ -24,7 +27,7 @@ impl log::Log for StderrLogger {
 
     fn log(&self, record: &Record) {
         if self.enabled(record.metadata()) {
-            let t = START.elapsed();
+            let t = start().elapsed();
             let lvl = match record.level() {
                 Level::Error => "ERROR",
                 Level::Warn => "WARN ",
@@ -50,7 +53,7 @@ impl log::Log for StderrLogger {
 /// Install the logger (idempotent).
 pub fn init() {
     INIT.call_once(|| {
-        Lazy::force(&START);
+        start();
         let filter = match std::env::var("MRCLUSTER_LOG").as_deref() {
             Ok("error") => LevelFilter::Error,
             Ok("warn") => LevelFilter::Warn,

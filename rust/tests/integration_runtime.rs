@@ -1,7 +1,10 @@
 //! XLA/PJRT backend vs native backend: the two implementations of the
 //! compute surface must agree to float tolerance on every function and
-//! shape (including padding paths). Skips cleanly when `make artifacts`
-//! has not been run.
+//! shape (including padding paths). The whole file is gated on the `xla`
+//! cargo feature (without it the executor is not compiled), and each test
+//! additionally skips cleanly when `make artifacts` has not been run.
+
+#![cfg(feature = "xla")]
 
 use mrcluster::geometry::PointSet;
 use mrcluster::runtime::{ComputeBackend, NativeBackend, XlaBackend};
@@ -62,7 +65,8 @@ fn assign_agrees_across_shapes() {
 fn lloyd_step_agrees() {
     let Some(dir) = artifacts_dir() else { return };
     let xla = XlaBackend::new(dir).unwrap();
-    for (n, k, d, seed) in [(2048usize, 32usize, 3usize, 10u64), (700, 25, 3, 11), (4100, 25, 3, 12)] {
+    let shapes = [(2048usize, 32usize, 3usize, 10u64), (700, 25, 3, 11), (4100, 25, 3, 12)];
+    for (n, k, d, seed) in shapes {
         let p = random_ps(n, d, seed);
         let c = random_ps(k, d, seed + 1);
         let got = xla.lloyd_step(&p, &c);
@@ -128,8 +132,10 @@ fn full_pipeline_on_xla_backend_matches_native_cost() {
         artifact_dir: dir.to_path_buf(),
         ..Default::default()
     };
-    let nat = run_algorithm(Algorithm::SamplingLloyd, &data.points, &mk(RuntimeBackendKind::Native)).unwrap();
-    let xla = run_algorithm(Algorithm::SamplingLloyd, &data.points, &mk(RuntimeBackendKind::Xla)).unwrap();
+    let nat_cfg = mk(RuntimeBackendKind::Native);
+    let xla_cfg = mk(RuntimeBackendKind::Xla);
+    let nat = run_algorithm(Algorithm::SamplingLloyd, &data.points, &nat_cfg).unwrap();
+    let xla = run_algorithm(Algorithm::SamplingLloyd, &data.points, &xla_cfg).unwrap();
     // Same seeds drive the same sampling decisions; distances only differ
     // by float noise, so the costs must be near-identical.
     let rel = (nat.cost.median - xla.cost.median).abs() / nat.cost.median;

@@ -31,7 +31,10 @@ fn cases(count: usize, master_seed: u64) -> Vec<Case> {
         .collect()
 }
 
-fn run_case(c: &Case, constants: SampleConstants) -> (mrcluster::sampling::SampleResult, DataGenConfig) {
+fn run_case(
+    c: &Case,
+    constants: SampleConstants,
+) -> (mrcluster::sampling::SampleResult, DataGenConfig) {
     let dc = DataGenConfig {
         n: c.n,
         k: c.k,

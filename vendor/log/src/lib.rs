@@ -1,0 +1,247 @@
+//! Minimal in-tree implementation of the `log` logging facade.
+//!
+//! API-compatible with the subset of `log` 0.4 that `mrcluster` uses: the
+//! `error!`/`warn!`/`info!`/`debug!`/`trace!` macros (invoked as
+//! `log::info!(...)`), the [`Log`] trait, [`set_logger`]/[`set_max_level`],
+//! and the [`Level`]/[`LevelFilter`] types. Built in-tree because the build
+//! environment is offline (see the workspace Cargo.toml); replacing this
+//! with the crates.io `log` is a one-line dependency change.
+//!
+//! Semantics match the real facade: before [`set_logger`] runs, the max
+//! level is `Off` and every macro call is a cheap no-op.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Severity of a log record (most to least severe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Verbosity ceiling installed with [`set_max_level`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+/// Metadata of a record: level + target (module path by default).
+#[derive(Clone, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log event, passed by reference to [`Log::log`].
+#[derive(Clone, Debug)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A log sink. Implementations must be thread-safe.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool;
+    fn log(&self, record: &Record<'_>);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _metadata: &Metadata<'_>) -> bool {
+        false
+    }
+
+    fn log(&self, _record: &Record<'_>) {}
+
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0); // LevelFilter::Off
+
+/// Error returned when [`set_logger`] is called twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("attempted to set a logger after one was already set")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global verbosity ceiling.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::SeqCst);
+}
+
+/// Current verbosity ceiling.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// The installed logger (a no-op sink until [`set_logger`] runs).
+pub fn logger() -> &'static dyn Log {
+    LOGGER.get().copied().unwrap_or(&NOP)
+}
+
+/// Macro back-end: filter by max level, build the record, dispatch.
+#[doc(hidden)]
+pub fn __private_api_log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    let record = Record {
+        metadata: Metadata { level, target },
+        args,
+    };
+    let logger = logger();
+    if logger.enabled(record.metadata()) {
+        logger.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__private_api_log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, _m: &Metadata<'_>) -> bool {
+            true
+        }
+
+        fn log(&self, record: &Record<'_>) {
+            let _ = format!("{} {} {}", record.level(), record.target(), record.args());
+            HITS.fetch_add(1, Ordering::SeqCst);
+        }
+
+        fn flush(&self) {}
+    }
+
+    static COUNTER: Counter = Counter;
+
+    #[test]
+    fn filtering_and_dispatch() {
+        // Default ceiling is Off: nothing dispatches.
+        crate::info!("dropped before init");
+        assert_eq!(HITS.load(Ordering::SeqCst), 0);
+
+        set_logger(&COUNTER).unwrap();
+        set_max_level(LevelFilter::Info);
+        assert_eq!(max_level(), LevelFilter::Info);
+
+        crate::info!("counted {}", 1);
+        crate::warn!("counted");
+        crate::debug!("filtered out");
+        assert_eq!(HITS.load(Ordering::SeqCst), 2);
+
+        // Second install fails but logging keeps working.
+        assert!(set_logger(&COUNTER).is_err());
+        crate::error!("counted");
+        assert_eq!(HITS.load(Ordering::SeqCst), 3);
+    }
+}

@@ -1,0 +1,192 @@
+//! API stub for the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links the PJRT C API and is only available on machines
+//! with an XLA toolchain. This stub mirrors the subset of its API that
+//! `mrcluster::runtime::executor` uses, so `cargo build --features xla`
+//! compiles everywhere; the one runtime entry point ([`PjRtClient::cpu`])
+//! returns an error, which `mrcluster` turns into a logged fallback to its
+//! native backend. Deploying against real XLA means pointing the `xla`
+//! path dependency at the actual bindings — no `mrcluster` code changes.
+//!
+//! Everything downstream of `PjRtClient::cpu()` is unreachable at runtime
+//! but must typecheck; bodies return [`Error::Unavailable`] defensively.
+
+use std::fmt;
+use std::path::Path;
+
+/// Errors surfaced by the (stub) bindings.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The PJRT runtime is not linked into this build.
+    Unavailable,
+    /// Catch-all for operational failures in a real binding.
+    Message(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable => f.write_str(
+                "XLA/PJRT runtime not linked: this build uses the API stub \
+                 (vendor/xla); point the `xla` dependency at the real xla-rs \
+                 bindings to enable the PJRT backend",
+            ),
+            Error::Message(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of XLA literals (subset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+    Pred,
+}
+
+/// A PJRT client (stub: cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Connect the CPU PJRT plugin. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable)
+    }
+
+    /// Name of the PJRT platform backing this client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// A parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact file.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// An XLA computation wrapping an HLO module (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, loaded executable (stub: cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over one set of per-device arguments; returns per-device,
+    /// per-output buffers.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// A device buffer holding one executable output (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Marker for element types transferable to/from literals.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// A host-side tensor value (stub).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    /// The element type of this literal.
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(Error::Unavailable)
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable)
+    }
+
+    /// Copy out the elements as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("not linked"), "{msg}");
+    }
+
+    #[test]
+    fn literal_constructors_exist() {
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
