@@ -7,6 +7,10 @@
 //!   CI can pass 0.05 for smoke runs).
 //! * every bench prints machine-readable `BENCH <name> <value>` lines at
 //!   the end so EXPERIMENTS.md numbers are grep-able.
+//! * `--bench-json <path>` (after `--` with cargo: `cargo bench --bench
+//!   kernel -- --bench-json BENCH_kernel.json`) additionally writes every
+//!   recorded sample as JSON, so the repo's perf trajectory is diffable —
+//!   see BENCH_kernel.json at the repo root for the committed baseline.
 
 // Each bench binary includes this file as a module and uses a subset of the
 // helpers; the unused remainder is expected.
@@ -43,4 +47,57 @@ pub fn measure<F: FnMut()>(reps: usize, mut f: F) -> (Duration, Duration) {
 /// Print a machine-readable metric line.
 pub fn emit(name: &str, value: f64, unit: &str) {
     println!("BENCH {name} {value:.6} {unit}");
+}
+
+/// Collects kernel-throughput samples and writes them as a JSON document
+/// when the bench was invoked with `--bench-json <path>`.
+pub struct JsonSink {
+    path: Option<String>,
+    records: Vec<String>,
+}
+
+impl JsonSink {
+    /// Parse `--bench-json <path>` from the process args (absent → the
+    /// sink records but writes nothing).
+    pub fn from_args() -> JsonSink {
+        let mut path = None;
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            if a == "--bench-json" {
+                path = Some(
+                    args.next()
+                        .expect("--bench-json requires a file path argument"),
+                );
+            }
+        }
+        JsonSink {
+            path,
+            records: Vec::new(),
+        }
+    }
+
+    /// Record one kernel sample: throughput in Mdist/s for a given shape
+    /// and worker-thread count.
+    pub fn record(&mut self, name: &str, n: usize, k: usize, d: usize, threads: usize, mdps: f64) {
+        self.records.push(format!(
+            "{{\"name\":\"{name}\",\"n\":{n},\"k\":{k},\"d\":{d},\
+             \"threads\":{threads},\"mdist_per_s\":{mdps:.3}}}"
+        ));
+    }
+
+    /// Write the JSON document (no-op without `--bench-json`).
+    pub fn write(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        let scale = scale();
+        let body = format!(
+            "{{\n  \"schema\": \"mrcluster-kernel-bench-v1\",\n  \
+             \"scale\": {scale},\n  \"records\": [\n    {}\n  ]\n}}\n",
+            self.records.join(",\n    ")
+        );
+        std::fs::write(path, body)?;
+        println!("BENCH json written to {path}");
+        Ok(())
+    }
 }

@@ -49,6 +49,7 @@ fn bench_xla_rows(t: &mut Table, n: usize, reps: usize) -> anyhow::Result<()> {
             "xla-aot".to_string(),
             "assign".to_string(),
             k.to_string(),
+            "1".to_string(),
             format!("{:.1}", min.as_secs_f64() * 1e3),
             format!("{mdps:.0}"),
         ]);
@@ -68,40 +69,71 @@ fn main() -> anyhow::Result<()> {
     let n = bench_util::scaled(1_000_000);
     let points = random_ps(n, 3, 1);
     let reps = 3;
+    let mut json = bench_util::JsonSink::from_args();
+    let cores = mrcluster::util::pool::global().worker_count().max(1);
 
-    let mut t = Table::new(vec!["backend", "op", "k", "min (ms)", "Mdist/s"]);
+    let mut t = Table::new(vec!["backend", "op", "k", "threads", "min (ms)", "Mdist/s"]);
 
     for &k in &[25usize, 128] {
         let centers = random_ps(k, 3, 2);
 
-        let (min, _) = bench_util::measure(reps, || {
-            std::hint::black_box(NativeBackend.assign(&points, &centers));
-        });
-        let mdps = (n * k) as f64 / min.as_secs_f64() / 1e6;
-        t.row(vec![
-            "native".to_string(),
-            "assign".to_string(),
-            k.to_string(),
-            format!("{:.1}", min.as_secs_f64() * 1e3),
-            format!("{mdps:.0}"),
-        ]);
-        bench_util::emit(&format!("kernel.native.assign.k{k}"), mdps, "Mdist/s");
+        // Single-thread baseline vs the shared worker pool: the same
+        // kernel, with pool parallelism force-disabled for the former.
+        // Below the kernel's parallel threshold (or on a single-core
+        // machine) the rows would coincide, so only the 1-thread row is
+        // emitted — a threads=cores label must mean the pool actually ran.
+        let pooled = cores > 1 && n >= mrcluster::runtime::native::PAR_MIN;
+        let thread_counts = if pooled { vec![1, cores] } else { vec![1] };
+        for &threads in &thread_counts {
+            let bench_assign = || {
+                std::hint::black_box(NativeBackend.assign(&points, &centers));
+            };
+            let (min, _) = if threads == 1 {
+                bench_util::measure(reps, || mrcluster::util::pool::with_serial(bench_assign))
+            } else {
+                bench_util::measure(reps, bench_assign)
+            };
+            let mdps = (n * k) as f64 / min.as_secs_f64() / 1e6;
+            t.row(vec![
+                "native".to_string(),
+                "assign".to_string(),
+                k.to_string(),
+                threads.to_string(),
+                format!("{:.1}", min.as_secs_f64() * 1e3),
+                format!("{mdps:.0}"),
+            ]);
+            bench_util::emit(
+                &format!("kernel.native.assign.k{k}.t{threads}"),
+                mdps,
+                "Mdist/s",
+            );
+            json.record("native.assign", n, k, 3, threads, mdps);
 
-        let (min, _) = bench_util::measure(reps, || {
-            std::hint::black_box(NativeBackend.lloyd_step(&points, &centers));
-        });
-        t.row(vec![
-            "native".to_string(),
-            "lloyd_step".to_string(),
-            k.to_string(),
-            format!("{:.1}", min.as_secs_f64() * 1e3),
-            format!("{:.0}", (n * k) as f64 / min.as_secs_f64() / 1e6),
-        ]);
+            let bench_lloyd = || {
+                std::hint::black_box(NativeBackend.lloyd_step(&points, &centers));
+            };
+            let (min, _) = if threads == 1 {
+                bench_util::measure(reps, || mrcluster::util::pool::with_serial(bench_lloyd))
+            } else {
+                bench_util::measure(reps, bench_lloyd)
+            };
+            let mdps = (n * k) as f64 / min.as_secs_f64() / 1e6;
+            t.row(vec![
+                "native".to_string(),
+                "lloyd_step".to_string(),
+                k.to_string(),
+                threads.to_string(),
+                format!("{:.1}", min.as_secs_f64() * 1e3),
+                format!("{mdps:.0}"),
+            ]);
+            json.record("native.lloyd_step", n, k, 3, threads, mdps);
+        }
     }
 
     bench_xla_rows(&mut t, n, reps)?;
 
     println!("== E8: assignment kernel (n = {n}, d = 3) ==");
     print!("{}", t.render());
+    json.write()?;
     Ok(())
 }

@@ -57,6 +57,11 @@ pub struct LloydResult {
     pub cost_median: f64,
     /// Objective value per iteration (for convergence plots).
     pub history: Vec<f64>,
+    /// Per-center assigned point count (total weight when weighted) under
+    /// the final centers — the Algorithm 5/6 weight histogram, taken from
+    /// the same pass that computes the final cost so callers don't need a
+    /// second n×k `weight_histogram` sweep.
+    pub final_counts: Vec<f64>,
 }
 
 /// Run (weighted) Lloyd's. `weights = None` is the unweighted case; the
@@ -128,10 +133,17 @@ pub fn lloyd(
         last_cost = cost;
     }
 
-    // Final cost under the final centers.
-    let cost_median = match weights {
-        None => backend.lloyd_step(points, &centers).cost_median,
-        Some(w) => weighted_step(points, w, &centers).2,
+    // Final cost (and the per-center weights) under the final centers —
+    // one pass serves both.
+    let (final_counts, cost_median) = match weights {
+        None => {
+            let fin = backend.lloyd_step(points, &centers);
+            (fin.counts, fin.cost_median)
+        }
+        Some(w) => {
+            let (_, counts, cost) = weighted_step(points, w, &centers);
+            (counts, cost)
+        }
     };
     history.push(cost_median);
 
@@ -140,6 +152,7 @@ pub fn lloyd(
         iters,
         cost_median,
         history,
+        final_counts,
     }
 }
 
@@ -303,6 +316,19 @@ mod tests {
             rw.cost_median,
             ru.cost_median
         );
+    }
+
+    #[test]
+    fn final_counts_match_weight_histogram() {
+        let p = two_blobs(150, 9);
+        let cfg = LloydConfig {
+            k: 2,
+            seed: 11,
+            ..Default::default()
+        };
+        let res = lloyd(&p, None, &cfg, &NativeBackend);
+        let (w, _) = NativeBackend.weight_histogram(&p, &res.centers);
+        assert_eq!(res.final_counts, w, "final pass must double as weights");
     }
 
     #[test]

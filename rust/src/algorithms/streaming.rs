@@ -93,15 +93,14 @@ pub fn streaming_kmedian(points: &PointSet, cfg: &StreamingConfig) -> StreamingR
         (res.centers, cw)
     };
 
-    // Feed the stream block by block through the hierarchy.
+    // Feed the stream block by block through the hierarchy. Each block is
+    // a zero-copy view into the input — the streaming splitter moves no
+    // coordinates, only the retained per-level centers are owned.
     let mut salt = 0u64;
     let mut lo = 0usize;
     while lo < points.len() {
         let hi = (lo + cfg.block_size).min(points.len());
-        let block = PointSet::from_flat(
-            d,
-            points.flat()[lo * d..hi * d].to_vec(),
-        );
+        let block = points.view(lo, hi);
         let w = vec![1.0f32; block.len()];
         salt += 1;
         let (mut c, mut cw) = cluster_block(&block, &w, salt);

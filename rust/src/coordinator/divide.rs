@@ -60,9 +60,14 @@ pub fn mr_divide_kmedian(
         &parts,
         0,
         move |m, part: &PointSet| {
-            let centers = match inner {
+            // Step 6: w(y) = |{x in S^i : x^{C_i} = y}| + 1. (Lloyd centers
+            // are means, not input points; the weights are still the
+            // represented-point counts.) Lloyd's final cost pass already
+            // computes exactly this histogram, so the Lloyd arm reuses it
+            // instead of re-running the full n×k assign sweep.
+            let (centers, w) = match inner {
                 InnerAlgo::Lloyd => {
-                    lloyd(
+                    let res = lloyd(
                         part,
                         None,
                         &LloydConfig {
@@ -73,11 +78,11 @@ pub fn mr_divide_kmedian(
                             ..Default::default()
                         },
                         backend,
-                    )
-                    .centers
+                    );
+                    (res.centers, res.final_counts)
                 }
                 InnerAlgo::LocalSearch => {
-                    local_search(
+                    let centers = local_search(
                         part,
                         None,
                         &LocalSearchConfig {
@@ -88,14 +93,13 @@ pub fn mr_divide_kmedian(
                             seed: cfg.seed ^ (m as u64),
                         },
                     )
-                    .centers
+                    .centers;
+                    // Local search tracks no assignment; one histogram pass
+                    // with the same backend kernel as the kMedian phase.
+                    let (w, _) = NativeBackend.weight_histogram(part, &centers);
+                    (centers, w)
                 }
             };
-            // Step 6: w(y) = |{x in S^i : x^{C_i} = y}| + 1 — computed with
-            // the same backend kernel as the kMedian weight phase. (Lloyd
-            // centers are means, not input points; the weights are still
-            // the represented-point counts.)
-            let (w, _) = NativeBackend.weight_histogram(part, &centers);
             BlockMsg {
                 weights: w.iter().map(|&x| (x + 1.0) as f32).collect(),
                 centers,

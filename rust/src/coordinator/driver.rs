@@ -248,6 +248,10 @@ pub fn run_algorithm_with(
     };
 
     let wall_time = t0.elapsed();
+    // Host-side exact evaluation (not simulated): threads = 1 forces a
+    // single pass; any other value uses the shared worker pool, whose size
+    // is fixed per process (cores / MRCLUSTER_POOL_THREADS) — the config
+    // value is a serial/parallel switch here, not a worker count.
     let cost = eval_costs(points, &centers, cfg.threads);
     Ok(Outcome {
         algorithm,

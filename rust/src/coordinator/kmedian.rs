@@ -41,8 +41,9 @@ pub fn mr_kmedian(
         sres.iterations
     );
 
-    // ---- Steps 2–4: weight phase. Partition V, broadcast C, each machine
-    // computes w^i(y) = |{x in V^i \ C : x^C = y}| (one machine round). ----
+    // ---- Steps 2–4: weight phase. Partition V (zero-copy views),
+    // broadcast C, each machine computes w^i(y) = |{x in V^i \ C : x^C = y}|
+    // in a single assign pass (one machine round). ----
     let parts = points.chunks(cfg.machines.min(points.len()).max(1));
     let bcast = sample.mem_bytes();
     let sample_ref = &sample;

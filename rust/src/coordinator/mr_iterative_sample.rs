@@ -86,7 +86,10 @@ pub fn mr_iterative_sample(
     let threshold = scfg.constants.threshold(n, cfg.k, cfg.epsilon).max(1);
     let mut root_rng = Rng::new(cfg.seed ^ 0x5eed_5a11_3d5a_11ce);
 
-    // Initial partition: contiguous blocks of V.
+    // Initial partition: contiguous blocks of V — zero-copy views into the
+    // input until the first prune rewrites a machine's resident set (and a
+    // prune that drops nothing stays a view, via the contiguous-gather
+    // fast path).
     let n_parts = cfg.machines.min(n).max(1);
     let mut parts: Vec<MachinePart> = points
         .chunks(n_parts)

@@ -34,7 +34,10 @@ pub fn parallel_lloyd(
     let mut centers = crate::algorithms::seeding::random_distinct(points, cfg.k, &mut rng);
     let k = centers.len();
 
-    // Partition once; blocks stay resident across iterations.
+    // Partition once; blocks stay resident across iterations. The chunks
+    // are zero-copy views over the input storage, so this costs O(machines)
+    // metadata, not an O(n·d) memcpy (each block's logical bytes are still
+    // charged to its machine by the engine).
     let parts = points.chunks(cfg.machines.min(points.len()).max(1));
     let bcast_bytes = k * d * 4;
 

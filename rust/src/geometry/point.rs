@@ -1,17 +1,41 @@
-//! Flat structure-of-arrays point storage.
+//! Flat structure-of-arrays point storage with a zero-copy data plane.
 //!
 //! All hot loops in the system iterate over contiguous `f32` coordinate
-//! rows, so points are stored as one flat `Vec<f32>` of length `n * dim`
+//! rows, so points are stored as one flat buffer of length `n * dim`
 //! (row-major). This is also exactly the layout the PJRT artifacts take as
 //! input, so handing a block to the XLA backend is a memcpy, not a gather.
+//!
+//! Since the zero-copy refactor, a [`PointSet`] is a cheap *view* over
+//! `Arc`-shared storage: [`PointSet::chunks`], [`PointSet::view`], and
+//! contiguous-range [`PointSet::gather`]s alias the parent's allocation in
+//! O(1) instead of copying coordinates, which turns the per-round
+//! partitioning of the simulated cluster from an O(n·d) memcpy into
+//! metadata. Mutation (`push`/`extend`/`shuffle`) is copy-on-write: it
+//! first materializes a private buffer when the storage is shared, so a
+//! previously-taken view is never affected by later writes to its parent.
+//!
+//! Two byte measures intentionally coexist (see `mapreduce/kv.rs`):
+//! [`PointSet::mem_bytes`] is the *logical* footprint of the view — what a
+//! simulated machine "holds", which is what `MrConfig::mem_limit` must
+//! charge even when the host process shares one allocation across all
+//! partitions — while [`PointSet::owned_bytes`] reports the bytes this set
+//! uniquely owns on the host (0 for borrowed views), which is what the
+//! zero-copy tests assert on.
 
 use std::fmt;
+use std::sync::Arc;
 
-/// A set of `n` points in `R^dim`, stored row-major.
-#[derive(Clone, PartialEq)]
+/// A set of `n` points in `R^dim`, stored row-major; possibly a borrowed
+/// view into storage shared with other sets.
+#[derive(Clone)]
 pub struct PointSet {
     dim: usize,
-    coords: Vec<f32>,
+    /// Shared row-major storage; mutation copies-on-write.
+    storage: Arc<Vec<f32>>,
+    /// View start within `storage`, in floats (always a multiple of `dim`).
+    start: usize,
+    /// View length, in floats (always a multiple of `dim`).
+    len: usize,
 }
 
 impl fmt::Debug for PointSet {
@@ -20,8 +44,15 @@ impl fmt::Debug for PointSet {
     }
 }
 
+/// Views compare by contents, not by storage identity.
+impl PartialEq for PointSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.dim == other.dim && self.flat() == other.flat()
+    }
+}
+
 impl PointSet {
-    /// Build from a flat row-major coordinate buffer.
+    /// Build from a flat row-major coordinate buffer (takes ownership).
     pub fn from_flat(dim: usize, coords: Vec<f32>) -> Self {
         assert!(dim > 0, "dim must be positive");
         assert!(
@@ -30,7 +61,13 @@ impl PointSet {
             coords.len(),
             dim
         );
-        PointSet { dim, coords }
+        let len = coords.len();
+        PointSet {
+            dim,
+            storage: Arc::new(coords),
+            start: 0,
+            len,
+        }
     }
 
     /// An empty set with capacity for `cap` points.
@@ -38,16 +75,18 @@ impl PointSet {
         assert!(dim > 0);
         PointSet {
             dim,
-            coords: Vec::with_capacity(cap * dim),
+            storage: Arc::new(Vec::with_capacity(cap * dim)),
+            start: 0,
+            len: 0,
         }
     }
 
     pub fn len(&self) -> usize {
-        self.coords.len() / self.dim
+        self.len / self.dim
     }
 
     pub fn is_empty(&self) -> bool {
-        self.coords.is_empty()
+        self.len == 0
     }
 
     pub fn dim(&self) -> usize {
@@ -58,29 +97,98 @@ impl PointSet {
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         let d = self.dim;
-        &self.coords[i * d..(i + 1) * d]
+        &self.flat()[i * d..(i + 1) * d]
     }
 
-    /// The whole flat buffer (row-major).
+    /// The whole flat buffer of this view (row-major).
     #[inline]
     pub fn flat(&self) -> &[f32] {
-        &self.coords
+        &self.storage[self.start..self.start + self.len]
+    }
+
+    /// O(1) zero-copy view of rows `lo..hi` (aliases this set's storage).
+    pub fn view(&self, lo: usize, hi: usize) -> PointSet {
+        assert!(
+            lo <= hi && hi <= self.len(),
+            "view range {lo}..{hi} out of bounds for {} points",
+            self.len()
+        );
+        PointSet {
+            dim: self.dim,
+            storage: Arc::clone(&self.storage),
+            start: self.start + lo * self.dim,
+            len: (hi - lo) * self.dim,
+        }
+    }
+
+    /// True when this set shares its storage allocation with `other`.
+    pub fn shares_storage(&self, other: &PointSet) -> bool {
+        Arc::ptr_eq(&self.storage, &other.storage)
+    }
+
+    /// True when this set is a borrowed view: other sets reference the same
+    /// allocation, or it spans a strict subrange of it.
+    pub fn is_view(&self) -> bool {
+        self.start != 0 || self.len != self.storage.len() || Arc::strong_count(&self.storage) > 1
+    }
+
+    /// Host bytes uniquely owned by this set — 0 for borrowed views. The
+    /// simulated-cluster accounting uses [`PointSet::mem_bytes`] instead: a
+    /// simulated machine holds every byte of its partition even when the
+    /// host process shares one allocation across partitions.
+    pub fn owned_bytes(&self) -> usize {
+        if self.is_view() {
+            0
+        } else {
+            self.storage.capacity() * std::mem::size_of::<f32>()
+        }
+    }
+
+    /// Ensure unique full-span ownership of the underlying buffer, copying
+    /// the viewed range once if it is shared (copy-on-write).
+    fn make_owned(&mut self) {
+        let spans = self.start == 0 && self.len == self.storage.len();
+        let unique = Arc::get_mut(&mut self.storage).is_some();
+        if !(spans && unique) {
+            let copied: Vec<f32> = self.flat().to_vec();
+            self.storage = Arc::new(copied);
+            self.start = 0;
+        }
+    }
+
+    /// Mutable access to the (uniquely owned) backing buffer.
+    fn coords_mut(&mut self) -> &mut Vec<f32> {
+        self.make_owned();
+        Arc::get_mut(&mut self.storage).expect("storage unique after make_owned")
     }
 
     /// Append one point.
     pub fn push(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.dim, "row has wrong dimension");
-        self.coords.extend_from_slice(row);
+        self.coords_mut().extend_from_slice(row);
+        self.len += self.dim;
     }
 
-    /// Append all points of `other` (must agree on dim).
+    /// Append all points of `other` (must agree on dim). `other` may alias
+    /// this set's storage: copy-on-write detaches us first, while `other`
+    /// keeps borrowing the original allocation.
     pub fn extend(&mut self, other: &PointSet) {
         assert_eq!(self.dim, other.dim);
-        self.coords.extend_from_slice(&other.coords);
+        self.coords_mut().extend_from_slice(other.flat());
+        self.len += other.len;
     }
 
-    /// New set containing the rows at `indices` (in order).
+    /// New set containing the rows at `indices` (in order). A contiguous
+    /// ascending run — the common case: partition blocks, prune steps that
+    /// drop nothing — returns an O(1) view instead of copying.
     pub fn gather(&self, indices: &[usize]) -> PointSet {
+        if !indices.is_empty() && indices.windows(2).all(|w| w[1] == w[0] + 1) {
+            let lo = indices[0];
+            let hi = lo + indices.len();
+            if hi <= self.len() {
+                return self.view(lo, hi);
+            }
+        }
         let mut out = PointSet::with_capacity(self.dim, indices.len());
         for &i in indices {
             out.push(self.row(i));
@@ -89,7 +197,8 @@ impl PointSet {
     }
 
     /// Split into `parts` nearly-equal contiguous chunks (last may be
-    /// shorter). Used by the MapReduce partitioners.
+    /// shorter). Used by the MapReduce partitioners. Zero-copy: every chunk
+    /// is a view aliasing this set's storage.
     pub fn chunks(&self, parts: usize) -> Vec<PointSet> {
         assert!(parts > 0);
         let n = self.len();
@@ -98,10 +207,7 @@ impl PointSet {
         let mut start = 0;
         while start < n {
             let end = (start + per).min(n);
-            out.push(PointSet::from_flat(
-                self.dim,
-                self.coords[start * self.dim..end * self.dim].to_vec(),
-            ));
+            out.push(self.view(start, end));
             start = end;
         }
         out
@@ -112,19 +218,21 @@ impl PointSet {
     pub fn shuffle(&mut self, rng: &mut crate::util::rng::Rng) {
         let n = self.len();
         let d = self.dim;
+        let coords = self.coords_mut();
         for i in (1..n).rev() {
             let j = rng.below(i + 1);
             if i != j {
                 for c in 0..d {
-                    self.coords.swap(i * d + c, j * d + c);
+                    coords.swap(i * d + c, j * d + c);
                 }
             }
         }
     }
 
-    /// Memory footprint in bytes (used by the engine's memory accounting).
+    /// Logical memory footprint of this view in bytes (what a simulated
+    /// machine holding this partition is charged by the engine).
     pub fn mem_bytes(&self) -> usize {
-        self.coords.len() * std::mem::size_of::<f32>()
+        self.len * std::mem::size_of::<f32>()
     }
 }
 
@@ -186,6 +294,61 @@ mod tests {
     }
 
     #[test]
+    fn chunks_are_zero_copy_views() {
+        let p = PointSet::from_flat(2, (0..40).map(|i| i as f32).collect());
+        for c in p.chunks(4) {
+            assert!(c.shares_storage(&p), "chunk must alias the parent");
+            assert!(c.is_view());
+            assert_eq!(c.owned_bytes(), 0, "a view owns no bytes");
+        }
+        // The logical charge is unchanged: chunk bytes sum to the parent's.
+        let total: usize = p.chunks(4).iter().map(|c| c.mem_bytes()).sum();
+        assert_eq!(total, p.mem_bytes());
+    }
+
+    #[test]
+    fn view_survives_parent_mutation() {
+        let mut p = PointSet::from_flat(1, vec![0.0, 1.0, 2.0, 3.0]);
+        let v = p.view(1, 3);
+        p.push(&[9.0]); // copy-on-write: must not touch the view
+        p.shuffle(&mut Rng::new(3));
+        assert_eq!(v.flat(), &[1.0, 2.0]);
+        assert!(!v.shares_storage(&p), "mutation must have detached parent");
+    }
+
+    #[test]
+    fn gather_contiguous_is_view_noncontiguous_copies() {
+        let p = PointSet::from_flat(1, (0..8).map(|i| i as f32).collect());
+        let run = p.gather(&[2, 3, 4]);
+        assert!(run.shares_storage(&p));
+        assert_eq!(run.flat(), &[2.0, 3.0, 4.0]);
+        let scattered = p.gather(&[0, 2, 4]);
+        assert!(!scattered.shares_storage(&p));
+        assert_eq!(scattered.flat(), &[0.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn clone_is_cow() {
+        let p = PointSet::from_flat(1, vec![1.0, 2.0]);
+        let mut c = p.clone();
+        assert!(c.shares_storage(&p), "clone is O(1) until mutated");
+        c.push(&[3.0]);
+        assert_eq!(p.len(), 2);
+        assert_eq!(c.len(), 3);
+        assert!(!c.shares_storage(&p));
+    }
+
+    #[test]
+    fn view_of_view_and_equality() {
+        let p = PointSet::from_flat(2, (0..12).map(|i| i as f32).collect());
+        let v = p.view(1, 5);
+        let vv = v.view(1, 3);
+        assert_eq!(vv.len(), 2);
+        assert_eq!(vv.row(0), p.row(2));
+        assert_eq!(vv, p.view(2, 4), "equality is by contents");
+    }
+
+    #[test]
     fn shuffle_is_permutation() {
         let mut p = PointSet::from_flat(1, (0..100).map(|i| i as f32).collect());
         let mut rng = Rng::new(1);
@@ -205,5 +368,14 @@ mod tests {
         a.extend(&b);
         assert_eq!(a.len(), 2);
         assert_eq!(a.row(1), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn extend_from_own_view_is_safe() {
+        let mut a = PointSet::from_flat(1, vec![0.0, 1.0, 2.0]);
+        let tail = a.view(1, 3);
+        a.extend(&tail);
+        assert_eq!(a.flat(), &[0.0, 1.0, 2.0, 1.0, 2.0]);
+        assert_eq!(tail.flat(), &[1.0, 2.0]);
     }
 }

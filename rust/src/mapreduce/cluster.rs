@@ -3,8 +3,10 @@
 use super::kv::MemSize;
 use super::stats::{RoundStats, RunStats};
 use super::MrError;
+use crate::util::pool::ThreadPool;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Engine configuration.
@@ -67,6 +69,10 @@ pub struct MrCluster {
     pub stats: RunStats,
     /// Deterministic stream driving fault/straggler injection.
     fault_rng: crate::util::rng::Rng,
+    /// Persistent worker pool shared by every round of every job on this
+    /// cluster: workers are spawned once in [`MrCluster::new`] and reused,
+    /// instead of the previous scoped-thread spawn per round.
+    pool: ThreadPool,
 }
 
 impl Default for MrCluster {
@@ -75,71 +81,134 @@ impl Default for MrCluster {
     }
 }
 
+/// The FxHash multiply-xor word hash (rustc's hasher): much cheaper than
+/// SipHash for the short keys that cross the shuffle, and deterministic
+/// across runs and platforms.
+struct FxHasher {
+    hash: u64,
+}
+
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(FX_SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut words = bytes.chunks_exact(8);
+        for w in &mut words {
+            self.add(u64::from_le_bytes(w.try_into().expect("8-byte chunk")));
+        }
+        let rem = words.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add(i as u64);
+    }
+}
+
 fn key_machine<K: Hash>(key: &K, n_machines: usize) -> usize {
-    // FxHash-style multiply hash over the default hasher to spread keys.
-    let mut h = std::collections::hash_map::DefaultHasher::new();
+    let mut h = FxHasher { hash: 0 };
     key.hash(&mut h);
     (h.finish() % n_machines as u64) as usize
 }
 
-/// Run per-machine tasks (index, payload) -> (duration, output), either on a
-/// bounded thread pool or sequentially, preserving input order.
-fn run_tasks<T, U, F>(tasks: Vec<T>, threads: usize, f: F) -> Vec<(Duration, U)>
+/// Pool output slot (claimed exactly once per task index).
+type TaskSlot<U> = Mutex<Option<(Duration, U)>>;
+
+/// Run per-machine tasks (index, payload) -> (duration, output) on the
+/// cluster's persistent pool (or inline when it has no workers),
+/// preserving input order.
+fn run_tasks<T, U, F>(pool: &ThreadPool, tasks: Vec<T>, f: F) -> Vec<(Duration, U)>
 where
     T: Send,
     U: Send,
     F: Fn(usize, T) -> U + Send + Sync,
 {
-    if threads <= 1 || tasks.len() <= 1 {
+    let n = tasks.len();
+    if pool.worker_count() == 0 || n <= 1 {
+        // Inline execution models one machine at a time, so the numeric
+        // kernels must not fan out on the global pool here — pool workers
+        // are implicitly serial, and this keeps the measured per-machine
+        // durations comparable between parallel and sequential runs.
         return tasks
             .into_iter()
             .enumerate()
             .map(|(i, t)| {
                 let t0 = Instant::now();
-                let out = f(i, t);
+                let out = crate::util::pool::with_serial(|| f(i, t));
                 (t0.elapsed(), out)
             })
             .collect();
     }
-    // Simple work queue over scoped threads: tasks are taken in order, and
-    // outputs land in their original slot.
-    let n = tasks.len();
-    let mut slots: Vec<Option<(Duration, U)>> = (0..n).map(|_| None).collect();
-    {
-        let queue: std::sync::Mutex<std::collections::VecDeque<(usize, T)>> =
-            std::sync::Mutex::new(tasks.into_iter().enumerate().collect());
-        let slots_mtx: Vec<std::sync::Mutex<&mut Option<(Duration, U)>>> =
-            slots.iter_mut().map(std::sync::Mutex::new).collect();
-        let fref = &f;
-        let qref = &queue;
-        let sref = &slots_mtx;
-        std::thread::scope(|scope| {
-            for _ in 0..threads.min(n) {
-                scope.spawn(move || loop {
-                    let item = qref.lock().expect("queue poisoned").pop_front();
-                    match item {
-                        None => break,
-                        Some((i, t)) => {
-                            let t0 = Instant::now();
-                            let out = fref(i, t);
-                            let d = t0.elapsed();
-                            **sref[i].lock().expect("slot poisoned") = Some((d, out));
-                        }
-                    }
-                });
-            }
-        });
-    }
-    slots.into_iter().map(|s| s.expect("task not run")).collect()
+    let inputs: Vec<Mutex<Option<T>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<TaskSlot<U>> = (0..n).map(|_| Mutex::new(None)).collect();
+    pool.run(n, &|i| {
+        let task = inputs[i]
+            .lock()
+            .expect("input slot poisoned")
+            .take()
+            .expect("task claimed twice");
+        let t0 = Instant::now();
+        let out = f(i, task);
+        *outputs[i].lock().expect("output slot poisoned") = Some((t0.elapsed(), out));
+    });
+    outputs
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("output slot poisoned")
+                .expect("task not run")
+        })
+        .collect()
 }
 
 impl MrCluster {
     pub fn new(config: MrConfig) -> Self {
         let fault_rng = crate::util::rng::Rng::new(config.fault_seed);
+        // Spawn the workers once; every round of every job reuses them.
+        let pool = ThreadPool::new(config.effective_threads());
         MrCluster {
             config,
             stats: RunStats::default(),
             fault_rng,
+            pool,
         }
     }
 
@@ -205,7 +274,6 @@ impl MrCluster {
         R: Fn(&K2, Vec<V2>, &mut dyn FnMut(K3, V3)) + Send + Sync,
     {
         let nm = self.config.n_machines;
-        let threads = self.config.effective_threads();
 
         // ---- distribute input pairs to their resident machines ----
         let mut per_machine: Vec<Vec<(K1, V1)>> = (0..nm).map(|_| Vec::new()).collect();
@@ -216,7 +284,7 @@ impl MrCluster {
 
         // ---- map phase (timed per machine) ----
         let map_ref = &map;
-        let results = run_tasks(per_machine, threads, move |_m, pairs| {
+        let results = run_tasks(&self.pool, per_machine, move |_m, pairs| {
             let mut out: Vec<(K2, V2)> = Vec::new();
             for (k, v) in pairs {
                 map_ref(k, v, &mut |k2, v2| out.push((k2, v2)));
@@ -261,7 +329,7 @@ impl MrCluster {
 
         // ---- reduce phase (timed per machine) ----
         let reduce_ref = &reduce;
-        let results = run_tasks(machine_load, threads, move |_m, pairs| {
+        let results = run_tasks(&self.pool, machine_load, move |_m, pairs| {
             let mut out: Vec<(K3, V3)> = Vec::new();
             for (k, vs) in pairs {
                 reduce_ref(&k, vs, &mut |k3, v3| out.push((k3, v3)));
@@ -314,9 +382,11 @@ impl MrCluster {
         F: Fn(usize, &T) -> U + Send + Sync,
     {
         let nm = self.config.n_machines;
-        let threads = self.config.effective_threads();
 
         // Memory: each machine holds one block at a time + broadcast extra.
+        // Blocks are typically zero-copy views over one shared allocation;
+        // the charge is still the *logical* block size, because a real
+        // machine would hold its own copy of the partition.
         let mut max_machine_mem = 0usize;
         for (m, part) in parts.iter().enumerate() {
             let used = part.mem_bytes() + extra_mem;
@@ -326,8 +396,8 @@ impl MrCluster {
 
         let fref = &f;
         let results = run_tasks(
+            &self.pool,
             parts.iter().collect::<Vec<&T>>(),
-            threads,
             move |i, part| fref(i, part),
         );
 
@@ -378,7 +448,6 @@ impl MrCluster {
         F: Fn(usize, &mut T) -> U + Send + Sync,
     {
         let nm = self.config.n_machines;
-        let threads = self.config.effective_threads();
 
         let mut max_machine_mem = 0usize;
         for (m, part) in parts.iter().enumerate() {
@@ -390,8 +459,8 @@ impl MrCluster {
         let n_parts = parts.len();
         let fref = &f;
         let results = run_tasks(
+            &self.pool,
             parts.iter_mut().collect::<Vec<&mut T>>(),
-            threads,
             move |i, part: &mut T| fref(i, part),
         );
 
@@ -437,7 +506,9 @@ impl MrCluster {
     {
         self.charge(label, 0, input_mem)?;
         let t0 = Instant::now();
-        let out = f();
+        // The leader is one simulated machine: its compute is timed
+        // single-threaded (no global-pool fan-out), like any machine task.
+        let out = crate::util::pool::with_serial(f);
         let (d, retries) = self.inject_faults(t0.elapsed());
         self.stats.push(RoundStats {
             label: label.to_string(),
@@ -587,6 +658,42 @@ mod tests {
         assert_eq!(c.stats.n_rounds(), 1);
         assert_eq!(c.stats.rounds[0].machines_used, 1);
         assert_eq!(c.stats.peak_machine_mem(), 128);
+    }
+
+    #[test]
+    fn key_machine_spreads_keys() {
+        // The FxHash placement must spread keys roughly evenly: over random
+        // u64 keys and several machine counts, every machine gets work and
+        // no machine exceeds 2x its fair share. String keys (word-count
+        // style) go through the byte path and must behave the same way.
+        let mut rng = crate::util::rng::Rng::new(0xFA);
+        for &nm in &[4usize, 16, 100] {
+            let mut counts = vec![0usize; nm];
+            let n_keys = 10_000;
+            for _ in 0..n_keys {
+                counts[key_machine(&rng.next_u64(), nm)] += 1;
+            }
+            let mean = n_keys / nm;
+            assert!(counts.iter().all(|&c| c > 0), "empty machine at nm={nm}");
+            assert!(
+                counts.iter().all(|&c| c < mean * 2),
+                "skewed placement at nm={nm}: {counts:?}"
+            );
+        }
+        let mut scounts = vec![0usize; 10];
+        for i in 0..5_000 {
+            scounts[key_machine(&format!("key-{i}"), 10)] += 1;
+        }
+        assert!(scounts.iter().all(|&c| c > 250 && c < 1000), "{scounts:?}");
+    }
+
+    #[test]
+    fn key_machine_is_deterministic() {
+        assert_eq!(key_machine(&42u64, 7), key_machine(&42u64, 7));
+        assert_eq!(
+            key_machine(&"abc".to_string(), 13),
+            key_machine(&"abc".to_string(), 13)
+        );
     }
 
     #[test]

@@ -1,6 +1,14 @@
-//! Exact objective evaluation, threaded for large n.
+//! Exact objective evaluation, threaded for large n over the shared
+//! worker pool (no per-call thread spawns).
 
 use crate::geometry::{metric::sq_dist, PointSet};
+use crate::util::pool;
+use std::sync::Mutex;
+
+/// Points per parallel work item. Fixed (not derived from the thread
+/// count) and merged in block order, so the f64 result is independent of
+/// the worker count and schedule.
+const COST_BLOCK: usize = 16 * 1024;
 
 /// All three objectives of one center set over one point set.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -35,38 +43,30 @@ fn chunk_cost(points: &PointSet, lo: usize, hi: usize, centers: &PointSet) -> Co
     s
 }
 
-/// Evaluate all three objectives; uses `threads` workers (0 = all cores).
+/// Evaluate all three objectives. `threads = 1` forces a single pass on
+/// the caller; any other value evaluates fixed blocks on the shared
+/// worker pool (`util::pool::global`) and merges them in block order, so
+/// the result does not depend on the actual worker count.
 pub fn eval_costs(points: &PointSet, centers: &PointSet, threads: usize) -> CostSummary {
     assert!(!centers.is_empty(), "no centers");
     assert_eq!(points.dim(), centers.dim(), "dim mismatch");
     let n = points.len();
-    let threads = if threads == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-    } else {
-        threads
-    };
-    let threads = threads.min(n.max(1));
-    if threads <= 1 || n < 10_000 {
+    if threads == 1 || n < 10_000 {
         return chunk_cost(points, 0, n, centers);
     }
-    let per = crate::util::div_ceil(n, threads);
-    let mut parts: Vec<CostSummary> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for t in 0..threads {
-            let lo = t * per;
-            let hi = ((t + 1) * per).min(n);
-            if lo >= hi {
-                break;
-            }
-            handles.push(scope.spawn(move || chunk_cost(points, lo, hi, centers)));
-        }
-        for h in handles {
-            parts.push(h.join().expect("cost worker panicked"));
-        }
+    let n_blocks = crate::util::div_ceil(n, COST_BLOCK);
+    let parts: Vec<Mutex<Option<CostSummary>>> = (0..n_blocks).map(|_| Mutex::new(None)).collect();
+    pool::global().run(n_blocks, &|b| {
+        let lo = b * COST_BLOCK;
+        let hi = (lo + COST_BLOCK).min(n);
+        *parts[b].lock().expect("cost slot poisoned") = Some(chunk_cost(points, lo, hi, centers));
     });
     let mut out = CostSummary::default();
-    for p in parts {
+    for slot in parts {
+        let p = slot
+            .into_inner()
+            .expect("cost slot poisoned")
+            .expect("block not evaluated");
         out.median += p.median;
         out.means += p.means;
         out.center = out.center.max(p.center);

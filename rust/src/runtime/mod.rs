@@ -87,6 +87,22 @@ impl LloydStepOut {
     }
 }
 
+/// Derive the MapReduce-kMedian weight histogram (per-center assigned
+/// counts) plus the k-median cost share from an existing assignment.
+/// Shared by [`ComputeBackend::weight_histogram`] and by coordinators that
+/// already hold an [`AssignOut`] (or a [`LloydStepOut`], whose `counts`
+/// field is the same histogram) so the n×k distance pass runs only once
+/// per (points, centers) pair.
+pub fn weights_from_assign(a: &AssignOut, k: usize) -> (Vec<f64>, f64) {
+    let mut w = vec![0.0f64; k];
+    let mut cost = 0.0f64;
+    for (d2, &c) in a.sqdist.iter().zip(&a.idx) {
+        w[c as usize] += 1.0;
+        cost += (*d2 as f64).sqrt();
+    }
+    (w, cost)
+}
+
 /// The numeric kernel surface shared by the native and XLA paths.
 pub trait ComputeBackend: Send + Sync {
     /// Nearest-center assignment (squared distances).

@@ -8,10 +8,22 @@
 //!
 //! The assign inner loop is the library's single hottest piece of code (it
 //! is what the paper's cluster spent its time on too), so it gets a blocked,
-//! d=3-specialized implementation; see EXPERIMENTS.md §Perf.
+//! plane-major (SoA-transposed) implementation and, for large inputs, runs
+//! its blocks on the shared worker pool; see EXPERIMENTS.md §Perf.
+//!
+//! ## Determinism contract
+//!
+//! Results never depend on the worker count or schedule: work is cut into
+//! fixed [`PAR_BLOCK`]-point blocks regardless of how many threads execute
+//! them, each block writes either a disjoint output range (`assign`) or a
+//! private partial (`lloyd_step`), and partials are merged in block-index
+//! order on the calling thread. This is what makes `parallel = true` and
+//! `parallel = false` cluster runs bit-identical (rust/tests/prop_data_plane.rs).
 
-use super::{AssignOut, ComputeBackend, LloydStepOut};
+use super::{weights_from_assign, AssignOut, ComputeBackend, LloydStepOut};
 use crate::geometry::PointSet;
+use crate::util::pool;
+use std::sync::Mutex;
 
 /// Pure-rust compute backend.
 #[derive(Debug, Default, Clone, Copy)]
@@ -21,90 +33,129 @@ pub struct NativeBackend;
 /// center-loop setup, small enough that a (tile × k) walk stays in L1/L2.
 const TILE: usize = 256;
 
-#[inline(always)]
-fn assign_rows_generic(
+/// Points per parallel work item: a multiple of [`TILE`] so tiles never
+/// straddle block boundaries. Fixed (not derived from the thread count) so
+/// the f64 merge order — and therefore the result — is schedule-independent.
+pub const PAR_BLOCK: usize = 64 * TILE;
+
+/// Inputs below this size stay on the calling thread: one block of work
+/// cannot amortize a pool handoff. Public so the kernel bench can tell
+/// whether a workload actually exercises the pooled path.
+pub const PAR_MIN: usize = 2 * PAR_BLOCK;
+
+/// Plane-major (SoA) assignment of rows `[lo, lo + out_len)` of `points`,
+/// writing into `sqdist`/`idx` local slices indexed from 0.
+///
+/// Generalizes the old d=3 fast path to arbitrary `d`: the row-major
+/// interleave defeats auto-vectorization of the center loop, so each TILE
+/// of points is transposed once into coordinate planes; the inner loops
+/// then walk *points* for a fixed center coordinate — branch-free selects
+/// over contiguous lanes that LLVM vectorizes to masked min/blend (with
+/// `-C target-cpu=native`). At d=3, k=25 this measured 1943 Mdist/s vs 326
+/// for the scalar point-major loop (EXPERIMENTS.md §Perf).
+fn assign_block(
     points: &PointSet,
     centers: &PointSet,
     lo: usize,
-    hi: usize,
     sqdist: &mut [f32],
     idx: &mut [u32],
 ) {
     let d = points.dim();
     let k = centers.len();
-    for i in lo..hi {
-        let row = points.row(i);
-        let mut best = f32::INFINITY;
-        let mut bj = 0u32;
-        for c in 0..k {
-            let crow = centers.row(c);
-            let mut acc = 0.0f32;
+    let pflat = points.flat();
+    let cflat = centers.flat();
+    let n = sqdist.len();
+    debug_assert_eq!(idx.len(), n);
+    // Scratch for one tile's coordinate planes (plane j at j*TILE..).
+    let mut planes = vec![0.0f32; TILE * d];
+    let mut t0 = 0usize;
+    while t0 < n {
+        let t1 = (t0 + TILE).min(n);
+        let tn = t1 - t0;
+        for i in 0..tn {
+            let base = (lo + t0 + i) * d;
             for j in 0..d {
-                let t = row[j] - crow[j];
-                acc += t * t;
-            }
-            if acc < best {
-                best = acc;
-                bj = c as u32;
+                planes[j * TILE + i] = pflat[base + j];
             }
         }
-        sqdist[i] = best.max(0.0);
-        idx[i] = bj;
+        let mut best = [f32::INFINITY; TILE];
+        let mut bidx = [0u32; TILE];
+        let mut acc = [0.0f32; TILE];
+        for c in 0..k {
+            let crow = &cflat[c * d..(c + 1) * d];
+            // First coordinate initializes the accumulator, the rest add:
+            // the same j-order as a scalar row walk, so results are
+            // bit-identical to the point-major loop.
+            let p0 = &planes[0..TILE];
+            let c0 = crow[0];
+            for i in 0..tn {
+                let t = p0[i] - c0;
+                acc[i] = t * t;
+            }
+            for (j, &cj) in crow.iter().enumerate().skip(1) {
+                let pj = &planes[j * TILE..(j + 1) * TILE];
+                for i in 0..tn {
+                    let t = pj[i] - cj;
+                    acc[i] += t * t;
+                }
+            }
+            let cid = c as u32;
+            for i in 0..tn {
+                let better = acc[i] < best[i];
+                best[i] = if better { acc[i] } else { best[i] };
+                bidx[i] = if better { cid } else { bidx[i] };
+            }
+        }
+        for i in 0..tn {
+            sqdist[t0 + i] = best[i].max(0.0);
+            idx[t0 + i] = bidx[i];
+        }
+        t0 = t1;
     }
 }
 
-/// d = 3 fast path, SoA-tiled for SIMD.
-///
-/// The row-major (x,y,z) interleave defeats auto-vectorization of the
-/// center loop, so each tile is transposed once into coordinate planes
-/// (xs/ys/zs); the inner loop then walks *points* for a fixed center —
-/// a branch-free select over contiguous lanes that LLVM vectorizes to
-/// AVX-512 masked min/blend (with `-C target-cpu=native`). Measured
-/// 1943 Mdist/s at k=25 vs 326 for the scalar point-major loop — ~6x
-/// (EXPERIMENTS.md §Perf has the full iteration log).
-#[inline(always)]
-fn assign_rows_d3(
-    points: &[f32],
-    centers: &[f32],
-    k: usize,
-    lo: usize,
-    hi: usize,
-    sqdist: &mut [f32],
-    idx: &mut [u32],
-) {
-    let n = hi - lo;
-    let mut xs = [0.0f32; TILE];
-    let mut ys = [0.0f32; TILE];
-    let mut zs = [0.0f32; TILE];
-    debug_assert!(n <= TILE);
-    for i in 0..n {
-        let base = (lo + i) * 3;
-        xs[i] = points[base];
-        ys[i] = points[base + 1];
-        zs[i] = points[base + 2];
+/// Costs + scatter-add of one block's assignment into a private partial.
+fn lloyd_block(points: &PointSet, k: usize, lo: usize, hi: usize, a: &AssignOut) -> LloydStepOut {
+    let d = points.dim();
+    let pflat = points.flat();
+    let mut out = LloydStepOut {
+        sums: vec![0.0; k * d],
+        counts: vec![0.0; k],
+        cost_median: 0.0,
+        cost_means: 0.0,
+    };
+    // Costs first: a straight-line pass LLVM can pipeline (f32 sqrt per
+    // point, f64 accumulators — per-point sqrt error is << the f32
+    // distance error itself).
+    for i in lo..hi {
+        let d2 = a.sqdist[i];
+        out.cost_means += d2 as f64;
+        out.cost_median += d2.sqrt() as f64;
     }
-    let mut best = [f32::INFINITY; TILE];
-    let mut bidx = [0u32; TILE];
-    for c in 0..k {
-        let cx = centers[c * 3];
-        let cy = centers[c * 3 + 1];
-        let cz = centers[c * 3 + 2];
-        let cid = c as u32;
-        // Branch-free select over contiguous lanes: vectorizes cleanly.
-        for i in 0..n {
-            let dx = xs[i] - cx;
-            let dy = ys[i] - cy;
-            let dz = zs[i] - cz;
-            let d = dx * dx + dy * dy + dz * dz;
-            let better = d < best[i];
-            best[i] = if better { d } else { best[i] };
-            bidx[i] = if better { cid } else { bidx[i] };
+    // Scatter-add of coordinate sums over the flat buffer (no row() slice
+    // construction in the hot loop).
+    for i in lo..hi {
+        let c = a.idx[i] as usize;
+        let base = i * d;
+        let cb = c * d;
+        for j in 0..d {
+            out.sums[cb + j] += pflat[base + j] as f64;
         }
+        out.counts[c] += 1.0;
     }
-    for i in 0..n {
-        sqdist[lo + i] = best[i].max(0.0);
-        idx[lo + i] = bidx[i];
+    out
+}
+
+/// Fixed block decomposition of `n` items (see [`PAR_BLOCK`]).
+fn block_ranges(n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(n / PAR_BLOCK + 1);
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + PAR_BLOCK).min(n);
+        out.push((lo, hi));
+        lo = hi;
     }
+    out
 }
 
 impl ComputeBackend for NativeBackend {
@@ -116,80 +167,72 @@ impl ComputeBackend for NativeBackend {
             sqdist: vec![0.0; n],
             idx: vec![0; n],
         };
-        let mut lo = 0;
-        while lo < n {
-            let hi = (lo + TILE).min(n);
-            if points.dim() == 3 {
-                assign_rows_d3(
-                    points.flat(),
-                    centers.flat(),
-                    centers.len(),
-                    lo,
-                    hi,
-                    &mut out.sqdist,
-                    &mut out.idx,
-                );
-            } else {
-                assign_rows_generic(points, centers, lo, hi, &mut out.sqdist, &mut out.idx);
-            }
-            lo = hi;
+        if n < PAR_MIN {
+            assign_block(points, centers, 0, &mut out.sqdist, &mut out.idx);
+            return out;
         }
+        // Blocks write disjoint output ranges; hand each to the pool. The
+        // result is identical to the serial path because the block cuts
+        // are fixed and every write is index-addressed.
+        let slots: Vec<Mutex<(&mut [f32], &mut [u32])>> = out
+            .sqdist
+            .chunks_mut(PAR_BLOCK)
+            .zip(out.idx.chunks_mut(PAR_BLOCK))
+            .map(Mutex::new)
+            .collect();
+        pool::global().run(slots.len(), &|b| {
+            let mut guard = slots[b].lock().expect("assign slot poisoned");
+            let (sq, ix) = &mut *guard;
+            assign_block(points, centers, b * PAR_BLOCK, sq, ix);
+        });
+        drop(slots);
         out
     }
 
     fn lloyd_step(&self, points: &PointSet, centers: &PointSet) -> LloydStepOut {
         let a = self.assign(points, centers);
         let k = centers.len();
-        let d = points.dim();
-        let mut out = LloydStepOut {
-            sums: vec![0.0; k * d],
-            counts: vec![0.0; k],
-            cost_median: 0.0,
-            cost_means: 0.0,
-        };
-        // Costs first: a straight-line pass LLVM can pipeline (f32 sqrt per
-        // point, f64 accumulators — per-point sqrt error is << the f32
-        // distance error itself).
         let n = points.len();
-        for i in 0..n {
-            let d2 = a.sqdist[i];
-            out.cost_means += d2 as f64;
-            out.cost_median += d2.sqrt() as f64;
-        }
-        // Scatter-add of coordinate sums; flat d=3 path avoids the row()
-        // slice construction in the hot loop.
-        if d == 3 {
-            let flat = points.flat();
-            for i in 0..n {
-                let c = a.idx[i] as usize * 3;
-                let b = i * 3;
-                out.sums[c] += flat[b] as f64;
-                out.sums[c + 1] += flat[b + 1] as f64;
-                out.sums[c + 2] += flat[b + 2] as f64;
-                out.counts[a.idx[i] as usize] += 1.0;
+        let ranges = block_ranges(n);
+        if n < PAR_MIN || ranges.len() <= 1 {
+            // Same block structure, executed inline.
+            let mut agg = LloydStepOut::default();
+            for &(lo, hi) in &ranges {
+                agg.merge(&lloyd_block(points, k, lo, hi, &a));
             }
-        } else {
-            for i in 0..n {
-                let c = a.idx[i] as usize;
-                let row = points.row(i);
-                for j in 0..d {
-                    out.sums[c * d + j] += row[j] as f64;
-                }
-                out.counts[c] += 1.0;
+            if agg.sums.is_empty() {
+                // n == 0: still shape the output for k centers.
+                agg.sums = vec![0.0; k * points.dim()];
+                agg.counts = vec![0.0; k];
             }
+            return agg;
         }
-        out
+        let partials: Vec<Mutex<Option<LloydStepOut>>> =
+            ranges.iter().map(|_| Mutex::new(None)).collect();
+        let aref = &a;
+        let rref = &ranges;
+        pool::global().run(ranges.len(), &|b| {
+            let (lo, hi) = rref[b];
+            *partials[b].lock().expect("lloyd slot poisoned") =
+                Some(lloyd_block(points, k, lo, hi, aref));
+        });
+        // Merge in block-index order: schedule-independent f64 sums.
+        let mut agg = LloydStepOut::default();
+        for slot in partials {
+            let part = slot
+                .into_inner()
+                .expect("lloyd slot poisoned")
+                .expect("block not run");
+            agg.merge(&part);
+        }
+        agg
     }
 
     fn weight_histogram(&self, points: &PointSet, centers: &PointSet) -> (Vec<f64>, f64) {
+        // One assign pass; the histogram + cost reduction is shared with
+        // every other caller that already holds an AssignOut.
         let a = self.assign(points, centers);
-        let mut w = vec![0.0f64; centers.len()];
-        let mut cost = 0.0f64;
-        for i in 0..points.len() {
-            w[a.idx[i] as usize] += 1.0;
-            cost += (a.sqdist[i] as f64).sqrt();
-        }
-        (w, cost)
+        weights_from_assign(&a, centers.len())
     }
 
     fn name(&self) -> &'static str {
@@ -208,7 +251,7 @@ mod tests {
     }
 
     #[test]
-    fn assign_matches_bruteforce_d3_and_generic() {
+    fn assign_matches_bruteforce_all_dims() {
         for d in [1usize, 2, 3, 5, 8] {
             let p = random_ps(500, d, 1);
             let c = random_ps(17, d, 2);
@@ -219,6 +262,25 @@ mod tests {
                 assert!((a - b).abs() < 1e-5, "dim {d}");
             }
         }
+    }
+
+    #[test]
+    fn assign_parallel_path_matches_serial() {
+        // Cross the PAR_MIN threshold so the pool path runs, and compare
+        // bit-for-bit against a forced-serial execution.
+        let n = PAR_MIN + 3 * TILE + 7;
+        let p = random_ps(n, 3, 9);
+        let c = random_ps(25, 3, 10);
+        let par = NativeBackend.assign(&p, &c);
+        let ser = pool::with_serial(|| NativeBackend.assign(&p, &c));
+        assert_eq!(par.idx, ser.idx);
+        assert_eq!(par.sqdist, ser.sqdist);
+        let pstep = NativeBackend.lloyd_step(&p, &c);
+        let sstep = pool::with_serial(|| NativeBackend.lloyd_step(&p, &c));
+        assert_eq!(pstep.sums, sstep.sums);
+        assert_eq!(pstep.counts, sstep.counts);
+        assert_eq!(pstep.cost_median.to_bits(), sstep.cost_median.to_bits());
+        assert_eq!(pstep.cost_means.to_bits(), sstep.cost_means.to_bits());
     }
 
     #[test]
@@ -258,6 +320,21 @@ mod tests {
             assert!((a - b).abs() < 1e-6);
         }
         assert_eq!(whole.counts, merged.counts);
+    }
+
+    #[test]
+    fn lloyd_step_on_views_matches_owned_blocks() {
+        // Zero-copy chunks must produce the same kernel results as owned
+        // copies of the same rows.
+        let p = random_ps(999, 3, 11);
+        let c = random_ps(7, 3, 12);
+        for chunk in p.chunks(4) {
+            let owned = PointSet::from_flat(3, chunk.flat().to_vec());
+            let a = NativeBackend.lloyd_step(&chunk, &c);
+            let b = NativeBackend.lloyd_step(&owned, &c);
+            assert_eq!(a.sums, b.sums);
+            assert_eq!(a.counts, b.counts);
+        }
     }
 
     #[test]

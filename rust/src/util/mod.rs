@@ -8,6 +8,7 @@
 
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod rng;
 pub mod table;
 pub mod timer;

@@ -1,0 +1,405 @@
+//! Persistent worker pool (vendored, std-only).
+//!
+//! The simulated cluster used to spawn a fresh set of scoped threads for
+//! every MapReduce round, and the numeric kernels ran single-threaded
+//! inside each machine task. This module replaces both with one
+//! long-lived pool abstraction:
+//!
+//! * [`ThreadPool`] — a fixed set of workers created once and reused for
+//!   every parallel-for batch (`MrCluster` owns one per cluster, so a
+//!   whole multi-round algorithm run never spawns a thread after setup);
+//! * [`global`] — a process-wide pool shared by `NativeBackend`'s blocked
+//!   kernels and `metrics::cost::eval_costs`.
+//!
+//! The only primitive is a blocking parallel-for: [`ThreadPool::run`]
+//! submits `total` indices, workers claim them from a shared counter
+//! (work-stealing degenerates to counter-stealing because every batch is
+//! an indexed range), and the submitter blocks until the batch drains.
+//! Because `run` does not return while any claimed index is still
+//! executing, the task closure may borrow the submitter's stack — the
+//! same soundness argument as `std::thread::scope`.
+//!
+//! Nesting never deadlocks: a task that calls `run` again (e.g. a machine
+//! task whose `NativeBackend::assign` wants the global pool) executes the
+//! inner batch inline on the worker thread. This is detected with a
+//! thread-local flag, so it also holds *across* pools. Determinism is the
+//! caller's contract: every call site decomposes work into fixed-size
+//! blocks merged in index order, so results do not depend on the worker
+//! count or schedule (see `runtime/native.rs`).
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// True on pool worker threads (and inside [`with_serial`]): nested
+    /// `run` calls execute inline instead of blocking on a pool.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with pool parallelism disabled on this thread: every
+/// `ThreadPool::run` reached from `f` executes its batch inline. Used by
+/// benches to measure the single-threaded kernel baseline, and by the
+/// simulated cluster so an inline machine/leader task is timed as the one
+/// machine it models. The flag is restored even if `f` unwinds.
+pub fn with_serial<R>(f: impl FnOnce() -> R) -> R {
+    struct Reset(bool);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            IN_POOL_WORKER.with(|flag| flag.set(self.0));
+        }
+    }
+    let prev = IN_POOL_WORKER.with(|flag| flag.replace(true));
+    let _reset = Reset(prev);
+    f()
+}
+
+/// Type-erased pointer to the batch closure. The lifetime is erased when a
+/// batch is installed; `ThreadPool::run` keeps the referent alive until the
+/// batch fully drains, so workers never dereference a dangling pointer.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the referent is Sync (shared calls are fine) and outlives every
+// dereference (see `ThreadPool::run`).
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+struct Batch {
+    task: TaskPtr,
+    total: usize,
+    /// Next unclaimed index.
+    next: usize,
+    /// Claimed but not yet finished indices.
+    active: usize,
+    epoch: u64,
+    /// First panic payload observed in this batch, if any.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct State {
+    batch: Option<Batch>,
+    shutdown: bool,
+    /// Epoch of the most recently installed batch.
+    next_epoch: u64,
+    /// Epoch of the most recently completed batch.
+    last_done: u64,
+    /// Panic payloads of completed batches, keyed by epoch, waiting for
+    /// their submitter to pick them up and resume unwinding.
+    panics: Vec<(u64, Box<dyn std::any::Any + Send>)>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a batch with unclaimed indices.
+    work: Condvar,
+    /// Submitters wait here for a free slot / their batch's completion.
+    done: Condvar,
+}
+
+/// A persistent fixed-size worker pool exposing a blocking parallel-for.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ThreadPool(workers={})", self.workers.len())
+    }
+}
+
+impl ThreadPool {
+    /// A pool of `threads` workers. `threads <= 1` spawns no OS threads:
+    /// every `run` then executes inline on the caller.
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                batch: None,
+                shutdown: false,
+                next_epoch: 0,
+                last_done: 0,
+                panics: Vec::new(),
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let n_workers = if threads <= 1 { 0 } else { threads };
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("mr-pool-{i}"))
+                .spawn(move || {
+                    IN_POOL_WORKER.with(|flag| flag.set(true));
+                    worker_loop(&sh);
+                })
+                .expect("failed to spawn pool worker");
+            workers.push(handle);
+        }
+        ThreadPool { shared, workers }
+    }
+
+    /// Number of worker threads (0 means `run` is always inline).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Blocking parallel-for: calls `task(0..total)` exactly once each,
+    /// spread over the workers, and returns when all calls finished. Runs
+    /// inline when the pool has no workers, `total <= 1`, or the caller is
+    /// itself a pool worker (nested parallelism).
+    #[allow(clippy::transmutes_expressible_as_ptr_casts)]
+    pub fn run(&self, total: usize, task: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        let inline =
+            self.workers.is_empty() || total == 1 || IN_POOL_WORKER.with(|flag| flag.get());
+        if inline {
+            for i in 0..total {
+                task(i);
+            }
+            return;
+        }
+
+        // SAFETY: the referent stays borrowed for the whole call, and this
+        // function does not return until the batch is fully drained, so
+        // erasing the lifetime cannot leave workers a dangling pointer.
+        let ptr = TaskPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(task)
+        });
+
+        let mut st = self.shared.state.lock().expect("pool state poisoned");
+        // One batch at a time; concurrent submitters queue up here.
+        while st.batch.is_some() {
+            st = self.shared.done.wait(st).expect("pool state poisoned");
+        }
+        st.next_epoch += 1;
+        let epoch = st.next_epoch;
+        st.batch = Some(Batch {
+            task: ptr,
+            total,
+            next: 0,
+            active: 0,
+            epoch,
+            panic: None,
+        });
+        self.shared.work.notify_all();
+        while st.last_done < epoch {
+            st = self.shared.done.wait(st).expect("pool state poisoned");
+        }
+        if let Some(pos) = st.panics.iter().position(|(e, _)| *e == epoch) {
+            let (_, payload) = st.panics.swap_remove(pos);
+            drop(st);
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        // Claim the next unclaimed index of the current batch.
+        let (task, index, epoch) = {
+            let mut st = shared.state.lock().expect("pool state poisoned");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(b) = st.batch.as_mut() {
+                    if b.next < b.total {
+                        let i = b.next;
+                        b.next += 1;
+                        b.active += 1;
+                        break (b.task, i, b.epoch);
+                    }
+                }
+                st = shared.work.wait(st).expect("pool state poisoned");
+            }
+        };
+
+        // Execute outside the lock; contain panics so the batch still
+        // completes and the submitter can re-raise them.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (&*task.0)(index) }));
+
+        let mut st = shared.state.lock().expect("pool state poisoned");
+        let finished = {
+            let b = st
+                .batch
+                .as_mut()
+                .expect("batch cleared while tasks were active");
+            debug_assert_eq!(b.epoch, epoch);
+            if let Err(payload) = result {
+                if b.panic.is_none() {
+                    b.panic = Some(payload);
+                }
+            }
+            b.active -= 1;
+            b.next >= b.total && b.active == 0
+        };
+        if finished {
+            let b = st.batch.take().expect("batch vanished");
+            st.last_done = b.epoch;
+            if let Some(payload) = b.panic {
+                st.panics.push((b.epoch, payload));
+            }
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// The process-wide pool used by the numeric kernels ([`crate::runtime`])
+/// and cost evaluation. Sized by the `MRCLUSTER_POOL_THREADS` env var
+/// (unset or 0 → available cores).
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let threads = std::env::var("MRCLUSTER_POOL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+            });
+        ThreadPool::new(threads)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(100, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn single_thread_pool_is_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.worker_count(), 0);
+        let sum = AtomicUsize::new(0);
+        pool.run(10, &|i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn batches_reuse_workers() {
+        let pool = ThreadPool::new(3);
+        let ids = std::sync::Mutex::new(std::collections::HashSet::new());
+        for _ in 0..20 {
+            let count = AtomicUsize::new(0);
+            pool.run(16, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+            assert_eq!(count.load(Ordering::SeqCst), 16);
+        }
+        assert!(
+            ids.lock().unwrap().len() <= 3,
+            "batches must reuse the 3 persistent workers"
+        );
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            // A worker resubmitting to its own pool must not deadlock.
+            pool.run(8, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn with_serial_disables_parallelism() {
+        let pool = ThreadPool::new(4);
+        let main_thread = std::thread::current().id();
+        let saw_other = std::sync::Mutex::new(false);
+        with_serial(|| {
+            pool.run(8, &|_| {
+                if std::thread::current().id() != main_thread {
+                    *saw_other.lock().unwrap() = true;
+                }
+            });
+        });
+        assert!(!*saw_other.lock().unwrap(), "serial scope must stay inline");
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "worker panic must reach the submitter");
+        // The pool must still be usable afterwards.
+        let count = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn concurrent_submitters_both_complete() {
+        let pool = ThreadPool::new(2);
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                pool.run(50, &|_| {
+                    a.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+            scope.spawn(|| {
+                pool.run(50, &|_| {
+                    b.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        });
+        assert_eq!(a.load(Ordering::SeqCst), 50);
+        assert_eq!(b.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn global_pool_exists() {
+        let g = global();
+        let count = AtomicUsize::new(0);
+        g.run(4, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+    }
+}

@@ -1,0 +1,197 @@
+//! Property tests of the zero-copy data plane and the persistent-pool
+//! execution model: view aliasing, chunk/extend round-trips, zero-copy
+//! accounting, and bit-identical parallel vs sequential cluster runs.
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::parallel_lloyd::parallel_lloyd;
+use mrcluster::data::DataGenConfig;
+use mrcluster::geometry::PointSet;
+use mrcluster::mapreduce::{MrCluster, MrConfig};
+use mrcluster::runtime::NativeBackend;
+use mrcluster::util::rng::Rng;
+
+fn random_ps(n: usize, d: usize, seed: u64) -> PointSet {
+    let mut rng = Rng::new(seed);
+    PointSet::from_flat(d, (0..n * d).map(|_| rng.f32()).collect())
+}
+
+/// `chunks` performs zero coordinate copies: every chunk aliases the
+/// parent allocation and owns no bytes of its own, while the *logical*
+/// (simulated-machine) accounting still sees every byte.
+#[test]
+fn prop_chunks_are_zero_copy() {
+    let mut rng = Rng::new(1);
+    for _ in 0..10 {
+        let n = 100 + rng.below(3000);
+        let d = 1 + rng.below(6);
+        let parts = 1 + rng.below(40);
+        let p = random_ps(n, d, rng.next_u64());
+        let chunks = p.chunks(parts);
+        let mut logical = 0usize;
+        for c in &chunks {
+            assert!(c.shares_storage(&p), "chunk must alias parent storage");
+            assert_eq!(c.owned_bytes(), 0, "chunk must own zero bytes");
+            logical += c.mem_bytes();
+        }
+        assert_eq!(logical, p.mem_bytes(), "logical accounting must not shrink");
+        assert_eq!(
+            chunks.iter().map(PointSet::len).sum::<usize>(),
+            p.len(),
+            "chunks must cover every point"
+        );
+    }
+}
+
+/// Mutating an owned set never changes a previously-taken view, and
+/// mutating a chunk never changes the parent or sibling chunks.
+#[test]
+fn prop_view_aliasing_is_safe() {
+    let mut rng = Rng::new(2);
+    for _ in 0..10 {
+        let n = 50 + rng.below(500);
+        let d = 1 + rng.below(4);
+        let mut p = random_ps(n, d, rng.next_u64());
+        let before = p.flat().to_vec();
+        let lo = rng.below(n / 2);
+        let hi = lo + 1 + rng.below(n - lo);
+        let view = p.view(lo, hi);
+        let view_before = view.flat().to_vec();
+
+        // Mutate the parent: push and shuffle.
+        p.push(&vec![7.0f32; d]);
+        p.shuffle(&mut Rng::new(9));
+        assert_eq!(view.flat(), &view_before[..], "view changed by parent");
+
+        // Mutate a chunk: the parent and its siblings must be unaffected.
+        let mut chunks = random_ps(n, d, 5).chunks(4);
+        let sibling_before = chunks[1].flat().to_vec();
+        let mut first = chunks.remove(0);
+        first.push(&vec![3.0f32; d]);
+        assert_eq!(chunks[0].flat(), &sibling_before[..]);
+    }
+}
+
+/// chunks + extend round-trips to the exact original contents — the old
+/// deep-copying semantics, observable difference zero.
+#[test]
+fn prop_chunks_extend_round_trip() {
+    let mut rng = Rng::new(3);
+    for _ in 0..10 {
+        let n = 1 + rng.below(2000);
+        let d = 1 + rng.below(5);
+        let parts = 1 + rng.below(30);
+        let p = random_ps(n, d, rng.next_u64());
+        let mut rebuilt = PointSet::with_capacity(d, n);
+        for c in p.chunks(parts) {
+            rebuilt.extend(&c);
+        }
+        assert_eq!(rebuilt, p, "round-trip must reproduce the set");
+        assert_eq!(rebuilt.flat(), p.flat(), "bit-exact coordinates");
+    }
+}
+
+/// Contiguous gathers are views; scattered gathers copy but preserve
+/// contents.
+#[test]
+fn prop_gather_fast_path_equivalence() {
+    let mut rng = Rng::new(4);
+    for _ in 0..10 {
+        let n = 20 + rng.below(500);
+        let p = random_ps(n, 2, rng.next_u64());
+        let lo = rng.below(n / 2);
+        let len = 1 + rng.below(n - lo);
+        let run: Vec<usize> = (lo..lo + len).collect();
+        let g = p.gather(&run);
+        assert!(g.shares_storage(&p), "contiguous gather must be a view");
+        for (pos, &i) in run.iter().enumerate() {
+            assert_eq!(g.row(pos), p.row(i));
+        }
+        // Every-other-point gather: must copy, same contents.
+        let scattered: Vec<usize> = (0..n).step_by(2).collect();
+        let s = p.gather(&scattered);
+        assert!(!s.shares_storage(&p) || scattered.len() == n);
+        for (pos, &i) in scattered.iter().enumerate() {
+            assert_eq!(s.row(pos), p.row(i));
+        }
+    }
+}
+
+fn run_lloyd(parallel: bool, n: usize, seed: u64) -> (PointSet, Vec<f64>, usize) {
+    let data = DataGenConfig {
+        n,
+        k: 8,
+        sigma: 0.05,
+        seed,
+        ..Default::default()
+    }
+    .generate();
+    let cfg = ClusterConfig {
+        k: 8,
+        machines: 16,
+        seed,
+        ..Default::default()
+    };
+    let mut cluster = MrCluster::new(MrConfig {
+        n_machines: 16,
+        parallel,
+        threads: 4,
+        ..Default::default()
+    });
+    let res = parallel_lloyd(&mut cluster, &data.points, &cfg, &NativeBackend).unwrap();
+    (res.centers, res.history, cluster.stats.n_rounds())
+}
+
+/// The determinism contract of the persistent pool: `parallel = true` and
+/// `parallel = false` cluster runs produce *bit-identical* outputs,
+/// because work is decomposed into fixed blocks merged in index order
+/// regardless of the worker schedule.
+#[test]
+fn prop_parallel_sequential_bit_identical() {
+    for seed in [5u64, 6, 7] {
+        let (pc, ph, pr) = run_lloyd(true, 4000, seed);
+        let (sc, sh, sr) = run_lloyd(false, 4000, seed);
+        assert_eq!(pc.flat(), sc.flat(), "centers must match bit-for-bit");
+        assert_eq!(ph.len(), sh.len());
+        for (a, b) in ph.iter().zip(&sh) {
+            assert_eq!(a.to_bits(), b.to_bits(), "objective history must match");
+        }
+        assert_eq!(pr, sr);
+    }
+}
+
+/// Same contract through the full sampling pipeline (Iterative-Sample has
+/// per-machine RNG state and pruning): identical sample, indices, and
+/// round count either way.
+#[test]
+fn prop_sampling_parallel_sequential_identical() {
+    use mrcluster::coordinator::mr_iterative_sample::mr_iterative_sample;
+    let data = DataGenConfig {
+        n: 20_000,
+        k: 10,
+        seed: 8,
+        ..Default::default()
+    }
+    .generate();
+    let cfg = ClusterConfig {
+        k: 10,
+        epsilon: 0.2,
+        machines: 16,
+        seed: 8,
+        ..Default::default()
+    };
+    let run = |parallel: bool| {
+        let mut cluster = MrCluster::new(MrConfig {
+            n_machines: 16,
+            parallel,
+            threads: 4,
+            ..Default::default()
+        });
+        let res = mr_iterative_sample(&mut cluster, &data.points, &cfg, &NativeBackend).unwrap();
+        (res.indices, res.sample, res.iterations)
+    };
+    let (pi, ps, pit) = run(true);
+    let (si, ss, sit) = run(false);
+    assert_eq!(pi, si, "sample indices must be identical");
+    assert_eq!(ps.flat(), ss.flat(), "sample coordinates must be identical");
+    assert_eq!(pit, sit);
+}

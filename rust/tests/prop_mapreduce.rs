@@ -232,6 +232,31 @@ fn prop_straggler_model_slows_round() {
     );
 }
 
+/// The cluster's worker pool is persistent: many rounds on one cluster
+/// execute on the same fixed set of OS threads (a per-round scoped-spawn
+/// regression would show ~rounds × threads distinct thread ids here).
+#[test]
+fn prop_worker_threads_reused_across_rounds() {
+    let mut c = cluster(8, true); // threads: 4
+    let mut ids = std::collections::HashSet::new();
+    for round in 0..10u64 {
+        let parts: Vec<Vec<u64>> = (0..8).map(|i| vec![i + round; 500]).collect();
+        let tids = c
+            .run_machine_round("tids", &parts, 0, |_i, _p: &Vec<u64>| {
+                format!("{:?}", std::thread::current().id())
+            })
+            .unwrap();
+        for t in tids {
+            ids.insert(t);
+        }
+    }
+    assert!(
+        ids.len() <= 4,
+        "rounds must reuse the persistent pool workers, saw {} distinct threads",
+        ids.len()
+    );
+}
+
 /// The fault stream is deterministic: same fault_seed => same retries.
 #[test]
 fn prop_fault_stream_deterministic() {
