@@ -66,11 +66,16 @@ pub struct ClusterConfig {
     pub ls_max_swaps: usize,
     pub ls_min_rel_gain: f64,
     pub ls_candidate_fraction: f64,
-    /// Fault-injection knobs (simulated task retry / straggler model; see
-    /// `mapreduce::MrConfig`). Defaults: disabled.
+    /// Fault-injection knobs (real lose-output-and-replay semantics with
+    /// bounded retries, optional speculative backups for stragglers, and
+    /// round-granularity checkpoint accounting; see `mapreduce::MrConfig`
+    /// and `mapreduce::recovery`). Defaults: injection disabled.
     pub fail_prob: f64,
     pub straggler_prob: f64,
     pub straggler_factor: f64,
+    pub max_task_retries: usize,
+    pub speculative: bool,
+    pub checkpoint: bool,
     pub seed: u64,
 }
 
@@ -97,6 +102,9 @@ impl Default for ClusterConfig {
             fail_prob: 0.0,
             straggler_prob: 0.0,
             straggler_factor: 1.0,
+            max_task_retries: 16,
+            speculative: false,
+            checkpoint: false,
             seed: 42,
         }
     }
@@ -188,6 +196,9 @@ impl AppConfig {
             ("cluster", "fail_prob") => self.cluster.fail_prob = p(value)?,
             ("cluster", "straggler_prob") => self.cluster.straggler_prob = p(value)?,
             ("cluster", "straggler_factor") => self.cluster.straggler_factor = p(value)?,
+            ("cluster", "max_task_retries") => self.cluster.max_task_retries = p(value)?,
+            ("cluster", "speculative") => self.cluster.speculative = p(value)?,
+            ("cluster", "checkpoint") => self.cluster.checkpoint = p(value)?,
             ("cluster", "seed") => self.cluster.seed = p(value)?,
             (s, k) => anyhow::bail!("unknown config key [{s}] {k}"),
         }
@@ -225,6 +236,24 @@ mod tests {
         assert_eq!(cfg.cluster.k, 7);
         assert_eq!(cfg.cluster.backend, RuntimeBackendKind::Xla);
         assert_eq!(cfg.cluster.profile, ConstantsProfile::Theory);
+    }
+
+    #[test]
+    fn fault_keys_apply() {
+        let cfg = AppConfig::load(
+            None,
+            &[
+                ("cluster.fail_prob".into(), "0.3".into()),
+                ("cluster.max_task_retries".into(), "5".into()),
+                ("cluster.speculative".into(), "true".into()),
+                ("cluster.checkpoint".into(), "true".into()),
+            ],
+        )
+        .unwrap();
+        assert!((cfg.cluster.fail_prob - 0.3).abs() < 1e-12);
+        assert_eq!(cfg.cluster.max_task_retries, 5);
+        assert!(cfg.cluster.speculative);
+        assert!(cfg.cluster.checkpoint);
     }
 
     #[test]

@@ -153,6 +153,9 @@ fn mr_config(cfg: &ClusterConfig) -> MrConfig {
         fail_prob: cfg.fail_prob,
         straggler_prob: cfg.straggler_prob,
         straggler_factor: cfg.straggler_factor,
+        max_task_retries: cfg.max_task_retries,
+        speculative: cfg.speculative,
+        checkpoint: cfg.checkpoint,
         fault_seed: cfg.seed ^ 0xFA17,
     }
 }

@@ -25,6 +25,12 @@ use crate::sampling::IterativeSampleConfig;
 use crate::util::rng::Rng;
 
 /// Resident per-machine state for the sampling loop.
+///
+/// `Clone` backs the engine's recovery checkpoint: a mutable round whose
+/// task is fated to fail snapshots the pre-round block (including the
+/// machine-local rng state, so a replayed task re-draws the same samples)
+/// and restores it before the lineage replay.
+#[derive(Clone)]
 pub struct MachinePart {
     /// Global indices of the still-remaining points on this machine.
     pub idx: Vec<usize>,

@@ -236,6 +236,74 @@ pub fn streaming_compare(
     Ok(report)
 }
 
+/// One row of the E11 fault-tolerance sweep.
+pub struct FaultSweepRow {
+    pub algo: String,
+    pub fail_prob: f64,
+    pub straggler_prob: f64,
+    /// Centers and cost exactly equal the fault-free run's (the recovery
+    /// layer's determinism contract).
+    pub bit_identical: bool,
+    pub replays: usize,
+    pub recomputed_bytes: usize,
+    pub speculative_wins: usize,
+    pub cost_median: f64,
+    pub sim_time: std::time::Duration,
+}
+
+/// E11 — fault tolerance: run the paper's pipelines under fault/straggler
+/// regimes (`(fail_prob, straggler_prob)` pairs, straggler factor 4x,
+/// speculation on) and report the recovery accounting, verifying that
+/// lineage replay keeps every output bit-identical to the fault-free run.
+pub fn fault_sweep(
+    params: &ExperimentParams,
+    n: usize,
+    regimes: &[(f64, f64)],
+    backend: &dyn ComputeBackend,
+) -> Result<Vec<FaultSweepRow>> {
+    let algos = [
+        Algorithm::ParallelLloyd,
+        Algorithm::DivideLloyd,
+        Algorithm::SamplingLloyd,
+        Algorithm::MrKCenter,
+        Algorithm::StreamingGuha,
+    ];
+    let data = params.data_config(n, 0).generate();
+    let mut rows = Vec::new();
+    for algo in algos {
+        let clean_cfg = ClusterConfig {
+            fail_prob: 0.0,
+            straggler_prob: 0.0,
+            ..params.cluster_config(0)
+        };
+        let clean = run_algorithm_with(algo, &data.points, &clean_cfg, backend)?;
+        for &(fail_prob, straggler_prob) in regimes {
+            let cfg = ClusterConfig {
+                fail_prob,
+                straggler_prob,
+                straggler_factor: 4.0,
+                speculative: true,
+                ..clean_cfg.clone()
+            };
+            let out = run_algorithm_with(algo, &data.points, &cfg, backend)?;
+            let rec = out.stats.recovery_totals();
+            rows.push(FaultSweepRow {
+                algo: algo.name().to_string(),
+                fail_prob,
+                straggler_prob,
+                bit_identical: out.centers == clean.centers
+                    && out.cost.median == clean.cost.median,
+                replays: rec.replayed_tasks,
+                recomputed_bytes: rec.recomputed_bytes,
+                speculative_wins: rec.speculative_wins,
+                cost_median: out.cost_median,
+                sim_time: out.sim_time,
+            });
+        }
+    }
+    Ok(rows)
+}
+
 /// E7 — Zipf-skew robustness sweep (the "similar results, omitted" claim).
 pub fn skew_sweep(
     params: &ExperimentParams,
@@ -295,6 +363,24 @@ mod tests {
     fn figure1_skips_localsearch_beyond_cap() {
         let rep = figure1(&tiny(), &[2000], 1000, &NativeBackend).unwrap();
         assert_eq!(rep.records.len(), 5);
+    }
+
+    #[test]
+    fn fault_sweep_is_bit_identical_and_counts_replays() {
+        let rows = fault_sweep(&tiny(), 1500, &[(0.3, 0.2)], &NativeBackend).unwrap();
+        assert_eq!(rows.len(), 5);
+        let mut total_replays = 0usize;
+        for r in &rows {
+            assert!(r.bit_identical, "{} diverged under faults", r.algo);
+            total_replays += r.replays;
+            // Single-leader-round pipelines draw one fate per run, so only
+            // multi-round pipelines are guaranteed injected failures.
+            if r.algo != "Streaming-Guha" {
+                assert!(r.replays > 0, "{} saw no injected failures", r.algo);
+                assert!(r.recomputed_bytes > 0, "{}", r.algo);
+            }
+        }
+        assert!(total_replays > 0);
     }
 
     #[test]

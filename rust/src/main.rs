@@ -12,6 +12,7 @@
 //!   kcenter-compare          E3: sampled k-center vs full Gonzalez
 //!   sample-stats             E4: Iterative-Sample iterations/size sweeps
 //!   skew-sweep               E7: Zipf-α robustness
+//!   fault-sweep              E11: recovery under fault/straggler regimes
 //!   mrc-check                run Sampling-Lloyd and verify MRC^0 bounds
 //! ```
 //!
@@ -123,6 +124,7 @@ fn main() -> Result<()> {
         "kcenter-compare" => cmd_kcenter(&cfg, &args)?,
         "sample-stats" => cmd_sample_stats(&cfg, &args)?,
         "skew-sweep" => cmd_skew(&cfg, &args)?,
+        "fault-sweep" => cmd_fault_sweep(&cfg, &args)?,
         "streaming-compare" => cmd_streaming(&cfg, &args)?,
         "kmeans-check" => cmd_kmeans(&cfg, &args)?,
         "mrc-check" => cmd_mrc_check(&cfg)?,
@@ -147,7 +149,11 @@ commands:
   skew-sweep         [--n N] [--alphas LIST]: E7 Zipf robustness
   streaming-compare  [--ns LIST]: E10 Guha et al. streaming baseline
   kmeans-check       [--n N]: E9 the conclusion's k-means extension claim
+  fault-sweep        [--n N] [--regimes f:s,...]: E11 fault tolerance —
+                     lose-output failure injection, lineage-replay recovery,
+                     bit-identical output verification
   mrc-check          run Sampling-Lloyd, assert MRC^0 resource bounds
+                     (including the recovery-memory audit)
 
 algorithms: Parallel-Lloyd, Divide-Lloyd, Divide-LocalSearch,
             Sampling-Lloyd, Sampling-LocalSearch, LocalSearch, MrKCenter,
@@ -160,6 +166,8 @@ config keys (TOML [section] key, or --set section.key=value):
   cluster.backend(native|xla) cluster.artifact_dir
   cluster.lloyd_max_iters cluster.lloyd_tol
   cluster.ls_max_swaps cluster.ls_min_rel_gain cluster.ls_candidate_fraction
+  cluster.fail_prob cluster.straggler_prob cluster.straggler_factor
+  cluster.max_task_retries cluster.speculative cluster.checkpoint
   cluster.seed
 ";
 
@@ -385,6 +393,63 @@ fn cmd_kmeans(cfg: &AppConfig, args: &Args) -> Result<()> {
     println!("  Sampling-Lloyd / Parallel-Lloyd k-median objective ratio: {median_ratio:.3}");
     println!("  (conclusion claim: the sampling analysis extends to k-means —");
     println!("   a constant ratio here is the empirical counterpart)");
+    Ok(())
+}
+
+fn cmd_fault_sweep(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let n = args
+        .flags
+        .get("n")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(100_000);
+    let regimes: Vec<(f64, f64)> = match args.flags.get("regimes") {
+        Some(s) => s
+            .split(',')
+            .map(|pair| {
+                let (f, st) = pair
+                    .split_once(':')
+                    .context("each regime must be fail_prob:straggler_prob")?;
+                Ok((
+                    f.trim().parse::<f64>().context("bad fail prob")?,
+                    st.trim().parse::<f64>().context("bad straggler prob")?,
+                ))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![(0.05, 0.05), (0.3, 0.2)],
+    };
+    let params = params_from(cfg, 1);
+    let backend = experiments::make_backend(&cfg.cluster);
+    let rows = experiments::fault_sweep(&params, n, &regimes, backend.as_ref())?;
+    println!("== E11: fault tolerance (outputs must be bit-identical to the fault-free run) ==");
+    let mut t = Table::new(vec![
+        "algorithm",
+        "fail",
+        "straggle",
+        "identical",
+        "replays",
+        "recomputed KiB",
+        "spec wins",
+        "sim s",
+    ]);
+    let mut all_identical = true;
+    for r in rows {
+        all_identical &= r.bit_identical;
+        t.row(vec![
+            r.algo,
+            format!("{:.2}", r.fail_prob),
+            format!("{:.2}", r.straggler_prob),
+            if r.bit_identical { "yes".into() } else { "NO".into() },
+            r.replays.to_string(),
+            format!("{:.1}", r.recomputed_bytes as f64 / 1024.0),
+            r.speculative_wins.to_string(),
+            format!("{:.3}", r.sim_time.as_secs_f64()),
+        ]);
+    }
+    print!("{}", t.render());
+    if !all_identical {
+        bail!("recovery produced a result that diverged from the fault-free run");
+    }
     Ok(())
 }
 

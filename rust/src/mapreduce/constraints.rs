@@ -24,14 +24,19 @@ pub struct Mrc0Report {
     pub round_bound: usize,
     pub peak_machines: usize,
     pub peak_machine_mem: usize,
+    /// Highest per-machine memory held *for recovery* (lineage replays,
+    /// mutable-block checkpoints). Fault tolerance must not be a loophole
+    /// in the per-machine budget, so it is audited against the same bound.
+    pub peak_replay_mem: usize,
     pub machines_ok: bool,
     pub memory_ok: bool,
     pub rounds_ok: bool,
+    pub recovery_ok: bool,
 }
 
 impl Mrc0Report {
     pub fn ok(&self) -> bool {
-        self.machines_ok && self.memory_ok && self.rounds_ok
+        self.machines_ok && self.memory_ok && self.rounds_ok && self.recovery_ok
     }
 }
 
@@ -56,12 +61,19 @@ impl std::fmt::Display for Mrc0Report {
             self.memory_bound,
             if self.memory_ok { "OK" } else { "VIOLATED" }
         )?;
-        write!(
+        writeln!(
             f,
             "  rounds   : {} <= {} : {}",
             self.rounds,
             self.round_bound,
             if self.rounds_ok { "OK" } else { "VIOLATED" }
+        )?;
+        write!(
+            f,
+            "  recovery : {} <= {:.0} bytes : {}",
+            self.peak_replay_mem,
+            self.memory_bound,
+            if self.recovery_ok { "OK" } else { "VIOLATED" }
         )
     }
 }
@@ -83,6 +95,7 @@ pub fn check_mrc0(
     let bound = slack * nf.powf(1.0 - epsilon);
     let peak_machines = stats.peak_machines();
     let peak_mem = stats.peak_machine_mem();
+    let peak_replay = stats.peak_replay_mem();
     let rounds = stats.n_rounds();
     Mrc0Report {
         input_bytes,
@@ -94,9 +107,11 @@ pub fn check_mrc0(
         round_bound,
         peak_machines,
         peak_machine_mem: peak_mem,
+        peak_replay_mem: peak_replay,
         machines_ok: (peak_machines as f64) <= bound,
         memory_ok: (peak_mem as f64) <= bound,
         rounds_ok: rounds <= round_bound,
+        recovery_ok: (peak_replay as f64) <= bound,
     }
 }
 
@@ -116,7 +131,7 @@ mod tests {
                 shuffle_bytes: 0,
                 max_machine_mem: mem,
                 machines_used: machines,
-                retries: 0,
+                recovery: Default::default(),
             });
         }
         s
@@ -153,6 +168,30 @@ mod tests {
         let r = check_mrc0(&s, 1_000_000, 0.3, 1.0, 10);
         let text = format!("{r}");
         assert!(text.contains("machines"));
+        assert!(text.contains("recovery"));
         assert!(text.contains("OK"));
+    }
+
+    #[test]
+    fn fails_replay_memory_hog() {
+        // Ordinary memory within bounds, but recovery held a near-full copy
+        // of the input on one machine: the report must flag it.
+        let n = 1_000_000_000usize;
+        let mut s = stats(3, 1_000_000, 10);
+        s.rounds[1].recovery.record_replay(1, 1000, n / 2);
+        let r = check_mrc0(&s, n, 0.3, 1.0, 10);
+        assert!(r.memory_ok, "{r}");
+        assert!(!r.recovery_ok, "{r}");
+        assert!(!r.ok());
+        assert!(format!("{r}").contains("VIOLATED"));
+    }
+
+    #[test]
+    fn bounded_replay_memory_passes() {
+        let mut s = stats(3, 1_000_000, 10);
+        s.rounds[0].recovery.record_replay(2, 500, 1_500_000);
+        let r = check_mrc0(&s, 1_000_000_000, 0.3, 1.0, 10);
+        assert!(r.recovery_ok, "{r}");
+        assert!(r.ok(), "{r}");
     }
 }

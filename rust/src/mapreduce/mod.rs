@@ -28,15 +28,25 @@
 //! Machines can execute truly in parallel (worker threads) or sequentially;
 //! simulated time is identical either way because it is derived from
 //! per-machine measurements, not the host wall-clock.
+//!
+//! **Failure semantics** (see [`recovery`]): injected task failures *lose
+//! the machine's output partition* for real, and the round recovers by
+//! lineage replay — the lost task is re-executed from its retained inputs
+//! (mutable resident blocks are restored from a pre-round checkpoint
+//! first). Stragglers can be mitigated by speculative backups. All fates
+//! are pre-drawn from the seeded fault stream, so faulty runs complete
+//! with outputs bit-identical to the fault-free run, at any thread count.
 
 pub mod cluster;
 pub mod constraints;
 pub mod kv;
+pub mod recovery;
 pub mod stats;
 
 pub use cluster::{MrCluster, MrConfig};
 pub use constraints::{check_mrc0, Mrc0Report};
 pub use kv::MemSize;
+pub use recovery::{plan_fates, FaultModel, RecoveryLog, TaskFate};
 pub use stats::{RoundStats, RunStats};
 
 /// Errors surfaced by the engine.
@@ -47,6 +57,13 @@ pub enum MrError {
         machine: usize,
         used: usize,
         limit: usize,
+    },
+    /// A task failed more than `MrConfig::max_task_retries` consecutive
+    /// attempts; the job aborts (Hadoop's `mapred.max.attempts`).
+    TaskFailed {
+        round: String,
+        task: usize,
+        attempts: usize,
     },
     WorkerPanic {
         round: String,
@@ -65,6 +82,15 @@ impl std::fmt::Display for MrError {
                 f,
                 "machine {machine} exceeded its memory budget in round '{round}': \
                  {used} bytes used > {limit} bytes allowed"
+            ),
+            MrError::TaskFailed {
+                round,
+                task,
+                attempts,
+            } => write!(
+                f,
+                "task {task} in round '{round}' lost its output {attempts} times \
+                 and exhausted its retry budget"
             ),
             MrError::WorkerPanic { round } => {
                 write!(f, "worker thread panicked in round '{round}'")

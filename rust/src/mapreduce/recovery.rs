@@ -1,0 +1,314 @@
+//! Failure semantics and recovery for the simulated cluster.
+//!
+//! Earlier versions of the engine modeled a task failure as a *timing tax*
+//! (the task's simulated duration was doubled) — nothing was ever actually
+//! lost or re-executed. This module upgrades fault injection to the real
+//! Hadoop/Spark semantics the `MRC` literature assumes:
+//!
+//! * **output loss** — a failing attempt runs to completion and then its
+//!   machine dies before the output partition is consumed. The partition is
+//!   gone; the engine drops it for real.
+//! * **lineage replay** — the round recovers by re-running the lost task
+//!   from its retained inputs (map inputs stay on their resident machines,
+//!   reduce inputs are the materialized shuffle groups, a mutable resident
+//!   block is restored from the pre-round checkpoint). The replay actually
+//!   executes the task closure again, and the round uses the *replayed*
+//!   output — so a nondeterministic task function would be caught by the
+//!   bit-identical-under-faults property tests.
+//! * **bounded retries** — each attempt fails independently with
+//!   `fail_prob`; a task that exhausts [`FaultModel::max_task_retries`]
+//!   attempts aborts the job with [`super::MrError::TaskFailed`] (Hadoop's
+//!   `mapred.max.attempts`).
+//! * **speculative re-execution** — when enabled, a straggling task gets a
+//!   backup copy launched once it overruns its expected clean duration. The
+//!   backup runs at clean speed, so the task completes at
+//!   `min(straggler_factor, 2) ×` its clean time; the backup "wins"
+//!   whenever `straggler_factor > 2`. Both copies compute the same output
+//!   (determinism is the engine's contract), so speculation is modeled in
+//!   the simulated-time domain — exactly the domain where the paper's
+//!   methodology measures everything — and accounted as duplicate work.
+//!
+//! **Determinism contract.** Every fate is drawn from the cluster's seeded
+//! `fault_rng` *before* the round's tasks execute, in task-index order
+//! ([`plan_fates`]), so the fault stream never depends on measured
+//! durations, the worker schedule, or the thread count. Runs with the same
+//! `fault_seed` replay bit-identically, and because replays re-execute
+//! deterministic tasks, a faulty run's *outputs* are bit-identical to the
+//! fault-free run's.
+
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// The fault-injection knobs of one cluster, in the form the planner and
+/// the timing model consume (mirrors the fields of `MrConfig`).
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    /// Probability any single task attempt fails (loses its output).
+    pub fail_prob: f64,
+    /// Probability the surviving attempt straggles.
+    pub straggler_prob: f64,
+    /// Simulated-time multiplier of a straggling attempt (>= 1.0).
+    pub straggler_factor: f64,
+    /// Failed attempts allowed per task before the job aborts.
+    pub max_task_retries: usize,
+    /// Launch a backup copy for straggling tasks.
+    pub speculative: bool,
+}
+
+impl FaultModel {
+    /// Whether the failure branch of the planner draws at all.
+    pub fn injects_failures(&self) -> bool {
+        self.fail_prob > 0.0
+    }
+
+    /// Whether the straggler branch of the planner draws at all.
+    pub fn injects_stragglers(&self) -> bool {
+        self.straggler_prob > 0.0 && self.straggler_factor > 1.0
+    }
+}
+
+/// The pre-drawn fate of one task: how many attempts lose their output
+/// before one succeeds, and whether the surviving attempt straggles.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TaskFate {
+    /// Attempts that run to completion and then lose their output.
+    /// `failures > max_task_retries` marks a task that never succeeds.
+    pub failures: usize,
+    /// The surviving attempt runs `straggler_factor` slow.
+    pub straggles: bool,
+}
+
+impl TaskFate {
+    /// No failures, no straggling: the round's fast path.
+    pub fn is_clean(&self) -> bool {
+        self.failures == 0 && !self.straggles
+    }
+}
+
+/// Draw the fates of one round's `n_tasks` tasks, in task-index order.
+///
+/// This is a pure function of the rng state and the model, independent of
+/// task durations and scheduling — the determinism anchor of the whole
+/// recovery layer. Tests replay it against a fresh `Rng` with the cluster's
+/// `fault_seed` to cross-check the engine's accounting.
+///
+/// Failure chains are geometric (each attempt fails independently with
+/// `fail_prob`) and capped at `max_task_retries + 1`: a fate with
+/// `failures > max_task_retries` means the task exhausted its budget and
+/// the round must abort.
+pub fn plan_fates(rng: &mut Rng, n_tasks: usize, model: &FaultModel) -> Vec<TaskFate> {
+    let mut fates = Vec::with_capacity(n_tasks);
+    for _ in 0..n_tasks {
+        let mut failures = 0usize;
+        if model.injects_failures() {
+            while failures <= model.max_task_retries && rng.bernoulli(model.fail_prob) {
+                failures += 1;
+            }
+        }
+        let straggles = model.injects_stragglers() && rng.bernoulli(model.straggler_prob);
+        fates.push(TaskFate { failures, straggles });
+    }
+    fates
+}
+
+/// Per-round recovery accounting, carried inside `RoundStats`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryLog {
+    /// Failed attempts replayed via lineage (the run's "retries").
+    pub replayed_tasks: usize,
+    /// Bytes re-materialized by replays: the lost output partitions
+    /// (leader rounds, whose outputs are unsized, charge the re-read input
+    /// instead; map-side inputs are never charged, matching the engine's
+    /// memory model).
+    pub recomputed_bytes: usize,
+    /// Backup copies launched for straggling tasks.
+    pub speculative_launched: usize,
+    /// Backups that finished before the straggling original
+    /// (`straggler_factor > 2`).
+    pub speculative_wins: usize,
+    /// Durable bytes written by round-granularity checkpointing
+    /// (`MrConfig::checkpoint`).
+    pub checkpoint_bytes: usize,
+    /// Highest per-machine memory held *for recovery* this round, under
+    /// the engine's standing charge model (task outputs are charged to the
+    /// leader, map-side inputs are never charged): a replayed task's
+    /// resident inputs, or 2x a mutable block while its pre-round
+    /// checkpoint exists. `Mrc0Report` audits this against the same
+    /// `N^{1-eps}` bound as ordinary memory — recovery must not be a
+    /// loophole in the per-machine budget.
+    pub replay_peak_mem: usize,
+}
+
+impl RecoveryLog {
+    /// True when the round needed no recovery and wrote no checkpoint.
+    pub fn is_empty(&self) -> bool {
+        *self == RecoveryLog::default()
+    }
+
+    /// Account one task's replays: `attempts` failed attempts, each
+    /// re-materializing `bytes`, on a machine holding `mem` while
+    /// recovering.
+    pub fn record_replay(&mut self, attempts: usize, bytes: usize, mem: usize) {
+        self.replayed_tasks += attempts;
+        self.recomputed_bytes += bytes.saturating_mul(attempts);
+        self.replay_peak_mem = self.replay_peak_mem.max(mem);
+    }
+
+    /// Merge another round's log into this one (used by run-level totals).
+    pub fn absorb(&mut self, other: &RecoveryLog) {
+        self.replayed_tasks += other.replayed_tasks;
+        self.recomputed_bytes += other.recomputed_bytes;
+        self.speculative_launched += other.speculative_launched;
+        self.speculative_wins += other.speculative_wins;
+        self.checkpoint_bytes += other.checkpoint_bytes;
+        self.replay_peak_mem = self.replay_peak_mem.max(other.replay_peak_mem);
+    }
+}
+
+/// Simulated duration of one task's whole attempt chain, given the clean
+/// (measured) duration of a single attempt.
+///
+/// * Each failed attempt runs to completion before its output is lost, so
+///   it costs one full clean duration.
+/// * A straggling survivor costs `straggler_factor x` clean — unless
+///   speculation is on, in which case a backup launched at `1x` (the
+///   scheduler notices the overrun) finishes at `2x`, capping the factor
+///   at `min(straggler_factor, 2)`; the backup's duplicate pass is counted
+///   in the log.
+pub fn fate_duration(
+    clean: Duration,
+    fate: &TaskFate,
+    model: &FaultModel,
+    log: &mut RecoveryLog,
+) -> Duration {
+    let lost = clean * fate.failures as u32;
+    let survivor = if fate.straggles {
+        let factor = if model.speculative {
+            log.speculative_launched += 1;
+            if model.straggler_factor > 2.0 {
+                log.speculative_wins += 1;
+            }
+            model.straggler_factor.min(2.0)
+        } else {
+            model.straggler_factor
+        };
+        Duration::from_secs_f64(clean.as_secs_f64() * factor)
+    } else {
+        clean
+    };
+    lost + survivor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(fail: f64, straggle: f64, factor: f64) -> FaultModel {
+        FaultModel {
+            fail_prob: fail,
+            straggler_prob: straggle,
+            straggler_factor: factor,
+            max_task_retries: 16,
+            speculative: false,
+        }
+    }
+
+    #[test]
+    fn quiet_model_draws_nothing() {
+        // With both branches disabled the rng is never touched, so the
+        // stream stays aligned with a run that planned no rounds at all.
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        let fates = plan_fates(&mut a, 100, &model(0.0, 0.0, 1.0));
+        assert!(fates.iter().all(TaskFate::is_clean));
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_order_stable() {
+        let m = model(0.3, 0.2, 4.0);
+        let a = plan_fates(&mut Rng::new(42), 500, &m);
+        let b = plan_fates(&mut Rng::new(42), 500, &m);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|f| f.failures > 0));
+        assert!(a.iter().any(|f| f.straggles));
+    }
+
+    #[test]
+    fn failure_rate_tracks_probability() {
+        let m = model(0.3, 0.0, 1.0);
+        let fates = plan_fates(&mut Rng::new(7), 20_000, &m);
+        let failures: usize = fates.iter().map(|f| f.failures).sum();
+        // Geometric chains: E[failures] = p / (1 - p) ~ 0.4286.
+        let rate = failures as f64 / 20_000.0;
+        assert!((rate - 0.4286).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn retry_budget_caps_the_chain() {
+        let m = FaultModel {
+            max_task_retries: 3,
+            ..model(1.0, 0.0, 1.0)
+        };
+        let fates = plan_fates(&mut Rng::new(1), 10, &m);
+        // fail_prob = 1 always exhausts the budget: failures = max + 1.
+        assert!(fates.iter().all(|f| f.failures == 4));
+    }
+
+    #[test]
+    fn fate_duration_charges_every_lost_attempt() {
+        let m = model(0.5, 0.0, 1.0);
+        let mut log = RecoveryLog::default();
+        let d = fate_duration(
+            Duration::from_millis(10),
+            &TaskFate { failures: 3, straggles: false },
+            &m,
+            &mut log,
+        );
+        assert_eq!(d, Duration::from_millis(40));
+    }
+
+    #[test]
+    fn speculation_caps_straggler_factor_at_two() {
+        let slow = model(0.0, 1.0, 10.0);
+        let fast = FaultModel { speculative: true, ..slow.clone() };
+        let fate = TaskFate { failures: 0, straggles: true };
+        let clean = Duration::from_millis(100);
+        let mut log = RecoveryLog::default();
+        let unspec = fate_duration(clean, &fate, &slow, &mut log);
+        assert_eq!(unspec, Duration::from_millis(1000));
+        assert_eq!(log.speculative_launched, 0);
+        let spec = fate_duration(clean, &fate, &fast, &mut log);
+        assert_eq!(spec, Duration::from_millis(200));
+        assert_eq!(log.speculative_launched, 1);
+        assert_eq!(log.speculative_wins, 1);
+    }
+
+    #[test]
+    fn mild_straggler_needs_no_backup_win() {
+        let m = FaultModel { speculative: true, ..model(0.0, 1.0, 1.5) };
+        let fate = TaskFate { failures: 0, straggles: true };
+        let mut log = RecoveryLog::default();
+        let d = fate_duration(Duration::from_millis(100), &fate, &m, &mut log);
+        // The original finishes at 1.5x before the backup would at 2x.
+        assert_eq!(d, Duration::from_millis(150));
+        assert_eq!(log.speculative_launched, 1);
+        assert_eq!(log.speculative_wins, 0);
+    }
+
+    #[test]
+    fn record_replay_accumulates_and_peaks() {
+        let mut log = RecoveryLog::default();
+        log.record_replay(2, 100, 5000);
+        log.record_replay(1, 30, 2000);
+        assert_eq!(log.replayed_tasks, 3);
+        assert_eq!(log.recomputed_bytes, 230);
+        assert_eq!(log.replay_peak_mem, 5000);
+        assert!(!log.is_empty());
+        let mut total = RecoveryLog::default();
+        total.absorb(&log);
+        total.absorb(&log);
+        assert_eq!(total.replayed_tasks, 6);
+        assert_eq!(total.replay_peak_mem, 5000);
+    }
+}

@@ -1,5 +1,6 @@
 //! Per-round and per-run accounting — the numbers every experiment reports.
 
+use super::recovery::RecoveryLog;
 use std::time::Duration;
 
 /// Measurements of one MapReduce round.
@@ -7,18 +8,21 @@ use std::time::Duration;
 pub struct RoundStats {
     /// Human label ("iterative-sample iter 2: prune", ...).
     pub label: String,
-    /// Max over machines of the map-side compute time.
+    /// Max over machines of the map-side compute time (includes lost
+    /// attempts, replays, and the straggler/speculation model).
     pub map_max: Duration,
     /// Max over machines of the reduce-side compute time.
     pub reduce_max: Duration,
     /// Total bytes crossing the shuffle (map outputs).
     pub shuffle_bytes: usize,
-    /// Highest per-machine memory charge this round.
+    /// Highest per-machine memory charge this round (including recovery
+    /// state: a replayed task's inputs, a mutable block's checkpoint).
     pub max_machine_mem: usize,
     /// Machines that actually received work.
     pub machines_used: usize,
-    /// Task re-executions triggered by injected failures this round.
-    pub retries: usize,
+    /// Recovery accounting: lineage replays, recomputed bytes, speculative
+    /// backups, checkpoint writes (see `recovery::RecoveryLog`).
+    pub recovery: RecoveryLog,
 }
 
 impl RoundStats {
@@ -64,9 +68,35 @@ impl RunStats {
         self.rounds.iter().map(|r| r.machines_used).max().unwrap_or(0)
     }
 
-    /// Total injected-failure re-executions across the run.
+    /// Total injected-failure re-executions (lineage replays) across the
+    /// run. The name predates real recovery; it is kept because every
+    /// replay corresponds to exactly one failed attempt being retried.
     pub fn total_retries(&self) -> usize {
-        self.rounds.iter().map(|r| r.retries).sum()
+        self.rounds.iter().map(|r| r.recovery.replayed_tasks).sum()
+    }
+
+    /// Run-level roll-up of every round's recovery accounting.
+    pub fn recovery_totals(&self) -> RecoveryLog {
+        let mut total = RecoveryLog::default();
+        for r in &self.rounds {
+            total.absorb(&r.recovery);
+        }
+        total
+    }
+
+    /// Bytes re-materialized by lineage replays across the run.
+    pub fn total_recomputed_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.recovery.recomputed_bytes).sum()
+    }
+
+    /// High-water per-machine memory held for recovery across all rounds.
+    /// `check_mrc0` audits this against the same bound as ordinary memory.
+    pub fn peak_replay_mem(&self) -> usize {
+        self.rounds
+            .iter()
+            .map(|r| r.recovery.replay_peak_mem)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Merge another run's rounds into this one (sub-procedures).
@@ -76,14 +106,25 @@ impl RunStats {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} rounds, sim {:.3}s, shuffle {:.1} MiB, peak mem {:.1} MiB, peak machines {}",
             self.n_rounds(),
             self.sim_time().as_secs_f64(),
             self.shuffle_bytes() as f64 / (1 << 20) as f64,
             self.peak_machine_mem() as f64 / (1 << 20) as f64,
             self.peak_machines()
-        )
+        );
+        let rec = self.recovery_totals();
+        if rec.replayed_tasks > 0 || rec.speculative_launched > 0 {
+            s.push_str(&format!(
+                ", {} replays ({:.1} KiB recomputed), {} speculative ({} wins)",
+                rec.replayed_tasks,
+                rec.recomputed_bytes as f64 / 1024.0,
+                rec.speculative_launched,
+                rec.speculative_wins
+            ));
+        }
+        s
     }
 }
 
@@ -99,7 +140,7 @@ mod tests {
             shuffle_bytes: bytes,
             max_machine_mem: mem,
             machines_used: 4,
-            retries: 0,
+            recovery: RecoveryLog::default(),
         }
     }
 
@@ -130,5 +171,34 @@ mod tests {
         assert_eq!(s.sim_time(), Duration::ZERO);
         assert_eq!(s.peak_machine_mem(), 0);
         assert_eq!(s.peak_machines(), 0);
+        assert_eq!(s.total_retries(), 0);
+        assert_eq!(s.peak_replay_mem(), 0);
+    }
+
+    #[test]
+    fn recovery_totals_roll_up() {
+        let mut s = RunStats::default();
+        let mut a = round("a", 1, 0, 10, 100);
+        a.recovery.record_replay(2, 64, 400);
+        a.recovery.speculative_launched = 1;
+        let mut b = round("b", 1, 0, 10, 100);
+        b.recovery.record_replay(1, 16, 900);
+        b.recovery.checkpoint_bytes = 128;
+        s.push(a);
+        s.push(b);
+        assert_eq!(s.total_retries(), 3);
+        assert_eq!(s.total_recomputed_bytes(), 2 * 64 + 16);
+        assert_eq!(s.peak_replay_mem(), 900);
+        let t = s.recovery_totals();
+        assert_eq!(t.speculative_launched, 1);
+        assert_eq!(t.checkpoint_bytes, 128);
+        assert!(s.summary().contains("3 replays"));
+    }
+
+    #[test]
+    fn clean_summary_omits_recovery() {
+        let mut s = RunStats::default();
+        s.push(round("a", 1, 1, 1, 1));
+        assert!(!s.summary().contains("replays"));
     }
 }

@@ -1,0 +1,52 @@
+//! Shared test helpers: exact brute-force clustering oracles.
+//!
+//! Not a test target itself (no `main.rs`); included by
+//! `integration_algorithms.rs` (`mod common;`) and by the scenario harness
+//! (`#[path = "../common/mod.rs"] mod common;`) so both targets check
+//! against the *same* oracle.
+
+use mrcluster::geometry::PointSet;
+use mrcluster::metrics::{kcenter_cost, kmedian_cost};
+
+/// Visit every k-combination of `[0, n)` in lexicographic order: supports
+/// the exact oracles up to n = 64 (a 2^n bitmask enumeration caps out at
+/// n ~ 16; with k <= 3 the combination count stays in the thousands).
+pub fn for_each_combination(n: usize, k: usize, mut f: impl FnMut(&[usize])) {
+    assert!((1..=n).contains(&k));
+    let mut idx: Vec<usize> = (0..k).collect();
+    loop {
+        f(&idx);
+        // Find the rightmost index that can still advance.
+        let mut i = k;
+        while i > 0 && idx[i - 1] == n - k + (i - 1) {
+            i -= 1;
+        }
+        if i == 0 {
+            return;
+        }
+        idx[i - 1] += 1;
+        for j in i..k {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+}
+
+/// Exact discrete k-median optimum (centers restricted to input points).
+pub fn exact_kmedian(points: &PointSet, k: usize) -> f64 {
+    assert!(points.len() <= 64, "exact search is exponential");
+    let mut best = f64::INFINITY;
+    for_each_combination(points.len(), k, |idx| {
+        best = best.min(kmedian_cost(points, &points.gather(idx)));
+    });
+    best
+}
+
+/// Exact discrete k-center optimum.
+pub fn exact_kcenter(points: &PointSet, k: usize) -> f64 {
+    assert!(points.len() <= 64, "exact search is exponential");
+    let mut best = f64::INFINITY;
+    for_each_combination(points.len(), k, |idx| {
+        best = best.min(kcenter_cost(points, &points.gather(idx)));
+    });
+    best
+}

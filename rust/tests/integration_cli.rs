@@ -152,6 +152,31 @@ fn sample_stats_table_renders() {
 }
 
 #[test]
+fn fault_sweep_reports_identical_outputs() {
+    let out = bin()
+        .args([
+            "fault-sweep",
+            "--n",
+            "1200",
+            "--regimes",
+            "0.3:0.2",
+            "--set",
+            "data.k=4",
+            "--set",
+            "cluster.k=4",
+            "--set",
+            "cluster.machines=4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("replays"), "{text}");
+    // Every row must report bit-identical recovery ("yes", never "NO").
+    assert!(!text.contains("NO"), "{text}");
+}
+
+#[test]
 fn mrc_check_passes_on_defaults() {
     let out = bin()
         .args(["mrc-check", "--set", "data.n=30000", "--set", "cluster.machines=16"])

@@ -33,8 +33,8 @@ fn prop_histogram_conservation() {
             .run_round(
                 "hist",
                 values.into_iter().enumerate().collect(),
-                |_k, v, emit| emit(v, 1usize),
-                |k: &usize, vs: Vec<usize>, emit| emit(*k, vs.len()),
+                |_k, v: &usize, emit| emit(*v, 1usize),
+                |k: &usize, vs: &[usize], emit| emit(*k, vs.len()),
             )
             .unwrap();
         let mut got = vec![0usize; buckets];
@@ -81,8 +81,8 @@ fn prop_parallel_equals_sequential() {
                 .run_round(
                     "mod-sum",
                     input.clone(),
-                    |_k, v, emit| emit(v % 13, v),
-                    |k: &u64, vs: Vec<u64>, emit| {
+                    |_k, v: &u64, emit| emit(v % 13, *v),
+                    |k: &u64, vs: &[u64], emit| {
                         emit(*k, vs.iter().sum::<u64>())
                     },
                 )
@@ -106,8 +106,8 @@ fn prop_memory_accounting_sane() {
         c.run_round(
             "acct",
             input,
-            |_k, v, emit| emit(v % 7, v),
-            |k: &u64, vs: Vec<u64>, emit| emit(*k, vs.len() as u64),
+            |_k, v: &u64, emit| emit(v % 7, *v),
+            |k: &u64, vs: &[u64], emit| emit(*k, vs.len() as u64),
         )
         .unwrap();
         let r = &c.stats.rounds[0];
@@ -129,8 +129,8 @@ fn prop_memory_limit_threshold() {
         .run_round(
             "probe",
             input.clone(),
-            |_k, v, emit| emit(v % 3, v),
-            |k: &u64, vs: Vec<u64>, emit| emit(*k, vs.len() as u64),
+            |_k, v: &u64, emit| emit(v % 3, *v),
+            |k: &u64, vs: &[u64], emit| emit(*k, vs.len() as u64),
         )
         .unwrap();
     let peak = probe.stats.peak_machine_mem();
@@ -147,8 +147,8 @@ fn prop_memory_limit_threshold() {
         c.run_round(
             "limit",
             input.clone(),
-            |_k, v, emit| emit(v % 3, v),
-            |k: &u64, vs: Vec<u64>, emit| emit(*k, vs.len() as u64),
+            |_k, v: &u64, emit| emit(v % 3, *v),
+            |k: &u64, vs: &[u64], emit| emit(*k, vs.len() as u64),
         )
         .map(|_| ())
     };
@@ -171,9 +171,10 @@ fn prop_stats_accumulate() {
     assert_eq!(total, c.stats.sim_time());
 }
 
-/// Fault injection: failures inflate simulated time and are counted; the
-/// computation's *outputs* are unchanged (retries are re-executions of
-/// deterministic tasks).
+/// Fault injection: a failing task *loses its output partition* and the
+/// round recovers by actually replaying it from the retained inputs, so
+/// failures inflate simulated time and the recovery accounting while the
+/// computation's *outputs* stay bit-identical.
 #[test]
 fn prop_fault_injection_inflates_time_not_results() {
     let parts: Vec<Vec<u64>> = (0..64).map(|i| vec![i as u64; 2000]).collect();
@@ -183,6 +184,9 @@ fn prop_fault_injection_inflates_time_not_results() {
             parallel: false,
             threads: 1,
             fail_prob,
+            // p = 0.5 chains can run long; keep the abort path out of this
+            // test's way (it has its own coverage in cluster.rs).
+            max_task_retries: 1000,
             fault_seed: 7,
             ..Default::default()
         });
@@ -191,15 +195,17 @@ fn prop_fault_injection_inflates_time_not_results() {
                 p.iter().map(|&x| x.wrapping_mul(2654435761)).sum::<u64>()
             })
             .unwrap();
-        (out, c.stats.total_retries())
+        (out, c.stats.total_retries(), c.stats.total_recomputed_bytes())
     };
-    let (clean_out, clean_retries) = run(0.0);
-    let (faulty_out, faulty_retries) = run(0.5);
+    let (clean_out, clean_retries, clean_bytes) = run(0.0);
+    let (faulty_out, faulty_retries, faulty_bytes) = run(0.5);
     assert_eq!(clean_retries, 0);
+    assert_eq!(clean_bytes, 0);
     assert!(
         faulty_retries > 10,
-        "expected ~32 retries at p=0.5, got {faulty_retries}"
+        "expected ~64 replays at p=0.5, got {faulty_retries}"
     );
+    assert!(faulty_bytes > 0, "replays must account recomputed bytes");
     assert_eq!(clean_out, faulty_out, "results must be fault-transparent");
 }
 

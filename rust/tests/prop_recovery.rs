@@ -1,0 +1,168 @@
+//! Property tests of the recovery layer: for random seeds and
+//! fail_prob in {0, 0.05, 0.3}, a recovered run's final centers and costs
+//! are bit-identical to the fault-free run, and the engine's
+//! `total_retries()` accounting matches an independent replay of the
+//! planned fate stream.
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm, Algorithm};
+use mrcluster::data::DataGenConfig;
+use mrcluster::mapreduce::{plan_fates, FaultModel, MrCluster, MrConfig};
+use mrcluster::util::rng::Rng;
+
+const FAIL_PROBS: [f64; 3] = [0.0, 0.05, 0.3];
+
+/// Engine accounting vs a pure replay of the fate stream: drive identical
+/// machine rounds and recompute the expected injected-failure count from a
+/// fresh `Rng` seeded with the same `fault_seed`. `plan_fates` is a pure
+/// function, so any divergence (extra draws, reordering, double-counting)
+/// shows up as a mismatch here.
+#[test]
+fn prop_total_retries_match_planned_failures() {
+    const ROUNDS: usize = 6;
+    const PARTS: usize = 24;
+    for seed in [1u64, 2, 3] {
+        for fail_prob in FAIL_PROBS {
+            let mut c = MrCluster::new(MrConfig {
+                n_machines: 8,
+                parallel: false,
+                threads: 1,
+                fail_prob,
+                fault_seed: seed,
+                ..Default::default()
+            });
+            let parts: Vec<Vec<u64>> = (0..PARTS).map(|i| vec![i as u64; 32]).collect();
+            for _ in 0..ROUNDS {
+                c.run_machine_round("round", &parts, 0, |_i, p: &Vec<u64>| {
+                    p.iter().sum::<u64>()
+                })
+                .unwrap();
+            }
+
+            let model = FaultModel {
+                fail_prob,
+                straggler_prob: 0.0,
+                straggler_factor: 1.0,
+                max_task_retries: MrConfig::default().max_task_retries,
+                speculative: false,
+            };
+            let mut rng = Rng::new(seed);
+            let mut expected_total = 0usize;
+            for round in 0..ROUNDS {
+                let planned: usize = plan_fates(&mut rng, PARTS, &model)
+                    .iter()
+                    .map(|f| f.failures)
+                    .sum();
+                assert_eq!(
+                    c.stats.rounds[round].recovery.replayed_tasks, planned,
+                    "seed {seed} p {fail_prob} round {round}"
+                );
+                expected_total += planned;
+            }
+            assert_eq!(
+                c.stats.total_retries(),
+                expected_total,
+                "seed {seed} p {fail_prob}: engine vs planned stream"
+            );
+            if fail_prob == 0.0 {
+                assert_eq!(expected_total, 0);
+            }
+        }
+    }
+}
+
+/// End-to-end: a full sampling-k-median pipeline under every fault level
+/// produces bit-identical centers and costs, and its retry count replays
+/// deterministically.
+#[test]
+fn prop_recovered_pipeline_bit_identical_to_fault_free() {
+    for seed in [11u64, 12] {
+        let data = DataGenConfig {
+            n: 2500,
+            k: 5,
+            sigma: 0.05,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let run = |fail_prob: f64| {
+            let cfg = ClusterConfig {
+                k: 5,
+                epsilon: 0.2,
+                machines: 8,
+                seed,
+                fail_prob,
+                straggler_prob: 0.1,
+                straggler_factor: 3.0,
+                speculative: true,
+                ..Default::default()
+            };
+            run_algorithm(Algorithm::SamplingLloyd, &data.points, &cfg).unwrap()
+        };
+        let clean = run(0.0);
+        assert_eq!(clean.stats.total_retries(), 0);
+        for fail_prob in FAIL_PROBS {
+            let faulty = run(fail_prob);
+            assert_eq!(
+                faulty.centers, clean.centers,
+                "seed {seed} p {fail_prob}: centers diverged"
+            );
+            assert_eq!(
+                faulty.cost.median.to_bits(),
+                clean.cost.median.to_bits(),
+                "seed {seed} p {fail_prob}: cost diverged"
+            );
+            assert_eq!(faulty.rounds, clean.rounds);
+            // Same seed + config => the fault stream replays identically.
+            let again = run(fail_prob);
+            assert_eq!(again.stats.total_retries(), faulty.stats.total_retries());
+            if fail_prob >= 0.3 {
+                assert!(
+                    faulty.stats.total_retries() > 0,
+                    "seed {seed}: p=0.3 over a multi-round run must inject"
+                );
+            }
+        }
+    }
+}
+
+/// The fault stream and its recovery are independent of host parallelism:
+/// sequential and pooled execution agree on outputs *and* accounting.
+#[test]
+fn prop_recovery_thread_invariant() {
+    let data = DataGenConfig {
+        n: 2000,
+        k: 4,
+        sigma: 0.05,
+        seed: 21,
+        ..Default::default()
+    }
+    .generate();
+    let run = |parallel: bool| {
+        let cfg = ClusterConfig {
+            k: 4,
+            epsilon: 0.2,
+            machines: 8,
+            seed: 21,
+            parallel,
+            threads: 4,
+            fail_prob: 0.3,
+            straggler_prob: 0.2,
+            straggler_factor: 4.0,
+            speculative: true,
+            ..Default::default()
+        };
+        run_algorithm(Algorithm::SamplingLloyd, &data.points, &cfg).unwrap()
+    };
+    let seq = run(false);
+    let par = run(true);
+    assert_eq!(seq.centers, par.centers);
+    assert_eq!(seq.cost.median.to_bits(), par.cost.median.to_bits());
+    assert_eq!(seq.stats.total_retries(), par.stats.total_retries());
+    assert_eq!(
+        seq.stats.total_recomputed_bytes(),
+        par.stats.total_recomputed_bytes()
+    );
+    assert_eq!(seq.stats.peak_replay_mem(), par.stats.peak_replay_mem());
+    assert!(seq.stats.total_retries() > 0);
+}

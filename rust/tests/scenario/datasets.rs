@@ -1,0 +1,79 @@
+//! Scenario datasets: the geometry regimes the harness drives every
+//! coordinator through.
+//!
+//! * `clustered` — the paper's §4.2 workload (well-separated blobs,
+//!   uniform sizes): the happy path every approximation bound assumes.
+//! * `skewed` — Zipf-1.5 cluster sizes: one giant cluster dominates, so
+//!   per-machine load and the sampling probabilities are unbalanced.
+//! * `adversarial` — a huge near-duplicate mass (zero-distance stress for
+//!   pivot selection and seeding), a thin collinear filament, and a few
+//!   extreme outliers (the k-center-style worst case for sampling).
+
+use mrcluster::data::DataGenConfig;
+use mrcluster::geometry::PointSet;
+use mrcluster::util::rng::Rng;
+
+pub struct Scenario {
+    pub name: &'static str,
+    pub points: PointSet,
+}
+
+pub fn all(n: usize, k: usize, seed: u64) -> Vec<Scenario> {
+    vec![
+        Scenario { name: "clustered", points: clustered(n, k, seed) },
+        Scenario { name: "skewed", points: skewed(n, k, seed) },
+        Scenario { name: "adversarial", points: adversarial(n, seed) },
+    ]
+}
+
+pub fn clustered(n: usize, k: usize, seed: u64) -> PointSet {
+    DataGenConfig {
+        n,
+        k,
+        dim: 3,
+        sigma: 0.05,
+        alpha: 0.0,
+        seed,
+    }
+    .generate()
+    .points
+}
+
+pub fn skewed(n: usize, k: usize, seed: u64) -> PointSet {
+    DataGenConfig {
+        n,
+        k,
+        dim: 3,
+        sigma: 0.05,
+        alpha: 1.5,
+        seed: seed ^ 1,
+    }
+    .generate()
+    .points
+}
+
+pub fn adversarial(n: usize, seed: u64) -> PointSet {
+    let mut rng = Rng::new(seed ^ 0xAD5A);
+    let mut flat = Vec::with_capacity(n * 3);
+    let heavy = n * 7 / 10;
+    let line = n * 2 / 10;
+    // 70%: distinct points packed within 1e-4 of one location.
+    for _ in 0..heavy {
+        for _ in 0..3 {
+            flat.push(0.5 + (rng.f32() - 0.5) * 1e-4);
+        }
+    }
+    // 20%: a collinear filament through the cube.
+    for i in 0..line {
+        let t = i as f32 / line.max(1) as f32;
+        let c = t * 2.0 - 1.0;
+        flat.extend_from_slice(&[c, c, c]);
+    }
+    // Remainder: extreme outliers marching away from everything.
+    let rest = n - heavy - line;
+    for i in 0..rest {
+        let s = (i + 1) as f32;
+        flat.extend_from_slice(&[50.0 * s, -30.0 * s, 80.0]);
+    }
+    PointSet::from_flat(3, flat)
+}

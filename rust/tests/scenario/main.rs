@@ -1,0 +1,270 @@
+//! Deterministic scenario harness: drive every coordinator pipeline
+//! through an adversity matrix — {datasets} x {machine counts} x
+//! {fault/straggler regimes} x {thread modes} — and assert the recovery
+//! layer's contract end to end:
+//!
+//! 1. outputs are **bit-identical** to the zero-fault run at any thread
+//!    count (lineage replay reconstructs exactly what failures destroyed);
+//! 2. the round structure (count, shuffle bytes) is unchanged — recovery
+//!    happens *inside* rounds, never by adding rounds;
+//! 3. the `MRC^0` bounds still hold under adversity, including the
+//!    recovery-memory audit (`Mrc0Report::recovery_ok`), with the slack
+//!    calibrated from the zero-fault run so the assertion is scale-free;
+//! 4. hostile regimes really do inject work (the retries accounting is
+//!    non-trivial).
+//!
+//! Costs-vs-oracle assertions on tiny instances live in `oracle.rs`.
+//! Default scale is CI-sized; set `SCENARIO_FULL=1` for the larger matrix
+//! (more machine counts, larger n).
+
+#[path = "../common/mod.rs"]
+mod common;
+mod datasets;
+mod oracle;
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm, Algorithm, Outcome};
+use mrcluster::mapreduce::check_mrc0;
+
+/// One fault/straggler regime of the matrix.
+pub struct Regime {
+    pub name: &'static str,
+    pub fail_prob: f64,
+    pub straggler_prob: f64,
+    pub straggler_factor: f64,
+    pub speculative: bool,
+}
+
+/// The adversity levels beyond the zero-fault baseline.
+pub const REGIMES: &[Regime] = &[
+    Regime {
+        name: "lossy",
+        fail_prob: 0.05,
+        straggler_prob: 0.0,
+        straggler_factor: 1.0,
+        speculative: false,
+    },
+    Regime {
+        name: "hostile",
+        fail_prob: 0.3,
+        straggler_prob: 0.2,
+        straggler_factor: 4.0,
+        speculative: true,
+    },
+];
+
+const EPS: f64 = 0.2;
+const SEED: u64 = 97;
+
+fn full_matrix() -> bool {
+    std::env::var("SCENARIO_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+fn machine_counts() -> Vec<usize> {
+    if full_matrix() {
+        vec![4, 16]
+    } else {
+        vec![8]
+    }
+}
+
+fn scenario_n() -> usize {
+    if full_matrix() {
+        6000
+    } else {
+        1500
+    }
+}
+
+fn scenario_cfg(
+    k: usize,
+    machines: usize,
+    seed: u64,
+    regime: Option<&Regime>,
+    parallel: bool,
+) -> ClusterConfig {
+    let mut cfg = ClusterConfig {
+        k,
+        epsilon: EPS,
+        machines,
+        seed,
+        parallel,
+        threads: 4,
+        ..Default::default()
+    };
+    if let Some(r) = regime {
+        cfg.fail_prob = r.fail_prob;
+        cfg.straggler_prob = r.straggler_prob;
+        cfg.straggler_factor = r.straggler_factor;
+        cfg.speculative = r.speculative;
+    }
+    cfg
+}
+
+/// The hostile regime as a ready-made config (shared with `oracle.rs`).
+pub fn hostile_cfg(k: usize, machines: usize, seed: u64) -> ClusterConfig {
+    scenario_cfg(k, machines, seed, Some(&REGIMES[1]), true)
+}
+
+/// Slack that puts the zero-fault run at a 2x margin inside the
+/// `N^{1-eps}` envelope: the fault runs must then fit the *same* envelope,
+/// which bounds recovery overhead (checkpointed mutable blocks at most
+/// double a machine's residency) without hand-picked absolute numbers.
+fn calibrated_slack(baseline: &Outcome, input_bytes: usize) -> f64 {
+    let bound = (input_bytes as f64).powf(1.0 - EPS);
+    let peak = baseline
+        .stats
+        .peak_machines()
+        .max(baseline.stats.peak_machine_mem()) as f64;
+    (2.0 * peak / bound).max(1.0)
+}
+
+fn run_matrix(algo: Algorithm) {
+    let k = 5;
+    let n = scenario_n();
+    for ds in datasets::all(n, k, 0xACE) {
+        for machines in machine_counts() {
+            let baseline =
+                run_algorithm(algo, &ds.points, &scenario_cfg(k, machines, SEED, None, true))
+                    .unwrap();
+            assert_eq!(baseline.stats.total_retries(), 0);
+            assert_eq!(baseline.stats.peak_replay_mem(), 0);
+            let input_bytes = ds.points.mem_bytes();
+            let slack = calibrated_slack(&baseline, input_bytes);
+            let round_bound = baseline.rounds;
+            let base_report =
+                check_mrc0(&baseline.stats, input_bytes, EPS, slack, round_bound);
+            assert!(
+                base_report.ok(),
+                "{} / {} baseline out of its own envelope: {base_report}",
+                algo.name(),
+                ds.name
+            );
+
+            for regime in REGIMES {
+                for parallel in [true, false] {
+                    let out = run_algorithm(
+                        algo,
+                        &ds.points,
+                        &scenario_cfg(k, machines, SEED, Some(regime), parallel),
+                    )
+                    .unwrap();
+                    let tag = format!(
+                        "{} / {} / {} machines / {} / parallel={parallel}",
+                        algo.name(),
+                        ds.name,
+                        machines,
+                        regime.name
+                    );
+
+                    // 1. Bit-identical output at any thread count.
+                    assert_eq!(out.centers, baseline.centers, "{tag}: centers diverged");
+                    assert_eq!(
+                        out.cost.median.to_bits(),
+                        baseline.cost.median.to_bits(),
+                        "{tag}: cost diverged"
+                    );
+
+                    // 2. Recovery never changes the round structure.
+                    assert_eq!(out.rounds, baseline.rounds, "{tag}: round count changed");
+                    assert_eq!(
+                        out.stats.shuffle_bytes(),
+                        baseline.stats.shuffle_bytes(),
+                        "{tag}: shuffle changed"
+                    );
+
+                    // 3. MRC^0 bounds, including the recovery-memory audit.
+                    let report = check_mrc0(&out.stats, input_bytes, EPS, slack, round_bound);
+                    assert!(report.ok(), "{tag}: {report}");
+                    assert!(
+                        out.stats.peak_machine_mem() <= 2 * baseline.stats.peak_machine_mem(),
+                        "{tag}: recovery more than doubled a machine's residency"
+                    );
+
+                    // 4. Hostile regimes must actually inject failures into
+                    //    multi-round pipelines (single-round pipelines draw
+                    //    too few fates for a guarantee).
+                    if regime.fail_prob >= 0.3 && baseline.rounds > 2 {
+                        assert!(
+                            out.stats.total_retries() > 0,
+                            "{tag}: no failures injected"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// The five matrix tests are `#[ignore]`d so the debug tier-1 `cargo test`
+// stays fast; the CI `scenario-matrix` job runs them in release with
+// `--include-ignored` (and locally: `cargo test --release --test scenario
+// -- --include-ignored`, optionally with SCENARIO_FULL=1).
+
+#[test]
+#[ignore = "run via the scenario-matrix CI job (release mode)"]
+fn scenario_parallel_lloyd() {
+    run_matrix(Algorithm::ParallelLloyd);
+}
+
+#[test]
+#[ignore = "run via the scenario-matrix CI job (release mode)"]
+fn scenario_sampling_kmedian() {
+    run_matrix(Algorithm::SamplingLloyd);
+}
+
+#[test]
+#[ignore = "run via the scenario-matrix CI job (release mode)"]
+fn scenario_divide_kmedian() {
+    run_matrix(Algorithm::DivideLloyd);
+}
+
+#[test]
+#[ignore = "run via the scenario-matrix CI job (release mode)"]
+fn scenario_mr_kcenter() {
+    run_matrix(Algorithm::MrKCenter);
+}
+
+#[test]
+#[ignore = "run via the scenario-matrix CI job (release mode)"]
+fn scenario_streaming() {
+    run_matrix(Algorithm::StreamingGuha);
+}
+
+/// Satellite: the report's memory-violation path on a *real* run — an
+/// over-tight epsilon makes the sub-linear envelope impossible, and the
+/// report must flag it rather than pass vacuously.
+#[test]
+fn mrc0_flags_deliberately_over_budget_run() {
+    let points = datasets::clustered(1500, 5, 0xACE);
+    let out =
+        run_algorithm(Algorithm::SamplingLloyd, &points, &scenario_cfg(5, 8, SEED, None, true))
+            .unwrap();
+    let report = check_mrc0(&out.stats, points.mem_bytes(), 0.9, 1.0, out.rounds);
+    assert!(!report.memory_ok, "{report}");
+    assert!(!report.ok());
+    assert!(format!("{report}").contains("VIOLATED"));
+}
+
+/// Satellite: recovery replay must not inflate per-machine memory past the
+/// checkpoint bound — replays hold at most twice the fault-free peak, and
+/// the recovery audit passes at the baseline-calibrated slack.
+#[test]
+fn recovery_replay_respects_memory_bound() {
+    let points = datasets::clustered(1500, 5, 0xACE);
+    let clean =
+        run_algorithm(Algorithm::SamplingLloyd, &points, &scenario_cfg(5, 8, SEED, None, true))
+            .unwrap();
+    let out = run_algorithm(Algorithm::SamplingLloyd, &points, &hostile_cfg(5, 8, SEED)).unwrap();
+    assert!(out.stats.total_retries() > 0);
+    let replay_peak = out.stats.peak_replay_mem();
+    assert!(replay_peak > 0, "replays must be charged to a machine");
+    assert!(
+        replay_peak <= 2 * clean.stats.peak_machine_mem(),
+        "replay peak {replay_peak} vs clean peak {}",
+        clean.stats.peak_machine_mem()
+    );
+    let slack = calibrated_slack(&clean, points.mem_bytes());
+    let report = check_mrc0(&out.stats, points.mem_bytes(), EPS, slack, clean.rounds);
+    assert!(report.recovery_ok, "{report}");
+}

@@ -1,0 +1,89 @@
+//! Brute-force oracle: on tiny instances the MapReduce pipelines' cost
+//! must stay within the paper's constant factors of the *exact* optimum —
+//! and they are exercised here under the hostile fault regime, so the
+//! approximation claims are checked on the recovered outputs.
+
+use crate::common::{exact_kcenter, exact_kmedian};
+use crate::hostile_cfg;
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm, Algorithm};
+use mrcluster::data::DataGenConfig;
+use mrcluster::geometry::PointSet;
+use mrcluster::metrics::{kcenter_cost, kmedian_cost};
+
+fn tiny_blobs(n: usize, k: usize, seed: u64) -> PointSet {
+    DataGenConfig {
+        n,
+        k,
+        dim: 3,
+        sigma: 0.02,
+        alpha: 0.0,
+        seed,
+    }
+    .generate()
+    .points
+}
+
+fn oracle_cluster_cfg(k: usize, seed: u64) -> ClusterConfig {
+    // Hostile regime on purpose: the bound must hold on recovered outputs.
+    hostile_cfg(k, 4, seed)
+}
+
+#[test]
+fn kmedian_pipelines_within_constant_of_exact_optimum() {
+    // Lloyd means can even beat the discrete optimum, so only the upper
+    // bound is asserted. 10x is far below a degenerate solution (~16x for
+    // one-center collapse on this geometry) while holding slack over the
+    // paper's constants and Lloyd's seeding luck on 30 points.
+    const FACTOR: f64 = 10.0;
+    for seed in [5u64, 6] {
+        let points = tiny_blobs(30, 3, seed);
+        let opt = exact_kmedian(&points, 3);
+        assert!(opt.is_finite() && opt > 0.0);
+        for algo in [
+            Algorithm::ParallelLloyd,
+            Algorithm::DivideLloyd,
+            Algorithm::SamplingLloyd,
+            Algorithm::SamplingLocalSearch,
+        ] {
+            let out = run_algorithm(algo, &points, &oracle_cluster_cfg(3, seed)).unwrap();
+            let cost = kmedian_cost(&points, &out.centers);
+            assert!(
+                cost <= opt * FACTOR + 1e-6,
+                "seed {seed} {}: cost {cost} vs exact OPT {opt}",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn kcenter_pipeline_within_theorem_bound_of_exact_optimum() {
+    // Theorem 3.7: (4a + 2) with Gonzalez (a = 2) is a 10-approximation;
+    // on a tiny instance the sample is essentially the whole input, so the
+    // observed ratio is far below the bound.
+    for seed in [7u64, 8] {
+        let points = tiny_blobs(28, 3, seed);
+        let opt = exact_kcenter(&points, 3);
+        assert!(opt.is_finite() && opt > 0.0);
+        let out = run_algorithm(Algorithm::MrKCenter, &points, &oracle_cluster_cfg(3, seed))
+            .unwrap();
+        let radius = kcenter_cost(&points, &out.centers);
+        assert!(
+            radius <= opt * 10.0 + 1e-6,
+            "seed {seed}: radius {radius} vs exact OPT {opt}"
+        );
+    }
+}
+
+#[test]
+fn oracle_agrees_with_hand_computation_on_a_known_instance() {
+    // Points {0, 1, 5} on a line, k = 2: any optimal discrete pair covers
+    // two points exactly and pays 1.0 for the remaining one (as distance
+    // sum and as max radius alike).
+    let points = PointSet::from_flat(1, vec![0.0, 1.0, 5.0]);
+    let med = exact_kmedian(&points, 2);
+    assert!((med - 1.0).abs() < 1e-6, "kmedian {med}");
+    let cen = exact_kcenter(&points, 2);
+    assert!((cen - 1.0).abs() < 1e-6, "kcenter {cen}");
+}
