@@ -34,7 +34,7 @@ fn bench_xla_rows(t: &mut Table, n: usize, reps: usize) -> anyhow::Result<()> {
         }
     };
     // Smaller n for the interpret-mode artifact (it is a correctness
-    // path on CPU; real-TPU perf is estimated in DESIGN.md).
+    // path on CPU; real-TPU perf is estimated in EXPERIMENTS.md).
     let nx = (n / 20).max(2048);
     let px = random_ps(nx, 3, 3);
     for &k in &[25usize, 128] {

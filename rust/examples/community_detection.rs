@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         dim: 8,
         sigma: 0.05,
         alpha: 1.2,
+        contamination: 0.0,
         seed: 2026,
     }
     .generate();

@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         k: 25,
         sigma: 0.1,
         alpha: 0.0,
+        contamination: 0.0,
         seed: 42,
         repeats: 1,
         cluster,

@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
         dim: 3,
         sigma: 0.1,
         alpha: 0.0,
+        contamination: 0.0,
         seed: 7,
     }
     .generate();

@@ -11,7 +11,9 @@ use crate::util::rng::Rng;
 /// Result of the farthest-point traversal.
 #[derive(Clone, Debug)]
 pub struct GonzalezResult {
+    /// The chosen centers (a subset of the input points).
     pub centers: PointSet,
+    /// Indices of the centers into the input set.
     pub center_indices: Vec<usize>,
     /// max_x d(x, centers) — the k-center objective (exact, computed on the
     /// input set).

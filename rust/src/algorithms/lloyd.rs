@@ -27,12 +27,15 @@ pub enum UpdateRule {
 /// Lloyd configuration.
 #[derive(Clone, Debug)]
 pub struct LloydConfig {
+    /// Number of centers.
     pub k: usize,
     /// Iteration cap (paper-era implementations run a fixed small number).
     pub max_iters: usize,
     /// Stop when the relative k-median cost improvement drops below this.
     pub tol: f64,
+    /// Center update rule (mean, or one Weiszfeld step).
     pub update: UpdateRule,
+    /// Seeding PRNG seed.
     pub seed: u64,
 }
 
@@ -51,7 +54,9 @@ impl Default for LloydConfig {
 /// Lloyd result.
 #[derive(Clone, Debug)]
 pub struct LloydResult {
+    /// The k centers after the final iteration.
     pub centers: PointSet,
+    /// Iterations executed.
     pub iters: usize,
     /// k-median objective of the final centers (weighted if weights given).
     pub cost_median: f64,

@@ -21,11 +21,13 @@
 
 use super::seeding;
 use crate::geometry::{metric::sq_dist, PointSet};
+use crate::summaries::WeightedSet;
 use crate::util::rng::Rng;
 
 /// Local search configuration.
 #[derive(Clone, Debug)]
 pub struct LocalSearchConfig {
+    /// Number of centers.
     pub k: usize,
     /// A swap must improve the cost by this relative amount to be applied
     /// (the ε/k of Arya et al.; they use polynomially small).
@@ -36,6 +38,7 @@ pub struct LocalSearchConfig {
     /// Fraction of non-center points evaluated as swap-in candidates per
     /// pass (1.0 = exhaustive).
     pub candidate_fraction: f64,
+    /// Seeding / candidate-sampling PRNG seed.
     pub seed: u64,
 }
 
@@ -54,10 +57,13 @@ impl Default for LocalSearchConfig {
 /// Local search result.
 #[derive(Clone, Debug)]
 pub struct LocalSearchResult {
+    /// The chosen centers (a subset of the input points).
     pub centers: PointSet,
     /// Indices of the chosen centers into the input point set.
     pub center_indices: Vec<usize>,
+    /// Swaps the search applied before terminating.
     pub swaps: usize,
+    /// Final (weighted) k-median objective over the input.
     pub cost_median: f64,
 }
 
@@ -219,6 +225,16 @@ pub fn local_search(
     }
 }
 
+/// Weighted single-swap local search over a summary, through the
+/// [`WeightedSet`] interface — the entry point the composable-coreset
+/// k-median pipeline ([`crate::coordinator::robust`]) uses on the merged
+/// summary. Semantically identical to [`local_search`] with the summary's
+/// weights; this wrapper only adapts the weight representation.
+pub fn local_search_weighted(set: &WeightedSet, cfg: &LocalSearchConfig) -> LocalSearchResult {
+    let weights = set.weights_f32();
+    local_search(set.points(), Some(&weights), cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,6 +346,23 @@ mod tests {
         let res = local_search(&p, None, &cfg);
         let cost = kmedian_cost(&p, &res.centers);
         assert!(cost < 60.0, "sampled LS should still separate blobs: {cost}");
+    }
+
+    #[test]
+    fn weighted_set_wrapper_matches_raw_weights() {
+        let p = blobs(&[[0.0, 0.0], [6.0, 6.0]], 30, 0.2, 8);
+        let w: Vec<f64> = (0..p.len()).map(|i| 1.0 + (i % 3) as f64).collect();
+        let set = WeightedSet::new(p.clone(), w.clone());
+        let cfg = LocalSearchConfig {
+            k: 2,
+            seed: 4,
+            ..Default::default()
+        };
+        let via_set = local_search_weighted(&set, &cfg);
+        let w32: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+        let direct = local_search(&p, Some(&w32), &cfg);
+        assert_eq!(via_set.center_indices, direct.center_indices);
+        assert_eq!(via_set.cost_median.to_bits(), direct.cost_median.to_bits());
     }
 
     #[test]

@@ -7,16 +7,20 @@
 //!   the best known approximation (3 + 2/c); weighted variant included;
 //! * [`gonzalez`] — the Gonzalez/Dyer–Frieze farthest-point 2-approximation
 //!   for k-center (`MapReduce-kCenter`'s `A`);
+//! * [`outliers`] — weighted k-center with an outlier budget (Charikar et
+//!   al.'s greedy), the `A` of the robust coordinator pipelines;
 //! * [`seeding`] — random-distinct and k-means++ center initialization.
 
 pub mod gonzalez;
 pub mod lloyd;
 pub mod local_search;
+pub mod outliers;
 pub mod seeding;
 pub mod streaming;
 
 pub use gonzalez::gonzalez;
 pub use lloyd::{lloyd, LloydConfig, LloydResult};
-pub use local_search::{local_search, LocalSearchConfig, LocalSearchResult};
+pub use local_search::{local_search, local_search_weighted, LocalSearchConfig, LocalSearchResult};
+pub use outliers::{kcenter_with_outliers, KCenterOutliersResult};
 pub use seeding::{kmeans_pp, random_distinct};
 pub use streaming::{streaming_kmedian, StreamingConfig, StreamingResult};

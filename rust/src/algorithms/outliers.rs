@@ -1,0 +1,273 @@
+//! Weighted k-center with outliers — the sequential `A` of the robust
+//! pipeline (Charikar et al.'s greedy disk cover, weighted form).
+//!
+//! Problem: given a weighted point set, `k`, and an outlier budget `z`,
+//! pick `k` centers minimizing the maximum distance of any *covered* point
+//! to its center, where up to `z` total weight may be left uncovered
+//! (dropped as outliers). Plain k-center is the `z = 0` special case — and
+//! is notoriously brittle: a single far outlier drags the radius (and,
+//! under farthest-point algorithms, an entire center) away from the data.
+//!
+//! Algorithm (Charikar, Khuller, Mount, Narasimhan): for a guessed radius
+//! `r`, greedily pick the point whose `r`-disk covers the most uncovered
+//! weight, then mark everything within `3r` of it covered; `k` picks
+//! suffice to leave ≤ `z` weight uncovered whenever `r ≥ OPT`, giving a
+//! 3-approximation at the smallest feasible guess. Guesses are searched
+//! over the (deduplicated) pairwise distances. Everything is deterministic
+//! — ties break toward the lowest index — so a recovery replay regenerates
+//! identical centers.
+
+use crate::geometry::{metric::sq_dist, PointSet};
+use crate::summaries::WeightedSet;
+
+/// Result of the weighted outlier-robust k-center greedy.
+#[derive(Clone, Debug)]
+pub struct KCenterOutliersResult {
+    /// The chosen centers (a subset of the input points).
+    pub centers: PointSet,
+    /// Indices of the centers into the input weighted set.
+    pub center_indices: Vec<usize>,
+    /// The radius guess `r` at which the greedy succeeded (the cover is
+    /// certified within `3r`; the exact objective of `centers` is whatever
+    /// the caller evaluates over the original points).
+    pub radius_guess: f64,
+    /// Total weight left uncovered at the certified guess (≤ `z`).
+    pub dropped_weight: f64,
+}
+
+/// Largest candidate-anchor count: above this, pairwise-distance guesses
+/// are taken from a deterministic subsample of anchors so the guess list
+/// stays `O(anchors · m)` instead of `O(m²)`.
+pub const MAX_ANCHORS: usize = 1024;
+
+/// Largest `m` for which the full pairwise-distance matrix is cached
+/// (`m² · 4` bytes — 64 MiB at the cap). The greedy probes the same
+/// distances `O(k · log m)` times, so the one-time matrix pays for itself
+/// immediately; above the cap distances fall back to on-the-fly
+/// recomputation. The robust coordinator keeps its summaries under this
+/// cap by construction.
+pub const MAX_MATRIX: usize = 4096;
+
+fn dist(a: &[f32], b: &[f32]) -> f64 {
+    (sq_dist(a, b).max(0.0) as f64).sqrt()
+}
+
+/// Cached pairwise distances of a weighted set (recomputed on the fly
+/// above [`MAX_MATRIX`] points).
+struct Dists {
+    m: usize,
+    /// Row-major m×m matrix when `m <= MAX_MATRIX`, else empty.
+    matrix: Vec<f32>,
+}
+
+impl Dists {
+    fn new(set: &WeightedSet) -> Dists {
+        let m = set.len();
+        let mut matrix = Vec::new();
+        if m <= MAX_MATRIX {
+            matrix = vec![0.0f32; m * m];
+            for i in 0..m {
+                for j in (i + 1)..m {
+                    let d = dist(set.row(i), set.row(j)) as f32;
+                    matrix[i * m + j] = d;
+                    matrix[j * m + i] = d;
+                }
+            }
+        }
+        Dists { m, matrix }
+    }
+
+    #[inline]
+    fn get(&self, set: &WeightedSet, i: usize, j: usize) -> f64 {
+        if self.matrix.is_empty() {
+            dist(set.row(i), set.row(j))
+        } else {
+            self.matrix[i * self.m + j] as f64
+        }
+    }
+}
+
+/// One greedy cover attempt at radius `r`; returns (centers, uncovered
+/// weight after k picks).
+fn greedy_cover(set: &WeightedSet, dists: &Dists, k: usize, r: f64) -> (Vec<usize>, f64) {
+    let m = set.len();
+    let mut covered = vec![false; m];
+    let mut centers = Vec::with_capacity(k);
+    for _ in 0..k {
+        // The point whose r-disk holds the most uncovered weight.
+        let mut best_j = usize::MAX;
+        let mut best_w = -1.0f64;
+        for j in 0..m {
+            let mut w = 0.0f64;
+            for i in 0..m {
+                if !covered[i] && dists.get(set, i, j) <= r {
+                    w += set.weight(i);
+                }
+            }
+            if w > best_w {
+                best_w = w;
+                best_j = j;
+            }
+        }
+        if best_j == usize::MAX || best_w <= 0.0 {
+            break; // everything already covered
+        }
+        centers.push(best_j);
+        // Expansion step: the 3r-disk swallows every r-disk that overlaps
+        // the chosen one (the crux of the 3-approximation argument).
+        for i in 0..m {
+            if !covered[i] && dists.get(set, i, best_j) <= 3.0 * r {
+                covered[i] = true;
+            }
+        }
+    }
+    let uncovered: f64 = (0..m).filter(|&i| !covered[i]).map(|i| set.weight(i)).sum();
+    (centers, uncovered)
+}
+
+/// Weighted k-center with an outlier budget of `z` total weight.
+///
+/// Deterministic: identical inputs give identical centers, which is what
+/// lets the robust coordinator's leader round satisfy the engine's
+/// bit-identical recovery contract. Cost: one `O(m²)` distance-matrix
+/// build (under [`MAX_MATRIX`] points) plus `O(k · m²)` per radius probe,
+/// `O(log m)` probes.
+pub fn kcenter_with_outliers(set: &WeightedSet, k: usize, z: f64) -> KCenterOutliersResult {
+    assert!(k >= 1, "need at least one center");
+    let m = set.len();
+    if m == 0 {
+        return KCenterOutliersResult {
+            centers: PointSet::with_capacity(set.dim(), 0),
+            center_indices: vec![],
+            radius_guess: 0.0,
+            dropped_weight: 0.0,
+        };
+    }
+    if m <= k {
+        return KCenterOutliersResult {
+            centers: set.points().clone(),
+            center_indices: (0..m).collect(),
+            radius_guess: 0.0,
+            dropped_weight: 0.0,
+        };
+    }
+
+    // Candidate radius guesses: pairwise distances from (a subsample of)
+    // anchors to every point, read through the same cache the greedy uses
+    // so guess values and coverage comparisons agree exactly. OPT is
+    // always a pairwise distance when the anchors are exhaustive; the
+    // subsample (only above MAX_ANCHORS points) trades a vanishing amount
+    // of guess resolution for O(anchors·m) work.
+    let dists = Dists::new(set);
+    let stride = crate::util::div_ceil(m, MAX_ANCHORS);
+    let mut guesses: Vec<f64> = Vec::with_capacity(m * crate::util::div_ceil(m, stride));
+    let mut a = 0;
+    while a < m {
+        for i in 0..m {
+            guesses.push(dists.get(set, a, i));
+        }
+        a += stride;
+    }
+    guesses.push(0.0);
+    guesses.sort_by(f64::total_cmp);
+    guesses.dedup();
+
+    // The greedy succeeds at every guess ≥ OPT, so feasibility is monotone
+    // over the relevant range: binary search for the smallest feasible
+    // guess.
+    let feasible = |r: f64| -> bool { greedy_cover(set, &dists, k, r).1 <= z };
+    let (mut lo, mut hi) = (0usize, guesses.len() - 1);
+    debug_assert!(feasible(guesses[hi]), "max pairwise distance must cover");
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(guesses[mid]) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let r = guesses[hi];
+    let (center_indices, dropped_weight) = greedy_cover(set, &dists, k, r);
+    KCenterOutliersResult {
+        centers: set.points().gather(&center_indices),
+        center_indices,
+        radius_guess: r,
+        dropped_weight,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{kcenter_cost, kcenter_cost_with_outliers};
+
+    fn unit_line(coords: &[f32]) -> WeightedSet {
+        WeightedSet::unit(PointSet::from_flat(1, coords.to_vec()))
+    }
+
+    #[test]
+    fn z_zero_degenerates_to_plain_kcenter_quality() {
+        let s = unit_line(&[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        let res = kcenter_with_outliers(&s, 2, 0.0);
+        assert_eq!(res.centers.len(), 2);
+        assert_eq!(res.dropped_weight, 0.0);
+        // Two tight groups: the 3-approx greedy must not merge them.
+        let radius = kcenter_cost(s.points(), &res.centers);
+        assert!(radius <= 3.0 + 1e-9, "radius {radius}");
+    }
+
+    #[test]
+    fn outlier_budget_ignores_the_far_point() {
+        // A tight blob plus one extreme outlier: with z = 1 the outlier is
+        // dropped and the radius collapses to the blob scale.
+        let s = unit_line(&[0.0, 0.1, 0.2, 0.3, 100.0]);
+        let robust = kcenter_with_outliers(&s, 1, 1.0);
+        let plain = kcenter_with_outliers(&s, 1, 0.0);
+        let robust_cost = kcenter_cost_with_outliers(s.points(), &robust.centers, 1);
+        let plain_cost = kcenter_cost_with_outliers(s.points(), &plain.centers, 1);
+        assert!(robust_cost <= 0.3 + 1e-6, "robust cost {robust_cost}");
+        assert!(
+            robust_cost < plain_cost || plain_cost <= 0.3 + 1e-6,
+            "robust {robust_cost} vs plain {plain_cost}"
+        );
+        assert!(robust.dropped_weight <= 1.0);
+    }
+
+    #[test]
+    fn weight_budget_is_weighted_not_counted() {
+        // The "outlier" carries weight 5: a budget of 1 cannot drop it.
+        let mut s = WeightedSet::with_capacity(1, 4);
+        s.push(&[0.0], 1.0);
+        s.push(&[0.1], 1.0);
+        s.push(&[0.2], 1.0);
+        s.push(&[50.0], 5.0);
+        let res = kcenter_with_outliers(&s, 1, 1.0);
+        // The heavy far point must stay covered: certified radius can't be
+        // blob-scale.
+        assert!(res.radius_guess > 1.0, "guess {}", res.radius_guess);
+    }
+
+    #[test]
+    fn m_leq_k_returns_all_points() {
+        let s = unit_line(&[1.0, 5.0]);
+        let res = kcenter_with_outliers(&s, 4, 0.0);
+        assert_eq!(res.centers.len(), 2);
+        assert_eq!(res.radius_guess, 0.0);
+    }
+
+    #[test]
+    fn empty_input() {
+        let s = WeightedSet::with_capacity(3, 0);
+        let res = kcenter_with_outliers(&s, 3, 2.0);
+        assert!(res.centers.is_empty());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let s = unit_line(&[0.0, 2.0, 2.1, 7.0, 7.3, 30.0]);
+        let a = kcenter_with_outliers(&s, 2, 1.0);
+        let b = kcenter_with_outliers(&s, 2, 1.0);
+        assert_eq!(a.center_indices, b.center_indices);
+        assert_eq!(a.radius_guess.to_bits(), b.radius_guess.to_bits());
+    }
+}

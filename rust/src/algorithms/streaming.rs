@@ -21,13 +21,16 @@ use crate::runtime::{ComputeBackend, NativeBackend};
 /// Streaming k-median configuration.
 #[derive(Clone, Debug)]
 pub struct StreamingConfig {
+    /// Number of centers.
     pub k: usize,
     /// Block size m (memory budget per level). Smaller m ⇒ more levels ⇒
     /// worse approximation — the trade-off the paper discusses.
     pub block_size: usize,
-    /// Lloyd settings for the per-block clustering.
+    /// Lloyd iteration cap for the per-block clustering.
     pub lloyd_max_iters: usize,
+    /// Lloyd stopping tolerance for the per-block clustering.
     pub lloyd_tol: f64,
+    /// PRNG seed.
     pub seed: u64,
 }
 
@@ -46,6 +49,7 @@ impl Default for StreamingConfig {
 /// Result of the streaming pass.
 #[derive(Clone, Debug)]
 pub struct StreamingResult {
+    /// The final k centers.
     pub centers: PointSet,
     /// Number of hierarchy levels that were ever used.
     pub levels: usize,

@@ -32,6 +32,7 @@ pub enum ConstantsProfile {
 }
 
 impl ConstantsProfile {
+    /// The concrete coefficient set this profile names.
     pub fn constants(self) -> SampleConstants {
         match self {
             ConstantsProfile::Theory => SampleConstants::theory(),
@@ -47,6 +48,7 @@ pub struct ClusterConfig {
     pub k: usize,
     /// Iterative-Sample ε (paper experiments: 0.1).
     pub epsilon: f64,
+    /// Which Iterative-Sample constants profile to use.
     pub profile: ConstantsProfile,
     /// Simulated machines (paper: 100).
     pub machines: usize,
@@ -56,26 +58,43 @@ pub struct ClusterConfig {
     pub parallel: bool,
     /// Worker threads (0 = all cores).
     pub threads: usize,
+    /// Which compute backend serves the numeric hot loop.
     pub backend: RuntimeBackendKind,
     /// Directory holding manifest.json + *.hlo.txt.
     pub artifact_dir: PathBuf,
-    /// Lloyd iteration cap / tolerance.
+    /// Lloyd iteration cap.
     pub lloyd_max_iters: usize,
+    /// Lloyd relative-improvement stopping tolerance.
     pub lloyd_tol: f64,
-    /// Local-search knobs.
+    /// Local-search swap cap (safety net; the gain threshold terminates).
     pub ls_max_swaps: usize,
+    /// Local-search minimum relative gain for a swap to be applied.
     pub ls_min_rel_gain: f64,
+    /// Fraction of points evaluated as swap-in candidates (1.0 = all).
     pub ls_candidate_fraction: f64,
-    /// Fault-injection knobs (real lose-output-and-replay semantics with
+    /// Fault-injection knob (real lose-output-and-replay semantics with
     /// bounded retries, optional speculative backups for stragglers, and
     /// round-granularity checkpoint accounting; see `mapreduce::MrConfig`
-    /// and `mapreduce::recovery`). Defaults: injection disabled.
+    /// and `mapreduce::recovery`): probability any task attempt fails.
+    /// Default 0 (injection disabled).
     pub fail_prob: f64,
+    /// Probability a machine-task runs slow (see `mapreduce::MrConfig`).
     pub straggler_prob: f64,
+    /// Simulated-time multiplier for straggling tasks (≥ 1.0).
     pub straggler_factor: f64,
+    /// Failed attempts tolerated per task before the job aborts.
     pub max_task_retries: usize,
+    /// Launch speculative backup copies for straggling tasks.
     pub speculative: bool,
+    /// Charge round-granularity checkpoint writes to the recovery log.
     pub checkpoint: bool,
+    /// Outlier budget `z` for the robust pipelines
+    /// ([`crate::coordinator::robust`]): Robust-kCenter may leave up to
+    /// `z` total weight uncovered; Coreset-kMedian trims up to `z`
+    /// suspected-outlier summary entries. Ignored by the paper's own
+    /// (non-robust) algorithms. Default 0.
+    pub z: usize,
+    /// Root PRNG seed for the whole run.
     pub seed: u64,
 }
 
@@ -105,6 +124,7 @@ impl Default for ClusterConfig {
             max_task_retries: 16,
             speculative: false,
             checkpoint: false,
+            z: 0,
             seed: 42,
         }
     }
@@ -113,7 +133,9 @@ impl Default for ClusterConfig {
 /// Top-level launcher configuration.
 #[derive(Clone, Debug, Default)]
 pub struct AppConfig {
+    /// Synthetic-dataset generation settings (`[data]`).
     pub data: DataGenConfig,
+    /// Clustering/engine settings (`[cluster]`).
     pub cluster: ClusterConfig,
 }
 
@@ -158,6 +180,7 @@ impl AppConfig {
             ("data", "dim") => self.data.dim = p(value)?,
             ("data", "sigma") => self.data.sigma = p(value)?,
             ("data", "alpha") => self.data.alpha = p(value)?,
+            ("data", "contamination") => self.data.contamination = p(value)?,
             ("data", "seed") => self.data.seed = p(value)?,
             ("cluster", "k") => self.cluster.k = p(value)?,
             ("cluster", "epsilon") => self.cluster.epsilon = p(value)?,
@@ -199,6 +222,7 @@ impl AppConfig {
             ("cluster", "max_task_retries") => self.cluster.max_task_retries = p(value)?,
             ("cluster", "speculative") => self.cluster.speculative = p(value)?,
             ("cluster", "checkpoint") => self.cluster.checkpoint = p(value)?,
+            ("cluster", "z") => self.cluster.z = p(value)?,
             ("cluster", "seed") => self.cluster.seed = p(value)?,
             (s, k) => anyhow::bail!("unknown config key [{s}] {k}"),
         }
@@ -254,6 +278,24 @@ mod tests {
         assert_eq!(cfg.cluster.max_task_retries, 5);
         assert!(cfg.cluster.speculative);
         assert!(cfg.cluster.checkpoint);
+    }
+
+    #[test]
+    fn outlier_keys_apply() {
+        let cfg = AppConfig::load(
+            None,
+            &[
+                ("cluster.z".into(), "12".into()),
+                ("data.contamination".into(), "0.02".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.z, 12);
+        assert!((cfg.data.contamination - 0.02).abs() < 1e-12);
+        // Defaults: robustness knobs off.
+        let d = AppConfig::default();
+        assert_eq!(d.cluster.z, 0);
+        assert_eq!(d.data.contamination, 0.0);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::runtime::{ComputeBackend, NativeBackend};
 /// Result of MapReduce-Divide-kMedian.
 #[derive(Clone, Debug)]
 pub struct DivideResult {
+    /// The k centers.
     pub centers: PointSet,
     /// Number of partitions ℓ.
     pub partitions: usize,

@@ -36,6 +36,12 @@ pub enum Algorithm {
     /// Guha et al. hierarchical streaming k-median [20] — the streaming
     /// baseline the paper contrasts its constant-round guarantee with.
     StreamingGuha,
+    /// k-center with `z` outliers over composable coverage summaries
+    /// (Ceccarello et al.; see [`super::robust`]).
+    RobustKCenter,
+    /// Composable-coreset k-median: weighted local search on the merged
+    /// per-machine summaries (Mazzetto et al.; see [`super::robust`]).
+    CoresetKMedian,
 }
 
 impl Algorithm {
@@ -50,6 +56,8 @@ impl Algorithm {
             Algorithm::LocalSearch => "LocalSearch",
             Algorithm::MrKCenter => "MapReduce-kCenter",
             Algorithm::StreamingGuha => "Streaming-Guha",
+            Algorithm::RobustKCenter => "Robust-kCenter",
+            Algorithm::CoresetKMedian => "Coreset-kMedian",
         }
     }
 
@@ -69,6 +77,10 @@ impl Algorithm {
             "localsearch" => Algorithm::LocalSearch,
             "mrkcenter" | "kcenter" | "mapreducekcenter" => Algorithm::MrKCenter,
             "streamingguha" | "streaming" => Algorithm::StreamingGuha,
+            "robustkcenter" | "kcenteroutliers" | "kcenterwithoutliers" => {
+                Algorithm::RobustKCenter
+            }
+            "coresetkmedian" | "coreset" => Algorithm::CoresetKMedian,
             _ => return None,
         })
     }
@@ -99,7 +111,9 @@ impl Algorithm {
 /// The uniform result record all drivers produce.
 #[derive(Clone, Debug)]
 pub struct Outcome {
+    /// Which algorithm produced this outcome.
     pub algorithm: Algorithm,
+    /// The k centers the run selected.
     pub centers: PointSet,
     /// Exact objectives of `centers` over the full input.
     pub cost: CostSummary,
@@ -109,9 +123,12 @@ pub struct Outcome {
     pub sim_time: std::time::Duration,
     /// Host wall-clock for the whole run.
     pub wall_time: std::time::Duration,
+    /// MapReduce rounds executed (the quantity the paper's theorems bound).
     pub rounds: usize,
-    /// |C| for the sampling algorithms, ℓ·k for divide, None otherwise.
+    /// |C| for the sampling algorithms, ℓ·k for divide, the composed
+    /// summary size for the robust pipelines, None otherwise.
     pub reduced_size: Option<usize>,
+    /// Full per-round accounting (timing, shuffle, memory, recovery).
     pub stats: RunStats,
 }
 
@@ -229,6 +246,14 @@ pub fn run_algorithm_with(
             let r = mr_kcenter(&mut cluster, points, cfg, backend)?;
             (r.centers, Some(r.sample_size))
         }
+        Algorithm::RobustKCenter => {
+            let r = super::robust::mr_kcenter_outliers(&mut cluster, points, cfg, backend)?;
+            (r.centers, Some(r.summary_size))
+        }
+        Algorithm::CoresetKMedian => {
+            let r = super::robust::mr_coreset_kmedian(&mut cluster, points, cfg, backend)?;
+            (r.centers, Some(r.summary_size))
+        }
         Algorithm::StreamingGuha => {
             // One-pass hierarchical streaming on a single machine; its
             // memory charge is one block per level (the streaming model's
@@ -321,10 +346,11 @@ mod tests {
 
     #[test]
     fn names_roundtrip_through_parse() {
-        for algo in Algorithm::figure1()
-            .into_iter()
-            .chain([Algorithm::MrKCenter])
-        {
+        for algo in Algorithm::figure1().into_iter().chain([
+            Algorithm::MrKCenter,
+            Algorithm::RobustKCenter,
+            Algorithm::CoresetKMedian,
+        ]) {
             assert_eq!(Algorithm::parse(algo.name()), Some(algo), "{}", algo.name());
         }
         assert_eq!(Algorithm::parse("sampling-lloyd"), Some(Algorithm::SamplingLloyd));

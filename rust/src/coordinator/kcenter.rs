@@ -17,8 +17,11 @@ use crate::util::rng::Rng;
 /// Result of MapReduce-kCenter.
 #[derive(Clone, Debug)]
 pub struct MrKCenterResult {
+    /// The k centers.
     pub centers: PointSet,
+    /// Size of the Iterative-Sample output the final `A` ran on.
     pub sample_size: usize,
+    /// Iterations the distributed sampler ran.
     pub sample_iterations: usize,
 }
 

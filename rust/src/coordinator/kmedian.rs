@@ -19,8 +19,11 @@ use crate::runtime::ComputeBackend;
 /// Result of MapReduce-kMedian.
 #[derive(Clone, Debug)]
 pub struct MrKMedianResult {
+    /// The k centers.
     pub centers: PointSet,
+    /// Size of the weighted sample the final `A` ran on.
     pub sample_size: usize,
+    /// Iterations the distributed sampler ran.
     pub sample_iterations: usize,
 }
 

@@ -10,6 +10,11 @@
 //! | §4.1 `Parallel-Lloyd`                     | [`parallel_lloyd`] |
 //! | §4.1 sequential `LocalSearch` baseline    | [`driver`] (direct call) |
 //!
+//! Beyond the paper, [`robust`] adds the outlier-robust pipelines built on
+//! the composable summary layer ([`crate::summaries`]): k-center with
+//! outliers (Ceccarello et al.) and composable-coreset k-median (Mazzetto
+//! et al.).
+//!
 //! [`driver::run_algorithm`] is the single entry point used by the CLI,
 //! examples, and benches.
 
@@ -19,6 +24,7 @@ pub mod kcenter;
 pub mod kmedian;
 pub mod mr_iterative_sample;
 pub mod parallel_lloyd;
+pub mod robust;
 
 pub use driver::{run_algorithm, run_algorithm_with, Algorithm, Outcome};
 
@@ -36,6 +42,8 @@ impl MemSize for LloydStepOut {
 /// the union of per-partition centers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum InnerAlgo {
+    /// Lloyd's algorithm (the fast heuristic the experiments favor).
     Lloyd,
+    /// Arya et al. single-swap local search (the constant-factor `A`).
     LocalSearch,
 }

@@ -69,6 +69,7 @@ pub struct MrSampleResult {
     pub sample: PointSet,
     /// Global indices of C into the input point set.
     pub indices: Vec<usize>,
+    /// While-loop iterations the distributed sampler ran.
     pub iterations: usize,
 }
 

@@ -16,9 +16,13 @@ use crate::util::rng::Rng;
 /// Result of a Parallel-Lloyd run.
 #[derive(Clone, Debug)]
 pub struct ParallelLloydResult {
+    /// The k centers after the final iteration.
     pub centers: PointSet,
+    /// Lloyd iterations (= MapReduce rounds) executed.
     pub iters: usize,
+    /// k-median objective of the final centers.
     pub cost_median: f64,
+    /// Objective value per iteration (for convergence plots).
     pub history: Vec<f64>,
 }
 

@@ -1,0 +1,423 @@
+//! Outlier-robust coordinator pipelines over the composable summary layer
+//! ([`crate::summaries`]).
+//!
+//! Both pipelines share the same three-round shape — the composable-coreset
+//! structure of Ceccarello et al. (k-center with outliers) and Mazzetto et
+//! al. (coreset k-median):
+//!
+//! 1. **summarize** (machine round, resident blocks): every machine
+//!    compresses its block into a [`CoverageSummary`] — a weighted
+//!    farthest-point skeleton sized so that far outliers survive as their
+//!    own low-weight representatives;
+//! 2. **compose** (a *generic key/value round*, [`MrCluster::run_round`]):
+//!    summaries shuffle to `⌈√m⌉` reducers which merge them with
+//!    [`Coreset::compose`]. Because composition is associative and
+//!    commutative bit-for-bit, the unspecified shuffle order and lineage
+//!    replay of lost reduce outputs cannot change a byte of the result;
+//! 3. **final `A`** (leader round): the composed weighted summary is small
+//!    enough for one machine, which runs the outlier-robust sequential
+//!    algorithm ([`kcenter_with_outliers`]) or weighted local search
+//!    ([`local_search_weighted`]).
+//!
+//! Rounds are O(1), each machine holds its block plus a summary, and the
+//! leader holds only the composed summary plus the greedy's pairwise
+//! distances. Per-machine summary sizes are clamped so the composed
+//! summary never exceeds [`MAX_SUMMARY_REPS`] representatives — without
+//! the clamp a large `z` (or machine count) would quietly degenerate the
+//! summary back into the whole dataset and void both the leader's memory
+//! envelope and the final step's feasibility.
+
+use crate::algorithms::local_search::{local_search_weighted, LocalSearchConfig};
+use crate::algorithms::outliers::kcenter_with_outliers;
+use crate::config::ClusterConfig;
+use crate::geometry::PointSet;
+use crate::mapreduce::{MrCluster, MrError};
+use crate::runtime::ComputeBackend;
+use crate::summaries::{Coreset, CoverageSummary, WeightedSet};
+
+/// Result of the k-center-with-outliers pipeline.
+#[derive(Clone, Debug)]
+pub struct RobustKCenterResult {
+    /// The k centers.
+    pub centers: PointSet,
+    /// Representatives in the composed summary the final `A` ran on.
+    pub summary_size: usize,
+    /// Summary weight the final `A` left uncovered (≤ the `z` budget).
+    pub dropped_weight: f64,
+    /// Max coverage radius over all per-machine summaries (the summary
+    /// layer's contribution to the approximation error).
+    pub summary_radius: f64,
+}
+
+/// Result of the composable-coreset k-median pipeline.
+#[derive(Clone, Debug)]
+pub struct CoresetKMedianResult {
+    /// The k centers.
+    pub centers: PointSet,
+    /// Representatives in the composed summary (before outlier trimming).
+    pub summary_size: usize,
+    /// Summary entries trimmed as suspected outliers before the final `A`.
+    pub trimmed: usize,
+}
+
+/// Hard cap on the composed summary's representative count, enforced
+/// unconditionally: both the per-machine size (the requested `k + z` /
+/// `4k + z`) *and* the summarize round's partition count are clamped so
+/// that `n_parts · tau ≤ MAX_SUMMARY_REPS`. The leader's final `A` is
+/// `O(k · m² · log m)`, so an uncapped `z` or machine count must not be
+/// able to degenerate the summary back into the whole dataset. When
+/// `machines · k` exceeds the cap, *fewer, larger* blocks are summarized
+/// (each still to ≥ `k` representatives); grouped outliers remain
+/// droppable either way — the outlier *weight* is unchanged, only its
+/// granularity coarsens. The cap is below
+/// [`crate::algorithms::outliers::MAX_MATRIX`], so the final greedy
+/// always runs against its cached distance matrix.
+pub const MAX_SUMMARY_REPS: usize = 2048;
+
+/// The summarize round's shape under the [`MAX_SUMMARY_REPS`] cap:
+/// `(n_parts, tau)` with `n_parts · tau ≤ MAX_SUMMARY_REPS` always. First
+/// the partition count is bounded so every machine can still afford ≥ `k`
+/// representatives, then the per-machine size is bounded by the
+/// remainder.
+fn summary_shape(machines: usize, n: usize, k: usize, tau_request: usize) -> (usize, usize) {
+    let max_parts = (MAX_SUMMARY_REPS / k.max(1)).max(1);
+    let n_parts = machines.min(n).min(max_parts).max(1);
+    let tau = tau_request.min(MAX_SUMMARY_REPS / n_parts).max(1);
+    (n_parts, tau)
+}
+
+/// Rounds 1–2 shared by both pipelines: summarize every resident block to
+/// (up to) `tau` weighted representatives, then merge the per-machine
+/// summaries in a reduce step. Returns the fully composed summary.
+fn summarize_and_compose(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+    label: &str,
+    tau: usize,
+) -> Result<CoverageSummary, MrError> {
+    let (n_parts, tau) = summary_shape(cfg.machines, points.len(), cfg.k, tau);
+    let parts = points.chunks(n_parts);
+
+    // ---- Round 1: per-machine coverage summaries (resident blocks) ----
+    let seed = cfg.seed;
+    let summaries: Vec<CoverageSummary> = cluster.run_machine_round(
+        &format!("{label}: summarize blocks"),
+        &parts,
+        0,
+        move |m, part: &PointSet| {
+            CoverageSummary::build(part, tau.min(part.len()).max(1), seed ^ (m as u64), backend)
+        },
+    )?;
+
+    // ---- Round 2: associative composition inside a reduce step ----
+    // ⌈√m⌉ groups: each reducer folds ~√m summaries, the leader folds the
+    // √m group results — a two-level compose tree. compose() is immune to
+    // the shuffle's grouping and ordering, so this round is bit-exact under
+    // any thread count and any injected-failure replay.
+    let groups = (summaries.len() as f64).sqrt().ceil().max(1.0) as usize;
+    let keyed: Vec<(usize, CoverageSummary)> = summaries.into_iter().enumerate().collect();
+    let merged_groups: Vec<(usize, CoverageSummary)> = cluster.run_round(
+        &format!("{label}: compose summaries"),
+        keyed,
+        move |i: &usize, s: &CoverageSummary, emit| emit(i % groups, s.clone()),
+        |g: &usize, group: &[CoverageSummary], emit| {
+            let folded = group
+                .iter()
+                .cloned()
+                .reduce(Coreset::compose)
+                .expect("non-empty shuffle group");
+            emit(*g, folded);
+        },
+    )?;
+
+    Ok(merged_groups
+        .into_iter()
+        .map(|(_, s)| s)
+        .reduce(Coreset::compose)
+        .unwrap_or_else(|| {
+            CoverageSummary::from_weighted(WeightedSet::with_capacity(points.dim(), 0), 0.0)
+        }))
+}
+
+/// MapReduce k-center with outliers: per-machine coverage summaries of
+/// size `k + z` (Ceccarello et al.'s sizing — enough representatives that
+/// the `z` outliers cannot hide inside a cluster's summary; clamped to
+/// keep the composed summary under [`MAX_SUMMARY_REPS`]), composed
+/// associatively, with the `z` outliers dropped only at the final
+/// sequential step.
+pub fn mr_kcenter_outliers(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<RobustKCenterResult, MrError> {
+    let tau = (cfg.k + cfg.z).max(1);
+    let merged = summarize_and_compose(cluster, points, cfg, backend, "robust-kcenter", tau)?;
+
+    // ---- Round 3: weighted outlier-robust A on one machine. The leader
+    // holds the summary plus the greedy's cached distance matrix (the
+    // same |C|²-style charge MapReduce-kCenter pays for its sample);
+    // above MAX_MATRIX the greedy recomputes on the fly and no matrix is
+    // charged. The summary cap keeps m under MAX_MATRIX in this pipeline,
+    // so the branch only matters for direct library callers.
+    let m = merged.len();
+    let matrix_bytes = if m <= crate::algorithms::outliers::MAX_MATRIX {
+        m * m * 4
+    } else {
+        0
+    };
+    let leader_mem = crate::mapreduce::MemSize::mem_bytes(&merged) + matrix_bytes;
+    let k = cfg.k;
+    let z = cfg.z as f64;
+    let merged_ref = &merged;
+    let result = cluster.run_leader_round("robust-kcenter: A on summary", leader_mem, || {
+        kcenter_with_outliers(merged_ref.reps(), k, z)
+    })?;
+
+    Ok(RobustKCenterResult {
+        centers: result.centers,
+        summary_size: m,
+        dropped_weight: result.dropped_weight,
+        summary_radius: merged.radius(),
+    })
+}
+
+/// Composable-coreset k-median: per-machine coverage summaries (sized
+/// `4k + z` so cluster geometry survives the compression), composed
+/// associatively, then weighted local search on the merged summary — with
+/// the `z` lightest representatives trimmed first, since outliers surface
+/// in a coverage summary as their own weight-≈1 entries.
+pub fn mr_coreset_kmedian(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<CoresetKMedianResult, MrError> {
+    let tau = (4 * cfg.k + cfg.z).max(1);
+    let merged = summarize_and_compose(cluster, points, cfg, backend, "coreset-kmedian", tau)?;
+    let summary_size = merged.len();
+
+    // Trim up to z suspected outliers (lightest entries; ties resolve by
+    // the canonical order, so the trim is deterministic), but never below
+    // k survivors.
+    let reps = merged.reps();
+    let trimmed = cfg.z.min(summary_size.saturating_sub(cfg.k));
+    let mut order: Vec<usize> = (0..summary_size).collect();
+    order.sort_by(|&a, &b| reps.weight(a).total_cmp(&reps.weight(b)).then(a.cmp(&b)));
+    let mut keep: Vec<usize> = order[trimmed..].to_vec();
+    keep.sort_unstable(); // back to canonical order for the final A
+    let trimmed_set = reps.gather(&keep);
+
+    let leader_mem = crate::mapreduce::MemSize::mem_bytes(&trimmed_set);
+    let ls_cfg = LocalSearchConfig {
+        k: cfg.k,
+        min_rel_gain: cfg.ls_min_rel_gain,
+        max_swaps: cfg.ls_max_swaps,
+        candidate_fraction: cfg.ls_candidate_fraction,
+        seed: cfg.seed ^ 0xC0_5E7,
+    };
+    let set_ref = &trimmed_set;
+    let ls_ref = &ls_cfg;
+    let centers = cluster.run_leader_round(
+        "coreset-kmedian: weighted local search",
+        leader_mem,
+        || local_search_weighted(set_ref, ls_ref).centers,
+    )?;
+
+    Ok(CoresetKMedianResult {
+        centers,
+        summary_size,
+        trimmed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+    use crate::mapreduce::MrConfig;
+    use crate::metrics::{kcenter_cost_with_outliers, kmedian_cost};
+    use crate::runtime::NativeBackend;
+
+    fn contaminated(n: usize, k: usize, contamination: f64, seed: u64) -> crate::data::Dataset {
+        DataGenConfig {
+            n,
+            k,
+            sigma: 0.05,
+            contamination,
+            seed,
+            ..Default::default()
+        }
+        .generate()
+    }
+
+    fn cluster(machines: usize) -> MrCluster {
+        MrCluster::new(MrConfig {
+            n_machines: machines,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn robust_kcenter_three_rounds_and_shapes() {
+        let data = contaminated(2000, 5, 0.01, 51);
+        let z = data.n_outliers();
+        let cfg = ClusterConfig {
+            k: 5,
+            machines: 8,
+            z,
+            seed: 51,
+            ..Default::default()
+        };
+        let mut c = cluster(8);
+        let res = mr_kcenter_outliers(&mut c, &data.points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(c.stats.n_rounds(), 3, "summarize + compose + A");
+        assert_eq!(res.centers.len(), 5);
+        assert!(res.summary_size <= 8 * (5 + z));
+        assert!(res.dropped_weight <= z as f64 + 1e-9);
+    }
+
+    #[test]
+    fn robust_kcenter_shrugs_off_contamination() {
+        let data = contaminated(2000, 5, 0.01, 52);
+        let z = data.n_outliers();
+        assert!(z > 0, "contamination must have produced outliers");
+        let cfg = ClusterConfig {
+            k: 5,
+            machines: 8,
+            z,
+            seed: 52,
+            ..Default::default()
+        };
+        let mut c = cluster(8);
+        let res = mr_kcenter_outliers(&mut c, &data.points, &cfg, &NativeBackend).unwrap();
+        let robust_cost = kcenter_cost_with_outliers(&data.points, &res.centers, z);
+        // Calibration: the planted centers with the same z dropped are the
+        // harness's reference; the pipeline pays the summary radius plus
+        // the greedy's 3x, so 4x the reference is a conservative envelope.
+        let reference = kcenter_cost_with_outliers(&data.points, &data.planted_centers, z);
+        assert!(
+            robust_cost <= reference * 4.0 + 1e-6,
+            "robust {robust_cost} vs reference {reference}"
+        );
+    }
+
+    #[test]
+    fn coreset_kmedian_quality_on_clean_data() {
+        let data = contaminated(4000, 8, 0.0, 53);
+        let cfg = ClusterConfig {
+            k: 8,
+            machines: 8,
+            seed: 53,
+            ls_max_swaps: 40,
+            ..Default::default()
+        };
+        let mut c = cluster(8);
+        let res = mr_coreset_kmedian(&mut c, &data.points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(c.stats.n_rounds(), 3);
+        assert_eq!(res.centers.len(), 8);
+        assert_eq!(res.trimmed, 0, "z defaults to 0");
+        let cost = kmedian_cost(&data.points, &res.centers);
+        let planted = data.planted_cost_median();
+        assert!(cost < planted * 2.0, "cost {cost} vs planted {planted}");
+    }
+
+    #[test]
+    fn replays_identically_at_any_machine_count() {
+        let data = contaminated(1000, 4, 0.02, 54);
+        let z = data.n_outliers();
+        for machines in [4usize, 9] {
+            let cfg = ClusterConfig {
+                k: 4,
+                machines,
+                z,
+                seed: 54,
+                ..Default::default()
+            };
+            let a = mr_kcenter_outliers(&mut cluster(machines), &data.points, &cfg, &NativeBackend)
+                .unwrap();
+            let b = mr_kcenter_outliers(&mut cluster(machines), &data.points, &cfg, &NativeBackend)
+                .unwrap();
+            assert_eq!(a.centers, b.centers, "same config must replay identically");
+        }
+    }
+
+    #[test]
+    fn summary_shape_invariants_hold_across_the_knob_space() {
+        // The cap must hold for EVERY (machines, n, k, z) combination —
+        // including machines * k far beyond the cap, where the partition
+        // count itself must shrink.
+        for machines in [1usize, 4, 100, 1000, 5000] {
+            for n in [1usize, 100, 10_000, 1_000_000] {
+                for k in [1usize, 5, 25, 400] {
+                    for z in [0usize, 10, 1000, 100_000] {
+                        let (n_parts, tau) = summary_shape(machines, n, k, k + z);
+                        assert!(
+                            n_parts * tau <= MAX_SUMMARY_REPS,
+                            "cap violated: machines={machines} n={n} k={k} z={z} \
+                             -> {n_parts} x {tau}"
+                        );
+                        assert!(n_parts >= 1 && tau >= 1);
+                        assert!(n_parts <= machines.min(n.max(1)));
+                        // Every machine can afford k reps while the
+                        // request allows it and k itself fits the cap.
+                        if k <= MAX_SUMMARY_REPS {
+                            assert!(tau >= k.min(k + z), "tau {tau} < k {k}");
+                        }
+                    }
+                }
+            }
+        }
+        // The documented-default regime the review flagged: 100 machines,
+        // k = 25 must stay under the cap (81 x 25 = 2025).
+        let (n_parts, tau) = summary_shape(100, 50_000, 25, 25 + 500);
+        assert!(n_parts * tau <= MAX_SUMMARY_REPS);
+        assert_eq!(tau, 25);
+        // And the summary always fits the greedy's distance-matrix cache.
+        assert!(MAX_SUMMARY_REPS <= crate::algorithms::outliers::MAX_MATRIX);
+    }
+
+    #[test]
+    fn huge_z_cannot_degenerate_the_summary_into_the_dataset() {
+        // z is a user knob: an absurd budget must clamp the per-machine
+        // summary size instead of shipping every point to the leader
+        // (k = 1 keeps the final greedy cheap at the capped size).
+        let data = contaminated(4096, 3, 0.0, 56);
+        let cfg = ClusterConfig {
+            k: 1,
+            machines: 4,
+            z: 1000,
+            seed: 56,
+            ..Default::default()
+        };
+        let mut c = cluster(4);
+        let res = mr_kcenter_outliers(&mut c, &data.points, &cfg, &NativeBackend).unwrap();
+        assert!(
+            res.summary_size <= super::MAX_SUMMARY_REPS,
+            "summary {} blew past the cap",
+            res.summary_size
+        );
+        assert!(
+            res.summary_size < data.points.len() / 2,
+            "summary {} is not a summary",
+            res.summary_size
+        );
+        assert_eq!(res.centers.len(), 1);
+    }
+
+    #[test]
+    fn single_machine_degenerate_case() {
+        let data = contaminated(100, 3, 0.0, 55);
+        let cfg = ClusterConfig {
+            k: 3,
+            machines: 1,
+            seed: 55,
+            ..Default::default()
+        };
+        let res =
+            mr_kcenter_outliers(&mut cluster(1), &data.points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(res.centers.len(), 3);
+    }
+}

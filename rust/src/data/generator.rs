@@ -7,6 +7,11 @@
 //! * a point is its planted center plus a `N(0, sigma²)` offset per
 //!   coordinate (global standard deviation `sigma = 0.1` in the paper).
 //!
+//! Beyond the paper, [`DataGenConfig::contamination`] replaces a fraction
+//! of points with far-away uniform outliers (the adversary of the robust
+//! pipelines, labeled [`OUTLIER_LABEL`]); `contamination = 0` reproduces
+//! the paper's generator bit-for-bit.
+//!
 //! The planted centers and per-point cluster labels are kept so experiments
 //! can report "ground-truth" costs alongside algorithm costs.
 
@@ -26,9 +31,23 @@ pub struct DataGenConfig {
     pub sigma: f64,
     /// Zipf skew of cluster sizes (paper: 0 in the reported figures).
     pub alpha: f64,
+    /// Fraction of points replaced by uniform far outliers in
+    /// `[-OUTLIER_SPREAD, 1 + OUTLIER_SPREAD]^dim` (labeled
+    /// [`OUTLIER_LABEL`]). 0 (the default) reproduces the paper's clean
+    /// generator bit-for-bit — the contamination coin is only flipped when
+    /// this is positive, so existing seeds replay unchanged.
+    pub contamination: f64,
     /// PRNG seed.
     pub seed: u64,
 }
+
+/// Label marking a contaminated (outlier) point in [`Dataset::labels`].
+pub const OUTLIER_LABEL: u32 = u32::MAX;
+
+/// Half-width of the outlier box beyond the unit cube: contaminated
+/// coordinates are uniform in `[-OUTLIER_SPREAD, 1 + OUTLIER_SPREAD]`, an
+/// order of magnitude outside the planted-blob geometry.
+pub const OUTLIER_SPREAD: f32 = 5.0;
 
 impl Default for DataGenConfig {
     fn default() -> Self {
@@ -38,6 +57,7 @@ impl Default for DataGenConfig {
             dim: 3,
             sigma: 0.1,
             alpha: 0.0,
+            contamination: 0.0,
             seed: 42,
         }
     }
@@ -46,18 +66,27 @@ impl Default for DataGenConfig {
 /// A generated dataset: points plus planting metadata.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// The generated points.
     pub points: PointSet,
     /// Planted cluster centers (k x dim).
     pub planted_centers: PointSet,
-    /// Planted cluster label of each point.
+    /// Planted cluster label of each point ([`OUTLIER_LABEL`] for
+    /// contaminated points).
     pub labels: Vec<u32>,
+    /// The configuration that generated this dataset.
     pub config: DataGenConfig,
 }
 
 impl DataGenConfig {
+    /// Generate the dataset this configuration describes (deterministic in
+    /// the seed).
     pub fn generate(&self) -> Dataset {
         assert!(self.k >= 1, "need at least one cluster");
         assert!(self.n >= 1, "need at least one point");
+        assert!(
+            (0.0..1.0).contains(&self.contamination),
+            "contamination must be in [0, 1)"
+        );
         let mut rng = Rng::new(self.seed);
 
         // Planted centers: uniform in the unit cube.
@@ -74,7 +103,18 @@ impl DataGenConfig {
         let zipf = Zipf::new(self.k, self.alpha);
         let mut points = PointSet::with_capacity(self.dim, self.n);
         let mut labels = Vec::with_capacity(self.n);
+        let box_width = 1.0 + 2.0 * OUTLIER_SPREAD;
         for _ in 0..self.n {
+            // Short-circuit keeps the clean (contamination = 0) RNG stream
+            // identical to the paper-faithful generator.
+            if self.contamination > 0.0 && rng.bernoulli(self.contamination) {
+                labels.push(OUTLIER_LABEL);
+                for r in row.iter_mut() {
+                    *r = rng.f32() * box_width - OUTLIER_SPREAD;
+                }
+                points.push(&row);
+                continue;
+            }
             let c = zipf.sample(&mut rng);
             labels.push(c as u32);
             let center = centers.row(c);
@@ -94,8 +134,16 @@ impl DataGenConfig {
 }
 
 impl Dataset {
+    /// Number of contaminated (outlier) points the generator produced —
+    /// the natural `z` budget for the robust pipelines.
+    pub fn n_outliers(&self) -> usize {
+        self.labels.iter().filter(|&&l| l == OUTLIER_LABEL).count()
+    }
+
     /// The k-median cost of the *planted* centers — a handy (not optimal)
-    /// reference line for experiment reports.
+    /// reference line for experiment reports. With contamination, the
+    /// outliers' (large) distances are included; use
+    /// [`crate::metrics::kmedian_cost_with_outliers`] to exclude them.
     pub fn planted_cost_median(&self) -> f64 {
         let mut acc = 0.0f64;
         for i in 0..self.points.len() {
@@ -200,6 +248,53 @@ mod tests {
             // 3 coords * sigma=0.01 each: distances beyond 0.1 are ~10 sigma.
             assert!(dist < 0.1, "point {i} too far from its center: {dist}");
         }
+    }
+
+    #[test]
+    fn contamination_plants_far_outliers() {
+        let cfg = DataGenConfig {
+            n: 5000,
+            k: 5,
+            sigma: 0.05,
+            contamination: 0.02,
+            seed: 9,
+            ..Default::default()
+        };
+        let d = cfg.generate();
+        let z = d.n_outliers();
+        // ~100 expected; Bernoulli spread is tight at n = 5000.
+        assert!((60..=140).contains(&z), "outlier count {z}");
+        let mut outside = 0usize;
+        for i in 0..d.points.len() {
+            let is_outlier = d.labels[i] == OUTLIER_LABEL;
+            let row = d.points.row(i);
+            let far = row.iter().any(|&c| !(-0.5..=1.5).contains(&c));
+            if is_outlier && far {
+                outside += 1;
+            }
+            if !is_outlier {
+                assert!(!far, "clean point {i} escaped the blob geometry");
+            }
+        }
+        // The outlier box is 11 units wide vs the unit cube: the vast
+        // majority of outliers must land clearly outside.
+        assert!(outside * 10 >= z * 7, "{outside}/{z} outliers far");
+    }
+
+    #[test]
+    fn zero_contamination_is_bit_identical_to_clean_generator() {
+        let clean = DataGenConfig {
+            n: 2000,
+            k: 6,
+            seed: 31,
+            ..Default::default()
+        };
+        let explicit = DataGenConfig {
+            contamination: 0.0,
+            ..clean.clone()
+        };
+        assert_eq!(clean.generate().points, explicit.generate().points);
+        assert_eq!(clean.generate().n_outliers(), 0);
     }
 
     #[test]

@@ -3,5 +3,5 @@
 pub mod generator;
 pub mod loader;
 
-pub use generator::{DataGenConfig, Dataset};
+pub use generator::{DataGenConfig, Dataset, OUTLIER_LABEL, OUTLIER_SPREAD};
 pub use loader::{load_csv, load_f32_bin, save_csv, save_f32_bin};

@@ -1,4 +1,4 @@
-//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//! Experiment drivers — one per paper table/figure (see EXPERIMENTS.md).
 //!
 //! Each driver generates the paper's workload, runs the paper's algorithm
 //! set, and returns a [`FigureReport`] that renders the same rows the paper
@@ -18,12 +18,19 @@ pub use crate::coordinator::driver::make_backend;
 /// Shared experiment parameters (the paper's §4.2 setting).
 #[derive(Clone, Debug)]
 pub struct ExperimentParams {
+    /// Number of centers / planted clusters.
     pub k: usize,
+    /// Point spread around the planted centers.
     pub sigma: f64,
+    /// Zipf skew of cluster sizes.
     pub alpha: f64,
+    /// Fraction of points replaced by far outliers (E12; 0 elsewhere).
+    pub contamination: f64,
+    /// Base PRNG seed (per-repetition seeds derive from it).
     pub seed: u64,
     /// Repetitions averaged per cell (paper: 3).
     pub repeats: usize,
+    /// The cluster/driver configuration shared by every cell.
     pub cluster: ClusterConfig,
 }
 
@@ -33,6 +40,7 @@ impl Default for ExperimentParams {
             k: 25,
             sigma: 0.1,
             alpha: 0.0,
+            contamination: 0.0,
             seed: 42,
             repeats: 1,
             cluster: ClusterConfig::default(),
@@ -48,6 +56,7 @@ impl ExperimentParams {
             dim: 3,
             sigma: self.sigma,
             alpha: self.alpha,
+            contamination: self.contamination,
             seed: self.seed + rep as u64 * 1000,
         }
     }
@@ -160,13 +169,19 @@ pub fn kcenter_compare(
 
 /// E4 — Iterative-Sample statistics across n and ε (Propositions 2.1/2.2).
 pub struct SampleStatsRow {
+    /// Input size of this row.
     pub n: usize,
+    /// Iterative-Sample ε of this row.
     pub epsilon: f64,
+    /// While-loop iterations the sampler ran.
     pub iterations: usize,
+    /// Final sample size |C|.
     pub sample_size: usize,
+    /// The proposition's size bound for these parameters.
     pub bound: f64,
 }
 
+/// Run the E4 sweep: sampler statistics for every (n, ε) pair.
 pub fn sample_stats(
     params: &ExperimentParams,
     ns: &[usize],
@@ -238,16 +253,24 @@ pub fn streaming_compare(
 
 /// One row of the E11 fault-tolerance sweep.
 pub struct FaultSweepRow {
+    /// Algorithm display name.
     pub algo: String,
+    /// Injected per-attempt failure probability of this row.
     pub fail_prob: f64,
+    /// Injected straggler probability of this row.
     pub straggler_prob: f64,
     /// Centers and cost exactly equal the fault-free run's (the recovery
     /// layer's determinism contract).
     pub bit_identical: bool,
+    /// Lineage replays the run performed.
     pub replays: usize,
+    /// Bytes re-materialized by those replays.
     pub recomputed_bytes: usize,
+    /// Speculative backups that beat their straggling original.
     pub speculative_wins: usize,
+    /// k-median objective of the recovered run.
     pub cost_median: f64,
+    /// Simulated time including the fault model's charges.
     pub sim_time: std::time::Duration,
 }
 
@@ -267,6 +290,8 @@ pub fn fault_sweep(
         Algorithm::SamplingLloyd,
         Algorithm::MrKCenter,
         Algorithm::StreamingGuha,
+        Algorithm::RobustKCenter,
+        Algorithm::CoresetKMedian,
     ];
     let data = params.data_config(n, 0).generate();
     let mut rows = Vec::new();
@@ -302,6 +327,64 @@ pub fn fault_sweep(
         }
     }
     Ok(rows)
+}
+
+/// One row of the E12 outlier-robustness comparison.
+pub struct OutlierCompareRow {
+    /// Algorithm display name.
+    pub algo: String,
+    /// Plain k-center objective (max distance, outliers included).
+    pub cost_center: f64,
+    /// k-center objective after the `z` farthest points are dropped — the
+    /// fair yardstick on contaminated data.
+    pub cost_center_z: f64,
+    /// Centers under the lossy fault regime (fail_prob 0.05) are
+    /// bit-identical to the clean run's.
+    pub lossy_identical: bool,
+    /// Lineage replays the lossy run performed.
+    pub lossy_replays: usize,
+}
+
+/// E12 — outlier robustness: on a contaminated dataset, compare plain
+/// MapReduce-kCenter against the summary-based Robust-kCenter, evaluating
+/// both by the cost-with-`z`-outliers metric, and re-run each pipeline
+/// under the scenario harness's lossy fault regime to verify recovery
+/// stays bit-identical. Returns `(z, rows)` where `z` is the number of
+/// outliers the generator actually planted (also used as the budget).
+pub fn outlier_compare(
+    params: &ExperimentParams,
+    n: usize,
+    backend: &dyn ComputeBackend,
+) -> Result<(usize, Vec<OutlierCompareRow>)> {
+    let data = params.data_config(n, 0).generate();
+    let z = data.n_outliers();
+    let clean_cfg = ClusterConfig {
+        z,
+        fail_prob: 0.0,
+        straggler_prob: 0.0,
+        ..params.cluster_config(0)
+    };
+    let lossy_cfg = ClusterConfig {
+        fail_prob: 0.05,
+        ..clean_cfg.clone()
+    };
+    let mut rows = Vec::new();
+    for algo in [Algorithm::MrKCenter, Algorithm::RobustKCenter] {
+        let clean = run_algorithm_with(algo, &data.points, &clean_cfg, backend)?;
+        let lossy = run_algorithm_with(algo, &data.points, &lossy_cfg, backend)?;
+        rows.push(OutlierCompareRow {
+            algo: algo.name().to_string(),
+            cost_center: clean.cost.center,
+            cost_center_z: crate::metrics::kcenter_cost_with_outliers(
+                &data.points,
+                &clean.centers,
+                z,
+            ),
+            lossy_identical: lossy.centers == clean.centers,
+            lossy_replays: lossy.stats.total_retries(),
+        });
+    }
+    Ok((z, rows))
 }
 
 /// E7 — Zipf-skew robustness sweep (the "similar results, omitted" claim).
@@ -368,19 +451,46 @@ mod tests {
     #[test]
     fn fault_sweep_is_bit_identical_and_counts_replays() {
         let rows = fault_sweep(&tiny(), 1500, &[(0.3, 0.2)], &NativeBackend).unwrap();
-        assert_eq!(rows.len(), 5);
+        assert_eq!(rows.len(), 7);
         let mut total_replays = 0usize;
         for r in &rows {
             assert!(r.bit_identical, "{} diverged under faults", r.algo);
             total_replays += r.replays;
             // Single-leader-round pipelines draw one fate per run, so only
-            // multi-round pipelines are guaranteed injected failures.
-            if r.algo != "Streaming-Guha" {
+            // pipelines with many rounds are guaranteed injected failures
+            // (the three-round robust pipelines draw few fates too).
+            if !matches!(
+                r.algo.as_str(),
+                "Streaming-Guha" | "Robust-kCenter" | "Coreset-kMedian"
+            ) {
                 assert!(r.replays > 0, "{} saw no injected failures", r.algo);
                 assert!(r.recomputed_bytes > 0, "{}", r.algo);
             }
         }
         assert!(total_replays > 0);
+    }
+
+    #[test]
+    fn outlier_compare_robust_wins_and_recovers() {
+        let params = ExperimentParams {
+            sigma: 0.05,
+            contamination: 0.02,
+            ..tiny()
+        };
+        let (z, rows) = outlier_compare(&params, 1200, &NativeBackend).unwrap();
+        assert!(z > 0, "contamination must plant outliers");
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.lossy_identical, "{} diverged under lossy faults", r.algo);
+        }
+        let (plain, robust) = (&rows[0], &rows[1]);
+        assert_eq!(robust.algo, "Robust-kCenter");
+        assert!(
+            robust.cost_center_z <= plain.cost_center_z + 1e-9,
+            "robust {} vs plain {}",
+            robust.cost_center_z,
+            plain.cost_center_z
+        );
     }
 
     #[test]

@@ -110,14 +110,17 @@ impl DistanceMatrix {
         DistanceMatrix { n, d }
     }
 
+    /// Number of points the matrix covers.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// True when the matrix covers no points.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
+    /// Distance between points `i` and `j`.
     #[inline]
     pub fn dist(&self, i: usize, j: usize) -> f32 {
         self.d[i * self.n + j]

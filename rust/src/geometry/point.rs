@@ -81,14 +81,17 @@ impl PointSet {
         }
     }
 
+    /// Number of points in this view.
     pub fn len(&self) -> usize {
         self.len / self.dim
     }
 
+    /// True when the view holds no points.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Point dimensionality.
     pub fn dim(&self) -> usize {
         self.dim
     }
@@ -107,6 +110,18 @@ impl PointSet {
     }
 
     /// O(1) zero-copy view of rows `lo..hi` (aliases this set's storage).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use mrcluster::geometry::PointSet;
+    ///
+    /// let p = PointSet::from_flat(2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    /// let v = p.view(1, 3);
+    /// assert_eq!(v.len(), 2);
+    /// assert_eq!(v.row(0), &[2.0, 3.0]);
+    /// assert!(v.shares_storage(&p)); // no coordinates were copied
+    /// ```
     pub fn view(&self, lo: usize, hi: usize) -> PointSet {
         assert!(
             lo <= hi && hi <= self.len(),
@@ -199,6 +214,18 @@ impl PointSet {
     /// Split into `parts` nearly-equal contiguous chunks (last may be
     /// shorter). Used by the MapReduce partitioners. Zero-copy: every chunk
     /// is a view aliasing this set's storage.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use mrcluster::geometry::PointSet;
+    ///
+    /// let p = PointSet::from_flat(1, (0..10).map(|i| i as f32).collect());
+    /// let chunks = p.chunks(3);
+    /// assert_eq!(chunks.len(), 3);
+    /// assert_eq!(chunks.iter().map(PointSet::len).sum::<usize>(), 10);
+    /// assert!(chunks.iter().all(|c| c.shares_storage(&p))); // all views
+    /// ```
     pub fn chunks(&self, parts: usize) -> Vec<PointSet> {
         assert!(parts > 0);
         let n = self.len();

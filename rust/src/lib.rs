@@ -9,7 +9,9 @@
 //!   [`coordinator`]: `MapReduce-Iterative-Sample` (Algorithm 3),
 //!   `MapReduce-kCenter` (Algorithm 4), `MapReduce-kMedian` (Algorithm 5),
 //!   `MapReduce-Divide-kMedian` (Algorithm 6) and `Parallel-Lloyd`, plus all
-//!   sequential baselines in [`algorithms`].
+//!   sequential baselines in [`algorithms`]. Beyond the paper, the
+//!   [`summaries`] layer adds composable weighted coresets and the
+//!   outlier-robust pipelines in [`coordinator::robust`].
 //! * **L2/L1 (python, build-time only)** — the numeric hot loop
 //!   (blocked nearest-center assignment and Lloyd accumulation) written in
 //!   JAX calling a Pallas kernel, AOT-lowered to HLO-text artifacts.
@@ -31,8 +33,11 @@
 //! println!("k-median cost = {:.4}", outcome.cost_median);
 //! ```
 //!
-//! See `examples/` for end-to-end drivers and `DESIGN.md` for the
-//! paper-to-module map.
+//! See `examples/` for end-to-end drivers and `ARCHITECTURE.md` (repo
+//! root) for the paper-to-module map, the round-by-round pipeline
+//! diagrams, and the determinism/recovery contract.
+
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod config;
@@ -44,6 +49,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
 pub mod sampling;
+pub mod summaries;
 pub mod util;
 
 pub use config::{ClusterConfig, ConstantsProfile};
@@ -59,8 +65,12 @@ pub mod prelude {
     pub use crate::data::{DataGenConfig, Dataset};
     pub use crate::geometry::{Metric, PointSet};
     pub use crate::mapreduce::{MrCluster, MrConfig, RunStats};
-    pub use crate::metrics::{kcenter_cost, kmedian_cost, kmeans_cost};
+    pub use crate::metrics::{
+        kcenter_cost, kcenter_cost_with_outliers, kmedian_cost, kmedian_cost_with_outliers,
+        kmeans_cost,
+    };
     pub use crate::runtime::{ComputeBackend, NativeBackend};
     pub use crate::sampling::{IterativeSampleConfig, SampleConstants};
+    pub use crate::summaries::{Coreset, CoverageSummary, WeightedSet};
     pub use crate::util::rng::Rng;
 }

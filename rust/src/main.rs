@@ -13,6 +13,7 @@
 //!   sample-stats             E4: Iterative-Sample iterations/size sweeps
 //!   skew-sweep               E7: Zipf-α robustness
 //!   fault-sweep              E11: recovery under fault/straggler regimes
+//!   outlier-compare          E12: robust vs plain k-center on contaminated data
 //!   mrc-check                run Sampling-Lloyd and verify MRC^0 bounds
 //! ```
 //!
@@ -86,6 +87,7 @@ fn params_from(cfg: &AppConfig, repeats: usize) -> ExperimentParams {
         k: cfg.cluster.k,
         sigma: cfg.data.sigma,
         alpha: cfg.data.alpha,
+        contamination: cfg.data.contamination,
         seed: cfg.data.seed,
         repeats,
         cluster: cfg.cluster.clone(),
@@ -125,6 +127,7 @@ fn main() -> Result<()> {
         "sample-stats" => cmd_sample_stats(&cfg, &args)?,
         "skew-sweep" => cmd_skew(&cfg, &args)?,
         "fault-sweep" => cmd_fault_sweep(&cfg, &args)?,
+        "outlier-compare" => cmd_outlier_compare(&cfg, &args)?,
         "streaming-compare" => cmd_streaming(&cfg, &args)?,
         "kmeans-check" => cmd_kmeans(&cfg, &args)?,
         "mrc-check" => cmd_mrc_check(&cfg)?,
@@ -152,15 +155,18 @@ commands:
   fault-sweep        [--n N] [--regimes f:s,...]: E11 fault tolerance —
                      lose-output failure injection, lineage-replay recovery,
                      bit-identical output verification
+  outlier-compare    [--n N] [--contamination F]: E12 outlier robustness —
+                     Robust-kCenter vs plain MapReduce-kCenter on a
+                     contaminated dataset, plus lossy-regime recovery check
   mrc-check          run Sampling-Lloyd, assert MRC^0 resource bounds
                      (including the recovery-memory audit)
 
 algorithms: Parallel-Lloyd, Divide-Lloyd, Divide-LocalSearch,
             Sampling-Lloyd, Sampling-LocalSearch, LocalSearch, MrKCenter,
-            Streaming-Guha
+            Streaming-Guha, Robust-kCenter, Coreset-kMedian
 
 config keys (TOML [section] key, or --set section.key=value):
-  data.n data.k data.dim data.sigma data.alpha data.seed
+  data.n data.k data.dim data.sigma data.alpha data.contamination data.seed
   cluster.k cluster.epsilon cluster.profile(theory|practical)
   cluster.machines cluster.mem_limit cluster.parallel cluster.threads
   cluster.backend(native|xla) cluster.artifact_dir
@@ -168,7 +174,7 @@ config keys (TOML [section] key, or --set section.key=value):
   cluster.ls_max_swaps cluster.ls_min_rel_gain cluster.ls_candidate_fraction
   cluster.fail_prob cluster.straggler_prob cluster.straggler_factor
   cluster.max_task_retries cluster.speculative cluster.checkpoint
-  cluster.seed
+  cluster.z cluster.seed
 ";
 
 fn cmd_info(cfg: &AppConfig) -> Result<()> {
@@ -449,6 +455,59 @@ fn cmd_fault_sweep(cfg: &AppConfig, args: &Args) -> Result<()> {
     print!("{}", t.render());
     if !all_identical {
         bail!("recovery produced a result that diverged from the fault-free run");
+    }
+    Ok(())
+}
+
+fn cmd_outlier_compare(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let n = args
+        .flags
+        .get("n")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(50_000);
+    let contamination = args
+        .flags
+        .get("contamination")
+        .map(|s| s.parse::<f64>())
+        .transpose()?
+        .unwrap_or(if cfg.data.contamination > 0.0 {
+            cfg.data.contamination
+        } else {
+            0.01
+        });
+    let mut params = params_from(cfg, 1);
+    params.contamination = contamination;
+    let backend = experiments::make_backend(&cfg.cluster);
+    let (z, rows) = experiments::outlier_compare(&params, n, backend.as_ref())?;
+    println!(
+        "== E12: k-center with outliers (n = {n}, contamination = {contamination}, z = {z}) =="
+    );
+    let mut t = Table::new(vec![
+        "algorithm",
+        "max radius",
+        "radius less z outliers",
+        "lossy recovery identical",
+        "lossy replays",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.algo.clone(),
+            format!("{:.4}", r.cost_center),
+            format!("{:.4}", r.cost_center_z),
+            if r.lossy_identical { "yes".into() } else { "NO".into() },
+            r.lossy_replays.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    if let [plain, robust] = &rows[..] {
+        println!(
+            "robustness margin (plain / robust, z dropped): {:.2}x",
+            plain.cost_center_z / robust.cost_center_z.max(1e-12)
+        );
+        if !plain.lossy_identical || !robust.lossy_identical {
+            bail!("lossy-regime recovery diverged from the clean run");
+        }
     }
     Ok(())
 }

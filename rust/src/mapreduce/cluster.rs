@@ -102,7 +102,9 @@ impl MrConfig {
 /// A simulated MapReduce cluster accumulating [`RunStats`].
 #[derive(Debug)]
 pub struct MrCluster {
+    /// The engine configuration this cluster was built with.
     pub config: MrConfig,
+    /// Accumulated per-round accounting of every job run on this cluster.
     pub stats: RunStats,
     /// Deterministic stream driving fault/straggler injection.
     fault_rng: crate::util::rng::Rng,
@@ -261,6 +263,8 @@ fn replay_lost<O>(
 }
 
 impl MrCluster {
+    /// Build a cluster: spawns the persistent worker pool and seeds the
+    /// deterministic fault stream from `config.fault_seed`.
     pub fn new(config: MrConfig) -> Self {
         let fault_rng = crate::util::rng::Rng::new(config.fault_seed);
         // Spawn the workers once; every round of every job reuses them.
@@ -324,6 +328,46 @@ impl MrCluster {
     /// Returns all reducer outputs. Map/reduce compute is timed per machine;
     /// the round is charged `max(map) + max(reduce)` of simulated time, with
     /// lost attempts, replays, and stragglers charged by the fault model.
+    ///
+    /// The *order* of the returned pairs follows the reducers' machine
+    /// placement and is not specified across runs — treat the result as a
+    /// multiset (sort it, or make the reduction order-insensitive like
+    /// [`crate::summaries::Coreset::compose`]).
+    ///
+    /// # Examples
+    ///
+    /// The classic word-count, on four simulated machines:
+    ///
+    /// ```
+    /// use mrcluster::mapreduce::{MrCluster, MrConfig};
+    ///
+    /// let mut cluster = MrCluster::new(MrConfig {
+    ///     n_machines: 4,
+    ///     ..Default::default()
+    /// });
+    /// let docs: Vec<(usize, String)> =
+    ///     vec![(0, "a b a".into()), (1, "b c".into())];
+    /// let mut counts = cluster
+    ///     .run_round(
+    ///         "word-count",
+    ///         docs,
+    ///         |_id, doc: &String, emit| {
+    ///             for word in doc.split_whitespace() {
+    ///                 emit(word.to_string(), 1usize);
+    ///             }
+    ///         },
+    ///         |word: &String, ones: &[usize], emit| {
+    ///             emit(word.clone(), ones.iter().sum::<usize>());
+    ///         },
+    ///     )
+    ///     .unwrap();
+    /// counts.sort();
+    /// assert_eq!(
+    ///     counts,
+    ///     vec![("a".into(), 2), ("b".into(), 2), ("c".into(), 1)]
+    /// );
+    /// assert_eq!(cluster.stats.n_rounds(), 1);
+    /// ```
     pub fn run_round<K1, V1, K2, V2, K3, V3, M, R>(
         &mut self,
         label: &str,

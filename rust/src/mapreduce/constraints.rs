@@ -18,23 +18,34 @@ pub struct Mrc0Report {
     pub epsilon: f64,
     /// Constant factor allowed on both bounds.
     pub slack: f64,
+    /// The machine-count bound `slack * N^(1-eps)`.
     pub machine_bound: f64,
+    /// The per-machine memory bound `slack * N^(1-eps)` bytes.
     pub memory_bound: f64,
+    /// Rounds the run executed.
     pub rounds: usize,
+    /// The constant round bound the caller's configuration implies.
     pub round_bound: usize,
+    /// Most machines any round used.
     pub peak_machines: usize,
+    /// Highest per-machine memory charge of any round.
     pub peak_machine_mem: usize,
     /// Highest per-machine memory held *for recovery* (lineage replays,
     /// mutable-block checkpoints). Fault tolerance must not be a loophole
     /// in the per-machine budget, so it is audited against the same bound.
     pub peak_replay_mem: usize,
+    /// peak_machines within machine_bound.
     pub machines_ok: bool,
+    /// peak_machine_mem within memory_bound.
     pub memory_ok: bool,
+    /// rounds within round_bound.
     pub rounds_ok: bool,
+    /// peak_replay_mem within memory_bound.
     pub recovery_ok: bool,
 }
 
 impl Mrc0Report {
+    /// True when every bound holds.
     pub fn ok(&self) -> bool {
         self.machines_ok && self.memory_ok && self.rounds_ok && self.recovery_ok
     }

@@ -11,6 +11,7 @@ use crate::geometry::PointSet;
 
 /// Approximate in-memory footprint in bytes.
 pub trait MemSize {
+    /// Payload bytes plus inline size of `self`.
     fn mem_bytes(&self) -> usize;
 }
 

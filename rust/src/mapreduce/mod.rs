@@ -52,20 +52,31 @@ pub use stats::{RoundStats, RunStats};
 /// Errors surfaced by the engine.
 #[derive(Debug)]
 pub enum MrError {
+    /// A machine's memory charge exceeded `MrConfig::mem_limit` (the
+    /// `MRC^0` per-machine budget).
     MemoryExceeded {
+        /// Label of the offending round.
         round: String,
+        /// Machine index that blew the budget (`usize::MAX` = the leader).
         machine: usize,
+        /// Bytes the machine was charged.
         used: usize,
+        /// The configured budget in bytes.
         limit: usize,
     },
     /// A task failed more than `MrConfig::max_task_retries` consecutive
     /// attempts; the job aborts (Hadoop's `mapred.max.attempts`).
     TaskFailed {
+        /// Label of the offending round.
         round: String,
+        /// Task index whose retry budget ran out.
         task: usize,
+        /// Attempts the task consumed before the abort.
         attempts: usize,
     },
+    /// A worker thread panicked while executing machine tasks.
     WorkerPanic {
+        /// Label of the offending round.
         round: String,
     },
 }

@@ -35,10 +35,12 @@ impl RoundStats {
 /// Accumulated measurements of a whole MapReduce run.
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
+    /// Every recorded round, in execution order.
     pub rounds: Vec<RoundStats>,
 }
 
 impl RunStats {
+    /// Record one finished round.
     pub fn push(&mut self, r: RoundStats) {
         self.rounds.push(r);
     }

@@ -89,6 +89,55 @@ pub fn kmeans_cost(points: &PointSet, centers: &PointSet) -> f64 {
     eval_costs(points, centers, 0).means
 }
 
+/// All true (non-squared) nearest-center distances (one [`assign_full`]
+/// pass, which already clamps negatives).
+fn nearest_dists(points: &PointSet, centers: &PointSet) -> Vec<f64> {
+    assert!(!centers.is_empty(), "no centers");
+    assert_eq!(points.dim(), centers.dim(), "dim mismatch");
+    let (sqdists, _) = assign_full(points, centers);
+    sqdists.into_iter().map(|d2| (d2 as f64).sqrt()).collect()
+}
+
+/// k-center objective with `z` outliers: max d(x, C) after the `z`
+/// farthest points are dropped. `z = 0` is [`kcenter_cost`]; `z >= n`
+/// costs 0 (everything may be dropped).
+pub fn kcenter_cost_with_outliers(points: &PointSet, centers: &PointSet, z: usize) -> f64 {
+    let mut d = nearest_dists(points, centers);
+    let n = d.len();
+    if z >= n {
+        return 0.0;
+    }
+    let keep = n - z - 1;
+    *d.select_nth_unstable_by(keep, f64::total_cmp).1
+}
+
+/// k-median objective with `z` outliers: Σ d(x, C) over all but the `z`
+/// farthest points, summed in index order (deterministic).
+pub fn kmedian_cost_with_outliers(points: &PointSet, centers: &PointSet, z: usize) -> f64 {
+    let d = nearest_dists(points, centers);
+    let n = d.len();
+    if z >= n {
+        return 0.0;
+    }
+    let mut sorted = d.clone();
+    let threshold = *sorted.select_nth_unstable_by(n - z - 1, f64::total_cmp).1;
+    // Drop exactly z: everything strictly above the threshold plus enough
+    // threshold-equal points to fill the budget (ties resolved by index).
+    let mut budget = z - d.iter().filter(|&&x| x > threshold).count();
+    let mut sum = 0.0f64;
+    for &x in &d {
+        if x > threshold {
+            continue;
+        }
+        if x == threshold && budget > 0 {
+            budget -= 1;
+            continue;
+        }
+        sum += x;
+    }
+    sum
+}
+
 /// Full nearest-center assignment: (sq-distance, index) per point.
 /// Single-threaded; used by the sequential baselines and tests.
 pub fn assign_full(points: &PointSet, centers: &PointSet) -> (Vec<f32>, Vec<u32>) {
@@ -175,5 +224,32 @@ mod tests {
     fn empty_centers_panics() {
         let p = line_points();
         eval_costs(&p, &PointSet::from_flat(1, vec![]), 1);
+    }
+
+    #[test]
+    fn outlier_kcenter_drops_farthest() {
+        let p = line_points(); // 0, 1, 2, 10
+        let c = PointSet::from_flat(1, vec![0.0]);
+        assert!((kcenter_cost_with_outliers(&p, &c, 0) - 10.0).abs() < 1e-9);
+        assert!((kcenter_cost_with_outliers(&p, &c, 1) - 2.0).abs() < 1e-9);
+        assert!((kcenter_cost_with_outliers(&p, &c, 3) - 0.0).abs() < 1e-9);
+        assert_eq!(kcenter_cost_with_outliers(&p, &c, 99), 0.0);
+    }
+
+    #[test]
+    fn outlier_kmedian_drops_farthest() {
+        let p = line_points();
+        let c = PointSet::from_flat(1, vec![0.0]);
+        assert!((kmedian_cost_with_outliers(&p, &c, 0) - 13.0).abs() < 1e-9);
+        assert!((kmedian_cost_with_outliers(&p, &c, 1) - 3.0).abs() < 1e-9);
+        assert!((kmedian_cost_with_outliers(&p, &c, 4) - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outlier_kmedian_tie_drop_is_exact() {
+        // Three points at the same max distance; z = 2 must drop exactly 2.
+        let p = PointSet::from_flat(1, vec![0.0, 5.0, 5.0, 5.0]);
+        let c = PointSet::from_flat(1, vec![0.0]);
+        assert!((kmedian_cost_with_outliers(&p, &c, 2) - 5.0).abs() < 1e-9);
     }
 }

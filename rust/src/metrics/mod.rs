@@ -8,4 +8,7 @@
 pub mod cost;
 pub mod report;
 
-pub use cost::{assign_full, kcenter_cost, kmeans_cost, kmedian_cost, CostSummary};
+pub use cost::{
+    assign_full, kcenter_cost, kcenter_cost_with_outliers, kmeans_cost, kmedian_cost,
+    kmedian_cost_with_outliers, CostSummary,
+};

@@ -7,7 +7,9 @@ use std::time::Duration;
 /// One algorithm run on one workload size.
 #[derive(Clone, Debug)]
 pub struct RunRecord {
+    /// Algorithm display name.
     pub algo: String,
+    /// Workload size of this run.
     pub n: usize,
     /// k-median objective of the returned centers over ALL points.
     pub cost_median: f64,
@@ -22,11 +24,14 @@ pub struct RunRecord {
 /// A Figure-1/2 style result matrix: rows = algorithms, columns = n values.
 #[derive(Clone, Debug, Default)]
 pub struct FigureReport {
+    /// Every n value any record covers (sorted).
     pub ns: Vec<usize>,
+    /// All collected records.
     pub records: Vec<RunRecord>,
 }
 
 impl FigureReport {
+    /// Add one record, registering its n as a column.
     pub fn add(&mut self, rec: RunRecord) {
         if !self.ns.contains(&rec.n) {
             self.ns.push(rec.n);

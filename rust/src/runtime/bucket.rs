@@ -12,12 +12,16 @@ use super::manifest::Entry;
 /// A chosen artifact bucket for a workload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Bucket {
+    /// Point-block capacity B of the artifact.
     pub b: usize,
+    /// Center capacity K of the artifact.
     pub k: usize,
+    /// Dimensionality D of the artifact (must match exactly).
     pub d: usize,
 }
 
 impl Bucket {
+    /// The bucket a manifest entry describes.
     pub fn of_entry(e: &Entry) -> Bucket {
         Bucket {
             b: e.b,

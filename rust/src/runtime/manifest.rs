@@ -24,7 +24,9 @@ pub struct Entry {
 /// The parsed artifact manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest (and its HLO files) live in.
     pub dir: PathBuf,
+    /// Every artifact the manifest lists.
     pub entries: Vec<Entry>,
 }
 

@@ -125,5 +125,6 @@ pub trait ComputeBackend: Send + Sync {
             .collect()
     }
 
+    /// Backend display name ("native", "xla") for logs and reports.
     fn name(&self) -> &'static str;
 }

@@ -106,10 +106,13 @@ impl SampleConstants {
 /// Configuration of one Iterative-Sample run.
 #[derive(Clone, Debug)]
 pub struct IterativeSampleConfig {
+    /// Number of centers the downstream algorithm will pick.
     pub k: usize,
     /// The paper's ε parameter (0 < ε < δ/2); experiments use 0.1.
     pub epsilon: f64,
+    /// Constants profile (theory-literal or practical).
     pub constants: SampleConstants,
+    /// PRNG seed.
     pub seed: u64,
     /// Safety cap on loop iterations (the theory says O(1/ε)).
     pub max_iters: usize,
@@ -130,10 +133,15 @@ impl Default for IterativeSampleConfig {
 /// Per-iteration diagnostics (used by the sample-stats experiment, E4).
 #[derive(Clone, Debug)]
 pub struct IterationStats {
+    /// |R| entering the iteration.
     pub remaining_before: usize,
+    /// Points Bernoulli-sampled into the batch.
     pub sampled: usize,
+    /// Witness points drawn for the pivot choice.
     pub witnesses: usize,
+    /// The chosen pivot distance (0 when no pivot was selected).
     pub pivot_dist: f32,
+    /// Points pruned (sampled or well-represented).
     pub dropped: usize,
 }
 
@@ -144,7 +152,9 @@ pub struct SampleResult {
     pub sample: PointSet,
     /// Indices of `C` into the input set.
     pub indices: Vec<usize>,
+    /// While-loop iterations executed.
     pub iterations: usize,
+    /// Per-iteration diagnostics, one entry per iteration.
     pub iter_stats: Vec<IterationStats>,
 }
 

@@ -1,0 +1,256 @@
+//! The [`Coreset`] composition contract and the concrete
+//! [`CoverageSummary`] the robust coordinators ship between machines.
+
+use super::weighted::WeightedSet;
+use crate::geometry::PointSet;
+use crate::mapreduce::MemSize;
+use crate::runtime::ComputeBackend;
+use crate::util::rng::Rng;
+
+/// A summary that composes associatively and commutatively, **bit-for-bit**.
+///
+/// `compose(a, b)` must satisfy, as exact byte equality (not approximate
+/// equality):
+///
+/// * commutativity — `compose(a, b) == compose(b, a)`;
+/// * associativity — `compose(compose(a, b), c) == compose(a, compose(b, c))`.
+///
+/// This is what lets per-machine summaries meet inside a reduce step in
+/// *whatever order the shuffle delivers them* — and lets a replayed
+/// (recovered) reduce task regenerate the identical bytes its failed
+/// attempt lost — without weakening the engine's bit-identical recovery
+/// guarantee. Implementations achieve it by keeping entries in a canonical
+/// total order and never arithmetically combining them during composition
+/// (see [`WeightedSet::canonicalize`]); `rust/tests/prop_summaries.rs`
+/// property-tests the contract under random permutations and groupings.
+///
+/// # Examples
+///
+/// ```
+/// use mrcluster::geometry::PointSet;
+/// use mrcluster::runtime::NativeBackend;
+/// use mrcluster::summaries::{Coreset, CoverageSummary};
+///
+/// // Two machines summarize their resident blocks independently...
+/// let left = CoverageSummary::build(
+///     &PointSet::from_flat(1, vec![0.0, 0.1, 5.0]), 2, 1, &NativeBackend);
+/// let right = CoverageSummary::build(
+///     &PointSet::from_flat(1, vec![9.0, 9.2]), 1, 2, &NativeBackend);
+///
+/// // ...and the merged summary is the same bytes in either merge order.
+/// let ab = Coreset::compose(left.clone(), right.clone());
+/// let ba = Coreset::compose(right, left);
+/// assert_eq!(ab, ba);
+/// assert_eq!(ab.total_weight(), 5.0); // every input point is represented
+/// ```
+pub trait Coreset: Sized {
+    /// Merge two summaries into one covering the union of their inputs.
+    fn compose(a: Self, b: Self) -> Self;
+
+    /// Total input weight this summary represents.
+    fn total_weight(&self) -> f64;
+}
+
+/// A per-machine *coverage summary* (Ceccarello et al. style): a
+/// farthest-point skeleton of the machine's resident block in which every
+/// representative is weighted by the number of block points it covers,
+/// plus the coverage radius (the largest distance from a block point to
+/// its representative).
+///
+/// Because a far outlier is, by construction of the farthest-point
+/// traversal, selected as its *own* representative (with weight ≈ 1), the
+/// summary preserves outliers as identifiable low-weight entries — which
+/// is exactly what the final outlier-robust sequential step needs
+/// ([`crate::algorithms::outliers::kcenter_with_outliers`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoverageSummary {
+    /// Weighted representatives, always in canonical order.
+    reps: WeightedSet,
+    /// max over summarized points of d(point, its representative): the
+    /// summary's proxy error. Composition takes the max.
+    radius: f64,
+}
+
+impl CoverageSummary {
+    /// Summarize `block` down to at most `size` weighted representatives
+    /// via a farthest-point traversal seeded by `seed` (the traversal's
+    /// start point is the only random choice, so a fixed seed makes the
+    /// summary a pure function of the block — the property recovery replay
+    /// relies on). The coverage counts run through `backend`'s assignment
+    /// kernel.
+    pub fn build(
+        block: &PointSet,
+        size: usize,
+        seed: u64,
+        backend: &dyn ComputeBackend,
+    ) -> CoverageSummary {
+        assert!(size >= 1, "summary size must be positive");
+        if block.is_empty() {
+            return CoverageSummary {
+                reps: WeightedSet::with_capacity(block.dim(), 0),
+                radius: 0.0,
+            };
+        }
+        let mut rng = Rng::new(seed);
+        let skeleton = crate::algorithms::gonzalez::gonzalez(block, size, &mut rng);
+        let assign = backend.assign(block, &skeleton.centers);
+        let mut weights = vec![0.0f64; skeleton.centers.len()];
+        let mut max_sq = 0.0f32;
+        for (&c, &d2) in assign.idx.iter().zip(&assign.sqdist) {
+            weights[c as usize] += 1.0;
+            if d2 > max_sq {
+                max_sq = d2;
+            }
+        }
+        CoverageSummary {
+            reps: WeightedSet::new(skeleton.centers, weights).canonicalize(),
+            radius: (max_sq.max(0.0) as f64).sqrt(),
+        }
+    }
+
+    /// Wrap an existing weighted set as a summary (canonicalizing it) with
+    /// a caller-supplied coverage radius.
+    pub fn from_weighted(reps: WeightedSet, radius: f64) -> CoverageSummary {
+        CoverageSummary {
+            reps: reps.canonicalize(),
+            radius,
+        }
+    }
+
+    /// The canonical weighted representatives.
+    pub fn reps(&self) -> &WeightedSet {
+        &self.reps
+    }
+
+    /// Coverage radius: an upper bound on how far any summarized input
+    /// point lies from its representative.
+    pub fn radius(&self) -> f64 {
+        self.radius
+    }
+
+    /// Number of representatives.
+    pub fn len(&self) -> usize {
+        self.reps.len()
+    }
+
+    /// True when the summary holds no representatives.
+    pub fn is_empty(&self) -> bool {
+        self.reps.is_empty()
+    }
+
+}
+
+impl Coreset for CoverageSummary {
+    /// Canonical multiset union of the representatives; the radius is the
+    /// max of the two. No weights are added during composition, so the
+    /// result's bytes are independent of the compose tree.
+    fn compose(a: Self, b: Self) -> Self {
+        if a.reps.is_empty() {
+            return CoverageSummary {
+                radius: a.radius.max(b.radius),
+                reps: b.reps,
+            };
+        }
+        if b.reps.is_empty() {
+            return CoverageSummary {
+                radius: a.radius.max(b.radius),
+                reps: a.reps,
+            };
+        }
+        assert_eq!(a.reps.dim(), b.reps.dim(), "summary dim mismatch");
+        let mut merged = WeightedSet::with_capacity(a.reps.dim(), a.len() + b.len());
+        merged.extend(&a.reps);
+        merged.extend(&b.reps);
+        CoverageSummary {
+            reps: merged.canonicalize(),
+            radius: a.radius.max(b.radius),
+        }
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.reps.total_weight()
+    }
+}
+
+impl MemSize for CoverageSummary {
+    fn mem_bytes(&self) -> usize {
+        self.reps.mem_bytes() + std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn line(coords: &[f32]) -> PointSet {
+        PointSet::from_flat(1, coords.to_vec())
+    }
+
+    #[test]
+    fn build_covers_all_weight() {
+        let block = line(&[0.0, 0.1, 0.2, 5.0, 5.1, 9.0]);
+        let s = CoverageSummary::build(&block, 3, 7, &NativeBackend);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.total_weight(), 6.0, "every block point is represented");
+        assert!(s.radius() > 0.0 && s.radius() < 0.3, "radius {}", s.radius());
+    }
+
+    #[test]
+    fn outliers_become_their_own_light_representatives() {
+        // 19 clustered points + 1 far outlier, 2 representatives: the
+        // farthest-point skeleton must isolate the outlier at weight 1.
+        let mut coords: Vec<f32> = (0..19).map(|i| i as f32 * 0.01).collect();
+        coords.push(100.0);
+        let s = CoverageSummary::build(&line(&coords), 2, 3, &NativeBackend);
+        let weights = s.reps().weights();
+        assert!(weights.contains(&1.0), "outlier weight: {weights:?}");
+        assert!(weights.contains(&19.0), "bulk weight: {weights:?}");
+    }
+
+    #[test]
+    fn compose_is_commutative_bitwise() {
+        let a = CoverageSummary::build(&line(&[0.0, 0.3, 2.0]), 2, 1, &NativeBackend);
+        let b = CoverageSummary::build(&line(&[7.0, 7.5]), 2, 2, &NativeBackend);
+        assert_eq!(
+            Coreset::compose(a.clone(), b.clone()),
+            Coreset::compose(b, a)
+        );
+    }
+
+    #[test]
+    fn compose_is_associative_bitwise() {
+        let a = CoverageSummary::build(&line(&[0.0, 0.3]), 2, 1, &NativeBackend);
+        let b = CoverageSummary::build(&line(&[7.0]), 1, 2, &NativeBackend);
+        let c = CoverageSummary::build(&line(&[3.0, 3.3, 3.4]), 2, 3, &NativeBackend);
+        let left = Coreset::compose(Coreset::compose(a.clone(), b.clone()), c.clone());
+        let right = Coreset::compose(a, Coreset::compose(b, c));
+        assert_eq!(left, right);
+    }
+
+    #[test]
+    fn compose_tracks_radius_and_weight() {
+        let a = CoverageSummary::build(&line(&[0.0, 1.0]), 1, 1, &NativeBackend);
+        let b = CoverageSummary::build(&line(&[5.0]), 1, 2, &NativeBackend);
+        let ab = Coreset::compose(a.clone(), b.clone());
+        assert_eq!(ab.total_weight(), 3.0);
+        assert_eq!(ab.radius(), a.radius().max(b.radius()));
+        assert_eq!(ab.len(), 2);
+    }
+
+    #[test]
+    fn empty_blocks_compose_neutrally() {
+        let e = CoverageSummary::build(&PointSet::with_capacity(1, 0), 1, 0, &NativeBackend);
+        let a = CoverageSummary::build(&line(&[1.0, 2.0]), 2, 1, &NativeBackend);
+        assert_eq!(Coreset::compose(e.clone(), a.clone()), a);
+        assert_eq!(Coreset::compose(a.clone(), e), a);
+    }
+
+    #[test]
+    fn summary_is_a_pure_function_of_the_block() {
+        let block = line(&[0.0, 0.5, 4.0, 4.5, 9.0]);
+        let a = CoverageSummary::build(&block, 3, 11, &NativeBackend);
+        let b = CoverageSummary::build(&block, 3, 11, &NativeBackend);
+        assert_eq!(a, b, "replay determinism");
+    }
+}

@@ -1,0 +1,38 @@
+//! Weighted coreset summaries — the composable-summary layer under the
+//! outlier-robust pipelines.
+//!
+//! The paper's pipelines (Iterative-Sample, Divide, Parallel-Lloyd) all
+//! compress data before running an expensive sequential `A`, but each one
+//! re-derives its own ad-hoc "points + weights" representation. This module
+//! makes that representation first-class, following the *composable
+//! coreset* structure of Mazzetto, Pietracaprina and Pucci (accurate
+//! MapReduce k-median/k-means in general metric spaces) and the per-machine
+//! coverage summaries of Ceccarello, Pietracaprina and Pucci (k-center with
+//! outliers in MapReduce and streaming):
+//!
+//! * [`WeightedSet`] — points plus `f64` weights. The point block is a
+//!   zero-copy [`crate::geometry::PointSet`] view, so building a summary
+//!   over a machine's resident partition never copies coordinates.
+//! * [`Coreset`] — the compositional contract: `compose(a, b)` merges two
+//!   summaries **associatively and commutatively, bit-for-bit**, so
+//!   summaries can meet in any order inside a reduce step (the engine's
+//!   shuffle order is unspecified) without breaking the engine's
+//!   bit-identical recovery guarantee.
+//! * [`CoverageSummary`] — the concrete per-machine summary the robust
+//!   coordinators use: a weighted farthest-point skeleton of the machine's
+//!   block plus the coverage radius, composed across machines inside a
+//!   reduce round and handed to the final sequential step
+//!   ([`crate::algorithms::outliers`]).
+//!
+//! The bit-exactness requirement is why [`Coreset::compose`] is a
+//! *canonical multiset union*: entries are kept in a canonical total order
+//! and never arithmetically combined during composition (floating-point
+//! addition is not associative), so any compose tree over the same
+//! summaries yields the same bytes. `rust/tests/prop_summaries.rs`
+//! property-tests exactly this.
+
+pub mod coreset;
+pub mod weighted;
+
+pub use coreset::{Coreset, CoverageSummary};
+pub use weighted::WeightedSet;

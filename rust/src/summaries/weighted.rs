@@ -1,0 +1,248 @@
+//! [`WeightedSet`]: points with `f64` weights, the currency of the
+//! summary layer.
+//!
+//! A weighted set is the universal interface between the distributed
+//! phases (which compress a partition down to few representatives, each
+//! standing in for the input points it covers) and the sequential weighted
+//! algorithms (`lloyd`, `local_search`, the outlier-robust k-center) that
+//! consume them. The point block is an ordinary [`PointSet`], so a
+//! weighted view over a machine's resident partition shares the partition's
+//! `Arc` storage instead of copying coordinates.
+
+use crate::geometry::PointSet;
+use crate::mapreduce::MemSize;
+
+/// A set of points in `R^dim`, each carrying a non-negative `f64` weight.
+///
+/// Weights mean "how many input points this entry represents" (they are
+/// fractional-capable because downstream algorithms rescale them). The
+/// entry order is significant: [`WeightedSet::canonicalize`] sorts entries
+/// into a canonical total order so that two weighted sets holding the same
+/// multiset of `(point, weight)` entries become bit-identical — the
+/// property [`crate::summaries::Coreset::compose`] is built on.
+#[derive(Clone, Debug)]
+pub struct WeightedSet {
+    points: PointSet,
+    weights: Vec<f64>,
+}
+
+/// Equality is element-wise over points and weights (entry order matters;
+/// canonicalize both sides first to compare as multisets).
+impl PartialEq for WeightedSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.points == other.points
+            && self.weights.len() == other.weights.len()
+            && self
+                .weights
+                .iter()
+                .zip(&other.weights)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+impl WeightedSet {
+    /// Pair `points` with explicit `weights` (must agree in length).
+    pub fn new(points: PointSet, weights: Vec<f64>) -> Self {
+        assert_eq!(
+            points.len(),
+            weights.len(),
+            "weights/points length mismatch"
+        );
+        WeightedSet { points, weights }
+    }
+
+    /// Every point with unit weight — the embedding of an unweighted block.
+    /// Zero-copy: the returned set borrows `points`' storage.
+    pub fn unit(points: PointSet) -> Self {
+        let n = points.len();
+        WeightedSet {
+            points,
+            weights: vec![1.0; n],
+        }
+    }
+
+    /// An empty set of the given dimensionality.
+    pub fn with_capacity(dim: usize, cap: usize) -> Self {
+        WeightedSet {
+            points: PointSet::with_capacity(dim, cap),
+            weights: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when the set holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Point dimensionality.
+    pub fn dim(&self) -> usize {
+        self.points.dim()
+    }
+
+    /// The underlying point block (a zero-copy view where possible).
+    pub fn points(&self) -> &PointSet {
+        &self.points
+    }
+
+    /// All weights, entry-aligned with [`WeightedSet::points`].
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Coordinates of entry `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.points.row(i)
+    }
+
+    /// Weight of entry `i`.
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// Total represented weight, summed in entry order (deterministic for a
+    /// canonicalized set).
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+
+    /// The weights narrowed to `f32`, for the weighted sequential
+    /// algorithms ([`crate::algorithms::local_search`],
+    /// [`crate::algorithms::lloyd`]) whose interface predates this module.
+    pub fn weights_f32(&self) -> Vec<f32> {
+        self.weights.iter().map(|&w| w as f32).collect()
+    }
+
+    /// Append one `(point, weight)` entry.
+    pub fn push(&mut self, row: &[f32], weight: f64) {
+        self.points.push(row);
+        self.weights.push(weight);
+    }
+
+    /// Append all entries of `other` (must agree on dim).
+    pub fn extend(&mut self, other: &WeightedSet) {
+        self.points.extend(&other.points);
+        self.weights.extend_from_slice(&other.weights);
+    }
+
+    /// New set holding the entries at `indices`, in that order.
+    pub fn gather(&self, indices: &[usize]) -> WeightedSet {
+        WeightedSet {
+            points: self.points.gather(indices),
+            weights: indices.iter().map(|&i| self.weights[i]).collect(),
+        }
+    }
+
+    /// Indices of all entries in the canonical total order: rows compared
+    /// lexicographically by `f32::total_cmp`, ties broken by the weight's
+    /// bit pattern. The order depends only on entry *values*, never on the
+    /// arrival order — the keystone of bit-identical composition.
+    fn canonical_order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        idx.sort_by(|&a, &b| {
+            for (x, y) in self.row(a).iter().zip(self.row(b)) {
+                match x.total_cmp(y) {
+                    std::cmp::Ordering::Equal => continue,
+                    ord => return ord,
+                }
+            }
+            self.weights[a].total_cmp(&self.weights[b])
+        });
+        idx
+    }
+
+    /// The same multiset of entries, rearranged into the canonical total
+    /// order. Two sets holding equal entry multisets canonicalize to
+    /// bit-identical sets regardless of how the entries arrived.
+    pub fn canonicalize(&self) -> WeightedSet {
+        self.gather(&self.canonical_order())
+    }
+
+    /// True when the entries are already in canonical order.
+    pub fn is_canonical(&self) -> bool {
+        self.canonical_order().windows(2).all(|w| w[0] < w[1])
+    }
+}
+
+impl MemSize for WeightedSet {
+    fn mem_bytes(&self) -> usize {
+        self.points.mem_bytes() + self.weights.len() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wset(entries: &[(&[f32], f64)]) -> WeightedSet {
+        let mut s = WeightedSet::with_capacity(entries[0].0.len(), entries.len());
+        for (row, w) in entries {
+            s.push(row, *w);
+        }
+        s
+    }
+
+    #[test]
+    fn unit_embeds_unweighted_block_zero_copy() {
+        let p = PointSet::from_flat(2, vec![0.0, 1.0, 2.0, 3.0]);
+        let w = WeightedSet::unit(p.clone());
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.total_weight(), 2.0);
+        assert!(w.points().shares_storage(&p), "unit() must not copy");
+    }
+
+    #[test]
+    fn push_extend_gather_roundtrip() {
+        let mut a = wset(&[(&[1.0], 2.0)]);
+        let b = wset(&[(&[3.0], 4.0), (&[5.0], 6.0)]);
+        a.extend(&b);
+        assert_eq!(a.len(), 3);
+        let g = a.gather(&[2, 0]);
+        assert_eq!(g.row(0), &[5.0]);
+        assert_eq!(g.weight(1), 2.0);
+    }
+
+    #[test]
+    fn canonicalize_is_arrival_order_insensitive() {
+        let a = wset(&[(&[2.0, 0.0], 1.0), (&[1.0, 9.0], 3.0), (&[2.0, 0.0], 0.5)]);
+        let b = wset(&[(&[2.0, 0.0], 0.5), (&[2.0, 0.0], 1.0), (&[1.0, 9.0], 3.0)]);
+        assert_ne!(a, b);
+        assert_eq!(a.canonicalize(), b.canonicalize());
+        assert!(a.canonicalize().is_canonical());
+    }
+
+    #[test]
+    fn canonical_order_breaks_coordinate_ties_by_weight() {
+        let s = wset(&[(&[1.0], 5.0), (&[1.0], 2.0)]);
+        let c = s.canonicalize();
+        assert_eq!(c.weight(0), 2.0);
+        assert_eq!(c.weight(1), 5.0);
+    }
+
+    #[test]
+    fn weights_f32_narrow() {
+        let s = wset(&[(&[0.0], 1.5), (&[1.0], 2.5)]);
+        assert_eq!(s.weights_f32(), vec![1.5f32, 2.5]);
+    }
+
+    #[test]
+    fn mem_bytes_counts_points_and_weights() {
+        let s = wset(&[
+            (&[0.0, 0.0], 1.0),
+            (&[1.0, 0.0], 1.0),
+            (&[0.0, 1.0], 1.0),
+            (&[1.0, 1.0], 1.0),
+        ]);
+        assert!(s.mem_bytes() >= 4 * 2 * 4 + 4 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn new_rejects_mismatched_lengths() {
+        WeightedSet::new(PointSet::from_flat(1, vec![1.0]), vec![1.0, 2.0]);
+    }
+}

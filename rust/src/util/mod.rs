@@ -1,7 +1,8 @@
 //! Small self-contained substrates the rest of the crate builds on.
 //!
 //! Everything here is implemented in-tree because the build environment is
-//! offline (see DESIGN.md): a deterministic RNG with the samplers the
+//! offline (see the dependency policy in the workspace `Cargo.toml`): a
+//! deterministic RNG with the samplers the
 //! paper's data generator needs, a minimal JSON reader for the AOT artifact
 //! manifest, a stderr logger, wall-clock helpers, and table formatting for
 //! the experiment drivers.

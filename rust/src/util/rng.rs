@@ -44,6 +44,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// The next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -142,6 +143,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Precompute the CDF of a `k`-category Zipf(`alpha`) distribution.
     pub fn new(k: usize, alpha: f64) -> Self {
         assert!(k > 0);
         let mut cdf = Vec::with_capacity(k);
@@ -153,6 +155,7 @@ impl Zipf {
         Zipf { cdf }
     }
 
+    /// Draw one category index.
     #[inline]
     pub fn sample(&self, rng: &mut Rng) -> usize {
         rng.categorical_cdf(&self.cdf)

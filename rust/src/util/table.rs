@@ -10,6 +10,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Table {
             header: header.into_iter().map(Into::into).collect(),
@@ -17,6 +18,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(
@@ -30,10 +32,12 @@ impl Table {
         self
     }
 
+    /// Number of data rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Render the table as column-aligned text (trailing newline).
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();

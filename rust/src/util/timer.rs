@@ -18,20 +18,24 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Add an externally measured duration.
     pub fn add(&mut self, d: Duration) {
         self.total += d;
     }
 
+    /// Run `f`, adding its wall-clock duration to the total.
     pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
         let (out, d) = timed(f);
         self.total += d;
         out
     }
 
+    /// Accumulated duration.
     pub fn total(&self) -> Duration {
         self.total
     }
 
+    /// Accumulated duration in seconds.
     pub fn secs(&self) -> f64 {
         self.total.as_secs_f64()
     }

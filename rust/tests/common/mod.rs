@@ -6,7 +6,7 @@
 //! against the *same* oracle.
 
 use mrcluster::geometry::PointSet;
-use mrcluster::metrics::{kcenter_cost, kmedian_cost};
+use mrcluster::metrics::{kcenter_cost, kcenter_cost_with_outliers, kmedian_cost};
 
 /// Visit every k-combination of `[0, n)` in lexicographic order: supports
 /// the exact oracles up to n = 64 (a 2^n bitmask enumeration caps out at
@@ -47,6 +47,21 @@ pub fn exact_kcenter(points: &PointSet, k: usize) -> f64 {
     let mut best = f64::INFINITY;
     for_each_combination(points.len(), k, |idx| {
         best = best.min(kcenter_cost(points, &points.gather(idx)));
+    });
+    best
+}
+
+/// Exact discrete k-center-with-outliers optimum: over every k-subset of
+/// center candidates, the best cost after the `z` farthest points are
+/// dropped (the best-z-drop bound the robust pipeline is checked against).
+/// Only the scenario harness consumes this one, hence the allow for the
+/// other including target.
+#[allow(dead_code)]
+pub fn exact_kcenter_outliers(points: &PointSet, k: usize, z: usize) -> f64 {
+    assert!(points.len() <= 64, "exact search is exponential");
+    let mut best = f64::INFINITY;
+    for_each_combination(points.len(), k, |idx| {
+        best = best.min(kcenter_cost_with_outliers(points, &points.gather(idx), z));
     });
     best
 }

@@ -70,6 +70,7 @@ fn sampling_pipeline_within_constant_of_exact_optimum() {
         dim: 3,
         sigma: 0.02,
         alpha: 0.0,
+        contamination: 0.0,
         seed: 33,
     }
     .generate();

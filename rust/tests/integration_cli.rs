@@ -90,6 +90,8 @@ fn cluster_all_algorithms_tiny() {
         "Sampling-LocalSearch",
         "Streaming-Guha",
         "MrKCenter",
+        "Robust-kCenter",
+        "Coreset-kMedian",
     ] {
         let out = bin()
             .args([
@@ -173,6 +175,34 @@ fn fault_sweep_reports_identical_outputs() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("replays"), "{text}");
     // Every row must report bit-identical recovery ("yes", never "NO").
+    assert!(!text.contains("NO"), "{text}");
+}
+
+#[test]
+fn outlier_compare_reports_margin_and_recovery() {
+    let out = bin()
+        .args([
+            "outlier-compare",
+            "--n",
+            "1200",
+            "--contamination",
+            "0.02",
+            "--set",
+            "data.k=4",
+            "--set",
+            "data.sigma=0.05",
+            "--set",
+            "cluster.k=4",
+            "--set",
+            "cluster.machines=4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Robust-kCenter"), "{text}");
+    assert!(text.contains("robustness margin"), "{text}");
+    // Lossy-regime recovery must be bit-identical for both pipelines.
     assert!(!text.contains("NO"), "{text}");
 }
 

@@ -1,0 +1,140 @@
+//! Property tests for the summary layer's composition contract
+//! (seeded sweeps, same style as the other prop_* targets): folding
+//! [`Coreset::compose`] over per-machine summaries must give **bit-identical**
+//! results under any permutation and any grouping of the summaries — the
+//! property that makes the robust pipelines' reduce step immune to shuffle
+//! order, thread count, and lineage replay.
+
+use mrcluster::data::DataGenConfig;
+use mrcluster::geometry::PointSet;
+use mrcluster::runtime::NativeBackend;
+use mrcluster::summaries::{Coreset, CoverageSummary, WeightedSet};
+use mrcluster::util::rng::Rng;
+
+/// Summaries of the chunks of a contaminated dataset — the exact shape the
+/// robust coordinators produce in round 1.
+fn machine_summaries(n: usize, machines: usize, tau: usize, seed: u64) -> Vec<CoverageSummary> {
+    let data = DataGenConfig {
+        n,
+        k: 4,
+        dim: 3,
+        sigma: 0.05,
+        alpha: 0.0,
+        contamination: 0.03,
+        seed,
+    }
+    .generate();
+    data.points
+        .chunks(machines)
+        .into_iter()
+        .enumerate()
+        .map(|(m, chunk)| {
+            CoverageSummary::build(&chunk, tau.min(chunk.len()), seed ^ m as u64, &NativeBackend)
+        })
+        .collect()
+}
+
+/// Strict bit-level equality: coordinates and weights compared by bit
+/// pattern, radius by bit pattern.
+fn bit_identical(a: &CoverageSummary, b: &CoverageSummary) -> bool {
+    let (ra, rb) = (a.reps(), b.reps());
+    ra.len() == rb.len()
+        && a.radius().to_bits() == b.radius().to_bits()
+        && ra
+            .points()
+            .flat()
+            .iter()
+            .zip(rb.points().flat())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && ra
+            .weights()
+            .iter()
+            .zip(rb.weights())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn fold(summaries: &[CoverageSummary]) -> CoverageSummary {
+    summaries
+        .iter()
+        .cloned()
+        .reduce(Coreset::compose)
+        .expect("non-empty")
+}
+
+#[test]
+fn compose_is_permutation_insensitive_bitwise() {
+    for seed in 0..8u64 {
+        let summaries = machine_summaries(600, 7, 9, 1000 + seed);
+        let baseline = fold(&summaries);
+        let mut order: Vec<usize> = (0..summaries.len()).collect();
+        let mut rng = Rng::new(seed ^ 0x5Eed);
+        for _ in 0..6 {
+            // Fisher–Yates shuffle of the fold order.
+            for i in (1..order.len()).rev() {
+                let j = rng.below(i + 1);
+                order.swap(i, j);
+            }
+            let permuted: Vec<CoverageSummary> =
+                order.iter().map(|&i| summaries[i].clone()).collect();
+            let merged = fold(&permuted);
+            assert!(
+                bit_identical(&baseline, &merged),
+                "seed {seed}: permutation {order:?} changed the merged bytes"
+            );
+        }
+    }
+}
+
+#[test]
+fn compose_is_grouping_insensitive_bitwise() {
+    // Associativity at the byte level: a left fold, a right fold, and a
+    // balanced tree over the same summaries must agree exactly — this is
+    // what lets the reduce step pre-merge arbitrary subgroups.
+    for seed in 0..4u64 {
+        let summaries = machine_summaries(500, 6, 8, 2000 + seed);
+        let left = fold(&summaries);
+        let right = summaries
+            .iter()
+            .cloned()
+            .rev()
+            .reduce(|acc, s| Coreset::compose(s, acc))
+            .unwrap();
+        let mid = summaries.len() / 2;
+        let tree = Coreset::compose(fold(&summaries[..mid]), fold(&summaries[mid..]));
+        assert!(bit_identical(&left, &right), "seed {seed}: right fold diverged");
+        assert!(bit_identical(&left, &tree), "seed {seed}: tree fold diverged");
+    }
+}
+
+#[test]
+fn compose_preserves_weight_and_radius_invariants() {
+    for seed in 0..4u64 {
+        let summaries = machine_summaries(400, 5, 7, 3000 + seed);
+        let merged = fold(&summaries);
+        // Total weight is conserved exactly: every weight is an integral
+        // count (f64 sums of small integers are exact).
+        let total: f64 = summaries.iter().map(Coreset::total_weight).sum();
+        assert_eq!(merged.total_weight(), total, "seed {seed}");
+        assert_eq!(merged.total_weight(), 400.0, "every point represented");
+        // Radius is the max of the parts.
+        let want = summaries.iter().map(CoverageSummary::radius).fold(0.0, f64::max);
+        assert_eq!(merged.radius().to_bits(), want.to_bits(), "seed {seed}");
+        // Canonical form: the merged rep set is sorted.
+        assert!(merged.reps().is_canonical(), "seed {seed}");
+    }
+}
+
+#[test]
+fn unit_weighted_set_composes_like_concatenation() {
+    // Composing summaries wrapped from raw weighted sets is the canonical
+    // multiset union: same entries as concatenating and canonicalizing.
+    let a_pts = PointSet::from_flat(1, vec![3.0, 1.0]);
+    let b_pts = PointSet::from_flat(1, vec![2.0]);
+    let a = CoverageSummary::from_weighted(WeightedSet::unit(a_pts.clone()), 0.5);
+    let b = CoverageSummary::from_weighted(WeightedSet::unit(b_pts.clone()), 0.25);
+    let ab = Coreset::compose(a, b);
+    let mut both = WeightedSet::unit(a_pts);
+    both.extend(&WeightedSet::unit(b_pts));
+    assert_eq!(ab.reps(), &both.canonicalize());
+    assert_eq!(ab.radius(), 0.5);
+}

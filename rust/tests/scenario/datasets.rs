@@ -33,6 +33,7 @@ pub fn clustered(n: usize, k: usize, seed: u64) -> PointSet {
         dim: 3,
         sigma: 0.05,
         alpha: 0.0,
+        contamination: 0.0,
         seed,
     }
     .generate()
@@ -46,6 +47,7 @@ pub fn skewed(n: usize, k: usize, seed: u64) -> PointSet {
         dim: 3,
         sigma: 0.05,
         alpha: 1.5,
+        contamination: 0.0,
         seed: seed ^ 1,
     }
     .generate()

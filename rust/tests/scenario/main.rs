@@ -246,6 +246,61 @@ fn mrc0_flags_deliberately_over_budget_run() {
     assert!(format!("{report}").contains("VIOLATED"));
 }
 
+/// Outlier-robustness acceptance scenario: on a contaminated dataset the
+/// robust k-center pipeline must beat plain MapReduce-kCenter by the
+/// harness's calibrated margin, and its recovery under the lossy fault
+/// regime must stay bit-identical to the clean run.
+///
+/// Calibration: the reference cost is the *planted* centers' radius with
+/// the true z outliers dropped — a data-derived yardstick, not a magic
+/// number. The robust pipeline must land within 4x of it (3x greedy +
+/// summary radius); plain k-center, whose farthest-first `A` burns centers
+/// on the outliers, must be at least 2x worse than the robust run.
+#[test]
+fn robust_kcenter_beats_plain_on_contaminated_data_and_recovers() {
+    let data = mrcluster::data::DataGenConfig {
+        n: 1500,
+        k: 5,
+        dim: 3,
+        sigma: 0.05,
+        alpha: 0.0,
+        contamination: 0.02,
+        seed: 0xACE2,
+    }
+    .generate();
+    let z = data.n_outliers();
+    assert!(z > 0, "contamination must have planted outliers");
+
+    let mut clean_cfg = scenario_cfg(5, 8, SEED, None, true);
+    clean_cfg.z = z;
+    let mut lossy_cfg = scenario_cfg(5, 8, SEED, Some(&REGIMES[0]), true);
+    lossy_cfg.z = z;
+
+    let plain = run_algorithm(Algorithm::MrKCenter, &data.points, &clean_cfg).unwrap();
+    let robust = run_algorithm(Algorithm::RobustKCenter, &data.points, &clean_cfg).unwrap();
+    let plain_z = mrcluster::metrics::kcenter_cost_with_outliers(&data.points, &plain.centers, z);
+    let robust_z =
+        mrcluster::metrics::kcenter_cost_with_outliers(&data.points, &robust.centers, z);
+
+    // Calibrated quality: within 4x of the planted-centers reference.
+    let reference =
+        mrcluster::metrics::kcenter_cost_with_outliers(&data.points, &data.planted_centers, z);
+    assert!(
+        robust_z <= reference * 4.0 + 1e-6,
+        "robust {robust_z} vs planted reference {reference}"
+    );
+    // Calibrated margin: robust beats plain by at least 2x.
+    assert!(
+        robust_z * 2.0 <= plain_z + 1e-6,
+        "robust {robust_z} should beat plain {plain_z} by 2x (z = {z})"
+    );
+
+    // Recovery: the lossy regime must reproduce the clean run bit-for-bit.
+    let lossy = run_algorithm(Algorithm::RobustKCenter, &data.points, &lossy_cfg).unwrap();
+    assert_eq!(lossy.centers, robust.centers, "lossy recovery diverged");
+    assert_eq!(lossy.rounds, robust.rounds);
+}
+
 /// Satellite: recovery replay must not inflate per-machine memory past the
 /// checkpoint bound — replays hold at most twice the fault-free peak, and
 /// the recovery audit passes at the baseline-calibrated slack.

@@ -3,13 +3,13 @@
 //! and they are exercised here under the hostile fault regime, so the
 //! approximation claims are checked on the recovered outputs.
 
-use crate::common::{exact_kcenter, exact_kmedian};
+use crate::common::{exact_kcenter, exact_kcenter_outliers, exact_kmedian};
 use crate::hostile_cfg;
 use mrcluster::config::ClusterConfig;
 use mrcluster::coordinator::{run_algorithm, Algorithm};
 use mrcluster::data::DataGenConfig;
 use mrcluster::geometry::PointSet;
-use mrcluster::metrics::{kcenter_cost, kmedian_cost};
+use mrcluster::metrics::{kcenter_cost, kcenter_cost_with_outliers, kmedian_cost};
 
 fn tiny_blobs(n: usize, k: usize, seed: u64) -> PointSet {
     DataGenConfig {
@@ -18,6 +18,7 @@ fn tiny_blobs(n: usize, k: usize, seed: u64) -> PointSet {
         dim: 3,
         sigma: 0.02,
         alpha: 0.0,
+        contamination: 0.0,
         seed,
     }
     .generate()
@@ -74,6 +75,47 @@ fn kcenter_pipeline_within_theorem_bound_of_exact_optimum() {
             "seed {seed}: radius {radius} vs exact OPT {opt}"
         );
     }
+}
+
+#[test]
+fn robust_kcenter_within_constant_of_exact_best_z_drop_optimum() {
+    // n ≤ 48 contaminated instances: the robust pipeline (summaries built
+    // per machine, composed in a reduce step, Charikar greedy with the z
+    // budget at the leader — run under the hostile fault regime) must stay
+    // within a constant factor of the exact best-z-drop optimum. The
+    // greedy's certified factor is 3; the summary layer adds its coverage
+    // radius on both sides, so 6x is the safe envelope (on these tiny
+    // instances the summary is nearly lossless and the observed ratio is
+    // far smaller).
+    for (seed, z_extra) in [(13u64, 2usize), (14, 3)] {
+        let mut points = tiny_blobs(48 - z_extra, 3, seed);
+        // Plant unambiguous outliers so the budget matters.
+        for i in 0..z_extra {
+            points.push(&[40.0 + 10.0 * i as f32, -25.0, 60.0]);
+        }
+        let z = z_extra;
+        let opt = exact_kcenter_outliers(&points, 3, z);
+        assert!(opt.is_finite() && opt > 0.0);
+        let mut cfg = oracle_cluster_cfg(3, seed);
+        cfg.z = z;
+        let out = run_algorithm(Algorithm::RobustKCenter, &points, &cfg).unwrap();
+        let cost = kcenter_cost_with_outliers(&points, &out.centers, z);
+        assert!(
+            cost <= opt * 6.0 + 1e-6,
+            "seed {seed}: robust cost {cost} vs exact best-z-drop OPT {opt}"
+        );
+    }
+}
+
+#[test]
+fn outlier_oracle_agrees_with_hand_computation() {
+    // Points {0, 1, 2, 50} on a line, k = 1, z = 1: drop 50, put the
+    // center at 1 (cost 1) — any other choice pays more.
+    let points = PointSet::from_flat(1, vec![0.0, 1.0, 2.0, 50.0]);
+    let opt = exact_kcenter_outliers(&points, 1, 1);
+    assert!((opt - 1.0).abs() < 1e-6, "outlier oracle {opt}");
+    // And with no budget the plain oracle is recovered.
+    assert!((exact_kcenter_outliers(&points, 1, 0) - exact_kcenter(&points, 1)).abs() < 1e-9);
 }
 
 #[test]
