@@ -3,9 +3,11 @@
 //! (Theorem 3.7 then gives 4·2 + 2 = 10 overall).
 //!
 //! O(n·k): maintain d(x, S) incrementally, repeatedly promote the farthest
-//! point.
+//! point. The traversal only compares distances, so it runs unchanged in
+//! any metric space — [`gonzalez_metric`] takes the active
+//! [`MetricKind`]; [`gonzalez`] is the squared-Euclidean wrapper.
 
-use crate::geometry::{metric::sq_dist, PointSet};
+use crate::geometry::{MetricKind, PointSet};
 use crate::util::rng::Rng;
 
 /// Result of the farthest-point traversal.
@@ -20,9 +22,22 @@ pub struct GonzalezResult {
     pub radius: f64,
 }
 
-/// Run Gonzalez on `points`. The first center is chosen by `rng` (any
-/// starting point preserves the 2-approximation).
+/// Run Gonzalez on `points` under the squared-Euclidean default. The first
+/// center is chosen by `rng` (any starting point preserves the
+/// 2-approximation).
 pub fn gonzalez(points: &PointSet, k: usize, rng: &mut Rng) -> GonzalezResult {
+    gonzalez_metric(points, k, rng, MetricKind::L2Sq)
+}
+
+/// [`gonzalez`] under an explicit metric: the incremental `d(x, S)` array
+/// holds the metric's surrogate (monotone, so farthest-point promotion is
+/// unaffected) and the reported radius is the true metric distance.
+pub fn gonzalez_metric(
+    points: &PointSet,
+    k: usize,
+    rng: &mut Rng,
+    metric: MetricKind,
+) -> GonzalezResult {
     let n = points.len();
     assert!(k >= 1);
     if n == 0 {
@@ -37,9 +52,9 @@ pub fn gonzalez(points: &PointSet, k: usize, rng: &mut Rng) -> GonzalezResult {
     let first = rng.below(n);
     indices.push(first);
 
-    // d2[x] = squared distance to the current center set.
+    // d2[x] = surrogate distance to the current center set.
     let mut d2: Vec<f32> = (0..n)
-        .map(|i| sq_dist(points.row(i), points.row(first)))
+        .map(|i| metric.surrogate(points.row(i), points.row(first)))
         .collect();
 
     while indices.len() < k {
@@ -54,18 +69,14 @@ pub fn gonzalez(points: &PointSet, k: usize, rng: &mut Rng) -> GonzalezResult {
         }
         indices.push(far);
         for i in 0..n {
-            let nd = sq_dist(points.row(i), points.row(far));
+            let nd = metric.surrogate(points.row(i), points.row(far));
             if nd < d2[i] {
                 d2[i] = nd;
             }
         }
     }
 
-    let radius = d2
-        .iter()
-        .fold(0.0f32, |m, &x| m.max(x))
-        .max(0.0)
-        .sqrt() as f64;
+    let radius = metric.to_dist_f32(d2.iter().fold(0.0f32, |m, &x| m.max(x))) as f64;
     GonzalezResult {
         centers: points.gather(&indices),
         center_indices: indices,
@@ -101,6 +112,20 @@ mod tests {
         let res = gonzalez(&p, 7, &mut rng);
         let want = kcenter_cost(&p, &res.centers);
         assert!((res.radius - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn metric_radius_matches_metric_cost() {
+        use crate::geometry::MetricKind;
+        use crate::metrics::kcenter_cost_metric;
+        for metric in [MetricKind::L1, MetricKind::Cosine, MetricKind::Chebyshev] {
+            let mut rng = Rng::new(6);
+            // Offset keeps every row away from the zero vector (cosine).
+            let p = PointSet::from_flat(3, (0..300).map(|_| rng.f32() + 0.1).collect());
+            let res = gonzalez_metric(&p, 5, &mut rng, metric);
+            let want = kcenter_cost_metric(&p, &res.centers, metric);
+            assert!((res.radius - want).abs() < 1e-4, "{metric}: {} vs {want}", res.radius);
+        }
     }
 
     #[test]

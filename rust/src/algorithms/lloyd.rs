@@ -1,4 +1,4 @@
-//! Lloyd's algorithm (sequential, optionally weighted).
+//! Lloyd's algorithm (sequential, optionally weighted, metric-aware).
 //!
 //! The paper uses Lloyd's for the k-median objective (§4.1, "it can be used
 //! for k-median as well"): centers are updated to the mean of their cluster
@@ -9,19 +9,37 @@
 //! An optional Weiszfeld refinement replaces the mean update with an
 //! iteratively-reweighted geometric-median step — the "proper" k-median
 //! update — kept as an ablation (`update: UpdateRule::Weiszfeld`).
+//!
+//! ## Non-Euclidean metrics
+//!
+//! The coordinate-wise mean minimizes summed (squared) distance only in
+//! the Euclidean family; under `l1`/`cosine`/`chebyshev`
+//! ([`MetricKind::mean_is_minimizer`] false) the run routes to the
+//! [`UpdateRule::Medoid`] step regardless of the configured rule: the
+//! (weighted) mean is still computed as the *target*, but the new center
+//! is the assigned input point nearest to that target under the active
+//! metric (ties break toward the lowest index — deterministic). Centers
+//! therefore stay input points, which is also what the k-median analysis
+//! wants in a general metric space.
 
 use super::seeding;
-use crate::geometry::{metric::sq_dist, PointSet};
-use crate::runtime::ComputeBackend;
+use crate::geometry::{MetricKind, PointSet};
+use crate::runtime::{AssignOut, ComputeBackend};
 use crate::util::rng::Rng;
 
 /// Center update rule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UpdateRule {
-    /// Classical mean update (the paper's choice).
+    /// Classical mean update (the paper's choice; Euclidean family only —
+    /// non-Euclidean metrics route to [`UpdateRule::Medoid`]).
     Mean,
-    /// One Weiszfeld step toward the cluster's geometric median.
+    /// One Weiszfeld step toward the cluster's geometric median
+    /// (Euclidean-only ablation; non-Euclidean metrics route to
+    /// [`UpdateRule::Medoid`]).
     Weiszfeld,
+    /// Snap the (weighted) cluster mean to the nearest assigned input
+    /// point under the active metric — the general-metric update.
+    Medoid,
 }
 
 /// Lloyd configuration.
@@ -33,8 +51,11 @@ pub struct LloydConfig {
     pub max_iters: usize,
     /// Stop when the relative k-median cost improvement drops below this.
     pub tol: f64,
-    /// Center update rule (mean, or one Weiszfeld step).
+    /// Center update rule (mean, Weiszfeld, or metric medoid).
     pub update: UpdateRule,
+    /// The metric space the step runs in (distances, costs, and — for
+    /// non-Euclidean kinds — the medoid update).
+    pub metric: MetricKind,
     /// Seeding PRNG seed.
     pub seed: u64,
 }
@@ -46,6 +67,7 @@ impl Default for LloydConfig {
             max_iters: 20,
             tol: 1e-4,
             update: UpdateRule::Mean,
+            metric: MetricKind::L2Sq,
             seed: 0,
         }
     }
@@ -58,7 +80,8 @@ pub struct LloydResult {
     pub centers: PointSet,
     /// Iterations executed.
     pub iters: usize,
-    /// k-median objective of the final centers (weighted if weights given).
+    /// k-median objective of the final centers (weighted if weights given),
+    /// under the configured metric.
     pub cost_median: f64,
     /// Objective value per iteration (for convergence plots).
     pub history: Vec<f64>,
@@ -83,6 +106,14 @@ pub fn lloyd(
     if let Some(w) = weights {
         assert_eq!(w.len(), points.len(), "weights/points length mismatch");
     }
+    let metric = cfg.metric;
+    // Mean/Weiszfeld are only minimizers in the Euclidean family; route
+    // everything else to the medoid step (see module docs).
+    let rule = if metric.mean_is_minimizer() {
+        cfg.update
+    } else {
+        UpdateRule::Medoid
+    };
     let mut rng = Rng::new(cfg.seed);
     let mut centers = seeding::random_distinct(points, cfg.k, &mut rng);
     let k = centers.len();
@@ -94,18 +125,27 @@ pub fn lloyd(
 
     for _ in 0..cfg.max_iters {
         iters += 1;
-        // Accumulate assignment statistics.
-        let (sums, counts, cost) = match weights {
-            None => {
-                let s = backend.lloyd_step(points, &centers);
-                (s.sums, s.counts, s.cost_median)
+        // Accumulate assignment statistics (plus, for the medoid rule, the
+        // per-point assignment itself).
+        let (sums, counts, cost, assign) = match (rule, weights) {
+            (UpdateRule::Medoid, _) => {
+                let a = backend.assign_metric(points, &centers, metric);
+                let (sums, counts, cost) = accumulate_assign(points, weights, &a, k, metric);
+                (sums, counts, cost, Some(a))
             }
-            Some(w) => weighted_step(points, w, &centers),
+            (_, None) => {
+                let s = backend.lloyd_step_metric(points, &centers, metric);
+                (s.sums, s.counts, s.cost_median, None)
+            }
+            (_, Some(w)) => {
+                let (sums, counts, cost) = weighted_step(points, w, &centers, metric);
+                (sums, counts, cost, None)
+            }
         };
         history.push(cost);
 
         // Update centers.
-        match cfg.update {
+        match rule {
             UpdateRule::Mean => {
                 let mut next = PointSet::with_capacity(d, k);
                 let mut row = vec![0.0f32; d];
@@ -126,6 +166,10 @@ pub fn lloyd(
             UpdateRule::Weiszfeld => {
                 centers = weiszfeld_step(points, weights, &centers);
             }
+            UpdateRule::Medoid => {
+                let a = assign.expect("medoid rule always assigns");
+                centers = medoid_step(points, &a, &sums, &counts, &centers, metric);
+            }
         }
 
         // Convergence on relative improvement of the k-median objective.
@@ -142,11 +186,11 @@ pub fn lloyd(
     // one pass serves both.
     let (final_counts, cost_median) = match weights {
         None => {
-            let fin = backend.lloyd_step(points, &centers);
+            let fin = backend.lloyd_step_metric(points, &centers, metric);
             (fin.counts, fin.cost_median)
         }
         Some(w) => {
-            let (_, counts, cost) = weighted_step(points, w, &centers);
+            let (_, counts, cost) = weighted_step(points, w, &centers, metric);
             (counts, cost)
         }
     };
@@ -161,44 +205,104 @@ pub fn lloyd(
     }
 }
 
-/// One weighted accumulation step: (sums, counts, weighted k-median cost).
+/// One weighted accumulation step: (sums, counts, weighted k-median cost)
+/// under `metric`. One scalar assignment pass + the shared accumulation —
+/// the Mean and Medoid paths run the *same* accumulation code so they can
+/// never silently diverge.
 fn weighted_step(
     points: &PointSet,
     weights: &[f32],
     centers: &PointSet,
+    metric: MetricKind,
 ) -> (Vec<f64>, Vec<f64>, f64) {
-    let k = centers.len();
+    let (sqdist, idx) = crate::metrics::cost::assign_full_metric(points, centers, metric);
+    let a = AssignOut { sqdist, idx };
+    accumulate_assign(points, Some(weights), &a, centers.len(), metric)
+}
+
+/// (sums, counts, cost) from an existing assignment — the medoid path's
+/// accumulation (sums are weighted means' numerators; cost is the true
+/// metric distance sum).
+fn accumulate_assign(
+    points: &PointSet,
+    weights: Option<&[f32]>,
+    a: &AssignOut,
+    k: usize,
+    metric: MetricKind,
+) -> (Vec<f64>, Vec<f64>, f64) {
     let d = points.dim();
     let mut sums = vec![0.0f64; k * d];
     let mut counts = vec![0.0f64; k];
     let mut cost = 0.0f64;
     for i in 0..points.len() {
+        let c = a.idx[i] as usize;
+        let w = weights.map(|w| w[i] as f64).unwrap_or(1.0);
         let row = points.row(i);
-        let mut best = f32::INFINITY;
-        let mut bc = 0usize;
-        for c in 0..k {
-            let dd = sq_dist(row, centers.row(c));
-            if dd < best {
-                best = dd;
-                bc = c;
-            }
-        }
-        let w = weights[i] as f64;
         for j in 0..d {
-            sums[bc * d + j] += row[j] as f64 * w;
+            sums[c * d + j] += row[j] as f64 * w;
         }
-        counts[bc] += w;
-        cost += w * (best.max(0.0) as f64).sqrt();
+        counts[c] += w;
+        cost += w * metric.to_dist_f64(a.sqdist[i]);
     }
     (sums, counts, cost)
 }
 
+/// The medoid update: for every non-empty cluster, compute the (weighted)
+/// mean as a *target* and promote the assigned point nearest to it under
+/// `metric` (lowest index wins ties — deterministic). Empty clusters keep
+/// their old center.
+fn medoid_step(
+    points: &PointSet,
+    a: &AssignOut,
+    sums: &[f64],
+    counts: &[f64],
+    old_centers: &PointSet,
+    metric: MetricKind,
+) -> PointSet {
+    let k = old_centers.len();
+    let d = points.dim();
+    // Target rows (weighted means; old center for empty clusters).
+    let mut targets = PointSet::with_capacity(d, k);
+    let mut row = vec![0.0f32; d];
+    for c in 0..k {
+        if counts[c] > 0.0 {
+            for j in 0..d {
+                row[j] = (sums[c * d + j] / counts[c]) as f32;
+            }
+            targets.push(&row);
+        } else {
+            targets.push(old_centers.row(c));
+        }
+    }
+    // Nearest assigned point per cluster.
+    let mut best: Vec<(f32, usize)> = vec![(f32::INFINITY, usize::MAX); k];
+    for i in 0..points.len() {
+        let c = a.idx[i] as usize;
+        let s = metric.surrogate(points.row(i), targets.row(c));
+        if s.total_cmp(&best[c].0) == std::cmp::Ordering::Less {
+            best[c] = (s, i);
+        }
+    }
+    let mut next = PointSet::with_capacity(d, k);
+    for c in 0..k {
+        if best[c].1 != usize::MAX {
+            next.push(points.row(best[c].1));
+        } else {
+            next.push(old_centers.row(c));
+        }
+    }
+    next
+}
+
 /// One Weiszfeld step per cluster: c <- Σ (w_i/d_i) x_i / Σ (w_i/d_i).
+/// Euclidean-specific (the geometric-median iteration); non-Euclidean
+/// metrics never reach this ([`lloyd`] routes them to the medoid rule).
 fn weiszfeld_step(
     points: &PointSet,
     weights: Option<&[f32]>,
     centers: &PointSet,
 ) -> PointSet {
+    use crate::geometry::metric::sq_dist;
     let k = centers.len();
     let d = points.dim();
     let mut num = vec![0.0f64; k * d];
@@ -240,7 +344,7 @@ fn weiszfeld_step(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metrics::kmedian_cost;
+    use crate::metrics::{kmedian_cost, kmedian_cost_metric};
     use crate::runtime::NativeBackend;
 
     fn two_blobs(n_each: usize, seed: u64) -> PointSet {
@@ -365,5 +469,49 @@ mod tests {
         let cm = kmedian_cost(&p, &mean.centers);
         let cw = kmedian_cost(&p, &wei.centers);
         assert!(cw <= cm * 1.01, "weiszfeld {cw} vs mean {cm}");
+    }
+
+    #[test]
+    fn non_euclidean_metrics_separate_blobs_with_medoid_centers() {
+        let p = two_blobs(120, 13);
+        for metric in [MetricKind::L1, MetricKind::Chebyshev] {
+            let cfg = LloydConfig {
+                k: 2,
+                seed: 7,
+                metric,
+                ..Default::default()
+            };
+            let res = lloyd(&p, None, &cfg, &NativeBackend);
+            let xs = [res.centers.row(0)[0], res.centers.row(1)[0]];
+            assert!((xs[0] < 5.0) != (xs[1] < 5.0), "{metric}: {xs:?}");
+            // Medoid centers are input points.
+            for c in 0..2 {
+                let found = (0..p.len()).any(|i| p.row(i) == res.centers.row(c));
+                assert!(found, "{metric}: medoid center must be an input point");
+            }
+            // Reported cost is the metric objective of the final centers.
+            let want = kmedian_cost_metric(&p, &res.centers, metric);
+            assert!(
+                (res.cost_median - want).abs() / want.max(1e-9) < 1e-4,
+                "{metric}: {} vs {want}",
+                res.cost_median
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_medoid_rule_works_under_l2_too() {
+        let p = two_blobs(80, 17);
+        let cfg = LloydConfig {
+            k: 2,
+            seed: 3,
+            update: UpdateRule::Medoid,
+            ..Default::default()
+        };
+        let res = lloyd(&p, None, &cfg, &NativeBackend);
+        for c in 0..2 {
+            let found = (0..p.len()).any(|i| p.row(i) == res.centers.row(c));
+            assert!(found, "medoid center must be an input point");
+        }
     }
 }

@@ -17,10 +17,13 @@
 //!   1.0 = the full Arya et al. procedure (used for the LocalSearch
 //!   baseline); smaller values sample candidates uniformly — the standard
 //!   practical acceleration — and are what the sample-sized instances use.
-//! * Distances are true Euclidean (k-median is about Σ d, not Σ d²).
+//! * Distances are true metric distances under [`LocalSearchConfig::metric`]
+//!   (k-median is about Σ d, not Σ d²; the Arya et al. analysis only needs
+//!   the triangle inequality, so any registered metric works). Default:
+//!   Euclidean.
 
 use super::seeding;
-use crate::geometry::{metric::sq_dist, PointSet};
+use crate::geometry::{MetricKind, PointSet};
 use crate::summaries::WeightedSet;
 use crate::util::rng::Rng;
 
@@ -38,6 +41,8 @@ pub struct LocalSearchConfig {
     /// Fraction of non-center points evaluated as swap-in candidates per
     /// pass (1.0 = exhaustive).
     pub candidate_fraction: f64,
+    /// The metric space the search runs in.
+    pub metric: MetricKind,
     /// Seeding / candidate-sampling PRNG seed.
     pub seed: u64,
 }
@@ -49,6 +54,7 @@ impl Default for LocalSearchConfig {
             min_rel_gain: 1e-4,
             max_swaps: 200,
             candidate_fraction: 1.0,
+            metric: MetricKind::L2Sq,
             seed: 0,
         }
     }
@@ -78,11 +84,12 @@ struct State {
     cost: f64,
 }
 
-fn dist(a: &[f32], b: &[f32]) -> f32 {
-    sq_dist(a, b).max(0.0).sqrt()
-}
-
-fn rebuild(points: &PointSet, weights: Option<&[f32]>, centers: &[usize]) -> State {
+fn rebuild(
+    points: &PointSet,
+    weights: Option<&[f32]>,
+    centers: &[usize],
+    metric: MetricKind,
+) -> State {
     let n = points.len();
     let mut n1 = vec![0u32; n];
     let mut d1 = vec![f32::INFINITY; n];
@@ -90,7 +97,7 @@ fn rebuild(points: &PointSet, weights: Option<&[f32]>, centers: &[usize]) -> Sta
     for i in 0..n {
         let row = points.row(i);
         for (cpos, &cidx) in centers.iter().enumerate() {
-            let dd = dist(row, points.row(cidx));
+            let dd = metric.dist(row, points.row(cidx));
             if dd < d1[i] {
                 d2[i] = d1[i];
                 d1[i] = dd;
@@ -114,6 +121,7 @@ fn best_swap_for_candidate(
     st: &State,
     k: usize,
     p: usize,
+    metric: MetricKind,
 ) -> (f64, usize) {
     let prow = points.row(p);
     // a = Σ w·(d1 - min(d1, dxp)): gain from points that simply move to p.
@@ -123,7 +131,7 @@ fn best_swap_for_candidate(
     let mut b = vec![0.0f64; k];
     for i in 0..points.len() {
         let w = weights.map(|w| w[i] as f64).unwrap_or(1.0);
-        let dxp = dist(points.row(i), prow);
+        let dxp = metric.dist(points.row(i), prow);
         let d1 = st.d1[i];
         let d2 = st.d2[i];
         if dxp < d1 {
@@ -178,7 +186,7 @@ pub fn local_search(
         rng.sample_distinct(n, cfg.k)
     };
     let k = centers.len();
-    let mut st = rebuild(points, weights, &centers);
+    let mut st = rebuild(points, weights, &centers, cfg.metric);
     let mut swaps = 0usize;
     let mut is_center = vec![false; n];
     for &c in &centers {
@@ -200,7 +208,7 @@ pub fn local_search(
             if cfg.candidate_fraction < 1.0 && !rng.bernoulli(cfg.candidate_fraction) {
                 continue;
             }
-            let (gain, cpos) = best_swap_for_candidate(points, weights, &st, k, p);
+            let (gain, cpos) = best_swap_for_candidate(points, weights, &st, k, p, cfg.metric);
             if gain > threshold && best.map(|(g, _, _)| gain > g).unwrap_or(true) {
                 best = Some((gain, p, cpos));
             }
@@ -211,7 +219,7 @@ pub fn local_search(
                 is_center[centers[cpos]] = false;
                 is_center[p] = true;
                 centers[cpos] = p;
-                st = rebuild(points, weights, &centers);
+                st = rebuild(points, weights, &centers, cfg.metric);
                 swaps += 1;
             }
         }
@@ -363,6 +371,27 @@ mod tests {
         let direct = local_search(&p, Some(&w32), &cfg);
         assert_eq!(via_set.center_indices, direct.center_indices);
         assert_eq!(via_set.cost_median.to_bits(), direct.cost_median.to_bits());
+    }
+
+    #[test]
+    fn metric_search_reports_metric_cost() {
+        use crate::metrics::kmedian_cost_metric;
+        let p = blobs(&[[0.0, 0.0], [6.0, 6.0]], 30, 0.2, 12);
+        for metric in [MetricKind::L1, MetricKind::Chebyshev] {
+            let cfg = LocalSearchConfig {
+                k: 2,
+                seed: 4,
+                metric,
+                ..Default::default()
+            };
+            let res = local_search(&p, None, &cfg);
+            let want = kmedian_cost_metric(&p, &res.centers, metric);
+            assert!(
+                (res.cost_median - want).abs() / want.max(1e-9) < 1e-4,
+                "{metric}: {} vs {want}",
+                res.cost_median
+            );
+        }
     }
 
     #[test]

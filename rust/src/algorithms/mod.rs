@@ -18,9 +18,9 @@ pub mod outliers;
 pub mod seeding;
 pub mod streaming;
 
-pub use gonzalez::gonzalez;
-pub use lloyd::{lloyd, LloydConfig, LloydResult};
+pub use gonzalez::{gonzalez, gonzalez_metric};
+pub use lloyd::{lloyd, LloydConfig, LloydResult, UpdateRule};
 pub use local_search::{local_search, local_search_weighted, LocalSearchConfig, LocalSearchResult};
-pub use outliers::{kcenter_with_outliers, KCenterOutliersResult};
+pub use outliers::{kcenter_with_outliers, kcenter_with_outliers_metric, KCenterOutliersResult};
 pub use seeding::{kmeans_pp, random_distinct};
 pub use streaming::{streaming_kmedian, StreamingConfig, StreamingResult};

@@ -17,7 +17,7 @@
 //! — ties break toward the lowest index — so a recovery replay regenerates
 //! identical centers.
 
-use crate::geometry::{metric::sq_dist, PointSet};
+use crate::geometry::{MetricKind, PointSet};
 use crate::summaries::WeightedSet;
 
 /// Result of the weighted outlier-robust k-center greedy.
@@ -48,39 +48,37 @@ pub const MAX_ANCHORS: usize = 1024;
 /// cap by construction.
 pub const MAX_MATRIX: usize = 4096;
 
-fn dist(a: &[f32], b: &[f32]) -> f64 {
-    (sq_dist(a, b).max(0.0) as f64).sqrt()
-}
-
 /// Cached pairwise distances of a weighted set (recomputed on the fly
-/// above [`MAX_MATRIX`] points).
+/// above [`MAX_MATRIX`] points). Distances are true metric distances
+/// under the active [`MetricKind`].
 struct Dists {
     m: usize,
+    metric: MetricKind,
     /// Row-major m×m matrix when `m <= MAX_MATRIX`, else empty.
     matrix: Vec<f32>,
 }
 
 impl Dists {
-    fn new(set: &WeightedSet) -> Dists {
+    fn new(set: &WeightedSet, metric: MetricKind) -> Dists {
         let m = set.len();
         let mut matrix = Vec::new();
         if m <= MAX_MATRIX {
             matrix = vec![0.0f32; m * m];
             for i in 0..m {
                 for j in (i + 1)..m {
-                    let d = dist(set.row(i), set.row(j)) as f32;
+                    let d = metric.dist_f64(set.row(i), set.row(j)) as f32;
                     matrix[i * m + j] = d;
                     matrix[j * m + i] = d;
                 }
             }
         }
-        Dists { m, matrix }
+        Dists { m, metric, matrix }
     }
 
     #[inline]
     fn get(&self, set: &WeightedSet, i: usize, j: usize) -> f64 {
         if self.matrix.is_empty() {
-            dist(set.row(i), set.row(j))
+            self.metric.dist_f64(set.row(i), set.row(j))
         } else {
             self.matrix[i * self.m + j] as f64
         }
@@ -125,14 +123,27 @@ fn greedy_cover(set: &WeightedSet, dists: &Dists, k: usize, r: f64) -> (Vec<usiz
     (centers, uncovered)
 }
 
-/// Weighted k-center with an outlier budget of `z` total weight.
+/// Weighted k-center with an outlier budget of `z` total weight, under
+/// the squared-Euclidean default metric.
+pub fn kcenter_with_outliers(set: &WeightedSet, k: usize, z: f64) -> KCenterOutliersResult {
+    kcenter_with_outliers_metric(set, k, z, MetricKind::L2Sq)
+}
+
+/// [`kcenter_with_outliers`] under an explicit metric. The greedy's
+/// 3-approximation argument only uses the triangle inequality, so it
+/// carries over to every registered [`MetricKind`].
 ///
 /// Deterministic: identical inputs give identical centers, which is what
 /// lets the robust coordinator's leader round satisfy the engine's
 /// bit-identical recovery contract. Cost: one `O(m²)` distance-matrix
 /// build (under [`MAX_MATRIX`] points) plus `O(k · m²)` per radius probe,
 /// `O(log m)` probes.
-pub fn kcenter_with_outliers(set: &WeightedSet, k: usize, z: f64) -> KCenterOutliersResult {
+pub fn kcenter_with_outliers_metric(
+    set: &WeightedSet,
+    k: usize,
+    z: f64,
+    metric: MetricKind,
+) -> KCenterOutliersResult {
     assert!(k >= 1, "need at least one center");
     let m = set.len();
     if m == 0 {
@@ -158,7 +169,7 @@ pub fn kcenter_with_outliers(set: &WeightedSet, k: usize, z: f64) -> KCenterOutl
     // always a pairwise distance when the anchors are exhaustive; the
     // subsample (only above MAX_ANCHORS points) trades a vanishing amount
     // of guess resolution for O(anchors·m) work.
-    let dists = Dists::new(set);
+    let dists = Dists::new(set, metric);
     let stride = crate::util::div_ceil(m, MAX_ANCHORS);
     let mut guesses: Vec<f64> = Vec::with_capacity(m * crate::util::div_ceil(m, stride));
     let mut a = 0;
@@ -267,6 +278,26 @@ mod tests {
         let s = unit_line(&[0.0, 2.0, 2.1, 7.0, 7.3, 30.0]);
         let a = kcenter_with_outliers(&s, 2, 1.0);
         let b = kcenter_with_outliers(&s, 2, 1.0);
+        assert_eq!(a.center_indices, b.center_indices);
+        assert_eq!(a.radius_guess.to_bits(), b.radius_guess.to_bits());
+    }
+
+    #[test]
+    fn metric_variant_drops_the_metric_outlier() {
+        use crate::geometry::MetricKind;
+        // Under Chebyshev the point (9, 9) is at distance 9 from the blob;
+        // with z = 1 it is dropped and the certified guess collapses.
+        let mut s = WeightedSet::with_capacity(2, 4);
+        s.push(&[0.0, 0.0], 1.0);
+        s.push(&[0.3, 0.1], 1.0);
+        s.push(&[0.1, 0.3], 1.0);
+        s.push(&[9.0, 9.0], 1.0);
+        let res = kcenter_with_outliers_metric(&s, 1, 1.0, MetricKind::Chebyshev);
+        assert!(res.radius_guess <= 0.3 + 1e-6, "guess {}", res.radius_guess);
+        assert!(res.dropped_weight <= 1.0);
+        // l2sq wrapper and explicit metric agree bit-for-bit.
+        let a = kcenter_with_outliers(&s, 2, 0.0);
+        let b = kcenter_with_outliers_metric(&s, 2, 0.0, MetricKind::L2Sq);
         assert_eq!(a.center_indices, b.center_indices);
         assert_eq!(a.radius_guess.to_bits(), b.radius_guess.to_bits());
     }

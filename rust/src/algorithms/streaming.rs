@@ -15,7 +15,7 @@
 //! experiment `streaming_quality_degrades_with_levels` demonstrates.
 
 use super::lloyd::{lloyd, LloydConfig};
-use crate::geometry::PointSet;
+use crate::geometry::{MetricKind, PointSet};
 use crate::runtime::{ComputeBackend, NativeBackend};
 
 /// Streaming k-median configuration.
@@ -30,6 +30,9 @@ pub struct StreamingConfig {
     pub lloyd_max_iters: usize,
     /// Lloyd stopping tolerance for the per-block clustering.
     pub lloyd_tol: f64,
+    /// The metric space the hierarchy clusters in (threaded into every
+    /// per-block Lloyd invocation and the re-weighting assignments).
+    pub metric: MetricKind,
     /// PRNG seed.
     pub seed: u64,
 }
@@ -41,6 +44,7 @@ impl Default for StreamingConfig {
             block_size: 2000,
             lloyd_max_iters: 40,
             lloyd_tol: 1e-4,
+            metric: MetricKind::L2Sq,
             seed: 0,
         }
     }
@@ -82,6 +86,7 @@ pub fn streaming_kmedian(points: &PointSet, cfg: &StreamingConfig) -> StreamingR
                 k: cfg.k,
                 max_iters: cfg.lloyd_max_iters,
                 tol: cfg.lloyd_tol,
+                metric: cfg.metric,
                 seed: cfg.seed ^ salt,
                 ..Default::default()
             },
@@ -90,7 +95,7 @@ pub fn streaming_kmedian(points: &PointSet, cfg: &StreamingConfig) -> StreamingR
         // Weight of each new center = total weight of the points it won.
         let k = res.centers.len();
         let mut cw = vec![0.0f32; k];
-        let assign = NativeBackend.assign(pts, &res.centers);
+        let assign = NativeBackend.assign_metric(pts, &res.centers, cfg.metric);
         for (i, &c) in assign.idx.iter().enumerate() {
             cw[c as usize] += w[i];
         }

@@ -8,6 +8,7 @@
 pub mod toml;
 
 use crate::data::DataGenConfig;
+use crate::geometry::MetricKind;
 use crate::sampling::SampleConstants;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -46,6 +47,11 @@ impl ConstantsProfile {
 pub struct ClusterConfig {
     /// Number of centers.
     pub k: usize,
+    /// The metric space every layer runs in — kernels, sequential `A`
+    /// subroutines, coordinators, summaries, and cost reporting
+    /// (`cluster.metric`: `l2sq` | `l2` | `l1` | `cosine` | `chebyshev`).
+    /// The default `l2sq` reproduces the pre-metric pipeline bit-for-bit.
+    pub metric: MetricKind,
     /// Iterative-Sample ε (paper experiments: 0.1).
     pub epsilon: f64,
     /// Which Iterative-Sample constants profile to use.
@@ -102,6 +108,7 @@ impl Default for ClusterConfig {
     fn default() -> Self {
         ClusterConfig {
             k: 25,
+            metric: MetricKind::L2Sq,
             epsilon: 0.1,
             profile: ConstantsProfile::Practical,
             machines: 100,
@@ -183,6 +190,14 @@ impl AppConfig {
             ("data", "contamination") => self.data.contamination = p(value)?,
             ("data", "seed") => self.data.seed = p(value)?,
             ("cluster", "k") => self.cluster.k = p(value)?,
+            ("cluster", "metric") => {
+                self.cluster.metric = MetricKind::parse(value).with_context(|| {
+                    format!(
+                        "unknown metric {value:?} (expected one of: {})",
+                        MetricKind::ALL.map(|m| m.name()).join(", ")
+                    )
+                })?
+            }
             ("cluster", "epsilon") => self.cluster.epsilon = p(value)?,
             ("cluster", "profile") => {
                 self.cluster.profile = match value {
@@ -296,6 +311,21 @@ mod tests {
         let d = AppConfig::default();
         assert_eq!(d.cluster.z, 0);
         assert_eq!(d.data.contamination, 0.0);
+    }
+
+    #[test]
+    fn metric_key_applies_with_aliases() {
+        let cfg = AppConfig::load(None, &[("cluster.metric".into(), "l1".into())]).unwrap();
+        assert_eq!(cfg.cluster.metric, MetricKind::L1);
+        let cfg =
+            AppConfig::load(None, &[("cluster.metric".into(), "angular".into())]).unwrap();
+        assert_eq!(cfg.cluster.metric, MetricKind::Cosine);
+        // Default is the paper's squared-Euclidean fast path.
+        assert_eq!(AppConfig::default().cluster.metric, MetricKind::L2Sq);
+        // Unknown metric names fail with the valid list.
+        let err = AppConfig::load(None, &[("cluster.metric".into(), "hamming".into())])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown metric"), "{err:#}");
     }
 
     #[test]

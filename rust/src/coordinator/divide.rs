@@ -56,6 +56,7 @@ pub fn mr_divide_kmedian(
 
     // ---- Steps 3–7: cluster every block independently ----
     let k = cfg.k;
+    let metric = cfg.metric;
     let msgs: Vec<BlockMsg> = cluster.run_machine_round(
         "divide: cluster blocks",
         &parts,
@@ -75,6 +76,7 @@ pub fn mr_divide_kmedian(
                             k,
                             max_iters: cfg.lloyd_max_iters,
                             tol: cfg.lloyd_tol,
+                            metric,
                             seed: cfg.seed ^ (m as u64),
                             ..Default::default()
                         },
@@ -91,13 +93,14 @@ pub fn mr_divide_kmedian(
                             min_rel_gain: cfg.ls_min_rel_gain,
                             max_swaps: cfg.ls_max_swaps,
                             candidate_fraction: cfg.ls_candidate_fraction,
+                            metric,
                             seed: cfg.seed ^ (m as u64),
                         },
                     )
                     .centers;
                     // Local search tracks no assignment; one histogram pass
                     // with the same backend kernel as the kMedian phase.
-                    let (w, _) = NativeBackend.weight_histogram(part, &centers);
+                    let (w, _) = NativeBackend.weight_histogram_metric(part, &centers, metric);
                     (centers, w)
                 }
             };

@@ -10,7 +10,7 @@ use crate::algorithms::local_search::{local_search, LocalSearchConfig};
 use crate::config::{ClusterConfig, RuntimeBackendKind};
 use crate::geometry::PointSet;
 use crate::mapreduce::{MrCluster, MrConfig, RunStats};
-use crate::metrics::cost::{eval_costs, CostSummary};
+use crate::metrics::cost::{eval_costs_metric, CostSummary};
 use crate::runtime::{ComputeBackend, NativeBackend};
 use anyhow::Result;
 use std::sync::Arc;
@@ -115,7 +115,8 @@ pub struct Outcome {
     pub algorithm: Algorithm,
     /// The k centers the run selected.
     pub centers: PointSet,
-    /// Exact objectives of `centers` over the full input.
+    /// Exact objectives of `centers` over the full input, evaluated under
+    /// the run's configured metric (`ClusterConfig::metric`).
     pub cost: CostSummary,
     /// k-median objective (= cost.median; kept for ergonomic access).
     pub cost_median: f64,
@@ -234,6 +235,7 @@ pub fn run_algorithm_with(
                             min_rel_gain: cfg.ls_min_rel_gain,
                             max_swaps: cfg.ls_max_swaps,
                             candidate_fraction: cfg.ls_candidate_fraction,
+                            metric: cfg.metric,
                             seed: cfg.seed,
                         },
                     )
@@ -265,6 +267,7 @@ pub fn run_algorithm_with(
                 block_size: block.max(cfg.k * 4),
                 lloyd_max_iters: cfg.lloyd_max_iters,
                 lloyd_tol: cfg.lloyd_tol,
+                metric: cfg.metric,
                 seed: cfg.seed,
             };
             let mem = scfg.block_size * points.dim() * 4 * 4; // ~levels
@@ -276,11 +279,12 @@ pub fn run_algorithm_with(
     };
 
     let wall_time = t0.elapsed();
-    // Host-side exact evaluation (not simulated): threads = 1 forces a
-    // single pass; any other value uses the shared worker pool, whose size
-    // is fixed per process (cores / MRCLUSTER_POOL_THREADS) — the config
-    // value is a serial/parallel switch here, not a worker count.
-    let cost = eval_costs(points, &centers, cfg.threads);
+    // Host-side exact evaluation (not simulated), under the configured
+    // metric: threads = 1 forces a single pass; any other value uses the
+    // shared worker pool, whose size is fixed per process (cores /
+    // MRCLUSTER_POOL_THREADS) — the config value is a serial/parallel
+    // switch here, not a worker count.
+    let cost = eval_costs_metric(points, &centers, cfg.metric, cfg.threads);
     Ok(Outcome {
         algorithm,
         cost_median: cost.median,

@@ -7,7 +7,7 @@
 //! in the max), which experiment E3 (`kcenter-compare`) reproduces.
 
 use super::mr_iterative_sample::mr_iterative_sample;
-use crate::algorithms::gonzalez::gonzalez;
+use crate::algorithms::gonzalez::gonzalez_metric;
 use crate::config::ClusterConfig;
 use crate::geometry::PointSet;
 use crate::mapreduce::{MrCluster, MrError};
@@ -40,10 +40,11 @@ pub fn mr_kcenter(
     let leader_mem = sample.mem_bytes() + sample.len() * sample.len() * 4;
     let k = cfg.k;
     let seed = cfg.seed;
+    let metric = cfg.metric;
     let sample_ref = &sample;
     let centers = cluster.run_leader_round("kcenter: A on sample", leader_mem, || {
         let mut rng = Rng::new(seed ^ 0xCE47E5);
-        gonzalez(sample_ref, k, &mut rng).centers
+        gonzalez_metric(sample_ref, k, &mut rng, metric).centers
     })?;
 
     Ok(MrKCenterResult {

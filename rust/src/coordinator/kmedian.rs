@@ -49,12 +49,13 @@ pub fn mr_kmedian(
     // in a single assign pass (one machine round). ----
     let parts = points.chunks(cfg.machines.min(points.len()).max(1));
     let bcast = sample.mem_bytes();
+    let metric = cfg.metric;
     let sample_ref = &sample;
     let hists: Vec<Vec<f64>> = cluster.run_machine_round(
         "kmedian: weight histogram",
         &parts,
         bcast,
-        move |_m, part: &PointSet| backend.weight_histogram(part, sample_ref).0,
+        move |_m, part: &PointSet| backend.weight_histogram_metric(part, sample_ref, metric).0,
     )?;
 
     // ---- Steps 5–7: leader sums weights (+1 for the sample point itself)
@@ -96,6 +97,7 @@ pub(crate) fn run_weighted_inner(
                 k: cfg.k,
                 max_iters: cfg.lloyd_max_iters,
                 tol: cfg.lloyd_tol,
+                metric: cfg.metric,
                 seed: cfg.seed ^ 0xA11CE,
                 ..Default::default()
             },
@@ -110,6 +112,7 @@ pub(crate) fn run_weighted_inner(
                 min_rel_gain: cfg.ls_min_rel_gain,
                 max_swaps: cfg.ls_max_swaps,
                 candidate_fraction: cfg.ls_candidate_fraction,
+                metric: cfg.metric,
                 seed: cfg.seed ^ 0xB0B,
             },
         )

@@ -83,10 +83,12 @@ pub fn mr_iterative_sample(
 ) -> Result<MrSampleResult, MrError> {
     let n = points.len();
     let dim = points.dim();
+    let metric = cfg.metric;
     let scfg = IterativeSampleConfig {
         k: cfg.k,
         epsilon: cfg.epsilon,
         constants: cfg.profile.constants(),
+        metric,
         seed: cfg.seed,
         max_iters: 200,
     };
@@ -214,8 +216,9 @@ pub fn mr_iterative_sample(
                 if part.idx.is_empty() {
                     return 0usize;
                 }
-                // d(x, S) update against the fresh batch — the hot kernel.
-                let nd = backend.min_dist(&part.pts, batch_ref);
+                // d(x, S) update against the fresh batch — the hot kernel,
+                // in the configured metric.
+                let nd = backend.min_dist_metric(&part.pts, batch_ref, metric);
                 for (pos, v) in nd.iter().enumerate() {
                     if *v < part.dist[pos] {
                         part.dist[pos] = *v;

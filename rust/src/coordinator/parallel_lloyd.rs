@@ -6,10 +6,23 @@
 //! (sum, count) plus its share of the objective; the leader aggregates and
 //! recomputes the means. By construction this computes *exactly* the
 //! sequential Lloyd iterate (the paper makes the same point).
+//!
+//! ## Non-Euclidean metrics
+//!
+//! Under a metric where the mean is not the minimizer
+//! ([`crate::geometry::MetricKind::mean_is_minimizer`] false), each
+//! iteration adds a second machine round — the *medoid snap*: the leader
+//! broadcasts the aggregated mean targets, every machine proposes its
+//! resident point nearest to each target (under the active metric, with
+//! its global index for tie-breaking), and the leader promotes the global
+//! winners. This mirrors the sequential [`crate::algorithms::lloyd`]
+//! medoid rule exactly, keeping the "same iterate as sequential Lloyd"
+//! contract across metrics; under the default `l2sq`/`l2` metrics the
+//! round structure is unchanged (one round per iteration).
 
 use crate::config::ClusterConfig;
 use crate::geometry::PointSet;
-use crate::mapreduce::{MrCluster, MrError};
+use crate::mapreduce::{MemSize, MrCluster, MrError};
 use crate::runtime::{ComputeBackend, LloydStepOut};
 use crate::util::rng::Rng;
 
@@ -26,6 +39,20 @@ pub struct ParallelLloydResult {
     pub history: Vec<f64>,
 }
 
+/// One machine's medoid-snap proposal: per cluster, the surrogate distance
+/// and global index of its best resident candidate (`u64::MAX` = none),
+/// plus the candidate rows themselves.
+struct MedoidMsg {
+    best: Vec<(f32, u64)>,
+    rows: PointSet,
+}
+
+impl MemSize for MedoidMsg {
+    fn mem_bytes(&self) -> usize {
+        self.best.len() * (4 + 8) + self.rows.mem_bytes()
+    }
+}
+
 /// Run Parallel-Lloyd on `cluster` (adds its rounds to the cluster stats).
 pub fn parallel_lloyd(
     cluster: &mut MrCluster,
@@ -34,6 +61,7 @@ pub fn parallel_lloyd(
     backend: &dyn ComputeBackend,
 ) -> Result<ParallelLloydResult, MrError> {
     let d = points.dim();
+    let metric = cfg.metric;
     let mut rng = Rng::new(cfg.seed);
     let mut centers = crate::algorithms::seeding::random_distinct(points, cfg.k, &mut rng);
     let k = centers.len();
@@ -43,6 +71,15 @@ pub fn parallel_lloyd(
     // metadata, not an O(n·d) memcpy (each block's logical bytes are still
     // charged to its machine by the engine).
     let parts = points.chunks(cfg.machines.min(points.len()).max(1));
+    // Global index of each part's first row (medoid tie-breaking).
+    let offsets: Vec<usize> = parts
+        .iter()
+        .scan(0usize, |lo, part| {
+            let here = *lo;
+            *lo += part.len();
+            Some(here)
+        })
+        .collect();
     let bcast_bytes = k * d * 4;
 
     let mut history = Vec::new();
@@ -56,10 +93,10 @@ pub fn parallel_lloyd(
             &format!("parallel-lloyd iter {it}"),
             &parts,
             bcast_bytes,
-            move |_m, part: &PointSet| backend.lloyd_step(part, c_ref),
+            move |_m, part: &PointSet| backend.lloyd_step_metric(part, c_ref, metric),
         )?;
 
-        // Leader: aggregate and recompute means.
+        // Leader: aggregate and recompute the mean targets.
         let mut agg = LloydStepOut::default();
         for s in &steps {
             agg.merge(s);
@@ -67,19 +104,86 @@ pub fn parallel_lloyd(
         let cost = agg.cost_median;
         history.push(cost);
 
-        let mut next = PointSet::with_capacity(d, k);
+        let mut targets = PointSet::with_capacity(d, k);
         let mut row = vec![0.0f32; d];
         for c in 0..k {
             if agg.counts[c] > 0.0 {
                 for j in 0..d {
                     row[j] = (agg.sums[c * d + j] / agg.counts[c]) as f32;
                 }
-                next.push(&row);
+                targets.push(&row);
             } else {
-                next.push(centers.row(c));
+                targets.push(centers.row(c));
             }
         }
-        centers = next;
+
+        centers = if metric.mean_is_minimizer() {
+            targets
+        } else {
+            // Medoid snap (second machine round): broadcast the targets;
+            // every machine proposes its resident point nearest to each
+            // target under the metric; the leader promotes the global
+            // winner by (surrogate, global index) — deterministic at any
+            // machine count. Mirrors the sequential medoid rule.
+            let t_ref = &targets;
+            let o_ref = &offsets;
+            let msgs: Vec<MedoidMsg> = cluster.run_machine_round(
+                &format!("parallel-lloyd iter {it}: medoid snap"),
+                &parts,
+                // Two broadcast point sets: the old centers (to recompute
+                // the assignment) AND the mean targets.
+                2 * bcast_bytes,
+                move |m, part: &PointSet| {
+                    let a = backend.assign_metric(part, c_ref, metric);
+                    let mut best: Vec<(f32, u64)> = vec![(f32::INFINITY, u64::MAX); k];
+                    for (pos, &c) in a.idx.iter().enumerate() {
+                        let cu = c as usize;
+                        let s = metric.surrogate(part.row(pos), t_ref.row(cu));
+                        // Strict less keeps the lowest position on ties
+                        // (positions ascend within a machine).
+                        if s.total_cmp(&best[cu].0) == std::cmp::Ordering::Less {
+                            best[cu] = (s, (o_ref[m] + pos) as u64);
+                        }
+                    }
+                    let mut rows = PointSet::with_capacity(d, k);
+                    let zero = vec![0.0f32; d];
+                    for &(_, gi) in &best {
+                        if gi == u64::MAX {
+                            rows.push(&zero);
+                        } else {
+                            rows.push(part.row(gi as usize - o_ref[m]));
+                        }
+                    }
+                    MedoidMsg { best, rows }
+                },
+            )?;
+            let mut next = PointSet::with_capacity(d, k);
+            for c in 0..k {
+                let mut win: Option<(f32, u64, usize)> = None; // (s, gi, machine)
+                for (m, msg) in msgs.iter().enumerate() {
+                    let (s, gi) = msg.best[c];
+                    if gi == u64::MAX {
+                        continue;
+                    }
+                    let better = match win {
+                        None => true,
+                        Some((ws, wgi, _)) => match s.total_cmp(&ws) {
+                            std::cmp::Ordering::Less => true,
+                            std::cmp::Ordering::Equal => gi < wgi,
+                            std::cmp::Ordering::Greater => false,
+                        },
+                    };
+                    if better {
+                        win = Some((s, gi, m));
+                    }
+                }
+                match win {
+                    Some((_, _, m)) => next.push(msgs[m].rows.row(c)),
+                    None => next.push(targets.row(c)), // empty cluster
+                }
+            }
+            next
+        };
 
         if last_cost.is_finite() {
             let rel = (last_cost - cost) / last_cost.max(1e-12);

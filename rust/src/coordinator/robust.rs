@@ -28,7 +28,7 @@
 //! envelope and the final step's feasibility.
 
 use crate::algorithms::local_search::{local_search_weighted, LocalSearchConfig};
-use crate::algorithms::outliers::kcenter_with_outliers;
+use crate::algorithms::outliers::kcenter_with_outliers_metric;
 use crate::config::ClusterConfig;
 use crate::geometry::PointSet;
 use crate::mapreduce::{MrCluster, MrError};
@@ -102,12 +102,19 @@ fn summarize_and_compose(
 
     // ---- Round 1: per-machine coverage summaries (resident blocks) ----
     let seed = cfg.seed;
+    let metric = cfg.metric;
     let summaries: Vec<CoverageSummary> = cluster.run_machine_round(
         &format!("{label}: summarize blocks"),
         &parts,
         0,
         move |m, part: &PointSet| {
-            CoverageSummary::build(part, tau.min(part.len()).max(1), seed ^ (m as u64), backend)
+            CoverageSummary::build_metric(
+                part,
+                tau.min(part.len()).max(1),
+                seed ^ (m as u64),
+                backend,
+                metric,
+            )
         },
     )?;
 
@@ -171,9 +178,10 @@ pub fn mr_kcenter_outliers(
     let leader_mem = crate::mapreduce::MemSize::mem_bytes(&merged) + matrix_bytes;
     let k = cfg.k;
     let z = cfg.z as f64;
+    let metric = cfg.metric;
     let merged_ref = &merged;
     let result = cluster.run_leader_round("robust-kcenter: A on summary", leader_mem, || {
-        kcenter_with_outliers(merged_ref.reps(), k, z)
+        kcenter_with_outliers_metric(merged_ref.reps(), k, z, metric)
     })?;
 
     Ok(RobustKCenterResult {
@@ -216,6 +224,7 @@ pub fn mr_coreset_kmedian(
         min_rel_gain: cfg.ls_min_rel_gain,
         max_swaps: cfg.ls_max_swaps,
         candidate_fraction: cfg.ls_candidate_fraction,
+        metric: cfg.metric,
         seed: cfg.seed ^ 0xC0_5E7,
     };
     let set_ref = &trimmed_set;

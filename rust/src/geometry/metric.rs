@@ -1,13 +1,59 @@
-//! Distance functions.
+//! Distance functions and the pluggable metric-space abstraction.
 //!
-//! The paper's algorithms only require the triangle inequality; all our
-//! k-median / k-center machinery is written against the [`Metric`] trait.
-//! The experiments (§4.2) use Euclidean distance in `R^3`; the squared
-//! Euclidean form is the hot-path primitive (monotone in the true distance,
-//! so argmins are unaffected, and it avoids the sqrt until cost reporting —
-//! the same trick the L1 Pallas kernel uses).
+//! The paper's algorithms (Iterative-Sample, MapReduce-kCenter/kMedian) are
+//! stated for *general metric spaces* — the proofs only use the triangle
+//! inequality. This module is what makes the reproduction honor that: every
+//! layer (backend kernels, sequential `A` subroutines, coordinators, cost
+//! oracles) is parameterized by a [`MetricKind`], selected at run time via
+//! the `cluster.metric` config key (see the README configuration table).
+//!
+//! Two representations coexist:
+//!
+//! * [`MetricKind`] — a `Copy` enum naming the registered metrics. This is
+//!   the currency the whole pipeline threads around: it is cheap to store
+//!   in configs, trivially serializable (`name`/`parse`), and lets the hot
+//!   kernels dispatch once per tile instead of per distance
+//!   (see `runtime/native.rs`).
+//! * the [`Metric`] trait — the open-ended object-safe interface, kept for
+//!   library users who want to experiment with metrics the enum does not
+//!   register. [`MetricKind`] implements it, as do the standalone structs
+//!   ([`EuclideanSq`], [`Manhattan`], [`Chebyshev`]).
+//!
+//! ## Surrogates
+//!
+//! Each metric may expose a cheap *surrogate*: a monotone stand-in for the
+//! true distance that argmin comparisons can use directly. The Euclidean
+//! fast path ([`MetricKind::L2Sq`], the default — and the metric every
+//! paper experiment runs under) uses the squared distance and defers the
+//! `sqrt` to cost reporting; the angular metric ([`MetricKind::Cosine`])
+//! uses `1 − cos θ` and defers the `acos`. Costs always go through
+//! [`MetricKind::to_dist_f32`] / [`MetricKind::to_dist_f64`], so reported
+//! objectives are true metric distances for every kind.
+//!
+//! # Examples
+//!
+//! The same assignment under two metrics — Euclidean geometry picks the
+//! *near* center, angular geometry the *aligned* one:
+//!
+//! ```
+//! use mrcluster::geometry::{MetricKind, PointSet};
+//! use mrcluster::runtime::{ComputeBackend, NativeBackend};
+//!
+//! let p = PointSet::from_flat(2, vec![3.0, 1.0]);
+//! let c = PointSet::from_flat(2, vec![10.0, 0.0, 0.0, 1.0]);
+//! // Euclidean: (3,1) is far from (10,0), close to (0,1).
+//! assert_eq!(NativeBackend.assign_metric(&p, &c, MetricKind::L2Sq).idx, vec![1]);
+//! // Angular: (3,1) points almost along (10,0).
+//! assert_eq!(NativeBackend.assign_metric(&p, &c, MetricKind::Cosine).idx, vec![0]);
+//! ```
 
 /// A distance function over coordinate rows.
+///
+/// Implementations must be symmetric, zero on identical rows, and satisfy
+/// the triangle inequality — the only properties the paper's analysis
+/// uses. [`MetricKind`] is the registered-metric implementation the
+/// pipeline threads around; the standalone structs below demonstrate the
+/// open-ended form.
 pub trait Metric: Send + Sync {
     /// The true metric distance d(a, b).
     fn dist(&self, a: &[f32], b: &[f32]) -> f32;
@@ -27,10 +73,173 @@ pub trait Metric: Send + Sync {
     }
 }
 
-/// Squared-Euclidean surrogate for the Euclidean metric. This is the metric
-/// every paper experiment runs under.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct EuclideanSq;
+/// The registered metric spaces the pipeline can run under.
+///
+/// Selected via `cluster.metric` (TOML / `--set cluster.metric=…` /
+/// `mrcluster cluster --metric …`). [`MetricKind::L2Sq`] is the default
+/// and reproduces the pre-metric pipeline bit-for-bit: its kernels are the
+/// original squared-Euclidean fast path, dispatched unchanged
+/// (property-tested in `rust/tests/prop_metrics.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum MetricKind {
+    /// Euclidean distance through the squared-distance surrogate — the
+    /// specialized fast path (no `sqrt` until cost reporting) and the
+    /// metric of every paper experiment. The default.
+    #[default]
+    L2Sq,
+    /// Euclidean distance computed directly (the surrogate *is* the
+    /// distance). Same geometry as [`MetricKind::L2Sq`]; exists to exercise
+    /// the generic path and as the reference for float-rounding contrasts.
+    L2,
+    /// Manhattan / taxicab distance `Σ |aᵢ − bᵢ|`.
+    L1,
+    /// Angular distance `acos(cos θ)` through the `1 − cos θ` surrogate.
+    /// Unlike raw cosine *dissimilarity*, the angle is a true metric
+    /// (triangle inequality holds on the sphere; the maximum distance is
+    /// π, for anti-parallel rows). Zero-norm rows are treated as at
+    /// distance 0 from other zero-norm rows and at a right angle
+    /// (θ = π/2, surrogate 1) to everything else.
+    Cosine,
+    /// Chebyshev / L∞ distance `max |aᵢ − bᵢ|`.
+    Chebyshev,
+}
+
+impl MetricKind {
+    /// Every registered metric, in display order (the E13 sweep order).
+    pub const ALL: [MetricKind; 5] = [
+        MetricKind::L2Sq,
+        MetricKind::L2,
+        MetricKind::L1,
+        MetricKind::Cosine,
+        MetricKind::Chebyshev,
+    ];
+
+    /// Canonical config/CLI name (`cluster.metric` value).
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricKind::L2Sq => "l2sq",
+            MetricKind::L2 => "l2",
+            MetricKind::L1 => "l1",
+            MetricKind::Cosine => "cosine",
+            MetricKind::Chebyshev => "chebyshev",
+        }
+    }
+
+    /// Parse a config/CLI name (aliases accepted, case-insensitive).
+    pub fn parse(s: &str) -> Option<MetricKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "l2sq" | "squared-l2" | "euclidean-sq" | "sqeuclidean" => MetricKind::L2Sq,
+            "l2" | "euclidean" => MetricKind::L2,
+            "l1" | "manhattan" | "taxicab" => MetricKind::L1,
+            "cosine" | "angular" => MetricKind::Cosine,
+            "chebyshev" | "linf" | "max" => MetricKind::Chebyshev,
+            _ => return None,
+        })
+    }
+
+    /// True when the coordinate-wise (weighted) mean minimizes the summed
+    /// distance objective well enough for Lloyd's classical update — the
+    /// Euclidean family. Non-Euclidean metrics route Lloyd's update to the
+    /// medoid step instead (`algorithms/lloyd.rs`).
+    #[inline]
+    pub fn mean_is_minimizer(self) -> bool {
+        matches!(self, MetricKind::L2Sq | MetricKind::L2)
+    }
+
+    /// The comparison surrogate s(a, b) — monotone in the true distance.
+    ///
+    /// Scalar reference implementation; the tiled kernels in
+    /// `runtime/native.rs` replicate these op sequences plane-major so
+    /// kernel and scalar surrogates agree bit-for-bit.
+    #[inline]
+    pub fn surrogate(self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            MetricKind::L2Sq => sq_dist(a, b),
+            MetricKind::L2 => sq_dist(a, b).max(0.0).sqrt(),
+            MetricKind::L1 => a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum(),
+            MetricKind::Cosine => cosine_surrogate(a, b),
+            MetricKind::Chebyshev => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f32::max),
+        }
+    }
+
+    /// Surrogate → true distance, in `f32` (the flavor the hot paths use:
+    /// `min_dist`, the kernels' per-point cost shares).
+    #[inline]
+    pub fn to_dist_f32(self, s: f32) -> f32 {
+        match self {
+            MetricKind::L2Sq => s.max(0.0).sqrt(),
+            MetricKind::Cosine => (1.0 - s).clamp(-1.0, 1.0).acos(),
+            MetricKind::L2 | MetricKind::L1 | MetricKind::Chebyshev => s.max(0.0),
+        }
+    }
+
+    /// Surrogate → true distance, in `f64` (the flavor the exact cost
+    /// evaluators use; under [`MetricKind::L2Sq`] this is the `f64` sqrt
+    /// the pre-metric `eval_costs` applied, preserving bit-identity).
+    #[inline]
+    pub fn to_dist_f64(self, s: f32) -> f64 {
+        match self {
+            MetricKind::L2Sq => (s.max(0.0) as f64).sqrt(),
+            MetricKind::Cosine => ((1.0 - s) as f64).clamp(-1.0, 1.0).acos(),
+            MetricKind::L2 | MetricKind::L1 | MetricKind::Chebyshev => s.max(0.0) as f64,
+        }
+    }
+
+    /// Surrogate → squared true distance, in `f64` — the k-means objective
+    /// share. Under [`MetricKind::L2Sq`] the surrogate *is* the squared
+    /// distance (bit-identical to the pre-metric accumulation); other
+    /// metrics square their `f64` distance.
+    #[inline]
+    pub fn means_share_f64(self, s: f32) -> f64 {
+        match self {
+            MetricKind::L2Sq => s.max(0.0) as f64,
+            _ => {
+                let d = self.to_dist_f64(s);
+                d * d
+            }
+        }
+    }
+
+    /// The true metric distance d(a, b) in `f32`.
+    #[inline]
+    pub fn dist(self, a: &[f32], b: &[f32]) -> f32 {
+        self.to_dist_f32(self.surrogate(a, b))
+    }
+
+    /// The true metric distance d(a, b) in `f64` (cost-evaluation flavor).
+    #[inline]
+    pub fn dist_f64(self, a: &[f32], b: &[f32]) -> f64 {
+        self.to_dist_f64(self.surrogate(a, b))
+    }
+}
+
+impl std::fmt::Display for MetricKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl Metric for MetricKind {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        MetricKind::dist(*self, a, b)
+    }
+
+    #[inline]
+    fn surrogate(&self, a: &[f32], b: &[f32]) -> f32 {
+        MetricKind::surrogate(*self, a, b)
+    }
+
+    #[inline]
+    fn to_dist(&self, surrogate: f32) -> f32 {
+        self.to_dist_f32(surrogate)
+    }
+}
 
 /// Squared Euclidean distance between two coordinate rows, with an
 /// unrolled fast path for the paper's `d = 3`.
@@ -60,6 +269,37 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     }
 }
 
+/// The `1 − cos θ` surrogate of the angular metric, with the zero-norm
+/// convention of [`MetricKind::Cosine`]. Accumulates dot product and both
+/// squared norms coordinate-by-coordinate in index order — the same op
+/// sequence the tiled kernel replays plane-major, so scalar and kernel
+/// surrogates agree bit-for-bit.
+#[inline]
+pub fn cosine_surrogate(a: &[f32], b: &[f32]) -> f32 {
+    let mut dot = 0.0f32;
+    let mut na2 = 0.0f32;
+    let mut nb2 = 0.0f32;
+    for i in 0..a.len() {
+        dot += a[i] * b[i];
+        na2 += a[i] * a[i];
+        nb2 += b[i] * b[i];
+    }
+    let denom = (na2 * nb2).sqrt();
+    if denom > 0.0 {
+        1.0 - dot / denom
+    } else if na2 == 0.0 && nb2 == 0.0 {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+/// Squared-Euclidean surrogate for the Euclidean metric. This is the metric
+/// every paper experiment runs under (the struct form of
+/// [`MetricKind::L2Sq`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EuclideanSq;
+
 impl Metric for EuclideanSq {
     #[inline]
     fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
@@ -77,9 +317,7 @@ impl Metric for EuclideanSq {
     }
 }
 
-/// Manhattan (L1) metric — included to demonstrate the library is not tied
-/// to Euclidean geometry (the paper's guarantees only need the triangle
-/// inequality).
+/// Manhattan (L1) metric — the struct form of [`MetricKind::L1`].
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Manhattan;
 
@@ -90,7 +328,7 @@ impl Metric for Manhattan {
     }
 }
 
-/// Chebyshev (L∞) metric.
+/// Chebyshev (L∞) metric — the struct form of [`MetricKind::Chebyshev`].
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Chebyshev;
 
@@ -133,6 +371,59 @@ mod tests {
     }
 
     #[test]
+    fn kind_l2sq_matches_struct_euclidean() {
+        let a = [1.0f32, -2.0, 0.5];
+        let b = [0.0f32, 4.0, 2.5];
+        let k = MetricKind::L2Sq;
+        assert_eq!(k.surrogate(&a, &b).to_bits(), EuclideanSq.surrogate(&a, &b).to_bits());
+        assert!((MetricKind::dist(k, &a, &b) - EuclideanSq.dist(&a, &b)).abs() < 1e-6);
+        // L2 computes the same geometry directly.
+        assert!((MetricKind::dist(MetricKind::L2, &a, &b) - EuclideanSq.dist(&a, &b)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn known_hand_values_per_kind() {
+        let a = [1.0f32, 2.0];
+        let b = [4.0f32, -2.0];
+        assert!((MetricKind::dist(MetricKind::L2, &a, &b) - 5.0).abs() < 1e-6);
+        assert!((MetricKind::dist(MetricKind::L1, &a, &b) - 7.0).abs() < 1e-6);
+        assert!((MetricKind::dist(MetricKind::Chebyshev, &a, &b) - 4.0).abs() < 1e-6);
+        // Orthogonal vectors: angular distance π/2.
+        let e0 = [1.0f32, 0.0];
+        let e1 = [0.0f32, 3.0];
+        let ang = MetricKind::dist(MetricKind::Cosine, &e0, &e1);
+        assert!((ang - std::f32::consts::FRAC_PI_2).abs() < 1e-5, "{ang}");
+        // Parallel vectors of different magnitude: angular distance 0.
+        let p = [2.0f32, 2.0];
+        let q = [5.0f32, 5.0];
+        assert!(MetricKind::dist(MetricKind::Cosine, &p, &q).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cosine_zero_norm_convention() {
+        let z = [0.0f32, 0.0];
+        let x = [1.0f32, 0.0];
+        assert_eq!(MetricKind::surrogate(MetricKind::Cosine, &z, &z), 0.0);
+        assert_eq!(MetricKind::surrogate(MetricKind::Cosine, &z, &x), 1.0);
+        assert_eq!(MetricKind::surrogate(MetricKind::Cosine, &x, &z), 1.0);
+    }
+
+    #[test]
+    fn names_roundtrip_and_aliases() {
+        for m in MetricKind::ALL {
+            assert_eq!(MetricKind::parse(m.name()), Some(m), "{m}");
+            assert_eq!(format!("{m}"), m.name());
+        }
+        assert_eq!(MetricKind::parse("euclidean"), Some(MetricKind::L2));
+        assert_eq!(MetricKind::parse("Manhattan"), Some(MetricKind::L1));
+        assert_eq!(MetricKind::parse("angular"), Some(MetricKind::Cosine));
+        assert_eq!(MetricKind::parse("linf"), Some(MetricKind::Chebyshev));
+        assert_eq!(MetricKind::parse("squared-l2"), Some(MetricKind::L2Sq));
+        assert_eq!(MetricKind::parse("nope"), None);
+        assert_eq!(MetricKind::default(), MetricKind::L2Sq);
+    }
+
+    #[test]
     fn identity_and_symmetry() {
         let metrics: Vec<Box<dyn Metric>> =
             vec![Box::new(EuclideanSq), Box::new(Manhattan), Box::new(Chebyshev)];
@@ -143,22 +434,48 @@ mod tests {
             assert!((m.dist(&a, &b) - m.dist(&b, &a)).abs() < 1e-6);
             assert!(m.dist(&a, &b) > 0.0);
         }
+        for k in MetricKind::ALL {
+            assert!(MetricKind::dist(k, &a, &a).abs() < 1e-6, "{k}");
+            assert!(
+                (MetricKind::dist(k, &a, &b) - MetricKind::dist(k, &b, &a)).abs() < 1e-6,
+                "{k}"
+            );
+            assert!(MetricKind::dist(k, &a, &b) > 0.0, "{k}");
+        }
     }
 
     #[test]
     fn triangle_inequality_randomized() {
         let mut rng = crate::util::rng::Rng::new(99);
-        let metrics: Vec<Box<dyn Metric>> =
-            vec![Box::new(EuclideanSq), Box::new(Manhattan), Box::new(Chebyshev)];
         for _ in 0..200 {
             let p: Vec<Vec<f32>> = (0..3)
                 .map(|_| (0..3).map(|_| rng.f32() * 10.0 - 5.0).collect())
                 .collect();
-            for m in &metrics {
-                let ab = m.dist(&p[0], &p[1]);
-                let bc = m.dist(&p[1], &p[2]);
-                let ac = m.dist(&p[0], &p[2]);
-                assert!(ac <= ab + bc + 1e-4, "triangle violated");
+            for k in MetricKind::ALL {
+                let ab = MetricKind::dist(k, &p[0], &p[1]);
+                let bc = MetricKind::dist(k, &p[1], &p[2]);
+                let ac = MetricKind::dist(k, &p[0], &p[2]);
+                assert!(ac <= ab + bc + 1e-4, "{k}: triangle violated");
+            }
+        }
+    }
+
+    #[test]
+    fn surrogate_is_monotone_in_distance() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let a: Vec<f32> = (0..4).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        for _ in 0..100 {
+            let b: Vec<f32> = (0..4).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let c: Vec<f32> = (0..4).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            for k in MetricKind::ALL {
+                let (sb, sc) = (k.surrogate(&a, &b), k.surrogate(&a, &c));
+                let (db, dc) = (MetricKind::dist(k, &a, &b), MetricKind::dist(k, &a, &c));
+                if sb < sc {
+                    assert!(db <= dc + 1e-5, "{k}: surrogate order disagrees with dist");
+                }
+                // to_dist inverts the surrogate to the true distance.
+                assert!((k.to_dist_f32(sb) - db).abs() < 1e-6, "{k}");
+                assert!((k.to_dist_f64(sb) - db as f64).abs() < 1e-5, "{k}");
             }
         }
     }

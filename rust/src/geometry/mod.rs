@@ -7,5 +7,5 @@ pub mod metric;
 pub mod point;
 
 pub use matrix::DistanceMatrix;
-pub use metric::{EuclideanSq, Metric};
+pub use metric::{EuclideanSq, Metric, MetricKind};
 pub use point::PointSet;

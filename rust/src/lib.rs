@@ -10,8 +10,12 @@
 //!   `MapReduce-kCenter` (Algorithm 4), `MapReduce-kMedian` (Algorithm 5),
 //!   `MapReduce-Divide-kMedian` (Algorithm 6) and `Parallel-Lloyd`, plus all
 //!   sequential baselines in [`algorithms`]. Beyond the paper, the
-//!   [`summaries`] layer adds composable weighted coresets and the
-//!   outlier-robust pipelines in [`coordinator::robust`].
+//!   [`summaries`] layer adds composable weighted coresets, the
+//!   outlier-robust pipelines live in [`coordinator::robust`], and every
+//!   layer is parameterized over pluggable metric spaces
+//!   ([`geometry::MetricKind`]: `l2sq`/`l2`/`l1`/`cosine`/`chebyshev`,
+//!   selected via `cluster.metric`) — honoring the paper's general-metric
+//!   statement of its algorithms.
 //! * **L2/L1 (python, build-time only)** — the numeric hot loop
 //!   (blocked nearest-center assignment and Lloyd accumulation) written in
 //!   JAX calling a Pallas kernel, AOT-lowered to HLO-text artifacts.
@@ -55,7 +59,7 @@ pub mod util;
 pub use config::{ClusterConfig, ConstantsProfile};
 pub use coordinator::{run_algorithm, Algorithm, Outcome};
 pub use data::DataGenConfig;
-pub use geometry::PointSet;
+pub use geometry::{MetricKind, PointSet};
 
 /// Convenient glob-import surface for examples and downstream users.
 pub mod prelude {
@@ -63,11 +67,11 @@ pub mod prelude {
     pub use crate::config::{ClusterConfig, ConstantsProfile, RuntimeBackendKind};
     pub use crate::coordinator::{run_algorithm, Algorithm, Outcome};
     pub use crate::data::{DataGenConfig, Dataset};
-    pub use crate::geometry::{Metric, PointSet};
+    pub use crate::geometry::{Metric, MetricKind, PointSet};
     pub use crate::mapreduce::{MrCluster, MrConfig, RunStats};
     pub use crate::metrics::{
-        kcenter_cost, kcenter_cost_with_outliers, kmedian_cost, kmedian_cost_with_outliers,
-        kmeans_cost,
+        kcenter_cost, kcenter_cost_metric, kcenter_cost_with_outliers, kmeans_cost,
+        kmedian_cost, kmedian_cost_metric, kmedian_cost_with_outliers,
     };
     pub use crate::runtime::{ComputeBackend, NativeBackend};
     pub use crate::sampling::{IterativeSampleConfig, SampleConstants};

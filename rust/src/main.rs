@@ -14,6 +14,7 @@
 //!   skew-sweep               E7: Zipf-α robustness
 //!   fault-sweep              E11: recovery under fault/straggler regimes
 //!   outlier-compare          E12: robust vs plain k-center on contaminated data
+//!   metric-compare           E13: the pipelines across registered metric spaces
 //!   mrc-check                run Sampling-Lloyd and verify MRC^0 bounds
 //! ```
 //!
@@ -128,6 +129,7 @@ fn main() -> Result<()> {
         "skew-sweep" => cmd_skew(&cfg, &args)?,
         "fault-sweep" => cmd_fault_sweep(&cfg, &args)?,
         "outlier-compare" => cmd_outlier_compare(&cfg, &args)?,
+        "metric-compare" => cmd_metric_compare(&cfg, &args)?,
         "streaming-compare" => cmd_streaming(&cfg, &args)?,
         "kmeans-check" => cmd_kmeans(&cfg, &args)?,
         "mrc-check" => cmd_mrc_check(&cfg)?,
@@ -158,6 +160,9 @@ commands:
   outlier-compare    [--n N] [--contamination F]: E12 outlier robustness —
                      Robust-kCenter vs plain MapReduce-kCenter on a
                      contaminated dataset, plus lossy-regime recovery check
+  metric-compare     [--n N] [--metrics LIST]: E13 general metric spaces —
+                     the pipelines under l2sq/l2/l1/cosine/chebyshev, each
+                     cell replayed and verified bit-identical
   mrc-check          run Sampling-Lloyd, assert MRC^0 resource bounds
                      (including the recovery-memory audit)
 
@@ -165,9 +170,12 @@ algorithms: Parallel-Lloyd, Divide-Lloyd, Divide-LocalSearch,
             Sampling-Lloyd, Sampling-LocalSearch, LocalSearch, MrKCenter,
             Streaming-Guha, Robust-kCenter, Coreset-kMedian
 
+cluster --metric NAME is shorthand for --set cluster.metric=NAME.
+
 config keys (TOML [section] key, or --set section.key=value):
   data.n data.k data.dim data.sigma data.alpha data.contamination data.seed
-  cluster.k cluster.epsilon cluster.profile(theory|practical)
+  cluster.k cluster.metric(l2sq|l2|l1|cosine|chebyshev)
+  cluster.epsilon cluster.profile(theory|practical)
   cluster.machines cluster.mem_limit cluster.parallel cluster.threads
   cluster.backend(native|xla) cluster.artifact_dir
   cluster.lloyd_max_iters cluster.lloyd_tol
@@ -218,12 +226,19 @@ fn cmd_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
     let algo_name = args.flags.get("algo").context("--algo NAME required")?;
     let algo = Algorithm::parse(algo_name)
         .with_context(|| format!("unknown algorithm {algo_name:?}"))?;
+    let mut cfg = cfg.clone();
+    if let Some(m) = args.flags.get("metric") {
+        // `--metric NAME` shorthand; applied last so it beats --set/file.
+        cfg.apply("cluster", "metric", m)?;
+    }
+    let cfg = &cfg;
     let points = load_points(cfg, &args.flags)?;
     let backend = experiments::make_backend(&cfg.cluster);
     let out = run_algorithm_with(algo, &points, &cfg.cluster, backend.as_ref())?;
     println!("algorithm      : {}", out.algorithm.name());
     println!("points         : {}", points.len());
     println!("k              : {}", cfg.cluster.k);
+    println!("metric         : {}", cfg.cluster.metric);
     println!("k-median cost  : {:.4}", out.cost.median);
     println!("k-center cost  : {:.4}", out.cost.center);
     println!("k-means cost   : {:.4}", out.cost.means);
@@ -508,6 +523,59 @@ fn cmd_outlier_compare(cfg: &AppConfig, args: &Args) -> Result<()> {
         if !plain.lossy_identical || !robust.lossy_identical {
             bail!("lossy-regime recovery diverged from the clean run");
         }
+    }
+    Ok(())
+}
+
+fn cmd_metric_compare(cfg: &AppConfig, args: &Args) -> Result<()> {
+    use mrcluster::geometry::MetricKind;
+    let n = args
+        .flags
+        .get("n")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(20_000);
+    let metrics: Vec<MetricKind> = match args.flags.get("metrics") {
+        Some(s) => s
+            .split(',')
+            .map(|m| {
+                MetricKind::parse(m.trim())
+                    .with_context(|| format!("unknown metric {:?}", m.trim()))
+            })
+            .collect::<Result<_>>()?,
+        None => MetricKind::ALL.to_vec(),
+    };
+    let params = params_from(cfg, 1);
+    let backend = experiments::make_backend(&cfg.cluster);
+    let rows = experiments::metric_compare(&params, n, &metrics, backend.as_ref())?;
+    println!(
+        "== E13: general metric spaces (n = {n}; costs are per-metric, not cross-comparable) =="
+    );
+    let mut t = Table::new(vec![
+        "metric",
+        "algorithm",
+        "k-median cost",
+        "k-center cost",
+        "rounds",
+        "reduced",
+        "deterministic",
+    ]);
+    let mut all_deterministic = true;
+    for r in &rows {
+        all_deterministic &= r.deterministic;
+        t.row(vec![
+            r.metric.to_string(),
+            r.algo.clone(),
+            format!("{:.4}", r.cost_median),
+            format!("{:.4}", r.cost_center),
+            r.rounds.to_string(),
+            r.reduced.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+            if r.deterministic { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    if !all_deterministic {
+        bail!("a metric/algorithm cell failed to replay bit-identically");
     }
     Ok(())
 }

@@ -1,7 +1,14 @@
 //! Exact objective evaluation, threaded for large n over the shared
 //! worker pool (no per-call thread spawns).
+//!
+//! Every evaluator exists in two forms: the plain functions are the
+//! squared-Euclidean (`l2sq`) legacy surface, kept bit-identical to the
+//! pre-metric pipeline; the `*_metric` forms take an explicit
+//! [`MetricKind`] and are what the driver and the metric-aware tests use.
+//! The plain forms are thin `l2sq` wrappers, so there is exactly one
+//! implementation of each objective.
 
-use crate::geometry::{metric::sq_dist, PointSet};
+use crate::geometry::{MetricKind, PointSet};
 use crate::util::pool;
 use std::sync::Mutex;
 
@@ -21,21 +28,28 @@ pub struct CostSummary {
     pub means: f64,
 }
 
-fn chunk_cost(points: &PointSet, lo: usize, hi: usize, centers: &PointSet) -> CostSummary {
+fn chunk_cost(
+    points: &PointSet,
+    lo: usize,
+    hi: usize,
+    centers: &PointSet,
+    metric: MetricKind,
+) -> CostSummary {
     let mut s = CostSummary::default();
     for i in lo..hi {
         let row = points.row(i);
         let mut best = f32::INFINITY;
         for c in 0..centers.len() {
-            let d = sq_dist(row, centers.row(c));
+            let d = metric.surrogate(row, centers.row(c));
             if d < best {
                 best = d;
             }
         }
-        let d2 = best.max(0.0) as f64;
-        let d = d2.sqrt();
+        // Under l2sq this is the historical pair: d2 = best.max(0) as f64,
+        // median += sqrt(d2), means += d2 — bit-identical.
+        let d = metric.to_dist_f64(best);
         s.median += d;
-        s.means += d2;
+        s.means += metric.means_share_f64(best);
         if d > s.center {
             s.center = d;
         }
@@ -43,23 +57,29 @@ fn chunk_cost(points: &PointSet, lo: usize, hi: usize, centers: &PointSet) -> Co
     s
 }
 
-/// Evaluate all three objectives. `threads = 1` forces a single pass on
-/// the caller; any other value evaluates fixed blocks on the shared
-/// worker pool (`util::pool::global`) and merges them in block order, so
-/// the result does not depend on the actual worker count.
-pub fn eval_costs(points: &PointSet, centers: &PointSet, threads: usize) -> CostSummary {
+/// Evaluate all three objectives under `metric`. `threads = 1` forces a
+/// single pass on the caller; any other value evaluates fixed blocks on
+/// the shared worker pool (`util::pool::global`) and merges them in block
+/// order, so the result does not depend on the actual worker count.
+pub fn eval_costs_metric(
+    points: &PointSet,
+    centers: &PointSet,
+    metric: MetricKind,
+    threads: usize,
+) -> CostSummary {
     assert!(!centers.is_empty(), "no centers");
     assert_eq!(points.dim(), centers.dim(), "dim mismatch");
     let n = points.len();
     if threads == 1 || n < 10_000 {
-        return chunk_cost(points, 0, n, centers);
+        return chunk_cost(points, 0, n, centers, metric);
     }
     let n_blocks = crate::util::div_ceil(n, COST_BLOCK);
     let parts: Vec<Mutex<Option<CostSummary>>> = (0..n_blocks).map(|_| Mutex::new(None)).collect();
     pool::global().run(n_blocks, &|b| {
         let lo = b * COST_BLOCK;
         let hi = (lo + COST_BLOCK).min(n);
-        *parts[b].lock().expect("cost slot poisoned") = Some(chunk_cost(points, lo, hi, centers));
+        *parts[b].lock().expect("cost slot poisoned") =
+            Some(chunk_cost(points, lo, hi, centers, metric));
     });
     let mut out = CostSummary::default();
     for slot in parts {
@@ -74,9 +94,19 @@ pub fn eval_costs(points: &PointSet, centers: &PointSet, threads: usize) -> Cost
     out
 }
 
+/// [`eval_costs_metric`] under the default squared-Euclidean metric.
+pub fn eval_costs(points: &PointSet, centers: &PointSet, threads: usize) -> CostSummary {
+    eval_costs_metric(points, centers, MetricKind::L2Sq, threads)
+}
+
 /// k-median objective Σ d(x, C).
 pub fn kmedian_cost(points: &PointSet, centers: &PointSet) -> f64 {
     eval_costs(points, centers, 0).median
+}
+
+/// k-median objective under an explicit metric.
+pub fn kmedian_cost_metric(points: &PointSet, centers: &PointSet, metric: MetricKind) -> f64 {
+    eval_costs_metric(points, centers, metric, 0).median
 }
 
 /// k-center objective max d(x, C).
@@ -84,25 +114,45 @@ pub fn kcenter_cost(points: &PointSet, centers: &PointSet) -> f64 {
     eval_costs(points, centers, 0).center
 }
 
+/// k-center objective under an explicit metric.
+pub fn kcenter_cost_metric(points: &PointSet, centers: &PointSet, metric: MetricKind) -> f64 {
+    eval_costs_metric(points, centers, metric, 0).center
+}
+
 /// k-means objective Σ d(x, C)².
 pub fn kmeans_cost(points: &PointSet, centers: &PointSet) -> f64 {
     eval_costs(points, centers, 0).means
 }
 
-/// All true (non-squared) nearest-center distances (one [`assign_full`]
-/// pass, which already clamps negatives).
-fn nearest_dists(points: &PointSet, centers: &PointSet) -> Vec<f64> {
+/// k-means objective under an explicit metric.
+pub fn kmeans_cost_metric(points: &PointSet, centers: &PointSet, metric: MetricKind) -> f64 {
+    eval_costs_metric(points, centers, metric, 0).means
+}
+
+/// All true nearest-center distances under `metric` (one
+/// [`assign_full_metric`] pass; surrogates mapped through the metric).
+fn nearest_dists_metric(points: &PointSet, centers: &PointSet, metric: MetricKind) -> Vec<f64> {
     assert!(!centers.is_empty(), "no centers");
     assert_eq!(points.dim(), centers.dim(), "dim mismatch");
-    let (sqdists, _) = assign_full(points, centers);
-    sqdists.into_iter().map(|d2| (d2 as f64).sqrt()).collect()
+    let (surr, _) = assign_full_metric(points, centers, metric);
+    surr.into_iter().map(|s| metric.to_dist_f64(s)).collect()
 }
 
 /// k-center objective with `z` outliers: max d(x, C) after the `z`
 /// farthest points are dropped. `z = 0` is [`kcenter_cost`]; `z >= n`
 /// costs 0 (everything may be dropped).
 pub fn kcenter_cost_with_outliers(points: &PointSet, centers: &PointSet, z: usize) -> f64 {
-    let mut d = nearest_dists(points, centers);
+    kcenter_cost_with_outliers_metric(points, centers, z, MetricKind::L2Sq)
+}
+
+/// [`kcenter_cost_with_outliers`] under an explicit metric.
+pub fn kcenter_cost_with_outliers_metric(
+    points: &PointSet,
+    centers: &PointSet,
+    z: usize,
+    metric: MetricKind,
+) -> f64 {
+    let mut d = nearest_dists_metric(points, centers, metric);
     let n = d.len();
     if z >= n {
         return 0.0;
@@ -114,7 +164,17 @@ pub fn kcenter_cost_with_outliers(points: &PointSet, centers: &PointSet, z: usiz
 /// k-median objective with `z` outliers: Σ d(x, C) over all but the `z`
 /// farthest points, summed in index order (deterministic).
 pub fn kmedian_cost_with_outliers(points: &PointSet, centers: &PointSet, z: usize) -> f64 {
-    let d = nearest_dists(points, centers);
+    kmedian_cost_with_outliers_metric(points, centers, z, MetricKind::L2Sq)
+}
+
+/// [`kmedian_cost_with_outliers`] under an explicit metric.
+pub fn kmedian_cost_with_outliers_metric(
+    points: &PointSet,
+    centers: &PointSet,
+    z: usize,
+    metric: MetricKind,
+) -> f64 {
+    let d = nearest_dists_metric(points, centers, metric);
     let n = d.len();
     if z >= n {
         return 0.0;
@@ -141,6 +201,16 @@ pub fn kmedian_cost_with_outliers(points: &PointSet, centers: &PointSet, z: usiz
 /// Full nearest-center assignment: (sq-distance, index) per point.
 /// Single-threaded; used by the sequential baselines and tests.
 pub fn assign_full(points: &PointSet, centers: &PointSet) -> (Vec<f32>, Vec<u32>) {
+    assign_full_metric(points, centers, MetricKind::L2Sq)
+}
+
+/// [`assign_full`] under an explicit metric: (surrogate, index) per point.
+/// The scalar reference the tiled kernels are checked against bit-for-bit.
+pub fn assign_full_metric(
+    points: &PointSet,
+    centers: &PointSet,
+    metric: MetricKind,
+) -> (Vec<f32>, Vec<u32>) {
     let n = points.len();
     let mut dist = vec![0.0f32; n];
     let mut idx = vec![0u32; n];
@@ -149,7 +219,7 @@ pub fn assign_full(points: &PointSet, centers: &PointSet) -> (Vec<f32>, Vec<u32>
         let mut best = f32::INFINITY;
         let mut bj = 0u32;
         for c in 0..centers.len() {
-            let d = sq_dist(row, centers.row(c));
+            let d = metric.surrogate(row, centers.row(c));
             if d < best {
                 best = d;
                 bj = c as u32;
@@ -199,6 +269,38 @@ mod tests {
         let par = eval_costs(&p, &c, 4);
         assert!((seq.median - par.median).abs() / seq.median < 1e-9);
         assert_eq!(seq.center, par.center);
+        // The metric-threaded path stays deterministic too.
+        for m in MetricKind::ALL {
+            let seq = eval_costs_metric(&p, &c, m, 1);
+            let par = eval_costs_metric(&p, &c, m, 4);
+            assert!((seq.median - par.median).abs() / seq.median.max(1e-12) < 1e-9, "{m}");
+            assert_eq!(seq.center, par.center, "{m}");
+        }
+    }
+
+    #[test]
+    fn metric_costs_on_hand_instance() {
+        // Points on two axes; one center at e0.
+        let p = PointSet::from_flat(2, vec![3.0, 4.0, 2.0, 0.0]);
+        let c = PointSet::from_flat(2, vec![1.0, 0.0]);
+        let l2 = kmedian_cost_metric(&p, &c, MetricKind::L2);
+        assert!((l2 - (20.0f64.sqrt() + 1.0)).abs() < 1e-5);
+        assert!((kmedian_cost_metric(&p, &c, MetricKind::L1) - (6.0 + 1.0)).abs() < 1e-5);
+        assert!((kcenter_cost_metric(&p, &c, MetricKind::Chebyshev) - 4.0).abs() < 1e-5);
+        // (3,4) is at atan2(4,3) ≈ 0.9273 rad from e0; (2,0) is aligned.
+        assert!((kcenter_cost_metric(&p, &c, MetricKind::Cosine) - 0.9273).abs() < 1e-3);
+    }
+
+    #[test]
+    fn l2sq_wrappers_are_bit_identical_to_metric_form() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let p = PointSet::from_flat(3, (0..600).map(|_| rng.f32()).collect());
+        let c = PointSet::from_flat(3, (0..15).map(|_| rng.f32()).collect());
+        let legacy = eval_costs(&p, &c, 1);
+        let metric = eval_costs_metric(&p, &c, MetricKind::L2Sq, 1);
+        assert_eq!(legacy.median.to_bits(), metric.median.to_bits());
+        assert_eq!(legacy.center.to_bits(), metric.center.to_bits());
+        assert_eq!(legacy.means.to_bits(), metric.means.to_bits());
     }
 
     #[test]
@@ -251,5 +353,22 @@ mod tests {
         let p = PointSet::from_flat(1, vec![0.0, 5.0, 5.0, 5.0]);
         let c = PointSet::from_flat(1, vec![0.0]);
         assert!((kmedian_cost_with_outliers(&p, &c, 2) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outlier_metric_variants_drop_under_their_own_geometry() {
+        // Under L1 the point (3,3) is at distance 6; under Chebyshev 3.
+        let p = PointSet::from_flat(2, vec![0.0, 0.0, 1.0, 0.0, 3.0, 3.0]);
+        let c = PointSet::from_flat(2, vec![0.0, 0.0]);
+        assert!(
+            (kcenter_cost_with_outliers_metric(&p, &c, 0, MetricKind::L1) - 6.0).abs() < 1e-9
+        );
+        assert!(
+            (kcenter_cost_with_outliers_metric(&p, &c, 1, MetricKind::L1) - 1.0).abs() < 1e-9
+        );
+        assert!(
+            (kmedian_cost_with_outliers_metric(&p, &c, 1, MetricKind::Chebyshev) - 1.0).abs()
+                < 1e-9
+        );
     }
 }

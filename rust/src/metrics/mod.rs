@@ -2,13 +2,17 @@
 //!
 //! Exact (non-sampled) cost computation for the three objectives the paper
 //! touches: k-median (sum of distances), k-center (max distance) and
-//! k-means (sum of squared distances). Evaluation is O(n·k·d); for the
-//! multi-million-point Figure-2 runs it is chunked across worker threads.
+//! k-means (sum of squared distances) — each in a legacy squared-Euclidean
+//! form and a [`crate::geometry::MetricKind`]-parameterized `*_metric`
+//! form. Evaluation is O(n·k·d); for the multi-million-point Figure-2 runs
+//! it is chunked across worker threads.
 
 pub mod cost;
 pub mod report;
 
 pub use cost::{
-    assign_full, kcenter_cost, kcenter_cost_with_outliers, kmeans_cost, kmedian_cost,
-    kmedian_cost_with_outliers, CostSummary,
+    assign_full, assign_full_metric, kcenter_cost, kcenter_cost_metric,
+    kcenter_cost_with_outliers, kcenter_cost_with_outliers_metric, kmeans_cost,
+    kmeans_cost_metric, kmedian_cost, kmedian_cost_metric, kmedian_cost_with_outliers,
+    kmedian_cost_with_outliers_metric, CostSummary,
 };

@@ -44,12 +44,16 @@ pub use executor::XlaBackend;
 pub use manifest::Manifest;
 pub use native::NativeBackend;
 
-use crate::geometry::PointSet;
+use crate::geometry::{MetricKind, PointSet};
 
 /// Nearest-center assignment of a point block.
 #[derive(Clone, Debug, Default)]
 pub struct AssignOut {
-    /// Squared Euclidean distance to the nearest center, per point.
+    /// Surrogate distance to the nearest center, per point, in the metric
+    /// that produced the assignment: the squared Euclidean distance under
+    /// the default `l2sq` metric (hence the field name), the true distance
+    /// under `l2`/`l1`/`chebyshev`, `1 − cos θ` under `cosine`. Convert
+    /// with [`MetricKind::to_dist_f32`] / [`MetricKind::to_dist_f64`].
     pub sqdist: Vec<f32>,
     /// Index of the nearest center, per point.
     pub idx: Vec<u32>,
@@ -94,18 +98,36 @@ impl LloydStepOut {
 /// field is the same histogram) so the n×k distance pass runs only once
 /// per (points, centers) pair.
 pub fn weights_from_assign(a: &AssignOut, k: usize) -> (Vec<f64>, f64) {
+    weights_from_assign_metric(a, k, MetricKind::L2Sq)
+}
+
+/// [`weights_from_assign`] under an explicit metric: the assignment's
+/// surrogates are mapped through [`MetricKind::to_dist_f64`] so the cost
+/// share is the true metric distance sum. Under `l2sq` this is the
+/// historical `sqrt(d²)` accumulation bit-for-bit.
+pub fn weights_from_assign_metric(a: &AssignOut, k: usize, metric: MetricKind) -> (Vec<f64>, f64) {
     let mut w = vec![0.0f64; k];
     let mut cost = 0.0f64;
-    for (d2, &c) in a.sqdist.iter().zip(&a.idx) {
+    for (s, &c) in a.sqdist.iter().zip(&a.idx) {
         w[c as usize] += 1.0;
-        cost += (*d2 as f64).sqrt();
+        cost += metric.to_dist_f64(*s);
     }
     (w, cost)
 }
 
 /// The numeric kernel surface shared by the native and XLA paths.
+///
+/// The plain methods (`assign`, `lloyd_step`, `weight_histogram`,
+/// `min_dist`) are the squared-Euclidean (`l2sq`) fast path every paper
+/// experiment runs under. The `*_metric` counterparts accept a
+/// [`MetricKind`] and, by default, dispatch: `l2sq` routes to the
+/// backend's own fast path (so the default metric is bit-identical to the
+/// pre-metric pipeline — including through the XLA backend's AOT kernels),
+/// every other metric routes to the generic tiled native kernels
+/// ([`native::assign_metric_generic`]). Backends with native support for
+/// more metrics can override.
 pub trait ComputeBackend: Send + Sync {
-    /// Nearest-center assignment (squared distances).
+    /// Nearest-center assignment (squared Euclidean surrogates).
     fn assign(&self, points: &PointSet, centers: &PointSet) -> AssignOut;
 
     /// Assignment + per-center sums/counts + objective shares.
@@ -123,6 +145,72 @@ pub trait ComputeBackend: Send + Sync {
             .into_iter()
             .map(|d| d.max(0.0).sqrt())
             .collect()
+    }
+
+    /// [`ComputeBackend::assign`] under an explicit metric (surrogates in
+    /// `AssignOut::sqdist`; see the dispatch contract in the trait docs).
+    fn assign_metric(
+        &self,
+        points: &PointSet,
+        centers: &PointSet,
+        metric: MetricKind,
+    ) -> AssignOut {
+        if metric == MetricKind::L2Sq {
+            self.assign(points, centers)
+        } else {
+            native::assign_metric_generic(points, centers, metric)
+        }
+    }
+
+    /// [`ComputeBackend::lloyd_step`] under an explicit metric: objective
+    /// shares are true metric distances (`cost_median` = Σ d, `cost_means`
+    /// = Σ d²); `sums`/`counts` are the plain per-center scatter-add either
+    /// way (the *update* rule for non-Euclidean metrics is the caller's
+    /// concern — see `algorithms/lloyd.rs`).
+    fn lloyd_step_metric(
+        &self,
+        points: &PointSet,
+        centers: &PointSet,
+        metric: MetricKind,
+    ) -> LloydStepOut {
+        if metric == MetricKind::L2Sq {
+            self.lloyd_step(points, centers)
+        } else {
+            native::lloyd_step_metric_generic(points, centers, metric)
+        }
+    }
+
+    /// [`ComputeBackend::weight_histogram`] under an explicit metric.
+    fn weight_histogram_metric(
+        &self,
+        points: &PointSet,
+        centers: &PointSet,
+        metric: MetricKind,
+    ) -> (Vec<f64>, f64) {
+        if metric == MetricKind::L2Sq {
+            self.weight_histogram(points, centers)
+        } else {
+            let a = self.assign_metric(points, centers, metric);
+            weights_from_assign_metric(&a, centers.len(), metric)
+        }
+    }
+
+    /// [`ComputeBackend::min_dist`] under an explicit metric.
+    fn min_dist_metric(
+        &self,
+        points: &PointSet,
+        centers: &PointSet,
+        metric: MetricKind,
+    ) -> Vec<f32> {
+        if metric == MetricKind::L2Sq {
+            self.min_dist(points, centers)
+        } else {
+            self.assign_metric(points, centers, metric)
+                .sqdist
+                .into_iter()
+                .map(|s| metric.to_dist_f32(s))
+                .collect()
+        }
     }
 
     /// Backend display name ("native", "xla") for logs and reports.

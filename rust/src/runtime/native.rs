@@ -11,6 +11,19 @@
 //! plane-major (SoA-transposed) implementation and, for large inputs, runs
 //! its blocks on the shared worker pool; see EXPERIMENTS.md §Perf.
 //!
+//! ## General metrics
+//!
+//! The squared-Euclidean kernel ([`NativeBackend::assign`]) is the
+//! specialized fast path; [`assign_metric_generic`] /
+//! [`lloyd_step_metric_generic`] serve every registered [`MetricKind`]
+//! through the same tile/block/pool structure with metric-dispatched inner
+//! loops (dispatch happens once per tile batch, outside the hot loops).
+//! The generic path's `L2Sq` arm replicates the fast path's op sequence
+//! exactly, so the two are bit-identical — property-tested in
+//! `rust/tests/prop_metrics.rs`, which is what licenses the
+//! `ComputeBackend::assign_metric` dispatch to route `l2sq` to the fast
+//! path.
+//!
 //! ## Determinism contract
 //!
 //! Results never depend on the worker count or schedule: work is cut into
@@ -20,8 +33,8 @@
 //! order on the calling thread. This is what makes `parallel = true` and
 //! `parallel = false` cluster runs bit-identical (rust/tests/prop_data_plane.rs).
 
-use super::{weights_from_assign, AssignOut, ComputeBackend, LloydStepOut};
-use crate::geometry::PointSet;
+use super::{weights_from_assign_metric, AssignOut, ComputeBackend, LloydStepOut};
+use crate::geometry::{MetricKind, PointSet};
 use crate::util::pool;
 use std::sync::Mutex;
 
@@ -114,8 +127,260 @@ fn assign_block(
     }
 }
 
+/// Plane-major assignment of rows `[lo, lo + out_len)` under any
+/// registered metric — the generic counterpart of [`assign_block`], same
+/// tile transpose, metric-dispatched inner loops. The `L2Sq`/`L2` arm is
+/// the fast path's accumulation verbatim (same j-order), so its surrogates
+/// are bit-identical to [`assign_block`]'s; the L1/Chebyshev/Cosine arms
+/// replay the scalar op sequences of [`MetricKind::surrogate`] plane-major,
+/// so kernel and scalar (`assign_full_metric`) surrogates agree exactly.
+fn assign_block_metric(
+    points: &PointSet,
+    centers: &PointSet,
+    lo: usize,
+    surr: &mut [f32],
+    idx: &mut [u32],
+    metric: MetricKind,
+) {
+    let d = points.dim();
+    let k = centers.len();
+    let pflat = points.flat();
+    let cflat = centers.flat();
+    let n = surr.len();
+    debug_assert_eq!(idx.len(), n);
+    let mut planes = vec![0.0f32; TILE * d];
+    // Cosine-only precomputation: squared center norms, accumulated in
+    // coordinate order (the scalar surrogate's op sequence).
+    let mut cnorm2 = Vec::new();
+    if metric == MetricKind::Cosine {
+        cnorm2 = vec![0.0f32; k];
+        for c in 0..k {
+            let crow = &cflat[c * d..(c + 1) * d];
+            let mut acc = 0.0f32;
+            for &cj in crow {
+                acc += cj * cj;
+            }
+            cnorm2[c] = acc;
+        }
+    }
+    let mut pnorm2 = [0.0f32; TILE];
+    let mut t0 = 0usize;
+    while t0 < n {
+        let t1 = (t0 + TILE).min(n);
+        let tn = t1 - t0;
+        for i in 0..tn {
+            let base = (lo + t0 + i) * d;
+            for j in 0..d {
+                planes[j * TILE + i] = pflat[base + j];
+            }
+        }
+        if metric == MetricKind::Cosine {
+            // Squared point norms, plane by plane (coordinate order).
+            for x in pnorm2.iter_mut().take(tn) {
+                *x = 0.0;
+            }
+            for j in 0..d {
+                let pj = &planes[j * TILE..(j + 1) * TILE];
+                for i in 0..tn {
+                    pnorm2[i] += pj[i] * pj[i];
+                }
+            }
+        }
+        let mut best = [f32::INFINITY; TILE];
+        let mut bidx = [0u32; TILE];
+        let mut acc = [0.0f32; TILE];
+        for c in 0..k {
+            let crow = &cflat[c * d..(c + 1) * d];
+            let p0 = &planes[0..TILE];
+            let c0 = crow[0];
+            match metric {
+                MetricKind::L2Sq | MetricKind::L2 => {
+                    for i in 0..tn {
+                        let t = p0[i] - c0;
+                        acc[i] = t * t;
+                    }
+                    for (j, &cj) in crow.iter().enumerate().skip(1) {
+                        let pj = &planes[j * TILE..(j + 1) * TILE];
+                        for i in 0..tn {
+                            let t = pj[i] - cj;
+                            acc[i] += t * t;
+                        }
+                    }
+                    if metric == MetricKind::L2 {
+                        // Convert BEFORE the compare so ties resolve on the
+                        // same values (and with the same op order) as the
+                        // scalar surrogate, `sq.max(0).sqrt()`.
+                        for a in acc.iter_mut().take(tn) {
+                            *a = a.max(0.0).sqrt();
+                        }
+                    }
+                }
+                MetricKind::L1 => {
+                    for i in 0..tn {
+                        acc[i] = (p0[i] - c0).abs();
+                    }
+                    for (j, &cj) in crow.iter().enumerate().skip(1) {
+                        let pj = &planes[j * TILE..(j + 1) * TILE];
+                        for i in 0..tn {
+                            acc[i] += (pj[i] - cj).abs();
+                        }
+                    }
+                }
+                MetricKind::Chebyshev => {
+                    for i in 0..tn {
+                        acc[i] = (p0[i] - c0).abs();
+                    }
+                    for (j, &cj) in crow.iter().enumerate().skip(1) {
+                        let pj = &planes[j * TILE..(j + 1) * TILE];
+                        for i in 0..tn {
+                            acc[i] = acc[i].max((pj[i] - cj).abs());
+                        }
+                    }
+                }
+                MetricKind::Cosine => {
+                    // Dot product plane by plane, then the scalar
+                    // surrogate's exact finish: 1 - dot / sqrt(|p|²|c|²)
+                    // with the zero-norm convention.
+                    for i in 0..tn {
+                        acc[i] = p0[i] * c0;
+                    }
+                    for (j, &cj) in crow.iter().enumerate().skip(1) {
+                        let pj = &planes[j * TILE..(j + 1) * TILE];
+                        for i in 0..tn {
+                            acc[i] += pj[i] * cj;
+                        }
+                    }
+                    let nc2 = cnorm2[c];
+                    for i in 0..tn {
+                        let denom = (pnorm2[i] * nc2).sqrt();
+                        acc[i] = if denom > 0.0 {
+                            1.0 - acc[i] / denom
+                        } else if pnorm2[i] == 0.0 && nc2 == 0.0 {
+                            0.0
+                        } else {
+                            1.0
+                        };
+                    }
+                }
+            }
+            let cid = c as u32;
+            for i in 0..tn {
+                let better = acc[i] < best[i];
+                best[i] = if better { acc[i] } else { best[i] };
+                bidx[i] = if better { cid } else { bidx[i] };
+            }
+        }
+        for i in 0..tn {
+            surr[t0 + i] = best[i].max(0.0);
+            idx[t0 + i] = bidx[i];
+        }
+        t0 = t1;
+    }
+}
+
+/// Generic-metric nearest-center assignment: the same fixed-block pooled
+/// driver as [`NativeBackend::assign`], with [`assign_block_metric`] doing
+/// the work. `AssignOut::sqdist` holds the metric's *surrogate* (the
+/// squared distance under `L2Sq`). Public so the property tests can force
+/// the generic path and compare it bit-for-bit against the fast path.
+pub fn assign_metric_generic(
+    points: &PointSet,
+    centers: &PointSet,
+    metric: MetricKind,
+) -> AssignOut {
+    assert_eq!(points.dim(), centers.dim(), "dim mismatch");
+    assert!(!centers.is_empty(), "no centers");
+    let n = points.len();
+    let mut out = AssignOut {
+        sqdist: vec![0.0; n],
+        idx: vec![0; n],
+    };
+    if n < PAR_MIN {
+        assign_block_metric(points, centers, 0, &mut out.sqdist, &mut out.idx, metric);
+        return out;
+    }
+    let slots: Vec<Mutex<(&mut [f32], &mut [u32])>> = out
+        .sqdist
+        .chunks_mut(PAR_BLOCK)
+        .zip(out.idx.chunks_mut(PAR_BLOCK))
+        .map(Mutex::new)
+        .collect();
+    pool::global().run(slots.len(), &|b| {
+        let mut guard = slots[b].lock().expect("assign slot poisoned");
+        let (sq, ix) = &mut *guard;
+        assign_block_metric(points, centers, b * PAR_BLOCK, sq, ix, metric);
+    });
+    drop(slots);
+    out
+}
+
+/// Generic-metric Lloyd accumulation: one [`assign_metric_generic`] pass
+/// plus the blocked scatter-add, with objective shares mapped through the
+/// metric (`cost_median` = Σ d, `cost_means` = Σ d²). Public for the same
+/// force-the-generic-path reason as [`assign_metric_generic`].
+pub fn lloyd_step_metric_generic(
+    points: &PointSet,
+    centers: &PointSet,
+    metric: MetricKind,
+) -> LloydStepOut {
+    let a = assign_metric_generic(points, centers, metric);
+    lloyd_accumulate(points, centers, &a, metric)
+}
+
+/// The shared post-assignment half of a Lloyd step (blocked scatter-add of
+/// sums/counts + objective shares), used by both the fast path and the
+/// generic path so the merge structure stays identical.
+fn lloyd_accumulate(
+    points: &PointSet,
+    centers: &PointSet,
+    a: &AssignOut,
+    metric: MetricKind,
+) -> LloydStepOut {
+    let k = centers.len();
+    let n = points.len();
+    let ranges = block_ranges(n);
+    if n < PAR_MIN || ranges.len() <= 1 {
+        // Same block structure, executed inline.
+        let mut agg = LloydStepOut::default();
+        for &(lo, hi) in &ranges {
+            agg.merge(&lloyd_block(points, k, lo, hi, a, metric));
+        }
+        if agg.sums.is_empty() {
+            // n == 0: still shape the output for k centers.
+            agg.sums = vec![0.0; k * points.dim()];
+            agg.counts = vec![0.0; k];
+        }
+        return agg;
+    }
+    let partials: Vec<Mutex<Option<LloydStepOut>>> =
+        ranges.iter().map(|_| Mutex::new(None)).collect();
+    let rref = &ranges;
+    pool::global().run(ranges.len(), &|b| {
+        let (lo, hi) = rref[b];
+        *partials[b].lock().expect("lloyd slot poisoned") =
+            Some(lloyd_block(points, k, lo, hi, a, metric));
+    });
+    // Merge in block-index order: schedule-independent f64 sums.
+    let mut agg = LloydStepOut::default();
+    for slot in partials {
+        let part = slot
+            .into_inner()
+            .expect("lloyd slot poisoned")
+            .expect("block not run");
+        agg.merge(&part);
+    }
+    agg
+}
+
 /// Costs + scatter-add of one block's assignment into a private partial.
-fn lloyd_block(points: &PointSet, k: usize, lo: usize, hi: usize, a: &AssignOut) -> LloydStepOut {
+fn lloyd_block(
+    points: &PointSet,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    a: &AssignOut,
+    metric: MetricKind,
+) -> LloydStepOut {
     let d = points.dim();
     let pflat = points.flat();
     let mut out = LloydStepOut {
@@ -124,13 +389,15 @@ fn lloyd_block(points: &PointSet, k: usize, lo: usize, hi: usize, a: &AssignOut)
         cost_median: 0.0,
         cost_means: 0.0,
     };
-    // Costs first: a straight-line pass LLVM can pipeline (f32 sqrt per
-    // point, f64 accumulators — per-point sqrt error is << the f32
-    // distance error itself).
+    // Costs first: a straight-line pass LLVM can pipeline (f32 surrogate →
+    // distance per point, f64 accumulators — per-point conversion error is
+    // << the f32 distance error itself). Under `L2Sq` this is exactly the
+    // historical `d2 as f64` / `d2.sqrt() as f64` pair (surrogates are
+    // pre-clamped ≥ 0 by the assign kernels).
     for i in lo..hi {
-        let d2 = a.sqdist[i];
-        out.cost_means += d2 as f64;
-        out.cost_median += d2.sqrt() as f64;
+        let s = a.sqdist[i];
+        out.cost_means += metric.means_share_f64(s);
+        out.cost_median += metric.to_dist_f32(s) as f64;
     }
     // Scatter-add of coordinate sums over the flat buffer (no row() slice
     // construction in the hot loop).
@@ -191,48 +458,14 @@ impl ComputeBackend for NativeBackend {
 
     fn lloyd_step(&self, points: &PointSet, centers: &PointSet) -> LloydStepOut {
         let a = self.assign(points, centers);
-        let k = centers.len();
-        let n = points.len();
-        let ranges = block_ranges(n);
-        if n < PAR_MIN || ranges.len() <= 1 {
-            // Same block structure, executed inline.
-            let mut agg = LloydStepOut::default();
-            for &(lo, hi) in &ranges {
-                agg.merge(&lloyd_block(points, k, lo, hi, &a));
-            }
-            if agg.sums.is_empty() {
-                // n == 0: still shape the output for k centers.
-                agg.sums = vec![0.0; k * points.dim()];
-                agg.counts = vec![0.0; k];
-            }
-            return agg;
-        }
-        let partials: Vec<Mutex<Option<LloydStepOut>>> =
-            ranges.iter().map(|_| Mutex::new(None)).collect();
-        let aref = &a;
-        let rref = &ranges;
-        pool::global().run(ranges.len(), &|b| {
-            let (lo, hi) = rref[b];
-            *partials[b].lock().expect("lloyd slot poisoned") =
-                Some(lloyd_block(points, k, lo, hi, aref));
-        });
-        // Merge in block-index order: schedule-independent f64 sums.
-        let mut agg = LloydStepOut::default();
-        for slot in partials {
-            let part = slot
-                .into_inner()
-                .expect("lloyd slot poisoned")
-                .expect("block not run");
-            agg.merge(&part);
-        }
-        agg
+        lloyd_accumulate(points, centers, &a, MetricKind::L2Sq)
     }
 
     fn weight_histogram(&self, points: &PointSet, centers: &PointSet) -> (Vec<f64>, f64) {
         // One assign pass; the histogram + cost reduction is shared with
         // every other caller that already holds an AssignOut.
         let a = self.assign(points, centers);
-        weights_from_assign(&a, centers.len())
+        weights_from_assign_metric(&a, centers.len(), MetricKind::L2Sq)
     }
 
     fn name(&self) -> &'static str {
@@ -356,6 +589,75 @@ mod tests {
         let a = NativeBackend.assign(&p, &c);
         for (m, d2) in md.iter().zip(&a.sqdist) {
             assert!((m * m - d2).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn generic_l2sq_bit_identical_to_fast_path() {
+        for d in [1usize, 3, 7] {
+            let p = random_ps(900, d, 21);
+            let c = random_ps(13, d, 22);
+            let fast = NativeBackend.assign(&p, &c);
+            let gen = assign_metric_generic(&p, &c, MetricKind::L2Sq);
+            assert_eq!(fast.idx, gen.idx, "dim {d}");
+            for (a, b) in fast.sqdist.iter().zip(&gen.sqdist) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dim {d}");
+            }
+            let fs = NativeBackend.lloyd_step(&p, &c);
+            let gs = lloyd_step_metric_generic(&p, &c, MetricKind::L2Sq);
+            assert_eq!(fs.sums, gs.sums, "dim {d}");
+            assert_eq!(fs.counts, gs.counts, "dim {d}");
+            assert_eq!(fs.cost_median.to_bits(), gs.cost_median.to_bits(), "dim {d}");
+            assert_eq!(fs.cost_means.to_bits(), gs.cost_means.to_bits(), "dim {d}");
+        }
+    }
+
+    #[test]
+    fn generic_matches_scalar_oracle_per_metric() {
+        for metric in MetricKind::ALL {
+            for d in [1usize, 2, 3, 5] {
+                let p = random_ps(400, d, 31);
+                let c = random_ps(9, d, 32);
+                let got = assign_metric_generic(&p, &c, metric);
+                let (want_s, want_i) =
+                    crate::metrics::cost::assign_full_metric(&p, &c, metric);
+                assert_eq!(got.idx, want_i, "{metric} dim {d}");
+                for (a, b) in got.sqdist.iter().zip(&want_s) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{metric} dim {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn metric_dispatch_routes_l2sq_to_fast_path_semantics() {
+        let p = random_ps(300, 3, 41);
+        let c = random_ps(7, 3, 42);
+        let via_dispatch = NativeBackend.assign_metric(&p, &c, MetricKind::L2Sq);
+        let direct = NativeBackend.assign(&p, &c);
+        assert_eq!(via_dispatch.idx, direct.idx);
+        assert_eq!(via_dispatch.sqdist, direct.sqdist);
+        // And non-L2Sq dispatch returns surrogates in the metric's scale.
+        let l1 = NativeBackend.assign_metric(&p, &c, MetricKind::L1);
+        let md = NativeBackend.min_dist_metric(&p, &c, MetricKind::L1);
+        for (s, m) in l1.sqdist.iter().zip(&md) {
+            assert_eq!(s.to_bits(), m.to_bits(), "L1 surrogate is the distance");
+        }
+    }
+
+    #[test]
+    fn generic_parallel_path_matches_serial_per_metric() {
+        // Cross PAR_MIN so the pooled generic path runs; compare against a
+        // forced-serial execution bit-for-bit (the determinism contract
+        // extends to every metric).
+        let n = PAR_MIN + 2 * TILE + 5;
+        let p = random_ps(n, 3, 51);
+        let c = random_ps(11, 3, 52);
+        for metric in [MetricKind::L1, MetricKind::Cosine] {
+            let par = assign_metric_generic(&p, &c, metric);
+            let ser = pool::with_serial(|| assign_metric_generic(&p, &c, metric));
+            assert_eq!(par.idx, ser.idx, "{metric}");
+            assert_eq!(par.sqdist, ser.sqdist, "{metric}");
         }
     }
 }

@@ -27,7 +27,7 @@
 //!   factors dropped and unit coefficients, matching the sample sizes the
 //!   paper's experiment section implies. This is the Figure 1/2 default.
 
-use crate::geometry::PointSet;
+use crate::geometry::{MetricKind, PointSet};
 use crate::runtime::ComputeBackend;
 use crate::sampling::select::select_pivot;
 use crate::util::{log_n, rng::Rng};
@@ -112,6 +112,10 @@ pub struct IterativeSampleConfig {
     pub epsilon: f64,
     /// Constants profile (theory-literal or practical).
     pub constants: SampleConstants,
+    /// The metric space `d(x, S)` is maintained in. The sampler's analysis
+    /// (Propositions 2.1/2.2) is metric-free — only the pivot *threshold*
+    /// semantics need a metric, and any registered one works.
+    pub metric: MetricKind,
     /// PRNG seed.
     pub seed: u64,
     /// Safety cap on loop iterations (the theory says O(1/ε)).
@@ -124,6 +128,7 @@ impl Default for IterativeSampleConfig {
             k: 25,
             epsilon: 0.1,
             constants: SampleConstants::practical(),
+            metric: MetricKind::L2Sq,
             seed: 0,
             max_iters: 200,
         }
@@ -205,7 +210,7 @@ pub fn iterative_sample(
         // Update d(x, S) for remaining points against the new batch only.
         let batch = points.gather(&batch_idx);
         let alive_ps = points.gather(&alive);
-        let nd = backend.min_dist(&alive_ps, &batch);
+        let nd = backend.min_dist_metric(&alive_ps, &batch, cfg.metric);
         for (pos, &i) in alive.iter().enumerate() {
             if nd[pos] < dist[i] {
                 dist[i] = nd[pos];
@@ -286,7 +291,7 @@ mod tests {
             epsilon: eps,
             constants,
             seed: seed + 1,
-            max_iters: 200,
+            ..Default::default()
         };
         iterative_sample(&data.points, &cfg, &NativeBackend)
     }

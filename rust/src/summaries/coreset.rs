@@ -2,7 +2,7 @@
 //! [`CoverageSummary`] the robust coordinators ship between machines.
 
 use super::weighted::WeightedSet;
-use crate::geometry::PointSet;
+use crate::geometry::{MetricKind, PointSet};
 use crate::mapreduce::MemSize;
 use crate::runtime::ComputeBackend;
 use crate::util::rng::Rng;
@@ -77,12 +77,26 @@ impl CoverageSummary {
     /// start point is the only random choice, so a fixed seed makes the
     /// summary a pure function of the block — the property recovery replay
     /// relies on). The coverage counts run through `backend`'s assignment
-    /// kernel.
+    /// kernel. Squared-Euclidean form of [`CoverageSummary::build_metric`].
     pub fn build(
         block: &PointSet,
         size: usize,
         seed: u64,
         backend: &dyn ComputeBackend,
+    ) -> CoverageSummary {
+        CoverageSummary::build_metric(block, size, seed, backend, MetricKind::L2Sq)
+    }
+
+    /// [`CoverageSummary::build`] under an explicit metric: the
+    /// farthest-point skeleton, the coverage counts, and the coverage
+    /// radius are all taken in `metric`'s geometry (the radius is the true
+    /// metric distance, not a surrogate).
+    pub fn build_metric(
+        block: &PointSet,
+        size: usize,
+        seed: u64,
+        backend: &dyn ComputeBackend,
+        metric: MetricKind,
     ) -> CoverageSummary {
         assert!(size >= 1, "summary size must be positive");
         if block.is_empty() {
@@ -92,19 +106,20 @@ impl CoverageSummary {
             };
         }
         let mut rng = Rng::new(seed);
-        let skeleton = crate::algorithms::gonzalez::gonzalez(block, size, &mut rng);
-        let assign = backend.assign(block, &skeleton.centers);
+        let skeleton =
+            crate::algorithms::gonzalez::gonzalez_metric(block, size, &mut rng, metric);
+        let assign = backend.assign_metric(block, &skeleton.centers, metric);
         let mut weights = vec![0.0f64; skeleton.centers.len()];
-        let mut max_sq = 0.0f32;
-        for (&c, &d2) in assign.idx.iter().zip(&assign.sqdist) {
+        let mut max_s = 0.0f32;
+        for (&c, &s) in assign.idx.iter().zip(&assign.sqdist) {
             weights[c as usize] += 1.0;
-            if d2 > max_sq {
-                max_sq = d2;
+            if s > max_s {
+                max_s = s;
             }
         }
         CoverageSummary {
             reps: WeightedSet::new(skeleton.centers, weights).canonicalize(),
-            radius: (max_sq.max(0.0) as f64).sqrt(),
+            radius: metric.to_dist_f64(max_s),
         }
     }
 
@@ -252,5 +267,30 @@ mod tests {
         let a = CoverageSummary::build(&block, 3, 11, &NativeBackend);
         let b = CoverageSummary::build(&block, 3, 11, &NativeBackend);
         assert_eq!(a, b, "replay determinism");
+    }
+
+    #[test]
+    fn build_metric_l2sq_is_bit_identical_to_build() {
+        use crate::geometry::MetricKind;
+        let block = line(&[0.0, 0.5, 4.0, 4.5, 9.0]);
+        let a = CoverageSummary::build(&block, 3, 11, &NativeBackend);
+        let b = CoverageSummary::build_metric(&block, 3, 11, &NativeBackend, MetricKind::L2Sq);
+        assert_eq!(a, b);
+        assert_eq!(a.radius().to_bits(), b.radius().to_bits());
+    }
+
+    #[test]
+    fn metric_radius_covers_under_that_metric() {
+        use crate::geometry::MetricKind;
+        // 2-D block, one representative: the coverage radius must bound
+        // every point's L1 distance to the (single) rep.
+        let block = PointSet::from_flat(2, vec![0.0, 0.0, 1.0, 1.0, 2.0, 0.5]);
+        let s = CoverageSummary::build_metric(&block, 1, 5, &NativeBackend, MetricKind::L1);
+        assert_eq!(s.total_weight(), 3.0);
+        let rep = s.reps().row(0).to_vec();
+        for i in 0..block.len() {
+            let d = MetricKind::L1.dist_f64(block.row(i), &rep);
+            assert!(d <= s.radius() + 1e-6, "L1 point {i} escapes the radius");
+        }
     }
 }

@@ -5,8 +5,11 @@
 //! (`#[path = "../common/mod.rs"] mod common;`) so both targets check
 //! against the *same* oracle.
 
-use mrcluster::geometry::PointSet;
-use mrcluster::metrics::{kcenter_cost, kcenter_cost_with_outliers, kmedian_cost};
+use mrcluster::geometry::{MetricKind, PointSet};
+use mrcluster::metrics::{
+    kcenter_cost, kcenter_cost_metric, kcenter_cost_with_outliers,
+    kcenter_cost_with_outliers_metric, kmedian_cost, kmedian_cost_metric,
+};
 
 /// Visit every k-combination of `[0, n)` in lexicographic order: supports
 /// the exact oracles up to n = 64 (a 2^n bitmask enumeration caps out at
@@ -32,6 +35,9 @@ pub fn for_each_combination(n: usize, k: usize, mut f: impl FnMut(&[usize])) {
 }
 
 /// Exact discrete k-median optimum (centers restricted to input points).
+/// (The allows on these oracles cover including targets that only use a
+/// subset — each test binary compiles its own copy of this module.)
+#[allow(dead_code)]
 pub fn exact_kmedian(points: &PointSet, k: usize) -> f64 {
     assert!(points.len() <= 64, "exact search is exponential");
     let mut best = f64::INFINITY;
@@ -42,6 +48,7 @@ pub fn exact_kmedian(points: &PointSet, k: usize) -> f64 {
 }
 
 /// Exact discrete k-center optimum.
+#[allow(dead_code)]
 pub fn exact_kcenter(points: &PointSet, k: usize) -> f64 {
     assert!(points.len() <= 64, "exact search is exponential");
     let mut best = f64::INFINITY;
@@ -62,6 +69,51 @@ pub fn exact_kcenter_outliers(points: &PointSet, k: usize, z: usize) -> f64 {
     let mut best = f64::INFINITY;
     for_each_combination(points.len(), k, |idx| {
         best = best.min(kcenter_cost_with_outliers(points, &points.gather(idx), z));
+    });
+    best
+}
+
+/// Exact discrete k-median optimum under an explicit metric (the oracle
+/// the general-metric pipelines are bounded against). The `#[allow]`s on
+/// the metric oracles cover the including target that doesn't use them.
+#[allow(dead_code)]
+pub fn exact_kmedian_metric(points: &PointSet, k: usize, metric: MetricKind) -> f64 {
+    assert!(points.len() <= 64, "exact search is exponential");
+    let mut best = f64::INFINITY;
+    for_each_combination(points.len(), k, |idx| {
+        best = best.min(kmedian_cost_metric(points, &points.gather(idx), metric));
+    });
+    best
+}
+
+/// Exact discrete k-center optimum under an explicit metric.
+#[allow(dead_code)]
+pub fn exact_kcenter_metric(points: &PointSet, k: usize, metric: MetricKind) -> f64 {
+    assert!(points.len() <= 64, "exact search is exponential");
+    let mut best = f64::INFINITY;
+    for_each_combination(points.len(), k, |idx| {
+        best = best.min(kcenter_cost_metric(points, &points.gather(idx), metric));
+    });
+    best
+}
+
+/// Exact discrete k-center-with-outliers optimum under an explicit metric.
+#[allow(dead_code)]
+pub fn exact_kcenter_outliers_metric(
+    points: &PointSet,
+    k: usize,
+    z: usize,
+    metric: MetricKind,
+) -> f64 {
+    assert!(points.len() <= 64, "exact search is exponential");
+    let mut best = f64::INFINITY;
+    for_each_combination(points.len(), k, |idx| {
+        best = best.min(kcenter_cost_with_outliers_metric(
+            points,
+            &points.gather(idx),
+            z,
+            metric,
+        ));
     });
     best
 }

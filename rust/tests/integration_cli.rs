@@ -207,6 +207,73 @@ fn outlier_compare_reports_margin_and_recovery() {
 }
 
 #[test]
+fn cluster_metric_flag_and_key_work() {
+    // --metric shorthand.
+    let out = bin()
+        .args([
+            "cluster",
+            "--algo",
+            "Sampling-Lloyd",
+            "--metric",
+            "l1",
+            "--set",
+            "data.n=1200",
+            "--set",
+            "data.k=4",
+            "--set",
+            "cluster.k=4",
+            "--set",
+            "cluster.machines=4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("metric         : l1"), "{text}");
+
+    // The dotted key spells the same thing; a bad name fails loudly.
+    let out = bin()
+        .args([
+            "cluster",
+            "--algo",
+            "Sampling-Lloyd",
+            "--set",
+            "cluster.metric=hamming",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown metric"));
+}
+
+#[test]
+fn metric_compare_reports_deterministic_cells() {
+    let out = bin()
+        .args([
+            "metric-compare",
+            "--n",
+            "1200",
+            "--metrics",
+            "l2sq,l1,cosine",
+            "--set",
+            "data.k=4",
+            "--set",
+            "cluster.k=4",
+            "--set",
+            "cluster.machines=4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["l2sq", "l1", "cosine", "deterministic"] {
+        assert!(text.contains(needle), "{text}");
+    }
+    // Every cell must replay bit-identically ("yes", never "NO").
+    assert!(!text.contains("NO"), "{text}");
+}
+
+#[test]
 fn mrc_check_passes_on_defaults() {
     let out = bin()
         .args(["mrc-check", "--set", "data.n=30000", "--set", "cluster.machines=16"])

@@ -49,6 +49,7 @@ fn run_case(
         constants,
         seed: c.seed ^ 0xF00,
         max_iters: 500,
+        ..Default::default()
     };
     (iterative_sample(&data.points, &cfg, &NativeBackend), dc)
 }

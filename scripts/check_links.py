@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the repo's cross-reference docs.
+
+Checks every inline markdown link in the doc set for:
+  * relative file targets that do not exist in the repo;
+  * `#anchor` fragments (same-file or `file.md#anchor`) that do not match
+    any heading in the target file, using GitHub's slugification rules.
+
+External links (http/https/mailto) are skipped — this runs offline in CI
+— as are targets that resolve outside the repo root (e.g. the README's
+GitHub-web badge path `../../actions/...`, which only exists on
+github.com). Exit code 0 = clean, 1 = broken links (each printed as
+`file:line: message`).
+
+Usage: python3 scripts/check_links.py [repo_root]
+"""
+
+import re
+import sys
+from pathlib import Path
+
+DOC_FILES = ["README.md", "ARCHITECTURE.md", "EXPERIMENTS.md", "ROADMAP.md"]
+
+# Inline links: [text](target). Images share the syntax; both are checked.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase; drop everything that is not a word
+    character, space, or hyphen; spaces become hyphens."""
+    heading = heading.strip().lower()
+    # Strip inline markdown emphasis/code markers before slugging.
+    heading = re.sub(r"[*_`]", "", heading)
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def collect_anchors(path: Path) -> set[str]:
+    anchors: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_file(md: Path, root: Path, anchor_cache: dict) -> list[str]:
+    errors = []
+    in_fence = False
+    for lineno, line in enumerate(md.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            if path_part:
+                resolved = (md.parent / path_part).resolve()
+                try:
+                    resolved.relative_to(root.resolve())
+                except ValueError:
+                    # Outside the repo (GitHub-web convention paths): skip.
+                    continue
+                if not resolved.exists():
+                    errors.append(f"{md}:{lineno}: missing file {target!r}")
+                    continue
+                frag_file = resolved
+            else:
+                frag_file = md
+            if fragment and frag_file.suffix == ".md":
+                if frag_file not in anchor_cache:
+                    anchor_cache[frag_file] = collect_anchors(frag_file)
+                if fragment.lower() not in anchor_cache[frag_file]:
+                    errors.append(
+                        f"{md}:{lineno}: anchor #{fragment} not found in "
+                        f"{frag_file.name} (known: "
+                        f"{', '.join(sorted(anchor_cache[frag_file])) or 'none'})"
+                    )
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parent.parent
+    errors = []
+    anchor_cache: dict = {}
+    for name in DOC_FILES:
+        md = root / name
+        if not md.exists():
+            errors.append(f"{md}: doc file listed in check_links.py is missing")
+            continue
+        errors.extend(check_file(md, root, anchor_cache))
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"\n{len(errors)} broken link(s)")
+        return 1
+    print(f"checked {len(DOC_FILES)} files: all in-repo links and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
