@@ -11,6 +11,8 @@
 //!   kernel -- --bench-json BENCH_kernel.json`) additionally writes every
 //!   recorded sample as JSON, so the repo's perf trajectory is diffable —
 //!   see BENCH_kernel.json at the repo root for the committed baseline.
+//!   Schema v2: every record carries a `variant` field naming the kernel
+//!   ladder rung it measured (`exact`, `gemm`, `f32`, `hamerly`, ...).
 
 // Each bench binary includes this file as a module and uses a subset of the
 // helpers; the unused remainder is expected.
@@ -76,11 +78,22 @@ impl JsonSink {
         }
     }
 
-    /// Record one kernel sample: throughput in Mdist/s for a given shape
-    /// and worker-thread count.
-    pub fn record(&mut self, name: &str, n: usize, k: usize, d: usize, threads: usize, mdps: f64) {
+    /// Record one kernel sample: throughput in Mdist/s for a given shape,
+    /// worker-thread count, and kernel-ladder `variant` (schema v2: the
+    /// variant is mandatory on every row; use `"exact"` for the default
+    /// bit-exact path).
+    pub fn record(
+        &mut self,
+        name: &str,
+        variant: &str,
+        n: usize,
+        k: usize,
+        d: usize,
+        threads: usize,
+        mdps: f64,
+    ) {
         self.records.push(format!(
-            "{{\"name\":\"{name}\",\"n\":{n},\"k\":{k},\"d\":{d},\
+            "{{\"name\":\"{name}\",\"variant\":\"{variant}\",\"n\":{n},\"k\":{k},\"d\":{d},\
              \"threads\":{threads},\"mdist_per_s\":{mdps:.3}}}"
         ));
     }
@@ -92,7 +105,7 @@ impl JsonSink {
         };
         let scale = scale();
         let body = format!(
-            "{{\n  \"schema\": \"mrcluster-kernel-bench-v1\",\n  \
+            "{{\n  \"schema\": \"mrcluster-kernel-bench-v2\",\n  \
              \"scale\": {scale},\n  \"records\": [\n    {}\n  ]\n}}\n",
             self.records.join(",\n    ")
         );

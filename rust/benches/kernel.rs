@@ -1,18 +1,66 @@
 //! Bench E8: the compute hot-spot — nearest-center assignment — across
-//! backends: native rust vs the AOT Pallas/XLA artifact (when built), plus
-//! the derived throughput numbers the §Perf targets are stated in.
+//! backends and kernel-ladder rungs: the bit-exact native kernel, the
+//! GEMM-form assign, the f32 Lloyd reduction, the Hamerly-pruned full
+//! Lloyd, and the AOT Pallas/XLA artifact (when built).
+//!
+//! Every ladder variant is cross-checked against a per-point scalar scan
+//! before it is timed (see `oracle_check`): the exact path must agree on
+//! every argmin bit-for-bit, the GEMM path may only disagree inside a
+//! 1e-4 relative near-tie gap. A divergence panics the bench, so a
+//! committed BENCH_kernel.json row implies the variant passed the check.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
-use mrcluster::geometry::PointSet;
-use mrcluster::runtime::{ComputeBackend, NativeBackend};
+use mrcluster::algorithms::lloyd::{lloyd, LloydConfig, PruneKind};
+use mrcluster::geometry::{MetricKind, PointSet};
+use mrcluster::runtime::{
+    AssignOut, AssignPath, ComputeBackend, FastNativeBackend, NativeBackend, Precision,
+};
 use mrcluster::util::rng::Rng;
 use mrcluster::util::table::Table;
 
 fn random_ps(n: usize, d: usize, seed: u64) -> PointSet {
     let mut rng = Rng::new(seed);
     PointSet::from_flat(d, (0..n * d).map(|_| rng.f32()).collect())
+}
+
+/// Cross-check a kernel assignment against a scalar per-point scan on a
+/// `min(n, 65536)`-point prefix.
+///
+/// `near_tie_ok = false` (the exact path): any argmin mismatch panics.
+/// `near_tie_ok = true` (the GEMM path): a mismatch is tolerated only when
+/// the scalar best/second surrogates sit within a 1e-4 relative gap — the
+/// documented ε-equivalence contract (ARCHITECTURE.md §Kernel ladder).
+fn oracle_check(points: &PointSet, centers: &PointSet, out: &AssignOut, near_tie_ok: bool) {
+    let m = points.len().min(65_536);
+    let metric = MetricKind::L2Sq;
+    for i in 0..m {
+        let row = points.row(i);
+        let (mut bi, mut best, mut second) = (0usize, f32::INFINITY, f32::INFINITY);
+        for c in 0..centers.len() {
+            let s = metric.surrogate(row, centers.row(c));
+            if s < best {
+                second = best;
+                best = s;
+                bi = c;
+            } else if s < second {
+                second = s;
+            }
+        }
+        if out.idx[i] as usize == bi {
+            continue;
+        }
+        let gap = (second - best) / best.max(1e-12);
+        if near_tie_ok && gap <= 1e-4 {
+            continue;
+        }
+        panic!(
+            "kernel assignment diverged from the scalar oracle at point {i}: \
+             kernel chose {}, oracle chose {bi} (relative best/second gap {gap:.3e})",
+            out.idx[i]
+        );
+    }
 }
 
 /// XLA rows (artifact path), compiled only with `--features xla`.
@@ -48,6 +96,7 @@ fn bench_xla_rows(t: &mut Table, n: usize, reps: usize) -> anyhow::Result<()> {
         t.row(vec![
             "xla-aot".to_string(),
             "assign".to_string(),
+            "exact".to_string(),
             k.to_string(),
             "1".to_string(),
             format!("{:.1}", min.as_secs_f64() * 1e3),
@@ -72,10 +121,28 @@ fn main() -> anyhow::Result<()> {
     let mut json = bench_util::JsonSink::from_args();
     let cores = mrcluster::util::pool::global().worker_count().max(1);
 
-    let mut t = Table::new(vec!["backend", "op", "k", "threads", "min (ms)", "Mdist/s"]);
+    let gemm = FastNativeBackend {
+        assign_path: AssignPath::Gemm,
+        precision: Precision::F64,
+    };
+    let f32_backend = FastNativeBackend {
+        assign_path: AssignPath::Exact,
+        precision: Precision::F32,
+    };
+
+    let mut t = Table::new(vec![
+        "backend", "op", "variant", "k", "threads", "min (ms)", "Mdist/s",
+    ]);
 
     for &k in &[25usize, 128] {
         let centers = random_ps(k, 3, 2);
+
+        // Correctness gate before any timing: the exact kernel must match
+        // the scalar oracle bit-for-bit; GEMM only up to near-ties.
+        mrcluster::util::pool::with_serial(|| {
+            oracle_check(&points, &centers, &NativeBackend.assign(&points, &centers), false);
+            oracle_check(&points, &centers, &gemm.assign(&points, &centers), true);
+        });
 
         // Single-thread baseline vs the shared worker pool: the same
         // kernel, with pool parallelism force-disabled for the former.
@@ -85,54 +152,115 @@ fn main() -> anyhow::Result<()> {
         let pooled = cores > 1 && n >= mrcluster::runtime::native::PAR_MIN;
         let thread_counts = if pooled { vec![1, cores] } else { vec![1] };
         for &threads in &thread_counts {
-            let bench_assign = || {
-                std::hint::black_box(NativeBackend.assign(&points, &centers));
+            // assign: exact vs GEMM-form.
+            let assign_variants: [(&str, &dyn ComputeBackend); 2] =
+                [("exact", &NativeBackend), ("gemm", &gemm)];
+            for (variant, backend) in assign_variants {
+                let bench_assign = || {
+                    std::hint::black_box(backend.assign(&points, &centers));
+                };
+                let (min, _) = if threads == 1 {
+                    bench_util::measure(reps, || mrcluster::util::pool::with_serial(bench_assign))
+                } else {
+                    bench_util::measure(reps, bench_assign)
+                };
+                let mdps = (n * k) as f64 / min.as_secs_f64() / 1e6;
+                t.row(vec![
+                    "native".to_string(),
+                    "assign".to_string(),
+                    variant.to_string(),
+                    k.to_string(),
+                    threads.to_string(),
+                    format!("{:.1}", min.as_secs_f64() * 1e3),
+                    format!("{mdps:.0}"),
+                ]);
+                bench_util::emit(
+                    &format!("kernel.native.assign.{variant}.k{k}.t{threads}"),
+                    mdps,
+                    "Mdist/s",
+                );
+                json.record("native.assign", variant, n, k, 3, threads, mdps);
+            }
+
+            // lloyd_step: f64 (exact) vs f32 accumulators.
+            let step_variants: [(&str, &dyn ComputeBackend); 2] =
+                [("exact", &NativeBackend), ("f32", &f32_backend)];
+            for (variant, backend) in step_variants {
+                let bench_lloyd = || {
+                    std::hint::black_box(backend.lloyd_step(&points, &centers));
+                };
+                let (min, _) = if threads == 1 {
+                    bench_util::measure(reps, || mrcluster::util::pool::with_serial(bench_lloyd))
+                } else {
+                    bench_util::measure(reps, bench_lloyd)
+                };
+                let mdps = (n * k) as f64 / min.as_secs_f64() / 1e6;
+                t.row(vec![
+                    "native".to_string(),
+                    "lloyd_step".to_string(),
+                    variant.to_string(),
+                    k.to_string(),
+                    threads.to_string(),
+                    format!("{:.1}", min.as_secs_f64() * 1e3),
+                    format!("{mdps:.0}"),
+                ]);
+                bench_util::emit(
+                    &format!("kernel.native.lloyd_step.{variant}.k{k}.t{threads}"),
+                    mdps,
+                    "Mdist/s",
+                );
+                json.record("native.lloyd_step", variant, n, k, 3, threads, mdps);
+            }
+        }
+    }
+
+    // Full-Lloyd rows: unpruned vs Hamerly-pruned, single thread, k = 25.
+    // Throughput is *effective* Mdist/s — the distance evaluations an
+    // unpruned run performs, n·k·(iters+1), divided by wall time — so the
+    // hamerly row directly shows the gain from skipped evaluations while
+    // staying comparable with the raw kernel rows above.
+    {
+        let k = 25usize;
+        for (variant, prune) in [("exact", PruneKind::None), ("hamerly", PruneKind::Hamerly)] {
+            let cfg = LloydConfig {
+                k,
+                max_iters: 10,
+                tol: 0.0,
+                prune,
+                seed: 7,
+                ..Default::default()
             };
-            let (min, _) = if threads == 1 {
-                bench_util::measure(reps, || mrcluster::util::pool::with_serial(bench_assign))
-            } else {
-                bench_util::measure(reps, bench_assign)
-            };
-            let mdps = (n * k) as f64 / min.as_secs_f64() / 1e6;
+            let mut iters = 0usize;
+            let (min, _) = bench_util::measure(reps, || {
+                mrcluster::util::pool::with_serial(|| {
+                    let res = lloyd(&points, None, &cfg, &NativeBackend);
+                    iters = res.iters;
+                    std::hint::black_box(&res.centers);
+                });
+            });
+            let possible = (n * k * (iters + 1)) as f64;
+            let mdps = possible / min.as_secs_f64() / 1e6;
             t.row(vec![
                 "native".to_string(),
-                "assign".to_string(),
+                "lloyd".to_string(),
+                variant.to_string(),
                 k.to_string(),
-                threads.to_string(),
+                "1".to_string(),
                 format!("{:.1}", min.as_secs_f64() * 1e3),
                 format!("{mdps:.0}"),
             ]);
             bench_util::emit(
-                &format!("kernel.native.assign.k{k}.t{threads}"),
+                &format!("kernel.native.lloyd.{variant}.k{k}.t1"),
                 mdps,
                 "Mdist/s",
             );
-            json.record("native.assign", n, k, 3, threads, mdps);
-
-            let bench_lloyd = || {
-                std::hint::black_box(NativeBackend.lloyd_step(&points, &centers));
-            };
-            let (min, _) = if threads == 1 {
-                bench_util::measure(reps, || mrcluster::util::pool::with_serial(bench_lloyd))
-            } else {
-                bench_util::measure(reps, bench_lloyd)
-            };
-            let mdps = (n * k) as f64 / min.as_secs_f64() / 1e6;
-            t.row(vec![
-                "native".to_string(),
-                "lloyd_step".to_string(),
-                k.to_string(),
-                threads.to_string(),
-                format!("{:.1}", min.as_secs_f64() * 1e3),
-                format!("{mdps:.0}"),
-            ]);
-            json.record("native.lloyd_step", n, k, 3, threads, mdps);
+            json.record("native.lloyd", variant, n, k, 3, 1, mdps);
         }
     }
 
     bench_xla_rows(&mut t, n, reps)?;
 
-    println!("== E8: assignment kernel (n = {n}, d = 3) ==");
+    println!("== E8: assignment kernel ladder (n = {n}, d = 3) ==");
     print!("{}", t.render());
     json.write()?;
     Ok(())

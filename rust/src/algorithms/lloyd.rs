@@ -21,6 +21,29 @@
 //! metric (ties break toward the lowest index — deterministic). Centers
 //! therefore stay input points, which is also what the k-median analysis
 //! wants in a general metric space.
+//!
+//! ## Hamerly-style bound pruning (`prune = hamerly`)
+//!
+//! The opt-in pruned path ([`PruneKind::Hamerly`]) cuts the n×k assign
+//! work per iteration with triangle-inequality bounds: per point it keeps
+//! a lower bound on the distance to the *second*-closest center, decayed
+//! each iteration by the maximum center movement, and per center half the
+//! distance to its nearest other center. A point whose (freshly
+//! tightened) distance to its assigned center beats both bounds cannot
+//! change assignment, so the other k−1 distances are skipped. Bounds live
+//! in the *true-metric* distance space — `l2` for the `l2sq` surrogate
+//! (via [`MetricKind::to_dist_f32`]), the distance itself for
+//! `l1`/`chebyshev` — and carry a ~1e-4 relative safety margin so f32
+//! rounding can never flip a pruning decision. The `cosine` surrogate is
+//! not a metric ([`MetricKind::supports_triangle_pruning`]), and the
+//! weighted / Weiszfeld paths keep their own scans, so those
+//! configurations silently run unpruned. The pruned path is
+//! assignment-identical per iteration to the unpruned path
+//! (property-tested in rust/tests/prop_kernel_ladder.rs); its
+//! accumulation replays the unpruned op order block-for-block, so
+//! iterates match bit-for-bit. The pruned path always runs on the native
+//! scalar/kernel code — the `backend` handle (including XLA) only serves
+//! the unpruned paths.
 
 use super::seeding;
 use crate::geometry::{MetricKind, PointSet};
@@ -42,6 +65,58 @@ pub enum UpdateRule {
     Medoid,
 }
 
+/// Triangle-inequality pruning mode for the Lloyd assign phase
+/// (`cluster.prune`; rung (c) of the kernel speed ladder — see the module
+/// docs and ARCHITECTURE.md §Kernel ladder).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PruneKind {
+    /// Full n×k scan every iteration (the default).
+    #[default]
+    None,
+    /// Hamerly-style bounds: skip the k−1 other distances for points that
+    /// provably cannot change assignment. Assignment-identical per
+    /// iteration to the unpruned path; applies to the unweighted
+    /// mean/medoid paths under triangle-valid metrics
+    /// ([`MetricKind::supports_triangle_pruning`]), silently unpruned
+    /// otherwise.
+    Hamerly,
+}
+
+impl PruneKind {
+    /// Config-file / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PruneKind::None => "none",
+            PruneKind::Hamerly => "hamerly",
+        }
+    }
+
+    /// Parse a config-file / CLI name.
+    pub fn parse(s: &str) -> Option<PruneKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(PruneKind::None),
+            "hamerly" | "bounds" => Some(PruneKind::Hamerly),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PruneKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Distance-evaluation counters from a pruned run: how much of the n×k×
+/// iterations assign work was actually executed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Point–center distance evaluations performed.
+    pub evaluated: u64,
+    /// Evaluations the unpruned path would have performed (n×k per pass).
+    pub possible: u64,
+}
+
 /// Lloyd configuration.
 #[derive(Clone, Debug)]
 pub struct LloydConfig {
@@ -56,6 +131,8 @@ pub struct LloydConfig {
     /// The metric space the step runs in (distances, costs, and — for
     /// non-Euclidean kinds — the medoid update).
     pub metric: MetricKind,
+    /// Assign-phase pruning mode (see [`PruneKind`]).
+    pub prune: PruneKind,
     /// Seeding PRNG seed.
     pub seed: u64,
 }
@@ -68,6 +145,7 @@ impl Default for LloydConfig {
             tol: 1e-4,
             update: UpdateRule::Mean,
             metric: MetricKind::L2Sq,
+            prune: PruneKind::None,
             seed: 0,
         }
     }
@@ -90,6 +168,10 @@ pub struct LloydResult {
     /// the same pass that computes the final cost so callers don't need a
     /// second n×k `weight_histogram` sweep.
     pub final_counts: Vec<f64>,
+    /// Distance-evaluation counters when the run took the Hamerly-pruned
+    /// path; `None` when it ran unpruned (including silent fallbacks —
+    /// cosine metric, weighted input, Weiszfeld rule).
+    pub prune: Option<PruneStats>,
 }
 
 /// Run (weighted) Lloyd's. `weights = None` is the unweighted case; the
@@ -114,10 +196,20 @@ pub fn lloyd(
     } else {
         UpdateRule::Medoid
     };
+    // The Hamerly-pruned path: unweighted input, triangle-valid metric,
+    // mean or medoid rule (Weiszfeld keeps its own fused scan). Seeding,
+    // per-iteration assignments, and accumulation op order all match the
+    // unpruned path below, so iterates are bit-identical — see module docs.
+    if cfg.prune == PruneKind::Hamerly
+        && weights.is_none()
+        && metric.supports_triangle_pruning()
+        && rule != UpdateRule::Weiszfeld
+    {
+        return lloyd_hamerly(points, cfg, rule);
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut centers = seeding::random_distinct(points, cfg.k, &mut rng);
     let k = centers.len();
-    let d = points.dim();
 
     let mut history = Vec::new();
     let mut last_cost = f64::INFINITY;
@@ -147,21 +239,7 @@ pub fn lloyd(
         // Update centers.
         match rule {
             UpdateRule::Mean => {
-                let mut next = PointSet::with_capacity(d, k);
-                let mut row = vec![0.0f32; d];
-                for c in 0..k {
-                    if counts[c] > 0.0 {
-                        for j in 0..d {
-                            row[j] = (sums[c * d + j] / counts[c]) as f32;
-                        }
-                        next.push(&row);
-                    } else {
-                        // Empty cluster: keep the old center (stable, and
-                        // matches the common Hadoop-era implementation).
-                        next.push(centers.row(c));
-                    }
-                }
-                centers = next;
+                centers = mean_update(&sums, &counts, &centers);
             }
             UpdateRule::Weiszfeld => {
                 centers = weiszfeld_step(points, weights, &centers);
@@ -202,6 +280,243 @@ pub fn lloyd(
         cost_median,
         history,
         final_counts,
+        prune: None,
+    }
+}
+
+/// Relative safety slack applied to the Hamerly bound geometry: the decay
+/// (max center movement) is inflated and the half-separation radius
+/// deflated by ~1e-4 so f32 rounding (a few ulp, ~1e-7 relative) can never
+/// flip a pruning decision. Near-ties inside the slack simply fall back to
+/// a full scan, which is always correct.
+pub(crate) const BOUND_INFLATE: f32 = 1.0 + 1e-4;
+/// See [`BOUND_INFLATE`].
+const BOUND_DEFLATE: f32 = 1.0 - 1e-4;
+
+/// The classical mean update: per non-empty cluster the coordinate mean of
+/// its assigned points; empty clusters keep the old center (stable, and
+/// matches the common Hadoop-era implementation). Shared by the unpruned
+/// and Hamerly-pruned paths so the iterates can never silently diverge.
+fn mean_update(sums: &[f64], counts: &[f64], old_centers: &PointSet) -> PointSet {
+    let k = old_centers.len();
+    let d = old_centers.dim();
+    let mut next = PointSet::with_capacity(d, k);
+    let mut row = vec![0.0f32; d];
+    for c in 0..k {
+        if counts[c] > 0.0 {
+            for j in 0..d {
+                row[j] = (sums[c * d + j] / counts[c]) as f32;
+            }
+            next.push(&row);
+        } else {
+            next.push(old_centers.row(c));
+        }
+    }
+    next
+}
+
+/// Best and second-best center of one row under `metric`, replaying the
+/// tiled kernels' argmin semantics exactly: centers in ascending index
+/// order, strict `<` (so the lowest index wins ties), surrogate values from
+/// the scalar [`MetricKind::surrogate`] op order the kernels replicate
+/// bit-for-bit. Returns `(argmin, best_surrogate, second_surrogate)`;
+/// `second` is `f32::INFINITY` when `k == 1`.
+fn scan_best_two(row: &[f32], centers: &PointSet, metric: MetricKind) -> (usize, f32, f32) {
+    let mut bi = 0usize;
+    let mut best = f32::INFINITY;
+    let mut second = f32::INFINITY;
+    for c in 0..centers.len() {
+        let s = metric.surrogate(row, centers.row(c));
+        if s < best {
+            second = best;
+            best = s;
+            bi = c;
+        } else if s < second {
+            second = s;
+        }
+    }
+    (bi, best, second)
+}
+
+/// Maximum true-metric distance any center moved between two center sets —
+/// the per-iteration decay of every point's second-closest lower bound.
+/// Shared with the parallel coordinator (leader-side bound maintenance).
+pub(crate) fn max_center_shift(old: &PointSet, new: &PointSet, metric: MetricKind) -> f32 {
+    let mut m = 0.0f32;
+    for c in 0..old.len() {
+        m = m.max(metric.dist(old.row(c), new.row(c)));
+    }
+    m
+}
+
+/// Half the distance from each center to its nearest other center
+/// (deflated by [`BOUND_DEFLATE`]): a point closer to its center than this
+/// radius cannot have any other center closer. `INFINITY` when `k == 1`.
+/// Shared with the parallel coordinator (leader-side bound maintenance).
+pub(crate) fn half_separation(centers: &PointSet, metric: MetricKind) -> Vec<f32> {
+    let k = centers.len();
+    let mut out = vec![f32::INFINITY; k];
+    for c in 0..k {
+        for o in 0..k {
+            if o != c {
+                let d = metric.dist(centers.row(c), centers.row(o));
+                if d < out[c] {
+                    out[c] = d;
+                }
+            }
+        }
+    }
+    for v in &mut out {
+        *v = 0.5 * *v * BOUND_DEFLATE;
+    }
+    out
+}
+
+/// One Hamerly-pruned assignment pass: updates `idx`/`lb`/`surr` in place
+/// and returns the number of point–center distance evaluations performed.
+///
+/// State per point: `idx` (assigned center), `lb` (lower bound on the
+/// distance to the *second*-closest center, decayed by `delta_max` here),
+/// `surr` (the surrogate distance to the assigned center — exactly what
+/// the unpruned kernels write into `AssignOut::sqdist`). A first pass
+/// (empty `idx`) full-scans everything; afterwards each point pays one
+/// fresh distance to its assigned center (always-tighten: that value *is*
+/// the exact surrogate the accumulation needs), and skips the other `k−1`
+/// when it beats `max(lb, half_sep[assigned])`. Used by both the
+/// sequential pruned Lloyd and the parallel coordinator (per machine
+/// part).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn hamerly_pass(
+    points: &PointSet,
+    centers: &PointSet,
+    metric: MetricKind,
+    idx: &mut Vec<u32>,
+    lb: &mut Vec<f32>,
+    surr: &mut Vec<f32>,
+    delta_max: f32,
+    half_sep: &[f32],
+) -> u64 {
+    let n = points.len();
+    let k = centers.len();
+    debug_assert_eq!(half_sep.len(), k);
+    let first = idx.is_empty();
+    if first {
+        idx.resize(n, 0);
+        lb.resize(n, 0.0);
+        surr.resize(n, 0.0);
+    }
+    debug_assert_eq!(idx.len(), n);
+    let mut evaluated = 0u64;
+    for i in 0..n {
+        let row = points.row(i);
+        if !first {
+            lb[i] -= delta_max;
+            let a = idx[i] as usize;
+            // Always tighten: one fresh distance to the assigned center is
+            // both the tightest upper bound and the exact surrogate the
+            // accumulation needs (clamped at write like the kernels).
+            let s = metric.surrogate(row, centers.row(a)).max(0.0);
+            evaluated += 1;
+            let dist = metric.to_dist_f32(s);
+            if dist < lb[i].max(half_sep[a]) {
+                // Strictly closer than any other center can be: the
+                // assignment provably matches what a full scan would pick
+                // (exact ties never prune — strict `<` against bounds that
+                // ties saturate).
+                surr[i] = s;
+                continue;
+            }
+        }
+        let (bi, best, second) = scan_best_two(row, centers, metric);
+        idx[i] = bi as u32;
+        surr[i] = best.max(0.0);
+        lb[i] = metric.to_dist_f32(second);
+        evaluated += k as u64;
+    }
+    evaluated
+}
+
+/// The Hamerly-pruned sequential Lloyd (see module docs): same seeding,
+/// same per-iteration structure, same accumulation op order as the
+/// unpruned [`lloyd`] — the only difference is how many distances the
+/// assign phase evaluates. `rule` is the already-routed update rule (Mean
+/// or Medoid; never Weiszfeld here).
+fn lloyd_hamerly(points: &PointSet, cfg: &LloydConfig, rule: UpdateRule) -> LloydResult {
+    let metric = cfg.metric;
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = seeding::random_distinct(points, cfg.k, &mut rng);
+    let k = centers.len();
+    let n = points.len() as u64;
+
+    let mut idx: Vec<u32> = Vec::new();
+    let mut lb: Vec<f32> = Vec::new();
+    let mut surr: Vec<f32> = Vec::new();
+    let mut delta_max = 0.0f32;
+    let mut half_sep = vec![0.0f32; k];
+
+    let mut history = Vec::new();
+    let mut last_cost = f64::INFINITY;
+    let mut iters = 0usize;
+    let mut stats = PruneStats::default();
+
+    for _ in 0..cfg.max_iters {
+        iters += 1;
+        stats.possible += n * k as u64;
+        stats.evaluated += hamerly_pass(
+            points, &centers, metric, &mut idx, &mut lb, &mut surr, delta_max, &half_sep,
+        );
+        let a = AssignOut {
+            sqdist: surr.clone(),
+            idx: idx.clone(),
+        };
+        // Accumulate in the unpruned path's exact flavor: the kernel's
+        // blocked scatter-add for the Mean rule (what `lloyd_step_metric`
+        // runs), the sequential `accumulate_assign` for the Medoid rule.
+        let (cost, next) = match rule {
+            UpdateRule::Medoid => {
+                let (sums, counts, cost) = accumulate_assign(points, None, &a, k, metric);
+                let next = medoid_step(points, &a, &sums, &counts, &centers, metric);
+                (cost, next)
+            }
+            _ => {
+                let s = crate::runtime::native::lloyd_accumulate(points, &centers, &a, metric);
+                let next = mean_update(&s.sums, &s.counts, &centers);
+                (s.cost_median, next)
+            }
+        };
+        history.push(cost);
+        delta_max = max_center_shift(&centers, &next, metric) * BOUND_INFLATE;
+        half_sep = half_separation(&next, metric);
+        centers = next;
+        if last_cost.is_finite() {
+            let rel = (last_cost - cost) / last_cost.max(1e-12);
+            if rel.abs() < cfg.tol {
+                break;
+            }
+        }
+        last_cost = cost;
+    }
+
+    // Final pass under the final centers — kernel-flavor accumulation for
+    // both rules, mirroring the unpruned final `lloyd_step_metric` pass.
+    stats.possible += n * k as u64;
+    stats.evaluated += hamerly_pass(
+        points, &centers, metric, &mut idx, &mut lb, &mut surr, delta_max, &half_sep,
+    );
+    let a = AssignOut {
+        sqdist: surr.clone(),
+        idx: idx.clone(),
+    };
+    let fin = crate::runtime::native::lloyd_accumulate(points, &centers, &a, metric);
+    history.push(fin.cost_median);
+
+    LloydResult {
+        centers,
+        iters,
+        cost_median: fin.cost_median,
+        history,
+        final_counts: fin.counts,
+        prune: Some(stats),
     }
 }
 
@@ -497,6 +812,128 @@ mod tests {
                 res.cost_median
             );
         }
+    }
+
+    #[test]
+    fn hamerly_matches_unpruned_bitwise_across_metrics_and_iters() {
+        let p = two_blobs(600, 21);
+        for metric in [
+            MetricKind::L2Sq,
+            MetricKind::L2,
+            MetricKind::L1,
+            MetricKind::Chebyshev,
+        ] {
+            for m in 1..=4 {
+                let base = LloydConfig {
+                    k: 4,
+                    seed: 9,
+                    max_iters: m,
+                    tol: 0.0,
+                    metric,
+                    ..Default::default()
+                };
+                let pruned_cfg = LloydConfig {
+                    prune: PruneKind::Hamerly,
+                    ..base.clone()
+                };
+                let a = lloyd(&p, None, &base, &NativeBackend);
+                let b = lloyd(&p, None, &pruned_cfg, &NativeBackend);
+                assert_eq!(a.iters, b.iters, "{metric} m={m}");
+                assert_eq!(
+                    a.centers.flat(),
+                    b.centers.flat(),
+                    "{metric} m={m}: centers diverged"
+                );
+                assert_eq!(a.history, b.history, "{metric} m={m}: history diverged");
+                assert_eq!(a.final_counts, b.final_counts, "{metric} m={m}");
+                assert_eq!(
+                    a.cost_median.to_bits(),
+                    b.cost_median.to_bits(),
+                    "{metric} m={m}: cost not bit-identical"
+                );
+                assert!(b.prune.is_some(), "{metric} m={m}: pruned run reports stats");
+            }
+        }
+    }
+
+    #[test]
+    fn hamerly_actually_prunes_and_counts_evaluations() {
+        let p = two_blobs(2000, 5);
+        let cfg = LloydConfig {
+            k: 2,
+            seed: 7,
+            prune: PruneKind::Hamerly,
+            max_iters: 8,
+            tol: 0.0,
+            ..Default::default()
+        };
+        let res = lloyd(&p, None, &cfg, &NativeBackend);
+        let st = res.prune.expect("pruned run reports stats");
+        let passes = res.iters as u64 + 1; // + final pass
+        assert_eq!(st.possible, p.len() as u64 * 2 * passes);
+        // Well-separated blobs with stationary centers: the bulk of the
+        // post-first-pass work must be pruned down to one eval per point.
+        assert!(
+            st.evaluated < st.possible / 2,
+            "no pruning happened: {st:?}"
+        );
+        // Every pass pays at least one distance per point.
+        assert!(st.evaluated >= p.len() as u64 * passes, "{st:?}");
+    }
+
+    #[test]
+    fn hamerly_cosine_and_weighted_and_weiszfeld_fall_back_unpruned() {
+        let p = two_blobs(200, 3);
+        let res = lloyd(
+            &p,
+            None,
+            &LloydConfig {
+                k: 2,
+                seed: 3,
+                metric: MetricKind::Cosine,
+                prune: PruneKind::Hamerly,
+                ..Default::default()
+            },
+            &NativeBackend,
+        );
+        assert!(res.prune.is_none(), "cosine must run unpruned");
+        let w = vec![1.0f32; p.len()];
+        let res = lloyd(
+            &p,
+            Some(&w),
+            &LloydConfig {
+                k: 2,
+                seed: 3,
+                prune: PruneKind::Hamerly,
+                ..Default::default()
+            },
+            &NativeBackend,
+        );
+        assert!(res.prune.is_none(), "weighted must run unpruned");
+        let res = lloyd(
+            &p,
+            None,
+            &LloydConfig {
+                k: 2,
+                seed: 3,
+                update: UpdateRule::Weiszfeld,
+                prune: PruneKind::Hamerly,
+                ..Default::default()
+            },
+            &NativeBackend,
+        );
+        assert!(res.prune.is_none(), "weiszfeld must run unpruned");
+    }
+
+    #[test]
+    fn prune_kind_parses_and_displays() {
+        assert_eq!(PruneKind::parse("hamerly"), Some(PruneKind::Hamerly));
+        assert_eq!(PruneKind::parse("BOUNDS"), Some(PruneKind::Hamerly));
+        assert_eq!(PruneKind::parse("none"), Some(PruneKind::None));
+        assert_eq!(PruneKind::parse("off"), Some(PruneKind::None));
+        assert_eq!(PruneKind::parse("fast"), None);
+        assert_eq!(PruneKind::Hamerly.to_string(), "hamerly");
+        assert_eq!(PruneKind::default(), PruneKind::None);
     }
 
     #[test]

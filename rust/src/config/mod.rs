@@ -7,8 +7,10 @@
 
 pub mod toml;
 
+use crate::algorithms::lloyd::PruneKind;
 use crate::data::DataGenConfig;
 use crate::geometry::MetricKind;
+use crate::runtime::{AssignPath, Precision};
 use crate::sampling::SampleConstants;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -66,6 +68,20 @@ pub struct ClusterConfig {
     pub threads: usize,
     /// Which compute backend serves the numeric hot loop.
     pub backend: RuntimeBackendKind,
+    /// Which assign kernel serves the Euclidean family
+    /// (`cluster.kernel`: `exact` | `gemm`). `exact` (default) is
+    /// bit-identical to the scalar reference; `gemm` is the norm-expanded
+    /// ε-equivalent fast path — rung (a) of the kernel speed ladder.
+    pub kernel: AssignPath,
+    /// Lloyd-accumulator precision (`cluster.precision`: `f64` | `f32`).
+    /// `f64` (default) is the bit-exact path; `f32` accumulates per fixed
+    /// block in single precision — rung (b) of the ladder.
+    pub precision: Precision,
+    /// Lloyd assign-phase pruning (`cluster.prune`: `none` | `hamerly`).
+    /// `hamerly` skips provably-redundant distance evaluations under
+    /// triangle-valid metrics — rung (c) of the ladder,
+    /// assignment-identical per iteration to the unpruned path.
+    pub prune: PruneKind,
     /// Directory holding manifest.json + *.hlo.txt.
     pub artifact_dir: PathBuf,
     /// Lloyd iteration cap.
@@ -116,6 +132,9 @@ impl Default for ClusterConfig {
             parallel: true,
             threads: 0,
             backend: RuntimeBackendKind::Native,
+            kernel: AssignPath::Exact,
+            precision: Precision::F64,
+            prune: PruneKind::None,
             artifact_dir: PathBuf::from("artifacts"),
             // High cap: convergence is governed by lloyd_tol; big inputs
             // legitimately take many more iterations than small samples —
@@ -223,6 +242,21 @@ impl AppConfig {
                     other => anyhow::bail!("unknown backend {other:?}"),
                 }
             }
+            ("cluster", "kernel") => {
+                self.cluster.kernel = AssignPath::parse(value).with_context(|| {
+                    format!("unknown kernel {value:?} (expected: exact, gemm)")
+                })?
+            }
+            ("cluster", "precision") => {
+                self.cluster.precision = Precision::parse(value).with_context(|| {
+                    format!("unknown precision {value:?} (expected: f64, f32)")
+                })?
+            }
+            ("cluster", "prune") => {
+                self.cluster.prune = PruneKind::parse(value).with_context(|| {
+                    format!("unknown prune mode {value:?} (expected: none, hamerly)")
+                })?
+            }
             ("cluster", "artifact_dir") => self.cluster.artifact_dir = PathBuf::from(value),
             ("cluster", "lloyd_max_iters") => self.cluster.lloyd_max_iters = p(value)?,
             ("cluster", "lloyd_tol") => self.cluster.lloyd_tol = p(value)?,
@@ -326,6 +360,38 @@ mod tests {
         let err = AppConfig::load(None, &[("cluster.metric".into(), "hamming".into())])
             .unwrap_err();
         assert!(format!("{err:#}").contains("unknown metric"), "{err:#}");
+    }
+
+    #[test]
+    fn ladder_keys_apply_and_default_off() {
+        let cfg = AppConfig::load(
+            None,
+            &[
+                ("cluster.kernel".into(), "gemm".into()),
+                ("cluster.precision".into(), "f32".into()),
+                ("cluster.prune".into(), "hamerly".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.kernel, AssignPath::Gemm);
+        assert_eq!(cfg.cluster.precision, Precision::F32);
+        assert_eq!(cfg.cluster.prune, PruneKind::Hamerly);
+        // The fast paths are strictly opt-in: defaults keep the exact,
+        // bit-identical pipeline.
+        let d = AppConfig::default();
+        assert_eq!(d.cluster.kernel, AssignPath::Exact);
+        assert_eq!(d.cluster.precision, Precision::F64);
+        assert_eq!(d.cluster.prune, PruneKind::None);
+        // Unknown values fail with the valid list.
+        let err = AppConfig::load(None, &[("cluster.kernel".into(), "blas".into())])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown kernel"), "{err:#}");
+        let err = AppConfig::load(None, &[("cluster.precision".into(), "f16".into())])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown precision"), "{err:#}");
+        let err = AppConfig::load(None, &[("cluster.prune".into(), "elkan".into())])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown prune mode"), "{err:#}");
     }
 
     #[test]

@@ -77,6 +77,7 @@ pub fn mr_divide_kmedian(
                             max_iters: cfg.lloyd_max_iters,
                             tol: cfg.lloyd_tol,
                             metric,
+                            prune: cfg.prune,
                             seed: cfg.seed ^ (m as u64),
                             ..Default::default()
                         },

@@ -11,7 +11,7 @@ use crate::config::{ClusterConfig, RuntimeBackendKind};
 use crate::geometry::PointSet;
 use crate::mapreduce::{MrCluster, MrConfig, RunStats};
 use crate::metrics::cost::{eval_costs_metric, CostSummary};
-use crate::runtime::{ComputeBackend, NativeBackend};
+use crate::runtime::{ComputeBackend, FastNativeBackend, NativeBackend};
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
@@ -137,7 +137,29 @@ pub struct Outcome {
 /// the run: without the `xla` cargo feature, or when the PJRT runtime /
 /// AOT artifacts are missing, it falls back to [`NativeBackend`] with a
 /// logged warning (see `runtime` module docs).
+///
+/// The kernel-ladder knobs (`cluster.kernel`, `cluster.precision`) route
+/// to [`FastNativeBackend`] when either is set off its exact default; the
+/// AOT path has no fast-path kernels, so combining them with
+/// `cluster.backend = xla` falls back to the fast *native* backend with a
+/// warning rather than silently dropping the request.
 pub fn make_backend(cfg: &ClusterConfig) -> Arc<dyn ComputeBackend> {
+    use crate::runtime::{AssignPath, Precision};
+    let fast = cfg.kernel != AssignPath::Exact || cfg.precision != Precision::F64;
+    if fast {
+        if cfg.backend == RuntimeBackendKind::Xla {
+            log::warn!(
+                "cluster.kernel={} / cluster.precision={} have no XLA \
+                 implementation; running the fast native backend instead.",
+                cfg.kernel,
+                cfg.precision
+            );
+        }
+        return Arc::new(FastNativeBackend {
+            assign_path: cfg.kernel,
+            precision: cfg.precision,
+        });
+    }
     match cfg.backend {
         RuntimeBackendKind::Native => Arc::new(NativeBackend),
         #[cfg(feature = "xla")]

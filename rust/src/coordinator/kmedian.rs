@@ -98,6 +98,9 @@ pub(crate) fn run_weighted_inner(
                 max_iters: cfg.lloyd_max_iters,
                 tol: cfg.lloyd_tol,
                 metric: cfg.metric,
+                // Weighted runs silently fall back to the unpruned scan
+                // (see `algorithms/lloyd.rs`); threaded for uniformity.
+                prune: cfg.prune,
                 seed: cfg.seed ^ 0xA11CE,
                 ..Default::default()
             },

@@ -19,11 +19,29 @@
 //! medoid rule exactly, keeping the "same iterate as sequential Lloyd"
 //! contract across metrics; under the default `l2sq`/`l2` metrics the
 //! round structure is unchanged (one round per iteration).
+//!
+//! ## Hamerly-pruned rounds (`cluster.prune = hamerly`)
+//!
+//! With [`PruneKind::Hamerly`] (and a triangle-valid metric — see
+//! `algorithms/lloyd.rs`), each machine keeps its Hamerly bound state
+//! resident next to its points ([`run_machine_round_mut`] carries it
+//! through fault injection: checkpointing a machine honestly re-clones its
+//! bounds). The broadcast grows by the k half-separation radii plus the
+//! scalar movement decay; the round *count* is unchanged, and the medoid
+//! snap reuses the resident assignment instead of re-running a full
+//! assign pass (so its broadcast shrinks to just the mean targets). The
+//! iterates are bit-identical to the unpruned coordinator at any machine
+//! count — same per-part accumulation, same part-order merge.
+//!
+//! [`run_machine_round_mut`]: crate::mapreduce::MrCluster::run_machine_round_mut
 
+use crate::algorithms::lloyd::{
+    half_separation, hamerly_pass, max_center_shift, PruneKind, PruneStats, BOUND_INFLATE,
+};
 use crate::config::ClusterConfig;
 use crate::geometry::PointSet;
 use crate::mapreduce::{MemSize, MrCluster, MrError};
-use crate::runtime::{ComputeBackend, LloydStepOut};
+use crate::runtime::{AssignOut, ComputeBackend, LloydStepOut};
 use crate::util::rng::Rng;
 
 /// Result of a Parallel-Lloyd run.
@@ -37,6 +55,27 @@ pub struct ParallelLloydResult {
     pub cost_median: f64,
     /// Objective value per iteration (for convergence plots).
     pub history: Vec<f64>,
+    /// Distance-evaluation counters when the run took the Hamerly-pruned
+    /// path; `None` when it ran unpruned (including the cosine fallback).
+    pub prune: Option<PruneStats>,
+}
+
+/// One machine's resident state on the Hamerly-pruned path: its point
+/// block plus the per-point bound arrays (assigned center, second-closest
+/// lower bound, surrogate to the assigned center). `Clone` is the honest
+/// checkpoint cost under fault injection.
+#[derive(Clone)]
+struct BoundedPart {
+    part: PointSet,
+    idx: Vec<u32>,
+    lb: Vec<f32>,
+    surr: Vec<f32>,
+}
+
+impl MemSize for BoundedPart {
+    fn mem_bytes(&self) -> usize {
+        self.part.mem_bytes() + self.idx.len() * 4 + self.lb.len() * 4 + self.surr.len() * 4
+    }
 }
 
 /// One machine's medoid-snap proposal: per cluster, the surrogate distance
@@ -62,6 +101,13 @@ pub fn parallel_lloyd(
 ) -> Result<ParallelLloydResult, MrError> {
     let d = points.dim();
     let metric = cfg.metric;
+    // The Hamerly-pruned coordinator (bit-identical iterates, fewer
+    // distance evaluations; see module docs). Like the sequential path it
+    // always runs the native kernels, so `backend` only serves the
+    // unpruned rounds below.
+    if cfg.prune == PruneKind::Hamerly && metric.supports_triangle_pruning() {
+        return parallel_lloyd_hamerly(cluster, points, cfg);
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut centers = crate::algorithms::seeding::random_distinct(points, cfg.k, &mut rng);
     let k = centers.len();
@@ -200,6 +246,183 @@ pub fn parallel_lloyd(
         iters,
         cost_median,
         history,
+        prune: None,
+    })
+}
+
+/// The Hamerly-pruned Parallel-Lloyd (see module docs): same seeding, same
+/// partitioning, same leader aggregation and round count as the unpruned
+/// [`parallel_lloyd`] — each machine just keeps bound state resident and
+/// skips the distances its bounds prove redundant.
+fn parallel_lloyd_hamerly(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+) -> Result<ParallelLloydResult, MrError> {
+    let d = points.dim();
+    let metric = cfg.metric;
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = crate::algorithms::seeding::random_distinct(points, cfg.k, &mut rng);
+    let k = centers.len();
+
+    let parts = points.chunks(cfg.machines.min(points.len()).max(1));
+    let offsets: Vec<usize> = parts
+        .iter()
+        .scan(0usize, |lo, part| {
+            let here = *lo;
+            *lo += part.len();
+            Some(here)
+        })
+        .collect();
+    let mut states: Vec<BoundedPart> = parts
+        .into_iter()
+        .map(|part| BoundedPart {
+            part,
+            idx: Vec::new(),
+            lb: Vec::new(),
+            surr: Vec::new(),
+        })
+        .collect();
+    // Broadcast per iteration: the k centers, the k half-separation radii,
+    // and the scalar movement decay.
+    let bcast_bytes = k * d * 4 + k * 4 + 4;
+
+    let mut delta_max = 0.0f32;
+    let mut half_sep = vec![0.0f32; k];
+    let mut history = Vec::new();
+    let mut last_cost = f64::INFINITY;
+    let mut iters = 0usize;
+    let mut stats = PruneStats::default();
+
+    for it in 0..cfg.lloyd_max_iters {
+        iters += 1;
+        stats.possible += points.len() as u64 * k as u64;
+        let c_ref = &centers;
+        let hs_ref: &[f32] = &half_sep;
+        let dm = delta_max;
+        let steps: Vec<(LloydStepOut, u64)> = cluster.run_machine_round_mut(
+            &format!("parallel-lloyd iter {it}"),
+            &mut states,
+            bcast_bytes,
+            move |_m, st: &mut BoundedPart| {
+                let evaluated = hamerly_pass(
+                    &st.part, c_ref, metric, &mut st.idx, &mut st.lb, &mut st.surr, dm, hs_ref,
+                );
+                let a = AssignOut {
+                    sqdist: st.surr.clone(),
+                    idx: st.idx.clone(),
+                };
+                // The unpruned round's exact per-part accumulation, fed the
+                // pruned (identical) assignment.
+                let step = crate::runtime::native::lloyd_accumulate(&st.part, c_ref, &a, metric);
+                (step, evaluated)
+            },
+        )?;
+
+        // Leader: aggregate in part order (the unpruned merge order).
+        let mut agg = LloydStepOut::default();
+        for (s, ev) in &steps {
+            agg.merge(s);
+            stats.evaluated += ev;
+        }
+        let cost = agg.cost_median;
+        history.push(cost);
+
+        let mut targets = PointSet::with_capacity(d, k);
+        let mut row = vec![0.0f32; d];
+        for c in 0..k {
+            if agg.counts[c] > 0.0 {
+                for j in 0..d {
+                    row[j] = (agg.sums[c * d + j] / agg.counts[c]) as f32;
+                }
+                targets.push(&row);
+            } else {
+                targets.push(centers.row(c));
+            }
+        }
+
+        let next = if metric.mean_is_minimizer() {
+            targets
+        } else {
+            // Medoid snap: same winner rule as the unpruned coordinator,
+            // but the assignment is already resident in the bound state —
+            // no second assign pass, and the broadcast is just the mean
+            // targets.
+            let t_ref = &targets;
+            let o_ref = &offsets;
+            let msgs: Vec<MedoidMsg> = cluster.run_machine_round(
+                &format!("parallel-lloyd iter {it}: medoid snap"),
+                &states,
+                k * d * 4,
+                move |m, st: &BoundedPart| {
+                    let mut best: Vec<(f32, u64)> = vec![(f32::INFINITY, u64::MAX); k];
+                    for (pos, &c) in st.idx.iter().enumerate() {
+                        let cu = c as usize;
+                        let s = metric.surrogate(st.part.row(pos), t_ref.row(cu));
+                        if s.total_cmp(&best[cu].0) == std::cmp::Ordering::Less {
+                            best[cu] = (s, (o_ref[m] + pos) as u64);
+                        }
+                    }
+                    let mut rows = PointSet::with_capacity(d, k);
+                    let zero = vec![0.0f32; d];
+                    for &(_, gi) in &best {
+                        if gi == u64::MAX {
+                            rows.push(&zero);
+                        } else {
+                            rows.push(st.part.row(gi as usize - o_ref[m]));
+                        }
+                    }
+                    MedoidMsg { best, rows }
+                },
+            )?;
+            let mut next = PointSet::with_capacity(d, k);
+            for c in 0..k {
+                let mut win: Option<(f32, u64, usize)> = None; // (s, gi, machine)
+                for (m, msg) in msgs.iter().enumerate() {
+                    let (s, gi) = msg.best[c];
+                    if gi == u64::MAX {
+                        continue;
+                    }
+                    let better = match win {
+                        None => true,
+                        Some((ws, wgi, _)) => match s.total_cmp(&ws) {
+                            std::cmp::Ordering::Less => true,
+                            std::cmp::Ordering::Equal => gi < wgi,
+                            std::cmp::Ordering::Greater => false,
+                        },
+                    };
+                    if better {
+                        win = Some((s, gi, m));
+                    }
+                }
+                match win {
+                    Some((_, _, m)) => next.push(msgs[m].rows.row(c)),
+                    None => next.push(targets.row(c)), // empty cluster
+                }
+            }
+            next
+        };
+
+        delta_max = max_center_shift(&centers, &next, metric) * BOUND_INFLATE;
+        half_sep = half_separation(&next, metric);
+        centers = next;
+
+        if last_cost.is_finite() {
+            let rel = (last_cost - cost) / last_cost.max(1e-12);
+            if rel.abs() < cfg.lloyd_tol {
+                break;
+            }
+        }
+        last_cost = cost;
+    }
+
+    let cost_median = history.last().copied().unwrap_or(0.0);
+    Ok(ParallelLloydResult {
+        centers,
+        iters,
+        cost_median,
+        history,
+        prune: Some(stats),
     })
 }
 
@@ -275,6 +498,87 @@ mod tests {
         });
         let res = parallel_lloyd(&mut cluster, &data.points, &cfg(4, 10), &NativeBackend).unwrap();
         assert_eq!(cluster.stats.n_rounds(), res.iters);
+    }
+
+    #[test]
+    fn hamerly_matches_unpruned_parallel_bitwise() {
+        use crate::geometry::MetricKind;
+        let data = DataGenConfig {
+            n: 3000,
+            k: 6,
+            seed: 15,
+            ..Default::default()
+        }
+        .generate();
+        for metric in [MetricKind::L2Sq, MetricKind::L1] {
+            let base = ClusterConfig {
+                k: 6,
+                machines: 12,
+                metric,
+                ..Default::default()
+            };
+            let pruned_cfg = ClusterConfig {
+                prune: PruneKind::Hamerly,
+                ..base.clone()
+            };
+            let mut c1 = MrCluster::new(MrConfig {
+                n_machines: 12,
+                ..Default::default()
+            });
+            let mut c2 = MrCluster::new(MrConfig {
+                n_machines: 12,
+                ..Default::default()
+            });
+            let a = parallel_lloyd(&mut c1, &data.points, &base, &NativeBackend).unwrap();
+            let b = parallel_lloyd(&mut c2, &data.points, &pruned_cfg, &NativeBackend).unwrap();
+            assert_eq!(a.iters, b.iters, "{metric}");
+            assert_eq!(
+                a.centers.flat(),
+                b.centers.flat(),
+                "{metric}: centers diverged"
+            );
+            assert_eq!(a.history, b.history, "{metric}: history diverged");
+            assert_eq!(
+                c1.stats.n_rounds(),
+                c2.stats.n_rounds(),
+                "{metric}: pruning must not change the round count"
+            );
+            let st = b.prune.expect("pruned run reports stats");
+            assert!(st.evaluated < st.possible, "{metric}: no pruning: {st:?}");
+            assert!(a.prune.is_none());
+        }
+    }
+
+    #[test]
+    fn hamerly_parallel_machine_count_invariant() {
+        let data = DataGenConfig {
+            n: 2500,
+            k: 5,
+            seed: 23,
+            ..Default::default()
+        }
+        .generate();
+        let mut costs = Vec::new();
+        for m in [1usize, 9, 40] {
+            let mut cluster = MrCluster::new(MrConfig {
+                n_machines: m,
+                ..Default::default()
+            });
+            let ccfg = ClusterConfig {
+                k: 5,
+                machines: m,
+                prune: PruneKind::Hamerly,
+                ..Default::default()
+            };
+            let res = parallel_lloyd(&mut cluster, &data.points, &ccfg, &NativeBackend).unwrap();
+            costs.push(res.cost_median);
+        }
+        // Part boundaries reorder the f64 merges (same as unpruned), so
+        // only float-noise drift is allowed across machine counts.
+        for w in costs.windows(2) {
+            let rel = (w[0] - w[1]).abs() / w[0].max(1e-9);
+            assert!(rel < 1e-6, "pruned costs diverge: {costs:?}");
+        }
     }
 
     #[test]

@@ -146,6 +146,19 @@ impl MetricKind {
         matches!(self, MetricKind::L2Sq | MetricKind::L2)
     }
 
+    /// True when triangle-inequality bound pruning (Hamerly-style; see
+    /// `algorithms/lloyd.rs`) is valid: the distances obtained through
+    /// [`MetricKind::to_dist_f32`] / [`MetricKind::dist`] form a true
+    /// metric. Holds for `l2`, `l1`, and `chebyshev` directly, and for
+    /// `l2sq` because its bounds are routed through the `l2` distance
+    /// (the sqrt of the surrogate). The `cosine` surrogate `1 − cos θ` is
+    /// not a metric (its `to_dist` arc-length conversion is, but the
+    /// kernels compare surrogates), so pruning is skipped there.
+    #[inline]
+    pub fn supports_triangle_pruning(self) -> bool {
+        !matches!(self, MetricKind::Cosine)
+    }
+
     /// The comparison surrogate s(a, b) — monotone in the true distance.
     ///
     /// Scalar reference implementation; the tiled kernels in

@@ -170,7 +170,8 @@ algorithms: Parallel-Lloyd, Divide-Lloyd, Divide-LocalSearch,
             Sampling-Lloyd, Sampling-LocalSearch, LocalSearch, MrKCenter,
             Streaming-Guha, Robust-kCenter, Coreset-kMedian
 
-cluster --metric NAME is shorthand for --set cluster.metric=NAME.
+cluster --metric NAME is shorthand for --set cluster.metric=NAME;
+cluster --precision NAME is shorthand for --set cluster.precision=NAME.
 
 config keys (TOML [section] key, or --set section.key=value):
   data.n data.k data.dim data.sigma data.alpha data.contamination data.seed
@@ -178,6 +179,8 @@ config keys (TOML [section] key, or --set section.key=value):
   cluster.epsilon cluster.profile(theory|practical)
   cluster.machines cluster.mem_limit cluster.parallel cluster.threads
   cluster.backend(native|xla) cluster.artifact_dir
+  cluster.kernel(exact|gemm) cluster.precision(f64|f32)
+  cluster.prune(none|hamerly)
   cluster.lloyd_max_iters cluster.lloyd_tol
   cluster.ls_max_swaps cluster.ls_min_rel_gain cluster.ls_candidate_fraction
   cluster.fail_prob cluster.straggler_prob cluster.straggler_factor
@@ -231,6 +234,10 @@ fn cmd_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
         // `--metric NAME` shorthand; applied last so it beats --set/file.
         cfg.apply("cluster", "metric", m)?;
     }
+    if let Some(p) = args.flags.get("precision") {
+        // `--precision NAME` shorthand, same precedence as --metric.
+        cfg.apply("cluster", "precision", p)?;
+    }
     let cfg = &cfg;
     let points = load_points(cfg, &args.flags)?;
     let backend = experiments::make_backend(&cfg.cluster);
@@ -239,6 +246,10 @@ fn cmd_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
     println!("points         : {}", points.len());
     println!("k              : {}", cfg.cluster.k);
     println!("metric         : {}", cfg.cluster.metric);
+    println!(
+        "kernel         : {} (precision {}, prune {})",
+        cfg.cluster.kernel, cfg.cluster.precision, cfg.cluster.prune
+    );
     println!("k-median cost  : {:.4}", out.cost.median);
     println!("k-center cost  : {:.4}", out.cost.center);
     println!("k-means cost   : {:.4}", out.cost.means);

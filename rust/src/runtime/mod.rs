@@ -42,9 +42,97 @@ pub use bucket::Bucket;
 #[cfg(feature = "xla")]
 pub use executor::XlaBackend;
 pub use manifest::Manifest;
-pub use native::NativeBackend;
+pub use native::{FastNativeBackend, NativeBackend};
 
 use crate::geometry::{MetricKind, PointSet};
+
+/// Which assign kernel serves the Euclidean family (`cluster.kernel`).
+///
+/// Rung (a) of the kernel speed ladder (ARCHITECTURE.md §Kernel ladder):
+/// the GEMM form trades bit-identity for a pure-dot-product inner loop.
+/// Non-Euclidean metrics always run the exact generic kernels regardless
+/// of this knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AssignPath {
+    /// The exact plane-major kernel — bit-identical to the scalar
+    /// surrogate op order (the default, and the semantic reference).
+    #[default]
+    Exact,
+    /// Norm-expanded form: d² = ‖x‖² + ‖c‖² − 2·x·c with precomputed
+    /// point/center norms, so the inner tile loop is a pure dot product.
+    /// ε-equivalent: identical argmins away from exact ties, surrogate
+    /// values within float-cancellation error of the exact path.
+    Gemm,
+}
+
+impl AssignPath {
+    /// Config-file / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            AssignPath::Exact => "exact",
+            AssignPath::Gemm => "gemm",
+        }
+    }
+
+    /// Parse a config-file / CLI name.
+    pub fn parse(s: &str) -> Option<AssignPath> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Some(AssignPath::Exact),
+            "gemm" | "norm" | "norm-expanded" => Some(AssignPath::Gemm),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for AssignPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Accumulator precision for the fast-path Lloyd scatter-add and
+/// objective shares (`cluster.precision`).
+///
+/// Rung (b) of the kernel speed ladder. Point storage is `f32` either way
+/// ([`PointSet`] is single-precision); this knob governs the *accumulator*
+/// width of the Lloyd reduction. `f64` (the default) is the bit-exact
+/// historical path; `f32` accumulates sums/counts/costs in single
+/// precision per fixed block before widening at the block boundary —
+/// ε-equivalent, still deterministic at any thread count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Double-precision accumulators (bit-exact default).
+    #[default]
+    F64,
+    /// Single-precision per-block accumulators (opt-in, serving-style
+    /// workloads; see README "when to use f32").
+    F32,
+}
+
+impl Precision {
+    /// Config-file / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// Parse a config-file / CLI name.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Some(Precision::F64),
+            "f32" | "single" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Nearest-center assignment of a point block.
 #[derive(Clone, Debug, Default)]

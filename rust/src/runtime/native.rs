@@ -33,7 +33,9 @@
 //! order on the calling thread. This is what makes `parallel = true` and
 //! `parallel = false` cluster runs bit-identical (rust/tests/prop_data_plane.rs).
 
-use super::{weights_from_assign_metric, AssignOut, ComputeBackend, LloydStepOut};
+use super::{
+    weights_from_assign_metric, AssignOut, AssignPath, ComputeBackend, LloydStepOut, Precision,
+};
 use crate::geometry::{MetricKind, PointSet};
 use crate::util::pool;
 use std::sync::Mutex;
@@ -278,6 +280,167 @@ fn assign_block_metric(
     }
 }
 
+/// Norm-expanded (GEMM-form) assignment of rows `[lo, lo + out_len)`:
+/// d² = ‖x‖² + ‖c‖² − 2·x·c with squared center norms precomputed once per
+/// call (`cnorm2`) and squared point norms once per tile, so the inner
+/// tile loop is a *pure dot product* — a mul-add chain with no subtract,
+/// which LLVM turns into straight FMA lanes. Same TILE transpose and
+/// first-index-wins select as [`assign_block`].
+///
+/// Argmin comparisons run on the partial score s = ‖c‖² − 2·x·c (the
+/// point norm is constant per point, so the ordering is unchanged); the
+/// written surrogate is `(‖x‖² + s).max(0)` — the clamp matters because
+/// cancellation can push the expansion slightly negative. This is the
+/// ε-equivalent rung of the kernel ladder (ARCHITECTURE.md §Kernel
+/// ladder): identical argmins away from exact ties, surrogates within
+/// cancellation error of [`assign_block`]'s, but *not* bit-identical.
+/// With `sqrt_out` the written surrogate is the `l2` distance instead.
+fn assign_block_gemm(
+    points: &PointSet,
+    centers: &PointSet,
+    lo: usize,
+    cnorm2: &[f32],
+    sqdist: &mut [f32],
+    idx: &mut [u32],
+    sqrt_out: bool,
+) {
+    let d = points.dim();
+    let k = centers.len();
+    let pflat = points.flat();
+    let cflat = centers.flat();
+    let n = sqdist.len();
+    debug_assert_eq!(idx.len(), n);
+    let mut planes = vec![0.0f32; TILE * d];
+    let mut pnorm2 = [0.0f32; TILE];
+    let mut t0 = 0usize;
+    while t0 < n {
+        let t1 = (t0 + TILE).min(n);
+        let tn = t1 - t0;
+        for i in 0..tn {
+            let base = (lo + t0 + i) * d;
+            for j in 0..d {
+                planes[j * TILE + i] = pflat[base + j];
+            }
+        }
+        // Squared point norms, plane by plane.
+        for x in pnorm2.iter_mut().take(tn) {
+            *x = 0.0;
+        }
+        for j in 0..d {
+            let pj = &planes[j * TILE..(j + 1) * TILE];
+            for i in 0..tn {
+                pnorm2[i] += pj[i] * pj[i];
+            }
+        }
+        let mut best = [f32::INFINITY; TILE];
+        let mut bidx = [0u32; TILE];
+        let mut acc = [0.0f32; TILE];
+        for c in 0..k {
+            let crow = &cflat[c * d..(c + 1) * d];
+            let p0 = &planes[0..TILE];
+            let c0 = crow[0];
+            for i in 0..tn {
+                acc[i] = p0[i] * c0;
+            }
+            for (j, &cj) in crow.iter().enumerate().skip(1) {
+                let pj = &planes[j * TILE..(j + 1) * TILE];
+                for i in 0..tn {
+                    acc[i] += pj[i] * cj;
+                }
+            }
+            let nc2 = cnorm2[c];
+            let cid = c as u32;
+            for i in 0..tn {
+                let score = nc2 - 2.0 * acc[i];
+                let better = score < best[i];
+                best[i] = if better { score } else { best[i] };
+                bidx[i] = if better { cid } else { bidx[i] };
+            }
+        }
+        for i in 0..tn {
+            let s = (pnorm2[i] + best[i]).max(0.0);
+            sqdist[t0 + i] = if sqrt_out { s.sqrt() } else { s };
+            idx[t0 + i] = bidx[i];
+        }
+        t0 = t1;
+    }
+}
+
+/// Squared center norms in coordinate order (the GEMM form's per-call
+/// precomputation).
+fn center_sq_norms(centers: &PointSet) -> Vec<f32> {
+    let d = centers.dim();
+    let cflat = centers.flat();
+    (0..centers.len())
+        .map(|c| {
+            let mut acc = 0.0f32;
+            for &cj in &cflat[c * d..(c + 1) * d] {
+                acc += cj * cj;
+            }
+            acc
+        })
+        .collect()
+}
+
+/// The shared pooled driver for the GEMM-form kernel (`sqrt_out` selects
+/// `l2` surrogates over `l2sq`).
+fn assign_gemm_family(points: &PointSet, centers: &PointSet, sqrt_out: bool) -> AssignOut {
+    assert_eq!(points.dim(), centers.dim(), "dim mismatch");
+    assert!(!centers.is_empty(), "no centers");
+    let n = points.len();
+    let cnorm2 = center_sq_norms(centers);
+    let mut out = AssignOut {
+        sqdist: vec![0.0; n],
+        idx: vec![0; n],
+    };
+    if n < PAR_MIN {
+        assign_block_gemm(points, centers, 0, &cnorm2, &mut out.sqdist, &mut out.idx, sqrt_out);
+        return out;
+    }
+    let slots: Vec<Mutex<(&mut [f32], &mut [u32])>> = out
+        .sqdist
+        .chunks_mut(PAR_BLOCK)
+        .zip(out.idx.chunks_mut(PAR_BLOCK))
+        .map(Mutex::new)
+        .collect();
+    let cn = &cnorm2;
+    pool::global().run(slots.len(), &|b| {
+        let mut guard = slots[b].lock().expect("assign slot poisoned");
+        let (sq, ix) = &mut *guard;
+        assign_block_gemm(points, centers, b * PAR_BLOCK, cn, sq, ix, sqrt_out);
+    });
+    drop(slots);
+    out
+}
+
+/// GEMM-form squared-Euclidean assignment — the norm-expanded rung of the
+/// kernel ladder ([`AssignPath::Gemm`]). Same fixed-block pooled driver
+/// (and therefore the same determinism contract) as
+/// [`NativeBackend::assign`]; see [`FastNativeBackend`] for the config
+/// surface and ARCHITECTURE.md §Kernel ladder for the ε-equivalence
+/// contract. Public so the bench and the property tests can pin the
+/// contract directly against the exact path and the scalar oracle.
+pub fn assign_gemm(points: &PointSet, centers: &PointSet) -> AssignOut {
+    assign_gemm_family(points, centers, false)
+}
+
+/// [`assign_gemm`] under an explicit metric: the GEMM form covers the
+/// Euclidean family (`l2sq` surrogates, or `l2` distances via a final
+/// sqrt); every other metric falls through to the exact
+/// [`assign_metric_generic`] kernels — the ladder never changes
+/// non-Euclidean semantics.
+pub fn assign_gemm_metric(
+    points: &PointSet,
+    centers: &PointSet,
+    metric: MetricKind,
+) -> AssignOut {
+    match metric {
+        MetricKind::L2Sq => assign_gemm_family(points, centers, false),
+        MetricKind::L2 => assign_gemm_family(points, centers, true),
+        _ => assign_metric_generic(points, centers, metric),
+    }
+}
+
 /// Generic-metric nearest-center assignment: the same fixed-block pooled
 /// driver as [`NativeBackend::assign`], with [`assign_block_metric`] doing
 /// the work. `AssignOut::sqdist` holds the metric's *surrogate* (the
@@ -329,8 +492,11 @@ pub fn lloyd_step_metric_generic(
 
 /// The shared post-assignment half of a Lloyd step (blocked scatter-add of
 /// sums/counts + objective shares), used by both the fast path and the
-/// generic path so the merge structure stays identical.
-fn lloyd_accumulate(
+/// generic path so the merge structure stays identical. `pub(crate)` so the
+/// Hamerly-pruned Lloyd path (`algorithms/lloyd.rs`) can feed its pruned
+/// assignment through the *same* accumulation and stay bit-identical to
+/// the unpruned kernels.
+pub(crate) fn lloyd_accumulate(
     points: &PointSet,
     centers: &PointSet,
     a: &AssignOut,
@@ -413,6 +579,94 @@ fn lloyd_block(
     out
 }
 
+/// The f32-precision counterpart of [`lloyd_block`]: single-precision
+/// accumulators within the fixed block, widened to `f64` only at the
+/// block boundary. Per-accumulator op order is still fixed (point-index
+/// ascending), so the result is deterministic at any thread count — just
+/// not bit-identical to the f64 path (ε contract: ARCHITECTURE.md
+/// §Kernel ladder).
+fn lloyd_block_f32(
+    points: &PointSet,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    a: &AssignOut,
+    metric: MetricKind,
+) -> LloydStepOut {
+    let d = points.dim();
+    let pflat = points.flat();
+    let mut sums = vec![0.0f32; k * d];
+    let mut counts = vec![0.0f32; k];
+    let mut cost_median = 0.0f32;
+    let mut cost_means = 0.0f32;
+    for i in lo..hi {
+        let s = a.sqdist[i];
+        let dist = metric.to_dist_f32(s);
+        cost_median += dist;
+        cost_means += match metric {
+            MetricKind::L2Sq => s.max(0.0),
+            _ => dist * dist,
+        };
+    }
+    for i in lo..hi {
+        let c = a.idx[i] as usize;
+        let base = i * d;
+        let cb = c * d;
+        for j in 0..d {
+            sums[cb + j] += pflat[base + j];
+        }
+        counts[c] += 1.0;
+    }
+    LloydStepOut {
+        sums: sums.into_iter().map(f64::from).collect(),
+        counts: counts.into_iter().map(f64::from).collect(),
+        cost_median: cost_median as f64,
+        cost_means: cost_means as f64,
+    }
+}
+
+/// [`lloyd_accumulate`] with f32 per-block accumulators
+/// ([`Precision::F32`]) — same fixed-block decomposition and in-order f64
+/// merge, so the determinism contract is untouched.
+fn lloyd_accumulate_f32(
+    points: &PointSet,
+    centers: &PointSet,
+    a: &AssignOut,
+    metric: MetricKind,
+) -> LloydStepOut {
+    let k = centers.len();
+    let n = points.len();
+    let ranges = block_ranges(n);
+    if n < PAR_MIN || ranges.len() <= 1 {
+        let mut agg = LloydStepOut::default();
+        for &(lo, hi) in &ranges {
+            agg.merge(&lloyd_block_f32(points, k, lo, hi, a, metric));
+        }
+        if agg.sums.is_empty() {
+            agg.sums = vec![0.0; k * points.dim()];
+            agg.counts = vec![0.0; k];
+        }
+        return agg;
+    }
+    let partials: Vec<Mutex<Option<LloydStepOut>>> =
+        ranges.iter().map(|_| Mutex::new(None)).collect();
+    let rref = &ranges;
+    pool::global().run(ranges.len(), &|b| {
+        let (lo, hi) = rref[b];
+        *partials[b].lock().expect("lloyd slot poisoned") =
+            Some(lloyd_block_f32(points, k, lo, hi, a, metric));
+    });
+    let mut agg = LloydStepOut::default();
+    for slot in partials {
+        let part = slot
+            .into_inner()
+            .expect("lloyd slot poisoned")
+            .expect("block not run");
+        agg.merge(&part);
+    }
+    agg
+}
+
 /// Fixed block decomposition of `n` items (see [`PAR_BLOCK`]).
 fn block_ranges(n: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::with_capacity(n / PAR_BLOCK + 1);
@@ -470,6 +724,115 @@ impl ComputeBackend for NativeBackend {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+/// The opt-in fast-path backend — the configurable rungs of the kernel
+/// speed ladder (`cluster.kernel` / `cluster.precision`; see
+/// ARCHITECTURE.md §Kernel ladder for the full contract).
+///
+/// * [`AssignPath::Gemm`] serves the Euclidean family (`l2sq`/`l2`)
+///   through the norm-expanded [`assign_gemm`] kernel — ε-equivalent to
+///   the exact path (identical argmins away from exact ties).
+/// * [`Precision::F32`] accumulates the Lloyd reduction in single
+///   precision per fixed block — ε-equivalent objective shares and sums;
+///   counts stay exact (they are whole numbers well inside f32 range).
+///
+/// Non-Euclidean metrics always route to the exact generic kernels, and
+/// `FastNativeBackend { assign_path: Exact, precision: F64 }` reproduces
+/// [`NativeBackend`] bit-for-bit. Both knobs keep the determinism
+/// contract: fixed blocks, in-order merges, schedule-independent results.
+///
+/// The exact path and the GEMM path agree on assignments:
+///
+/// ```
+/// use mrcluster::geometry::PointSet;
+/// use mrcluster::runtime::{
+///     AssignPath, ComputeBackend, FastNativeBackend, NativeBackend, Precision,
+/// };
+///
+/// // Two well-separated clusters, two centers.
+/// let points = PointSet::from_flat(2, vec![0.1, 0.0, 0.2, 0.1, 9.0, 9.1, 9.2, 9.0]);
+/// let centers = PointSet::from_flat(2, vec![0.0, 0.0, 9.0, 9.0]);
+/// let fast = FastNativeBackend {
+///     assign_path: AssignPath::Gemm,
+///     precision: Precision::F32,
+/// };
+/// assert_eq!(fast.assign(&points, &centers).idx, NativeBackend.assign(&points, &centers).idx);
+/// ```
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FastNativeBackend {
+    /// Which assign kernel serves the Euclidean family.
+    pub assign_path: AssignPath,
+    /// Accumulator precision for the Lloyd reduction.
+    pub precision: Precision,
+}
+
+impl ComputeBackend for FastNativeBackend {
+    fn assign(&self, points: &PointSet, centers: &PointSet) -> AssignOut {
+        match self.assign_path {
+            AssignPath::Exact => NativeBackend.assign(points, centers),
+            AssignPath::Gemm => assign_gemm(points, centers),
+        }
+    }
+
+    fn lloyd_step(&self, points: &PointSet, centers: &PointSet) -> LloydStepOut {
+        let a = self.assign(points, centers);
+        match self.precision {
+            Precision::F64 => lloyd_accumulate(points, centers, &a, MetricKind::L2Sq),
+            Precision::F32 => lloyd_accumulate_f32(points, centers, &a, MetricKind::L2Sq),
+        }
+    }
+
+    fn weight_histogram(&self, points: &PointSet, centers: &PointSet) -> (Vec<f64>, f64) {
+        // Histogram counts are integral and the cost share stays f64: the
+        // precision knob only governs the Lloyd scatter-add accumulators.
+        let a = self.assign(points, centers);
+        weights_from_assign_metric(&a, centers.len(), MetricKind::L2Sq)
+    }
+
+    fn assign_metric(
+        &self,
+        points: &PointSet,
+        centers: &PointSet,
+        metric: MetricKind,
+    ) -> AssignOut {
+        match metric {
+            MetricKind::L2Sq => self.assign(points, centers),
+            MetricKind::L2 if self.assign_path == AssignPath::Gemm => {
+                assign_gemm_metric(points, centers, metric)
+            }
+            _ => assign_metric_generic(points, centers, metric),
+        }
+    }
+
+    fn lloyd_step_metric(
+        &self,
+        points: &PointSet,
+        centers: &PointSet,
+        metric: MetricKind,
+    ) -> LloydStepOut {
+        match metric {
+            MetricKind::L2Sq => self.lloyd_step(points, centers),
+            MetricKind::L2 => {
+                let a = self.assign_metric(points, centers, metric);
+                match self.precision {
+                    Precision::F64 => lloyd_accumulate(points, centers, &a, metric),
+                    Precision::F32 => lloyd_accumulate_f32(points, centers, &a, metric),
+                }
+            }
+            // The ladder never changes non-Euclidean semantics.
+            _ => lloyd_step_metric_generic(points, centers, metric),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match (self.assign_path, self.precision) {
+            (AssignPath::Exact, Precision::F64) => "native",
+            (AssignPath::Gemm, Precision::F64) => "native+gemm",
+            (AssignPath::Exact, Precision::F32) => "native+f32",
+            (AssignPath::Gemm, Precision::F32) => "native+gemm+f32",
+        }
     }
 }
 
@@ -659,5 +1022,139 @@ mod tests {
             assert_eq!(par.idx, ser.idx, "{metric}");
             assert_eq!(par.sqdist, ser.sqdist, "{metric}");
         }
+    }
+
+    #[test]
+    fn gemm_surrogates_close_to_exact_all_dims() {
+        for d in [1usize, 2, 3, 5, 8] {
+            let p = random_ps(700, d, 61);
+            let c = random_ps(19, d, 62);
+            let exact = NativeBackend.assign(&p, &c);
+            let gemm = assign_gemm(&p, &c);
+            for i in 0..p.len() {
+                // The ε contract: the GEMM surrogate of whatever center it
+                // picked is within cancellation error of the exact squared
+                // distance to that center.
+                let want = crate::geometry::metric::sq_dist(p.row(i), c.row(gemm.idx[i] as usize));
+                assert!(
+                    (gemm.sqdist[i] - want).abs() <= 1e-4 * (1.0 + want),
+                    "dim {d} i {i}: gemm {} vs exact {want}",
+                    gemm.sqdist[i]
+                );
+                // And its pick is never meaningfully worse than the exact one.
+                assert!(
+                    want <= exact.sqdist[i] + 1e-4 * (1.0 + exact.sqdist[i]),
+                    "dim {d} i {i}: gemm picked a worse center"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_parallel_path_matches_serial() {
+        let n = PAR_MIN + 2 * TILE + 11;
+        let p = random_ps(n, 3, 71);
+        let c = random_ps(25, 3, 72);
+        let par = assign_gemm(&p, &c);
+        let ser = pool::with_serial(|| assign_gemm(&p, &c));
+        assert_eq!(par.idx, ser.idx);
+        assert_eq!(par.sqdist, ser.sqdist);
+    }
+
+    #[test]
+    fn gemm_surrogates_clamped_and_ties_deterministic() {
+        // A point exactly on a duplicated center: cancellation would go
+        // negative without the clamp, and the duplicate tie must keep a
+        // deterministic winner.
+        let p = PointSet::from_flat(3, vec![2.0, 3.0, 4.0]);
+        let c = PointSet::from_flat(3, vec![2.0, 3.0, 4.0, 2.0, 3.0, 4.0]);
+        let out = assign_gemm(&p, &c);
+        assert!(out.sqdist[0] >= 0.0);
+        assert!(out.sqdist[0] < 1e-4);
+        let rerun = assign_gemm(&p, &c);
+        assert_eq!(out.idx, rerun.idx);
+    }
+
+    #[test]
+    fn gemm_l2_surrogate_is_distance() {
+        let p = random_ps(300, 3, 81);
+        let c = random_ps(9, 3, 82);
+        let sq = assign_gemm_metric(&p, &c, MetricKind::L2Sq);
+        let l2 = assign_gemm_metric(&p, &c, MetricKind::L2);
+        assert_eq!(sq.idx, l2.idx);
+        for (s, d) in sq.sqdist.iter().zip(&l2.sqdist) {
+            assert!((d * d - s).abs() <= 1e-4 * (1.0 + s), "{d} vs sqrt({s})");
+        }
+        // Non-Euclidean metrics fall through to the exact generic kernel.
+        let via_gemm = assign_gemm_metric(&p, &c, MetricKind::L1);
+        let exact = assign_metric_generic(&p, &c, MetricKind::L1);
+        assert_eq!(via_gemm.idx, exact.idx);
+        assert_eq!(via_gemm.sqdist, exact.sqdist);
+    }
+
+    #[test]
+    fn fast_backend_default_knobs_reproduce_native() {
+        let p = random_ps(800, 3, 91);
+        let c = random_ps(13, 3, 92);
+        let fast = FastNativeBackend::default();
+        assert_eq!(fast.name(), "native");
+        let a = fast.assign(&p, &c);
+        let b = NativeBackend.assign(&p, &c);
+        assert_eq!(a.idx, b.idx);
+        assert_eq!(a.sqdist, b.sqdist);
+        let fs = fast.lloyd_step(&p, &c);
+        let ns = NativeBackend.lloyd_step(&p, &c);
+        assert_eq!(fs.sums, ns.sums);
+        assert_eq!(fs.counts, ns.counts);
+        assert_eq!(fs.cost_median.to_bits(), ns.cost_median.to_bits());
+    }
+
+    #[test]
+    fn f32_precision_counts_exact_sums_close() {
+        let p = random_ps(5000, 3, 101);
+        let c = random_ps(25, 3, 102);
+        let f32b = FastNativeBackend {
+            assign_path: AssignPath::Exact,
+            precision: Precision::F32,
+        };
+        let lo = f32b.lloyd_step(&p, &c);
+        let hi = NativeBackend.lloyd_step(&p, &c);
+        // Exact assign path => identical assignment => identical counts.
+        assert_eq!(lo.counts, hi.counts);
+        for (a, b) in lo.sums.iter().zip(&hi.sums) {
+            assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        let rel = (lo.cost_median - hi.cost_median).abs() / hi.cost_median.max(1e-9);
+        assert!(rel < 1e-3, "f32 cost {} vs f64 {}", lo.cost_median, hi.cost_median);
+    }
+
+    #[test]
+    fn f32_precision_parallel_matches_serial() {
+        // The determinism contract extends to the f32 accumulators: fixed
+        // blocks + in-order merge => thread-count independent.
+        let n = PAR_MIN + TILE + 3;
+        let p = random_ps(n, 3, 111);
+        let c = random_ps(11, 3, 112);
+        let b = FastNativeBackend {
+            assign_path: AssignPath::Gemm,
+            precision: Precision::F32,
+        };
+        let par = b.lloyd_step(&p, &c);
+        let ser = pool::with_serial(|| b.lloyd_step(&p, &c));
+        assert_eq!(par.sums, ser.sums);
+        assert_eq!(par.counts, ser.counts);
+        assert_eq!(par.cost_median.to_bits(), ser.cost_median.to_bits());
+        assert_eq!(par.cost_means.to_bits(), ser.cost_means.to_bits());
+    }
+
+    #[test]
+    fn fast_backend_names_reflect_knobs() {
+        let mk = |ap, pr| FastNativeBackend {
+            assign_path: ap,
+            precision: pr,
+        };
+        assert_eq!(mk(AssignPath::Gemm, Precision::F64).name(), "native+gemm");
+        assert_eq!(mk(AssignPath::Exact, Precision::F32).name(), "native+f32");
+        assert_eq!(mk(AssignPath::Gemm, Precision::F32).name(), "native+gemm+f32");
     }
 }

@@ -1,0 +1,228 @@
+//! Kernel-ladder properties (ARCHITECTURE.md §Kernel ladder), end to end:
+//!
+//! 1. **GEMM ε-equivalence.** The norm-expanded GEMM-form assign agrees
+//!    with a scalar per-point oracle on every argmin except inside an
+//!    exact-tie neighborhood (relative best/second gap ≤ 1e-4), across
+//!    dimensions and both Euclidean metrics, and its surrogate distances
+//!    are ε-close.
+//! 2. **Non-Euclidean fall-through.** A GEMM-configured backend serves
+//!    `l1`/`cosine`/`chebyshev` through the *same* generic kernels as the
+//!    default backend — bit-for-bit, not approximately.
+//! 3. **Strict identity on separated data.** Away from ties (any real
+//!    clustering geometry), GEMM assignments are *identical* to the exact
+//!    path, and the `(Exact, F64)` fast backend reproduces
+//!    [`NativeBackend`] bit-for-bit — the "fast path off" contract.
+//! 4. **f32 ε-equivalence.** The f32 Lloyd reduction keeps counts exact
+//!    and sums/costs within float noise on well-separated data.
+//! 5. **Hamerly identity across the parallel threshold.** The pruned
+//!    Lloyd is bit-identical to the unpruned run at `n > PAR_MIN`, where
+//!    the accumulation takes the pooled multi-block path.
+//! 6. **Opt-in routing.** `make_backend` returns the exact backend for
+//!    the default config and the fast backend exactly when a ladder knob
+//!    is set.
+
+use mrcluster::algorithms::lloyd::{lloyd, LloydConfig, PruneKind};
+use mrcluster::config::ClusterConfig;
+use mrcluster::experiments::make_backend;
+use mrcluster::geometry::{MetricKind, PointSet};
+use mrcluster::runtime::native::PAR_MIN;
+use mrcluster::runtime::{AssignPath, ComputeBackend, FastNativeBackend, NativeBackend, Precision};
+use mrcluster::util::rng::Rng;
+
+fn random_ps(n: usize, d: usize, seed: u64) -> PointSet {
+    let mut rng = Rng::new(seed);
+    PointSet::from_flat(d, (0..n * d).map(|_| rng.f32()).collect())
+}
+
+/// Two well-separated blobs in `d` dimensions (no near-ties anywhere).
+fn blobs(n_each: usize, d: usize, seed: u64) -> PointSet {
+    let mut rng = Rng::new(seed);
+    let mut p = PointSet::with_capacity(d, n_each * 2);
+    let mut row = vec![0.0f32; d];
+    for b in 0..2 {
+        let off = b as f32 * 10.0;
+        for _ in 0..n_each {
+            for v in row.iter_mut() {
+                *v = off + rng.f32() * 0.1;
+            }
+            p.push(&row);
+        }
+    }
+    p
+}
+
+/// Scalar per-point oracle: (argmin, best surrogate, second surrogate)
+/// under strict-`<` first-index-wins scanning — the kernel tie rule.
+fn oracle(row: &[f32], centers: &PointSet, metric: MetricKind) -> (usize, f32, f32) {
+    let (mut bi, mut best, mut second) = (0usize, f32::INFINITY, f32::INFINITY);
+    for c in 0..centers.len() {
+        let s = metric.surrogate(row, centers.row(c));
+        if s < best {
+            second = best;
+            best = s;
+            bi = c;
+        } else if s < second {
+            second = s;
+        }
+    }
+    (bi, best, second)
+}
+
+const GEMM: FastNativeBackend = FastNativeBackend {
+    assign_path: AssignPath::Gemm,
+    precision: Precision::F64,
+};
+
+#[test]
+fn gemm_matches_scalar_oracle_across_dims_and_euclidean_metrics() {
+    for metric in [MetricKind::L2Sq, MetricKind::L2] {
+        for d in [1usize, 2, 3, 5, 8, 16] {
+            let p = random_ps(3000, d, 100 + d as u64);
+            let c = random_ps(19, d, 200 + d as u64);
+            let out = GEMM.assign_metric(&p, &c, metric);
+            for i in 0..p.len() {
+                let (bi, best, second) = oracle(p.row(i), &c, metric);
+                if out.idx[i] as usize != bi {
+                    // ε-equivalence: disagreement is legal only at near-ties.
+                    let gap = (second - best) / best.max(1e-12);
+                    assert!(
+                        gap <= 1e-4,
+                        "{metric} d={d} point {i}: gemm {} vs oracle {bi}, gap {gap:e}",
+                        out.idx[i]
+                    );
+                }
+                // GEMM cancellation error is absolute in the norm scale
+                // (~d·eps), so bound relative to max(best, 1): tiny true
+                // distances legitimately carry norm-sized rounding.
+                let rel = (out.sqdist[i] - best).abs() / best.max(1.0);
+                assert!(rel < 1e-3, "{metric} d={d} point {i}: surrogate off by {rel:e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_backend_serves_non_euclidean_metrics_bitwise() {
+    let p = random_ps(2000, 4, 7);
+    let c = random_ps(11, 4, 8);
+    for metric in [MetricKind::L1, MetricKind::Chebyshev, MetricKind::Cosine] {
+        let fast = GEMM.assign_metric(&p, &c, metric);
+        let exact = NativeBackend.assign_metric(&p, &c, metric);
+        assert_eq!(fast.idx, exact.idx, "{metric}");
+        let same_bits = fast
+            .sqdist
+            .iter()
+            .zip(&exact.sqdist)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same_bits, "{metric}: non-Euclidean path must not change at all");
+    }
+}
+
+#[test]
+fn gemm_identical_on_separated_data_and_exact_knobs_reproduce_native() {
+    let p = blobs(1500, 3, 21);
+    let c = random_ps(6, 3, 22);
+    let exact = NativeBackend.assign(&p, &c);
+    assert_eq!(GEMM.assign(&p, &c).idx, exact.idx);
+
+    // (Exact, F64) is NativeBackend, bit for bit.
+    let off = FastNativeBackend {
+        assign_path: AssignPath::Exact,
+        precision: Precision::F64,
+    };
+    let a = off.assign(&p, &c);
+    assert_eq!(a.idx, exact.idx);
+    assert_eq!(a.sqdist, exact.sqdist);
+    let s1 = off.lloyd_step(&p, &c);
+    let s2 = NativeBackend.lloyd_step(&p, &c);
+    assert_eq!(s1.sums, s2.sums);
+    assert_eq!(s1.counts, s2.counts);
+    assert_eq!(s1.cost_median.to_bits(), s2.cost_median.to_bits());
+    assert_eq!(s1.cost_means.to_bits(), s2.cost_means.to_bits());
+}
+
+#[test]
+fn f32_step_keeps_counts_exact_and_sums_within_noise() {
+    let p = blobs(4000, 3, 31);
+    let c = random_ps(5, 3, 32);
+    let f32b = FastNativeBackend {
+        assign_path: AssignPath::Exact,
+        precision: Precision::F32,
+    };
+    let exact = NativeBackend.lloyd_step(&p, &c);
+    let fast = f32b.lloyd_step(&p, &c);
+    assert_eq!(fast.counts, exact.counts, "counts are whole numbers — exact");
+    for (a, b) in fast.sums.iter().zip(&exact.sums) {
+        let rel = (a - b).abs() / b.abs().max(1.0);
+        assert!(rel < 1e-4, "sum {a} vs {b}");
+    }
+    let rel = (fast.cost_median - exact.cost_median).abs() / exact.cost_median.max(1.0);
+    assert!(rel < 1e-4, "cost {} vs {}", fast.cost_median, exact.cost_median);
+}
+
+#[test]
+fn hamerly_bit_identical_above_parallel_threshold() {
+    // Cross PAR_MIN so the pruned path's accumulation exercises the pooled
+    // multi-block merge, not just the inline path the unit tests cover.
+    let n_each = PAR_MIN / 2 + 600;
+    let p = blobs(n_each, 2, 41);
+    assert!(p.len() > PAR_MIN);
+    let run = |prune| {
+        lloyd(
+            &p,
+            None,
+            &LloydConfig {
+                k: 4,
+                max_iters: 3,
+                tol: 0.0,
+                prune,
+                seed: 5,
+                ..Default::default()
+            },
+            &NativeBackend,
+        )
+    };
+    let a = run(PruneKind::None);
+    let b = run(PruneKind::Hamerly);
+    assert_eq!(a.iters, b.iters);
+    assert_eq!(a.centers.flat(), b.centers.flat());
+    assert_eq!(a.final_counts, b.final_counts);
+    let hist_bits: Vec<u64> = a.history.iter().map(|h| h.to_bits()).collect();
+    let hist_bits_b: Vec<u64> = b.history.iter().map(|h| h.to_bits()).collect();
+    assert_eq!(hist_bits, hist_bits_b);
+    assert_eq!(a.cost_median.to_bits(), b.cost_median.to_bits());
+    let stats = b.prune.expect("pruned path must report stats");
+    assert!(a.prune.is_none());
+    assert!(stats.evaluated < stats.possible, "{stats:?}");
+}
+
+#[test]
+fn make_backend_routes_ladder_knobs() {
+    let base = ClusterConfig::default();
+    assert_eq!(make_backend(&base).name(), "native");
+    assert_eq!(
+        make_backend(&ClusterConfig {
+            kernel: AssignPath::Gemm,
+            ..base.clone()
+        })
+        .name(),
+        "native+gemm"
+    );
+    assert_eq!(
+        make_backend(&ClusterConfig {
+            precision: Precision::F32,
+            ..base.clone()
+        })
+        .name(),
+        "native+f32"
+    );
+    assert_eq!(
+        make_backend(&ClusterConfig {
+            kernel: AssignPath::Gemm,
+            precision: Precision::F32,
+            ..base
+        })
+        .name(),
+        "native+gemm+f32"
+    );
+}
