@@ -51,17 +51,28 @@ pub fn emit(name: &str, value: f64, unit: &str) {
     println!("BENCH {name} {value:.6} {unit}");
 }
 
-/// Collects kernel-throughput samples and writes them as a JSON document
-/// when the bench was invoked with `--bench-json <path>`.
+/// Collects bench samples and writes them as a JSON document when the
+/// bench was invoked with `--bench-json <path>`. Each bench names its own
+/// schema (`mrcluster-kernel-bench-v2`, `mrcluster-e2e-bench-v2`, ...);
+/// every schema keeps the v2 convention of a mandatory `variant` field on
+/// every record.
 pub struct JsonSink {
     path: Option<String>,
+    schema: String,
     records: Vec<String>,
 }
 
 impl JsonSink {
     /// Parse `--bench-json <path>` from the process args (absent → the
-    /// sink records but writes nothing).
+    /// sink records but writes nothing). Kernel-bench schema; other
+    /// benches use [`JsonSink::from_args_with_schema`].
     pub fn from_args() -> JsonSink {
+        Self::from_args_with_schema("mrcluster-kernel-bench-v2")
+    }
+
+    /// [`JsonSink::from_args`] with an explicit schema tag for the
+    /// document header.
+    pub fn from_args_with_schema(schema: &str) -> JsonSink {
         let mut path = None;
         let mut args = std::env::args().skip(1);
         while let Some(a) = args.next() {
@@ -74,6 +85,7 @@ impl JsonSink {
         }
         JsonSink {
             path,
+            schema: schema.to_string(),
             records: Vec::new(),
         }
     }
@@ -98,6 +110,30 @@ impl JsonSink {
         ));
     }
 
+    /// Record one end-to-end pipeline sample (`mrcluster-e2e-bench-v2`):
+    /// whole-algorithm throughput in points/s plus the peak host-resident
+    /// coordinate bytes of the data plane during the run (for `mem`
+    /// variant rows this is the full dataset, which mem backing holds
+    /// resident by definition).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_e2e(
+        &mut self,
+        name: &str,
+        variant: &str,
+        n: usize,
+        k: usize,
+        d: usize,
+        threads: usize,
+        pps: f64,
+        peak_resident_bytes: usize,
+    ) {
+        self.records.push(format!(
+            "{{\"name\":\"{name}\",\"variant\":\"{variant}\",\"n\":{n},\"k\":{k},\"d\":{d},\
+             \"threads\":{threads},\"points_per_s\":{pps:.1},\
+             \"peak_resident_bytes\":{peak_resident_bytes}}}"
+        ));
+    }
+
     /// Write the JSON document (no-op without `--bench-json`).
     pub fn write(&self) -> std::io::Result<()> {
         let Some(path) = &self.path else {
@@ -105,8 +141,9 @@ impl JsonSink {
         };
         let scale = scale();
         let body = format!(
-            "{{\n  \"schema\": \"mrcluster-kernel-bench-v2\",\n  \
+            "{{\n  \"schema\": \"{}\",\n  \
              \"scale\": {scale},\n  \"records\": [\n    {}\n  ]\n}}\n",
+            self.schema,
             self.records.join(",\n    ")
         );
         std::fs::write(path, body)?;

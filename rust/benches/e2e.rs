@@ -1,0 +1,124 @@
+//! Bench E14: end-to-end pipeline throughput over the out-of-core data
+//! plane — each streaming algorithm timed on the same dataset twice, once
+//! fully resident (`mem` variant) and once file-backed (`file` variant,
+//! chunk-window streaming), reporting points/s and peak host-resident
+//! coordinate bytes per row.
+//!
+//! Before any timing, the file-backed path is cross-checked against the
+//! in-memory path at oracle scale: centers, rounds, and the k-median cost
+//! bits must match exactly (the data plane's bit-determinism contract).
+//! A divergence panics the bench, so a committed BENCH_e2e.json `file`
+//! row implies the oracle passed.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm_store_with, Algorithm};
+use mrcluster::data::DataGenConfig;
+use mrcluster::experiments::make_backend;
+use mrcluster::geometry::PointStore;
+use mrcluster::util::table::Table;
+use std::time::Instant;
+
+/// Streaming window for the `file` variant rows, in points.
+const CHUNK: usize = 64 * 1024;
+
+const ALGOS: [Algorithm; 3] =
+    [Algorithm::MrKCenter, Algorithm::CoresetKMedian, Algorithm::DivideLloyd];
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let n = bench_util::scaled(2_000_000);
+    let k = 25usize;
+    let dim = 3usize;
+    let mut json = bench_util::JsonSink::from_args_with_schema("mrcluster-e2e-bench-v2");
+
+    let dir = std::env::temp_dir().join("mrcluster_e2e_bench");
+    std::fs::create_dir_all(&dir)?;
+
+    let gen = DataGenConfig {
+        n,
+        k,
+        dim,
+        seed: 11,
+        ..Default::default()
+    };
+    let cfg = ClusterConfig {
+        k,
+        ..Default::default()
+    };
+    let backend = make_backend(&cfg);
+    let threads = mrcluster::util::pool::global().worker_count().max(1);
+
+    // Correctness gate before any timing: at oracle scale, every algorithm
+    // must produce bit-identical output from file backing and mem backing.
+    {
+        let on = (n / 10).clamp(20_000, 200_000);
+        let ogen = DataGenConfig { n: on, ..gen.clone() };
+        let opath = dir.join("e2e_oracle.mrc");
+        let ofile = PointStore::from(ogen.generate_stream(&opath)?);
+        let omem = PointStore::from(ogen.generate().points);
+        for algo in ALGOS {
+            let a = run_algorithm_store_with(algo, &ofile, &cfg, CHUNK, backend.as_ref())?;
+            let b = run_algorithm_store_with(algo, &omem, &cfg, CHUNK, backend.as_ref())?;
+            assert_eq!(
+                a.centers,
+                b.centers,
+                "{}: file-backed centers diverged from the in-memory run",
+                algo.name()
+            );
+            assert_eq!(a.rounds, b.rounds, "{}: round count diverged", algo.name());
+            assert_eq!(
+                a.cost.median.to_bits(),
+                b.cost.median.to_bits(),
+                "{}: k-median cost bits diverged",
+                algo.name()
+            );
+        }
+        std::fs::remove_file(&opath).ok();
+        println!("oracle check passed (n = {on}): file == mem bit for bit on all pipelines");
+    }
+
+    let path = dir.join(format!("e2e_{n}.mrc"));
+    let file_store = PointStore::from(gen.generate_stream(&path)?);
+    let mem_store = PointStore::from(gen.generate().points);
+
+    let mut t = Table::new(vec![
+        "algorithm",
+        "variant",
+        "points/s",
+        "wall s",
+        "peak resident KiB",
+        "cost",
+    ]);
+    for algo in ALGOS {
+        for (variant, store) in [("mem", &mem_store), ("file", &file_store)] {
+            if let Some(m) = store.meter() {
+                m.reset_peak();
+            }
+            let t0 = Instant::now();
+            let out = run_algorithm_store_with(algo, store, &cfg, CHUNK, backend.as_ref())?;
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let pps = n as f64 / secs;
+            // Mem backing keeps the whole dataset resident by definition.
+            let peak = store.meter().map(|m| m.peak()).unwrap_or(store.total_bytes());
+            t.row(vec![
+                algo.name().to_string(),
+                variant.to_string(),
+                format!("{pps:.0}"),
+                format!("{secs:.3}"),
+                format!("{:.1}", peak as f64 / 1024.0),
+                format!("{:.4}", out.cost.median),
+            ]);
+            bench_util::emit(&format!("e2e.{}.{variant}", algo.name()), pps, "points/s");
+            json.record_e2e(algo.name(), variant, n, k, dim, threads, pps, peak);
+        }
+    }
+    std::fs::remove_file(&path).ok();
+
+    println!("== E14: end-to-end throughput, mem vs file backing (n = {n}, chunk = {CHUNK}) ==");
+    print!("{}", t.render());
+    json.write()?;
+    Ok(())
+}

@@ -156,11 +156,52 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Where the dataset's coordinates live during a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataBacking {
+    /// Fully resident [`crate::geometry::PointSet`] (the default).
+    Mem,
+    /// Out-of-core v2 store file (`crate::geometry::store`): the
+    /// streaming coordinators make one sequential pass per round over
+    /// fixed windows of the backing file and keep only O(chunk) bytes of
+    /// coordinates resident. Bit-identical results to `mem` on the same
+    /// seed and config.
+    File,
+}
+
+/// Dataset storage settings (`[data] path | backing | chunk_points`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StorageConfig {
+    /// Dataset file to load instead of generating synthetically: the v2
+    /// store format (`.mrc`, with header provenance), the legacy resident
+    /// binary, or CSV — distinguished by the file's own magic/extension.
+    pub path: Option<PathBuf>,
+    /// Where coordinates live during the run (`mem` | `file`).
+    pub backing: DataBacking,
+    /// Streaming window size in points for out-of-core passes that are
+    /// not already partitioned by machine (e.g. the final cost sweep).
+    /// Rounded up to the fixed reduction block, so the windowing cannot
+    /// perturb the bit-deterministic block structure.
+    pub chunk_points: usize,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig {
+            path: None,
+            backing: DataBacking::Mem,
+            chunk_points: 64 * 1024,
+        }
+    }
+}
+
 /// Top-level launcher configuration.
 #[derive(Clone, Debug, Default)]
 pub struct AppConfig {
     /// Synthetic-dataset generation settings (`[data]`).
     pub data: DataGenConfig,
+    /// Dataset storage settings (`[data] path | backing | chunk_points`).
+    pub storage: StorageConfig,
     /// Clustering/engine settings (`[cluster]`).
     pub cluster: ClusterConfig,
 }
@@ -208,6 +249,21 @@ impl AppConfig {
             ("data", "alpha") => self.data.alpha = p(value)?,
             ("data", "contamination") => self.data.contamination = p(value)?,
             ("data", "seed") => self.data.seed = p(value)?,
+            ("data", "path") => self.storage.path = Some(PathBuf::from(value)),
+            ("data", "backing") => {
+                self.storage.backing = match value {
+                    "mem" => DataBacking::Mem,
+                    "file" => DataBacking::File,
+                    other => anyhow::bail!("unknown backing {other:?} (expected: mem, file)"),
+                }
+            }
+            ("data", "chunk_points") => {
+                self.storage.chunk_points = p(value)?;
+                anyhow::ensure!(
+                    self.storage.chunk_points > 0,
+                    "chunk_points must be positive"
+                );
+            }
             ("cluster", "k") => self.cluster.k = p(value)?,
             ("cluster", "metric") => {
                 self.cluster.metric = MetricKind::parse(value).with_context(|| {
@@ -392,6 +448,31 @@ mod tests {
         let err = AppConfig::load(None, &[("cluster.prune".into(), "elkan".into())])
             .unwrap_err();
         assert!(format!("{err:#}").contains("unknown prune mode"), "{err:#}");
+    }
+
+    #[test]
+    fn storage_keys_apply_and_default_resident() {
+        let cfg = AppConfig::load(
+            None,
+            &[
+                ("data.path".into(), "pts.mrc".into()),
+                ("data.backing".into(), "file".into()),
+                ("data.chunk_points".into(), "4096".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.storage.path.as_deref(), Some(std::path::Path::new("pts.mrc")));
+        assert_eq!(cfg.storage.backing, DataBacking::File);
+        assert_eq!(cfg.storage.chunk_points, 4096);
+        // Defaults: fully resident, no input file.
+        let d = AppConfig::default();
+        assert_eq!(d.storage.backing, DataBacking::Mem);
+        assert!(d.storage.path.is_none());
+        assert!(d.storage.chunk_points > 0);
+        // Bad values fail loudly.
+        let err = AppConfig::load(None, &[("data.backing".into(), "disk".into())]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown backing"), "{err:#}");
+        assert!(AppConfig::load(None, &[("data.chunk_points".into(), "0".into())]).is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use super::InnerAlgo;
 use crate::algorithms::lloyd::{lloyd, LloydConfig};
 use crate::algorithms::local_search::{local_search, LocalSearchConfig};
 use crate::config::ClusterConfig;
-use crate::geometry::PointSet;
+use crate::geometry::{PointSet, PointStore, StoreBlock};
 use crate::mapreduce::{MemSize, MrCluster, MrError};
 use crate::runtime::{ComputeBackend, NativeBackend};
 
@@ -49,19 +49,36 @@ pub fn mr_divide_kmedian(
     inner: InnerAlgo,
     backend: &dyn ComputeBackend,
 ) -> Result<DivideResult, MrError> {
-    let n = points.len();
+    mr_divide_kmedian_store(cluster, &PointStore::from(points.clone()), cfg, inner, backend)
+}
+
+/// [`mr_divide_kmedian`] over any [`PointStore`] backing. Each block
+/// machine loads its partition inside the map closure (a zero-copy view
+/// for resident stores, a streamed window for file-backed ones), clusters
+/// it, and drops the coordinates; only the ℓ·k weighted centers survive
+/// to the leader. Bit-identical to the resident run on the same config.
+pub fn mr_divide_kmedian_store(
+    cluster: &mut MrCluster,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    inner: InnerAlgo,
+    backend: &dyn ComputeBackend,
+) -> Result<DivideResult, MrError> {
+    let n = store.len();
     // ℓ = sqrt(n/k) minimizes the max machine memory (§4.1).
     let ell = ((n as f64 / cfg.k as f64).sqrt().ceil() as usize).clamp(1, n.max(1));
-    let parts = points.chunks(ell);
+    let blocks = store.blocks(ell);
 
     // ---- Steps 3–7: cluster every block independently ----
     let k = cfg.k;
     let metric = cfg.metric;
     let msgs: Vec<BlockMsg> = cluster.run_machine_round(
         "divide: cluster blocks",
-        &parts,
+        &blocks,
         0,
-        move |m, part: &PointSet| {
+        move |m, block: &StoreBlock| {
+            let loaded = block.load();
+            let part = loaded.points();
             // Step 6: w(y) = |{x in S^i : x^{C_i} = y}| + 1. (Lloyd centers
             // are means, not input points; the weights are still the
             // represented-point counts.) Lloyd's final cost pass already
@@ -113,7 +130,7 @@ pub fn mr_divide_kmedian(
     )?;
 
     // ---- Steps 8–10: weighted A on the union of block centers ----
-    let mut all = PointSet::with_capacity(points.dim(), msgs.len() * cfg.k);
+    let mut all = PointSet::with_capacity(store.dim(), msgs.len() * cfg.k);
     let mut weights = Vec::with_capacity(msgs.len() * cfg.k);
     let mut gathered = 0usize;
     for m in &msgs {

@@ -1,16 +1,16 @@
 //! Algorithm registry and the single entry point the CLI / examples /
 //! benches use.
 
-use super::divide::mr_divide_kmedian;
-use super::kcenter::mr_kcenter;
+use super::divide::{mr_divide_kmedian, mr_divide_kmedian_store};
+use super::kcenter::{mr_kcenter, mr_kcenter_store};
 use super::kmedian::mr_kmedian;
 use super::parallel_lloyd::parallel_lloyd;
 use super::InnerAlgo;
 use crate::algorithms::local_search::{local_search, LocalSearchConfig};
 use crate::config::{ClusterConfig, RuntimeBackendKind};
-use crate::geometry::PointSet;
+use crate::geometry::{PointSet, PointStore};
 use crate::mapreduce::{MrCluster, MrConfig, RunStats};
-use crate::metrics::cost::{eval_costs_metric, CostSummary};
+use crate::metrics::cost::{eval_costs_metric, eval_costs_store, CostSummary};
 use crate::runtime::{ComputeBackend, FastNativeBackend, NativeBackend};
 use anyhow::Result;
 use std::sync::Arc;
@@ -320,6 +320,95 @@ pub fn run_algorithm_with(
     })
 }
 
+/// Run `algorithm` over any [`PointStore`] backing.
+///
+/// For a resident store this is exactly [`run_algorithm`]. For a
+/// file-backed store the streaming coordinators — MapReduce-kCenter,
+/// Robust-kCenter, Coreset-kMedian, Divide-Lloyd / Divide-LocalSearch —
+/// make one sequential pass per round over the backing file, the final
+/// cost sweep streams `chunk_points`-sized windows, and the result is
+/// bit-identical to the resident run on the same seed and config.
+/// Algorithms that fundamentally hold the whole input on one machine
+/// (LocalSearch, Streaming-Guha) or rebroadcast the input every iteration
+/// (Parallel-Lloyd, the Sampling k-median weight round) fail with a clear
+/// error under file backing instead of silently loading everything.
+pub fn run_algorithm_store(
+    algorithm: Algorithm,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    chunk_points: usize,
+) -> Result<Outcome> {
+    let backend = make_backend(cfg);
+    run_algorithm_store_with(algorithm, store, cfg, chunk_points, backend.as_ref())
+}
+
+/// Like [`run_algorithm_store`] but with an explicit backend.
+pub fn run_algorithm_store_with(
+    algorithm: Algorithm,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    chunk_points: usize,
+    backend: &dyn ComputeBackend,
+) -> Result<Outcome> {
+    if let PointStore::Mem(points) = store {
+        return run_algorithm_with(algorithm, points, cfg, backend);
+    }
+    let t0 = Instant::now();
+    let mut cluster = MrCluster::new(mr_config(cfg));
+
+    let (centers, reduced_size) = match algorithm {
+        Algorithm::MrKCenter => {
+            let r = mr_kcenter_store(&mut cluster, store, cfg, backend)?;
+            (r.centers, Some(r.sample_size))
+        }
+        Algorithm::RobustKCenter => {
+            let r = super::robust::mr_kcenter_outliers_store(&mut cluster, store, cfg, backend)?;
+            (r.centers, Some(r.summary_size))
+        }
+        Algorithm::CoresetKMedian => {
+            let r = super::robust::mr_coreset_kmedian_store(&mut cluster, store, cfg, backend)?;
+            (r.centers, Some(r.summary_size))
+        }
+        Algorithm::DivideLloyd => {
+            let r =
+                mr_divide_kmedian_store(&mut cluster, store, cfg, InnerAlgo::Lloyd, backend)?;
+            (r.centers, Some(r.collapsed_size))
+        }
+        Algorithm::DivideLocalSearch => {
+            let r = mr_divide_kmedian_store(
+                &mut cluster,
+                store,
+                cfg,
+                InnerAlgo::LocalSearch,
+                backend,
+            )?;
+            (r.centers, Some(r.collapsed_size))
+        }
+        other => anyhow::bail!(
+            "{} has no out-of-core path (it holds the full input on one machine or \
+             rebroadcasts it every round); rerun with data.backing = mem",
+            other.name()
+        ),
+    };
+
+    let wall_time = t0.elapsed();
+    // Host-side exact evaluation, streamed over the backing file in
+    // windows of `chunk_points` (rounded to the fixed reduction block, so
+    // the result is bit-identical to the resident evaluation).
+    let cost = eval_costs_store(store, &centers, cfg.metric, cfg.threads, chunk_points);
+    Ok(Outcome {
+        algorithm,
+        cost_median: cost.median,
+        cost,
+        centers,
+        sim_time: cluster.stats.sim_time(),
+        wall_time,
+        rounds: cluster.stats.n_rounds(),
+        reduced_size,
+        stats: cluster.stats,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,5 +478,66 @@ mod tests {
         let out = run_algorithm(Algorithm::SamplingLloyd, &points, &cfg).unwrap();
         let rs = out.reduced_size.unwrap();
         assert!(rs > 0 && rs < points.len());
+    }
+
+    #[test]
+    fn file_backed_outcome_matches_resident() {
+        let gen = DataGenConfig {
+            n: 6000,
+            k: 6,
+            sigma: 0.05,
+            seed: 44,
+            ..Default::default()
+        };
+        let data = gen.generate();
+        let dir = std::env::temp_dir().join("mrcluster_driver_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = PointStore::from(gen.generate_stream(&dir.join("drv.mrc")).unwrap());
+        let cfg = ClusterConfig {
+            k: 6,
+            epsilon: 0.2,
+            machines: 8,
+            seed: 44,
+            ..Default::default()
+        };
+        for algo in [Algorithm::MrKCenter, Algorithm::CoresetKMedian, Algorithm::DivideLloyd] {
+            let mem = run_algorithm(algo, &data.points, &cfg).unwrap();
+            let ooc = run_algorithm_store(algo, &store, &cfg, 64 * 1024).unwrap();
+            assert_eq!(mem.centers, ooc.centers, "{}", algo.name());
+            assert_eq!(mem.rounds, ooc.rounds, "{}", algo.name());
+            assert_eq!(
+                mem.cost.median.to_bits(),
+                ooc.cost.median.to_bits(),
+                "{}",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn non_streaming_algorithms_refuse_file_backing() {
+        let gen = DataGenConfig {
+            n: 500,
+            k: 3,
+            seed: 45,
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir().join("mrcluster_driver_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = PointStore::from(gen.generate_stream(&dir.join("refuse.mrc")).unwrap());
+        let cfg = ClusterConfig {
+            k: 3,
+            machines: 4,
+            seed: 45,
+            ..Default::default()
+        };
+        let err = run_algorithm_store(Algorithm::ParallelLloyd, &store, &cfg, 4096).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("no out-of-core path"),
+            "{err:#}"
+        );
+        // A resident store runs everything, streaming or not.
+        let mem_store = PointStore::from(gen.generate().points);
+        assert!(run_algorithm_store(Algorithm::ParallelLloyd, &mem_store, &cfg, 4096).is_ok());
     }
 }

@@ -6,10 +6,10 @@
 //! objective is sensitive to sampling (a missed outlier directly shows up
 //! in the max), which experiment E3 (`kcenter-compare`) reproduces.
 
-use super::mr_iterative_sample::mr_iterative_sample;
+use super::mr_iterative_sample::{mr_iterative_sample, mr_iterative_sample_store, MrSampleResult};
 use crate::algorithms::gonzalez::gonzalez_metric;
 use crate::config::ClusterConfig;
-use crate::geometry::PointSet;
+use crate::geometry::{PointSet, PointStore};
 use crate::mapreduce::{MrCluster, MrError};
 use crate::runtime::ComputeBackend;
 use crate::util::rng::Rng;
@@ -33,10 +33,33 @@ pub fn mr_kcenter(
     backend: &dyn ComputeBackend,
 ) -> Result<MrKCenterResult, MrError> {
     let sres = mr_iterative_sample(cluster, points, cfg, backend)?;
-    let sample = sres.sample;
+    finish_on_sample(cluster, cfg, sres)
+}
 
-    // Algorithm 4 maps C (and conceptually its pairwise distances —
-    // O(|C|² log n) bits, the memory bound of Theorem 1.1) to one reducer.
+/// [`mr_kcenter`] over any [`PointStore`] backing: the sampling rounds
+/// stream each machine's window of the backing file
+/// ([`mr_iterative_sample_store`]); the final leader round is unchanged,
+/// since it only ever sees the sample. Bit-identical to the resident run
+/// on the same seed and config.
+pub fn mr_kcenter_store(
+    cluster: &mut MrCluster,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<MrKCenterResult, MrError> {
+    let sres = mr_iterative_sample_store(cluster, store, cfg, backend)?;
+    finish_on_sample(cluster, cfg, sres)
+}
+
+/// The shared final round: Algorithm 4 maps C (and conceptually its
+/// pairwise distances — O(|C|² log n) bits, the memory bound of Theorem
+/// 1.1) to one reducer running Gonzalez.
+fn finish_on_sample(
+    cluster: &mut MrCluster,
+    cfg: &ClusterConfig,
+    sres: MrSampleResult,
+) -> Result<MrKCenterResult, MrError> {
+    let sample = sres.sample;
     let leader_mem = sample.mem_bytes() + sample.len() * sample.len() * 4;
     let k = cfg.k;
     let seed = cfg.seed;

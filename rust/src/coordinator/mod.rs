@@ -26,7 +26,10 @@ pub mod mr_iterative_sample;
 pub mod parallel_lloyd;
 pub mod robust;
 
-pub use driver::{run_algorithm, run_algorithm_with, Algorithm, Outcome};
+pub use driver::{
+    run_algorithm, run_algorithm_store, run_algorithm_store_with, run_algorithm_with, Algorithm,
+    Outcome,
+};
 
 use crate::mapreduce::MemSize;
 use crate::runtime::LloydStepOut;

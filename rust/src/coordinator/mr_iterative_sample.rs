@@ -17,7 +17,7 @@
 //! the "data stays on the machines" structure the paper assumes.
 
 use crate::config::ClusterConfig;
-use crate::geometry::PointSet;
+use crate::geometry::{PointSet, PointStore};
 use crate::mapreduce::{MemSize, MrCluster, MrError};
 use crate::runtime::ComputeBackend;
 use crate::sampling::select::select_pivot;
@@ -276,6 +276,276 @@ pub fn mr_iterative_sample(
     })
 }
 
+/// Resident per-machine state for the out-of-core sampling loop.
+///
+/// Mirrors [`MachinePart`], but the block's coordinates stay in the
+/// backing store until the first prune shrinks the block: `idx`, the
+/// maintained `dist` array, and the machine RNG persist across
+/// iterations, while each round streams the machine's window back in and
+/// drops it on completion. After a prune the (much smaller) survivor set
+/// is materialized resident, so later iterations touch the file no more.
+/// The `MRC^0` charge is identical to [`MachinePart`]'s — the simulated
+/// machine holds its block whether the host streamed it or not.
+#[derive(Clone)]
+struct StorePart {
+    store: PointStore,
+    /// First store row of this machine's block (valid while `pts` is
+    /// `None`, i.e. before the first prune, when `idx` is contiguous).
+    lo: usize,
+    /// Global indices of the still-remaining points on this machine.
+    idx: Vec<usize>,
+    /// Resident survivor coordinates after the first prune; `None` while
+    /// the block still lives only in the backing store.
+    pts: Option<PointSet>,
+    /// Current distance to the accumulated sample S (same order as `idx`).
+    dist: Vec<f32>,
+    rng: Rng,
+}
+
+impl MemSize for StorePart {
+    fn mem_bytes(&self) -> usize {
+        // Byte-identical to MachinePart: idx + coordinates + dist, with
+        // the coordinate charge counted from the logical block length
+        // even while the bytes live only in the backing file.
+        self.idx.len() * std::mem::size_of::<usize>()
+            + self.idx.len() * self.store.dim() * 4
+            + self.dist.len() * 4
+    }
+}
+
+/// [`mr_iterative_sample`] over any [`PointStore`] backing (Algorithm 3,
+/// out-of-core).
+///
+/// Each while-loop round makes one sequential pass over the machine's
+/// window of the backing file and drops it afterwards; only the global
+/// indices, the d(x, S) array, the machine RNGs, and (after the first
+/// prune) the shrunken survivor coordinates stay resident. Round labels,
+/// memory charges, RNG forks, and every arithmetic operation mirror the
+/// resident implementation, so the two runs are bit-identical on the same
+/// seed and config — property-tested in `tests/prop_ooc.rs`.
+pub fn mr_iterative_sample_store(
+    cluster: &mut MrCluster,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<MrSampleResult, MrError> {
+    let n = store.len();
+    let dim = store.dim();
+    let metric = cfg.metric;
+    let scfg = IterativeSampleConfig {
+        k: cfg.k,
+        epsilon: cfg.epsilon,
+        constants: cfg.profile.constants(),
+        metric,
+        seed: cfg.seed,
+        max_iters: 200,
+    };
+    let threshold = scfg.constants.threshold(n, cfg.k, cfg.epsilon).max(1);
+    let mut root_rng = Rng::new(cfg.seed ^ 0x5eed_5a11_3d5a_11ce);
+
+    // Initial partition: the same contiguous blocks as the resident
+    // implementation (both sides derive them from `chunk_spans`), but
+    // only descriptors — no coordinates are loaded yet.
+    let n_parts = cfg.machines.min(n).max(1);
+    let mut parts: Vec<StorePart> = store
+        .blocks(n_parts)
+        .into_iter()
+        .enumerate()
+        .map(|(m, b)| StorePart {
+            idx: (b.lo..b.hi).collect(),
+            dist: vec![f32::INFINITY; b.hi - b.lo],
+            lo: b.lo,
+            pts: None,
+            rng: root_rng.fork(m as u64),
+            store: store.clone(),
+        })
+        .collect();
+
+    let mut sample_indices: Vec<usize> = Vec::new();
+    let mut sample_pts = PointSet::with_capacity(dim, 1024);
+    let mut iterations = 0usize;
+
+    loop {
+        let remaining: usize = parts.iter().map(|p| p.idx.len()).sum();
+        if remaining <= threshold || iterations >= scfg.max_iters {
+            break;
+        }
+        iterations += 1;
+
+        let ps = scfg.constants.p_sample(n, cfg.k, cfg.epsilon, remaining);
+        let ph = scfg.constants.p_witness(n, cfg.epsilon, remaining);
+
+        // ---- Round 1: local Bernoulli sampling, one streamed pass ----
+        let msgs: Vec<SampleMsg> = cluster.run_machine_round_mut(
+            &format!("iterative-sample iter {iterations}: sample"),
+            &mut parts,
+            0,
+            move |_m, part: &mut StorePart| {
+                let resident;
+                let view: &PointSet = match &part.pts {
+                    Some(p) => p,
+                    None => {
+                        resident = part.store.load(part.lo, part.lo + part.idx.len());
+                        resident.points()
+                    }
+                };
+                let mut batch_idx = Vec::new();
+                let mut batch_pts = PointSet::with_capacity(dim, 8);
+                let mut witness_dist = Vec::new();
+                for pos in 0..part.idx.len() {
+                    if part.rng.bernoulli(ps) {
+                        batch_idx.push(part.idx[pos]);
+                        batch_pts.push(view.row(pos));
+                    }
+                    if part.rng.bernoulli(ph) {
+                        witness_dist.push(part.dist[pos]);
+                    }
+                }
+                SampleMsg {
+                    batch_idx,
+                    batch_pts,
+                    witness_dist,
+                }
+            },
+        )?;
+
+        // ---- Leader: assemble batch, update witness dists, pick pivot ----
+        let mut batch_idx = Vec::new();
+        let mut batch_pts = PointSet::with_capacity(dim, 64);
+        let mut h_dists = Vec::new();
+        let mut msg_bytes = 0usize;
+        for m in &msgs {
+            msg_bytes += m.mem_bytes();
+            batch_idx.extend_from_slice(&m.batch_idx);
+            batch_pts.extend(&m.batch_pts);
+            h_dists.extend_from_slice(&m.witness_dist);
+        }
+        if batch_idx.is_empty() {
+            // Probabilities underflowed (tiny R); promote one arbitrary
+            // remaining point so the loop always progresses.
+            if let Some(part) = parts.iter_mut().find(|p| !p.idx.is_empty()) {
+                batch_idx.push(part.idx[0]);
+                match &part.pts {
+                    Some(p) => batch_pts.push(p.row(0)),
+                    None => {
+                        let one = part.store.load(part.lo, part.lo + 1);
+                        batch_pts.push(one.points().row(0));
+                    }
+                }
+            } else {
+                break;
+            }
+        }
+        let rank = scfg.constants.pivot_rank(n);
+        let pivot = cluster.run_leader_round(
+            &format!("iterative-sample iter {iterations}: select"),
+            msg_bytes,
+            || select_pivot(&h_dists, rank),
+        )?;
+
+        sample_indices.extend_from_slice(&batch_idx);
+        sample_pts.extend(&batch_pts);
+
+        // ---- Round 2: broadcast (batch, pivot); update + prune ----
+        let bcast = batch_pts.mem_bytes() + 4;
+        let batch_set: std::collections::HashSet<usize> =
+            batch_idx.iter().copied().collect();
+        let batch_ref = &batch_pts;
+        let batch_set_ref = &batch_set;
+        cluster.run_machine_round_mut(
+            &format!("iterative-sample iter {iterations}: prune"),
+            &mut parts,
+            bcast,
+            move |_m, part: &mut StorePart| {
+                if part.idx.is_empty() {
+                    return 0usize;
+                }
+                let streamed = part.pts.is_none();
+                let resident;
+                let view: &PointSet = match &part.pts {
+                    Some(p) => p,
+                    None => {
+                        resident = part.store.load(part.lo, part.lo + part.idx.len());
+                        resident.points()
+                    }
+                };
+                let nd = backend.min_dist_metric(view, batch_ref, metric);
+                for (pos, v) in nd.iter().enumerate() {
+                    if *v < part.dist[pos] {
+                        part.dist[pos] = *v;
+                    }
+                }
+                let keep: Vec<usize> = (0..part.idx.len())
+                    .filter(|&pos| {
+                        let gi = part.idx[pos];
+                        !batch_set_ref.contains(&gi)
+                            && match pivot {
+                                Some(pv) => part.dist[pos] >= pv,
+                                None => true,
+                            }
+                    })
+                    .collect();
+                let dropped = part.idx.len() - keep.len();
+                let survivors = if streamed {
+                    // Deep-copy the survivors so the streamed window's
+                    // buffer really frees — a zero-copy gather view would
+                    // pin the whole window behind the meter's back.
+                    let mut owned = PointSet::with_capacity(dim, keep.len());
+                    for &pos in &keep {
+                        owned.push(view.row(pos));
+                    }
+                    owned
+                } else {
+                    view.gather(&keep)
+                };
+                part.pts = Some(survivors);
+                part.dist = keep.iter().map(|&pos| part.dist[pos]).collect();
+                part.idx = keep.iter().map(|&pos| part.idx[pos]).collect();
+                dropped
+            },
+        )?;
+    }
+
+    // ---- Final gather: C = S ∪ R ----
+    let rem_msgs: Vec<SampleMsg> = cluster.run_machine_round(
+        "iterative-sample: gather remainder",
+        &parts,
+        0,
+        |_m, part: &StorePart| {
+            let batch_pts = match &part.pts {
+                Some(p) => p.clone(),
+                // Loop never ran (n at or under the threshold): the
+                // remainder is the machine's whole untouched block.
+                None => part.store.load(part.lo, part.lo + part.idx.len()).points().clone(),
+            };
+            SampleMsg {
+                batch_idx: part.idx.clone(),
+                batch_pts,
+                witness_dist: Vec::new(),
+            }
+        },
+    )?;
+    let mut indices = sample_indices;
+    let mut sample = sample_pts;
+    for m in rem_msgs {
+        indices.extend_from_slice(&m.batch_idx);
+        sample.extend(&m.batch_pts);
+    }
+    // Defensive de-dup (keeps first occurrence, preserves order).
+    let mut seen = std::collections::HashSet::new();
+    let keep: Vec<usize> = (0..indices.len()).filter(|&i| seen.insert(indices[i])).collect();
+    if keep.len() != indices.len() {
+        sample = sample.gather(&keep);
+        indices = keep.iter().map(|&i| indices[i]).collect();
+    }
+
+    Ok(MrSampleResult {
+        sample,
+        indices,
+        iterations,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -373,5 +643,40 @@ mod tests {
         let (res, _) = run(5000, 1, 5);
         assert!(res.sample.len() >= 10);
         assert!(res.sample.len() < 5000);
+    }
+
+    #[test]
+    fn store_run_matches_resident_bit_for_bit() {
+        let gen = DataGenConfig {
+            n: 8000,
+            k: 6,
+            seed: 6,
+            ..Default::default()
+        };
+        let data = gen.generate();
+        let dir = std::env::temp_dir().join("mrcluster_itersample_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = PointStore::from(gen.generate_stream(&dir.join("iter.mrc")).unwrap());
+        let cfg = ClusterConfig {
+            k: 6,
+            epsilon: 0.2,
+            machines: 8,
+            seed: 6,
+            ..Default::default()
+        };
+        let mut c_mem = MrCluster::new(MrConfig {
+            n_machines: 8,
+            ..Default::default()
+        });
+        let mut c_ooc = MrCluster::new(MrConfig {
+            n_machines: 8,
+            ..Default::default()
+        });
+        let mem = mr_iterative_sample(&mut c_mem, &data.points, &cfg, &NativeBackend).unwrap();
+        let ooc = mr_iterative_sample_store(&mut c_ooc, &store, &cfg, &NativeBackend).unwrap();
+        assert_eq!(mem.indices, ooc.indices, "sampled indices diverged");
+        assert_eq!(mem.sample, ooc.sample, "sampled coordinates diverged");
+        assert_eq!(mem.iterations, ooc.iterations);
+        assert_eq!(c_mem.stats.n_rounds(), c_ooc.stats.n_rounds(), "ledger diverged");
     }
 }

@@ -30,7 +30,7 @@
 use crate::algorithms::local_search::{local_search_weighted, LocalSearchConfig};
 use crate::algorithms::outliers::kcenter_with_outliers_metric;
 use crate::config::ClusterConfig;
-use crate::geometry::PointSet;
+use crate::geometry::{PointSet, PointStore, StoreBlock};
 use crate::mapreduce::{MrCluster, MrError};
 use crate::runtime::ComputeBackend;
 use crate::summaries::{Coreset, CoverageSummary, WeightedSet};
@@ -86,30 +86,38 @@ fn summary_shape(machines: usize, n: usize, k: usize, tau_request: usize) -> (us
     (n_parts, tau)
 }
 
-/// Rounds 1–2 shared by both pipelines: summarize every resident block to
-/// (up to) `tau` weighted representatives, then merge the per-machine
-/// summaries in a reduce step. Returns the fully composed summary.
+/// Rounds 1–2 shared by both pipelines: summarize every block to (up to)
+/// `tau` weighted representatives, then merge the per-machine summaries
+/// in a reduce step. Returns the fully composed summary.
+///
+/// The summarize round runs over [`StoreBlock`] descriptors: each machine
+/// loads its block inside the map closure — an O(1) zero-copy view for a
+/// resident store, a streamed window for a file-backed one — summarizes
+/// it, and drops the coordinates. Block boundaries, memory charges, and
+/// RNG seeds are identical for both backings, so the two runs are
+/// bit-identical by construction.
 fn summarize_and_compose(
     cluster: &mut MrCluster,
-    points: &PointSet,
+    store: &PointStore,
     cfg: &ClusterConfig,
     backend: &dyn ComputeBackend,
     label: &str,
     tau: usize,
 ) -> Result<CoverageSummary, MrError> {
-    let (n_parts, tau) = summary_shape(cfg.machines, points.len(), cfg.k, tau);
-    let parts = points.chunks(n_parts);
+    let (n_parts, tau) = summary_shape(cfg.machines, store.len(), cfg.k, tau);
+    let blocks = store.blocks(n_parts);
 
-    // ---- Round 1: per-machine coverage summaries (resident blocks) ----
+    // ---- Round 1: per-machine coverage summaries over blocks ----
     let seed = cfg.seed;
     let metric = cfg.metric;
     let summaries: Vec<CoverageSummary> = cluster.run_machine_round(
         &format!("{label}: summarize blocks"),
-        &parts,
+        &blocks,
         0,
-        move |m, part: &PointSet| {
+        move |m, block: &StoreBlock| {
+            let part = block.load();
             CoverageSummary::build_metric(
-                part,
+                part.points(),
                 tau.min(part.len()).max(1),
                 seed ^ (m as u64),
                 backend,
@@ -144,7 +152,7 @@ fn summarize_and_compose(
         .map(|(_, s)| s)
         .reduce(Coreset::compose)
         .unwrap_or_else(|| {
-            CoverageSummary::from_weighted(WeightedSet::with_capacity(points.dim(), 0), 0.0)
+            CoverageSummary::from_weighted(WeightedSet::with_capacity(store.dim(), 0), 0.0)
         }))
 }
 
@@ -160,8 +168,21 @@ pub fn mr_kcenter_outliers(
     cfg: &ClusterConfig,
     backend: &dyn ComputeBackend,
 ) -> Result<RobustKCenterResult, MrError> {
+    mr_kcenter_outliers_store(cluster, &PointStore::from(points.clone()), cfg, backend)
+}
+
+/// [`mr_kcenter_outliers`] over any [`PointStore`] backing. With a
+/// file-backed store each summarize machine streams only its own block
+/// into memory; the result is bit-identical to the resident run on the
+/// same seed and config.
+pub fn mr_kcenter_outliers_store(
+    cluster: &mut MrCluster,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<RobustKCenterResult, MrError> {
     let tau = (cfg.k + cfg.z).max(1);
-    let merged = summarize_and_compose(cluster, points, cfg, backend, "robust-kcenter", tau)?;
+    let merged = summarize_and_compose(cluster, store, cfg, backend, "robust-kcenter", tau)?;
 
     // ---- Round 3: weighted outlier-robust A on one machine. The leader
     // holds the summary plus the greedy's cached distance matrix (the
@@ -203,8 +224,21 @@ pub fn mr_coreset_kmedian(
     cfg: &ClusterConfig,
     backend: &dyn ComputeBackend,
 ) -> Result<CoresetKMedianResult, MrError> {
+    mr_coreset_kmedian_store(cluster, &PointStore::from(points.clone()), cfg, backend)
+}
+
+/// [`mr_coreset_kmedian`] over any [`PointStore`] backing. With a
+/// file-backed store each summarize machine streams only its own block
+/// into memory; the result is bit-identical to the resident run on the
+/// same seed and config.
+pub fn mr_coreset_kmedian_store(
+    cluster: &mut MrCluster,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<CoresetKMedianResult, MrError> {
     let tau = (4 * cfg.k + cfg.z).max(1);
-    let merged = summarize_and_compose(cluster, points, cfg, backend, "coreset-kmedian", tau)?;
+    let merged = summarize_and_compose(cluster, store, cfg, backend, "coreset-kmedian", tau)?;
     let summary_size = merged.len();
 
     // Trim up to z suspected outliers (lightest entries; ties resolve by
@@ -414,6 +448,38 @@ mod tests {
             res.summary_size
         );
         assert_eq!(res.centers.len(), 1);
+    }
+
+    #[test]
+    fn file_backed_run_is_bit_identical_to_resident() {
+        let gen = DataGenConfig {
+            n: 1500,
+            k: 4,
+            sigma: 0.05,
+            contamination: 0.02,
+            seed: 57,
+            ..Default::default()
+        };
+        let data = gen.generate();
+        let z = data.n_outliers();
+        let dir = std::env::temp_dir().join("mrcluster_robust_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = PointStore::from(gen.generate_stream(&dir.join("robust_ooc.mrc")).unwrap());
+        let cfg = ClusterConfig {
+            k: 4,
+            machines: 6,
+            z,
+            seed: 57,
+            ..Default::default()
+        };
+        let mem = mr_kcenter_outliers(&mut cluster(6), &data.points, &cfg, &NativeBackend).unwrap();
+        let ooc = mr_kcenter_outliers_store(&mut cluster(6), &store, &cfg, &NativeBackend).unwrap();
+        assert_eq!(mem.centers, ooc.centers, "file-backed centers diverged");
+        assert_eq!(mem.summary_size, ooc.summary_size);
+        assert_eq!(mem.dropped_weight.to_bits(), ooc.dropped_weight.to_bits());
+        let meter = store.meter().expect("file store is metered");
+        assert_eq!(meter.current(), 0, "every resident window must be dropped");
+        assert!(meter.peak() > 0, "the run must have streamed something");
     }
 
     #[test]

@@ -15,8 +15,10 @@
 //! The planted centers and per-point cluster labels are kept so experiments
 //! can report "ground-truth" costs alongside algorithm costs.
 
+use crate::geometry::store::{FileStore, StoreWriter};
 use crate::geometry::PointSet;
 use crate::util::rng::{Rng, Zipf};
+use std::path::Path;
 
 /// Configuration for [`DataGenConfig::generate`].
 #[derive(Clone, Debug)]
@@ -78,9 +80,19 @@ pub struct Dataset {
 }
 
 impl DataGenConfig {
-    /// Generate the dataset this configuration describes (deterministic in
-    /// the seed).
-    pub fn generate(&self) -> Dataset {
+    /// The single RNG-draw core shared by [`DataGenConfig::generate`] and
+    /// [`DataGenConfig::generate_stream`]: draws the planted centers, then
+    /// streams each point `(row, label)` to `emit` in seed-determined
+    /// order. One code path means the two writers cannot drift — a
+    /// streamed file is bit-identical to the in-memory points by
+    /// construction (and property-tested in the module tests).
+    ///
+    /// The per-point draws do not depend on `n`, so a longer run is
+    /// prefix-identical to a shorter one with the same seed.
+    fn run_core<E>(&self, mut emit: E) -> anyhow::Result<PointSet>
+    where
+        E: FnMut(&[f32], u32) -> anyhow::Result<()>,
+    {
         assert!(self.k >= 1, "need at least one cluster");
         assert!(self.n >= 1, "need at least one point");
         assert!(
@@ -101,28 +113,39 @@ impl DataGenConfig {
 
         // Cluster sizes: Zipf-weighted categorical per point.
         let zipf = Zipf::new(self.k, self.alpha);
-        let mut points = PointSet::with_capacity(self.dim, self.n);
-        let mut labels = Vec::with_capacity(self.n);
         let box_width = 1.0 + 2.0 * OUTLIER_SPREAD;
         for _ in 0..self.n {
             // Short-circuit keeps the clean (contamination = 0) RNG stream
             // identical to the paper-faithful generator.
             if self.contamination > 0.0 && rng.bernoulli(self.contamination) {
-                labels.push(OUTLIER_LABEL);
                 for r in row.iter_mut() {
                     *r = rng.f32() * box_width - OUTLIER_SPREAD;
                 }
-                points.push(&row);
+                emit(&row, OUTLIER_LABEL)?;
                 continue;
             }
             let c = zipf.sample(&mut rng);
-            labels.push(c as u32);
             let center = centers.row(c);
             for (j, r) in row.iter_mut().enumerate() {
                 *r = center[j] + (self.sigma * rng.normal()) as f32;
             }
-            points.push(&row);
+            emit(&row, c as u32)?;
         }
+        Ok(centers)
+    }
+
+    /// Generate the dataset this configuration describes (deterministic in
+    /// the seed).
+    pub fn generate(&self) -> Dataset {
+        let mut points = PointSet::with_capacity(self.dim, self.n);
+        let mut labels = Vec::with_capacity(self.n);
+        let centers = self
+            .run_core(|row, label| {
+                labels.push(label);
+                points.push(row);
+                Ok(())
+            })
+            .expect("in-memory emit cannot fail");
 
         Dataset {
             points,
@@ -130,6 +153,20 @@ impl DataGenConfig {
             labels,
             config: self.clone(),
         }
+    }
+
+    /// Generate straight to a v2 dataset-store file (`geometry/store.rs`)
+    /// without ever materializing the point set: O(1) memory at any `n`,
+    /// so datasets far beyond RAM can be produced. Same seed ⇒ the file
+    /// payload is bit-identical to [`DataGenConfig::generate`]'s points
+    /// (and a larger `n` is prefix-identical to a smaller one). The
+    /// header records `self.seed` as provenance. Labels and planted
+    /// centers are not stored — re-derive them by re-running the
+    /// generator at the recorded seed.
+    pub fn generate_stream(&self, path: &Path) -> anyhow::Result<FileStore> {
+        let mut w = StoreWriter::create(path, self.dim, self.n, self.seed)?;
+        self.run_core(|row, _label| w.push_row(row))?;
+        w.finish()
     }
 }
 
@@ -295,6 +332,48 @@ mod tests {
         };
         assert_eq!(clean.generate().points, explicit.generate().points);
         assert_eq!(clean.generate().n_outliers(), 0);
+    }
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mrcluster_generator_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn stream_matches_in_memory_bit_for_bit() {
+        // Contamination > 0 exercises both emit arms of the shared core.
+        let cfg = DataGenConfig {
+            n: 2000,
+            k: 7,
+            contamination: 0.05,
+            alpha: 0.8,
+            seed: 23,
+            ..Default::default()
+        };
+        let fs = cfg.generate_stream(&tmpfile("stream.mrc")).unwrap();
+        assert_eq!(fs.len(), 2000);
+        assert_eq!(fs.header().seed, 23, "header must carry provenance");
+        let back = fs.read_rows(0, fs.len()).unwrap();
+        assert_eq!(back, cfg.generate().points, "streamed file must be bit-identical");
+    }
+
+    #[test]
+    fn stream_is_prefix_identical_across_n() {
+        let long = DataGenConfig {
+            n: 1500,
+            k: 9,
+            seed: 5,
+            ..Default::default()
+        };
+        let short = DataGenConfig { n: 400, ..long.clone() };
+        let fs = long.generate_stream(&tmpfile("prefix.mrc")).unwrap();
+        let prefix = fs.read_rows(0, 400).unwrap();
+        assert_eq!(
+            prefix,
+            short.generate().points,
+            "per-point draws must not depend on n"
+        );
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Dataset I/O: CSV (human-readable, small data) and a raw little-endian
-//! f32 binary format (fast cache for the multi-million-point Figure 2 runs).
+//! f32 binary format (fast cache for the multi-million-point Figure 2
+//! runs). Both load fully resident; the out-of-core v2 store format with
+//! a provenance header lives in `geometry/store.rs`.
 
 use crate::geometry::PointSet;
 use anyhow::{Context, Result};
@@ -8,39 +10,52 @@ use std::path::Path;
 
 /// Load a headerless CSV of floats; every row must have the same width.
 /// Lines starting with `#` and blank lines are skipped.
+///
+/// The parse is buffered and line-at-a-time: values append straight into
+/// one flat coordinate buffer (no per-row allocation), pre-sized from the
+/// file length and the first data line. A ragged row fails with the file
+/// and 1-based line number.
 pub fn load_csv(path: &Path) -> Result<PointSet> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
+    let file_bytes = f.metadata().map(|m| m.len() as usize).unwrap_or(0);
     let reader = BufReader::new(f);
     let mut dim: Option<usize> = None;
     let mut coords: Vec<f32> = Vec::new();
     for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
+        let line =
+            line.with_context(|| format!("{}, line {}: read error", path.display(), lineno + 1))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') {
             continue;
         }
-        let row: Vec<f32> = t
-            .split(',')
-            .map(|s| {
-                s.trim()
-                    .parse::<f32>()
-                    .with_context(|| format!("line {}: bad float {s:?}", lineno + 1))
-            })
-            .collect::<Result<_>>()?;
+        let before = coords.len();
+        for s in t.split(',') {
+            coords.push(s.trim().parse::<f32>().with_context(|| {
+                format!("{}, line {}: bad float {s:?}", path.display(), lineno + 1)
+            })?);
+        }
+        let width = coords.len() - before;
         match dim {
-            None => dim = Some(row.len()),
+            None => {
+                dim = Some(width);
+                // Pre-size the output from the file length and the first
+                // data line (line.len() + 1 counts its newline); later rows
+                // are the same width, so this lands within a few percent.
+                let per_line = line.len() + 1;
+                coords.reserve((file_bytes / per_line + 1) * width);
+            }
             Some(d) => anyhow::ensure!(
-                row.len() == d,
-                "line {}: width {} != {}",
+                width == d,
+                "{}, line {}: ragged row — {} values, expected {}",
+                path.display(),
                 lineno + 1,
-                row.len(),
+                width,
                 d
             ),
         }
-        coords.extend_from_slice(&row);
     }
-    let dim = dim.context("empty csv")?;
+    let dim = dim.with_context(|| format!("{}: empty csv", path.display()))?;
     Ok(PointSet::from_flat(dim, coords))
 }
 
@@ -80,20 +95,61 @@ pub fn save_f32_bin(path: &Path, ps: &PointSet) -> Result<()> {
 }
 
 /// Read the binary format written by [`save_f32_bin`].
+///
+/// The header is validated before any payload is trusted: magic prefix,
+/// format version (the trailing magic byte), a positive plausible `dim`,
+/// and the exact file length the declared `(n, dim)` implies — so a
+/// truncated download or a file whose payload disagrees with its header
+/// fails with a precise message instead of a short-read panic or silent
+/// garbage.
 pub fn load_f32_bin(path: &Path) -> Result<PointSet> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
+    let total = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == BIN_MAGIC, "bad magic: not a mrcluster points file");
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{}: reading magic", path.display()))?;
+    anyhow::ensure!(
+        magic[..7] == BIN_MAGIC[..7],
+        "{}: bad magic {:?} — not a mrcluster points file",
+        path.display(),
+        String::from_utf8_lossy(&magic),
+    );
+    anyhow::ensure!(
+        magic[7] == BIN_MAGIC[7],
+        "{}: unsupported points-format version {:?} (this build reads version {})",
+        path.display(),
+        magic[7] as char,
+        BIN_MAGIC[7] as char,
+    );
     let mut b4 = [0u8; 4];
-    r.read_exact(&mut b4)?;
+    r.read_exact(&mut b4)
+        .with_context(|| format!("{}: reading dim", path.display()))?;
     let dim = u32::from_le_bytes(b4) as usize;
     let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let n = u64::from_le_bytes(b8) as usize;
-    anyhow::ensure!(dim > 0 && dim < 1 << 16, "implausible dim {dim}");
+    r.read_exact(&mut b8)
+        .with_context(|| format!("{}: reading n", path.display()))?;
+    let n = u64::from_le_bytes(b8);
+    anyhow::ensure!(dim > 0, "{}: header declares zero dim", path.display());
+    anyhow::ensure!(dim < 1 << 16, "{}: implausible dim {dim}", path.display());
+    let payload = n
+        .checked_mul(dim as u64)
+        .and_then(|v| v.checked_mul(4))
+        .with_context(|| {
+            format!("{}: header shape n = {n}, dim = {dim} overflows", path.display())
+        })?;
+    let expect = 8 + 4 + 8 + payload;
+    anyhow::ensure!(
+        total == expect,
+        "{}: file is {total} bytes but the header (n = {n}, dim = {dim}) implies {expect} — \
+         truncated or dim/payload mismatch",
+        path.display(),
+    );
+    let n = n as usize;
     let mut bytes = vec![0u8; n * dim * 4];
     r.read_exact(&mut bytes)?;
     let mut coords = Vec::with_capacity(n * dim);
@@ -115,17 +171,24 @@ mod tests {
 
     #[test]
     fn csv_roundtrip() {
+        // Rust's f32 Display prints the shortest representation that
+        // parses back to the same bits, so save/load round-trips exactly.
         let ps = PointSet::from_flat(3, vec![1.0, 2.5, -3.0, 0.0, 1e-4, 9.0]);
         let p = tmpfile("rt.csv");
         save_csv(&p, &ps).unwrap();
         let back = load_csv(&p).unwrap();
         assert_eq!(back.len(), 2);
         assert_eq!(back.dim(), 3);
-        for i in 0..2 {
-            for j in 0..3 {
-                assert!((back.row(i)[j] - ps.row(i)[j]).abs() < 1e-6);
-            }
-        }
+        assert_eq!(back, ps, "csv round-trip must be value-exact");
+    }
+
+    #[test]
+    fn csv_roundtrip_random_values() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        let ps = PointSet::from_flat(4, (0..4 * 100).map(|_| rng.f32() * 2e3 - 1e3).collect());
+        let p = tmpfile("rt_rand.csv");
+        save_csv(&p, &ps).unwrap();
+        assert_eq!(load_csv(&p).unwrap(), ps);
     }
 
     #[test]
@@ -138,10 +201,13 @@ mod tests {
     }
 
     #[test]
-    fn csv_rejects_ragged_rows() {
+    fn csv_rejects_ragged_rows_naming_file_and_line() {
         let p = tmpfile("ragged.csv");
         std::fs::write(&p, "1,2\n3,4,5\n").unwrap();
-        assert!(load_csv(&p).is_err());
+        let e = format!("{:#}", load_csv(&p).unwrap_err());
+        assert!(e.contains("ragged"), "{e}");
+        assert!(e.contains("line 2"), "must name the offending line: {e}");
+        assert!(e.contains("ragged.csv"), "must name the file: {e}");
     }
 
     #[test]
@@ -165,5 +231,55 @@ mod tests {
         let p = tmpfile("badmagic.bin");
         std::fs::write(&p, b"NOTMAGIC........").unwrap();
         assert!(load_f32_bin(&p).is_err());
+    }
+
+    #[test]
+    fn bin_rejects_unknown_version() {
+        let ps = PointSet::from_flat(1, vec![1.0]);
+        let p = tmpfile("badver.bin");
+        save_f32_bin(&p, &ps).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[7] = b'9'; // MRCLPTS1 -> MRCLPTS9
+        std::fs::write(&p, &bytes).unwrap();
+        let e = format!("{:#}", load_f32_bin(&p).unwrap_err());
+        assert!(e.contains("version"), "{e}");
+    }
+
+    #[test]
+    fn bin_rejects_truncated_payload() {
+        let ps = PointSet::from_flat(2, (0..32).map(|i| i as f32).collect());
+        let p = tmpfile("trunc.bin");
+        save_f32_bin(&p, &ps).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 12]).unwrap();
+        let e = format!("{:#}", load_f32_bin(&p).unwrap_err());
+        assert!(e.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn bin_rejects_dim_payload_mismatch() {
+        // Header says dim = 3, payload carries dim = 2 rows: the implied
+        // length disagrees with the file and the loader must say so
+        // instead of misparsing the coordinates.
+        let ps = PointSet::from_flat(2, (0..20).map(|i| i as f32).collect());
+        let p = tmpfile("dimmismatch.bin");
+        save_f32_bin(&p, &ps).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8..12].copy_from_slice(&3u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let e = format!("{:#}", load_f32_bin(&p).unwrap_err());
+        assert!(e.contains("implies"), "{e}");
+    }
+
+    #[test]
+    fn bin_rejects_zero_dim() {
+        let ps = PointSet::from_flat(1, vec![1.0, 2.0]);
+        let p = tmpfile("zerodim.bin");
+        save_f32_bin(&p, &ps).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8..12].copy_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let e = format!("{:#}", load_f32_bin(&p).unwrap_err());
+        assert!(e.contains("zero dim"), "{e}");
     }
 }

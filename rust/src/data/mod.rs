@@ -1,4 +1,10 @@
 //! Dataset generation and I/O.
+//!
+//! [`DataGenConfig::generate`] materializes the §4.2 workload in RAM;
+//! [`DataGenConfig::generate_stream`] writes the identical point stream to
+//! the out-of-core v2 dataset format (`crate::geometry::store`) in O(1)
+//! memory. The loaders here cover the resident CSV / legacy-binary
+//! formats.
 
 pub mod generator;
 pub mod loader;

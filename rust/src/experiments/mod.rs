@@ -7,8 +7,9 @@
 //! these.
 
 use crate::config::ClusterConfig;
-use crate::coordinator::{run_algorithm_with, Algorithm};
+use crate::coordinator::{run_algorithm_store_with, run_algorithm_with, Algorithm};
 use crate::data::DataGenConfig;
+use crate::geometry::PointStore;
 use crate::metrics::report::{FigureReport, RunRecord};
 use crate::runtime::ComputeBackend;
 use anyhow::Result;
@@ -462,6 +463,195 @@ pub fn metric_compare(
     Ok(rows)
 }
 
+/// One row of the E14 out-of-core sweep.
+#[derive(Clone, Debug)]
+pub struct OocSweepRow {
+    /// Algorithm display name.
+    pub algo: String,
+    /// Input size of this row.
+    pub n: usize,
+    /// k-median objective of the file-backed run.
+    pub cost_median: f64,
+    /// MapReduce rounds executed.
+    pub rounds: usize,
+    /// Peak host-resident streamed-coordinate bytes during the run.
+    pub peak_resident_bytes: usize,
+    /// Coordinate bytes of the whole dataset (what `mem` backing holds).
+    pub total_bytes: usize,
+    /// End-to-end throughput of the file-backed run (clustering plus the
+    /// streamed cost sweep; dataset generation excluded): n per wall second.
+    pub points_per_sec: f64,
+    /// `Some(true)` when the small-scale oracle ran and the file-backed
+    /// run matched the resident run bit-for-bit; `None` when `n` was above
+    /// `oracle_cap` and the resident reference was skipped.
+    pub matches_resident: Option<bool>,
+}
+
+/// E14 — out-of-core data plane: stream-generate an n-point dataset into
+/// the v2 store format (O(1) generator memory), run the streaming
+/// coordinators file-backed, and report cost / rounds /
+/// peak-resident-bytes / end-to-end throughput per cell. Rows at or under
+/// `oracle_cap` also run the resident pipeline and record bit-identity.
+/// Dataset files are written under `dir` and removed after each n.
+pub fn ooc_sweep(
+    params: &ExperimentParams,
+    ns: &[usize],
+    chunk_points: usize,
+    oracle_cap: usize,
+    dir: &std::path::Path,
+    backend: &dyn ComputeBackend,
+) -> Result<Vec<OocSweepRow>> {
+    std::fs::create_dir_all(dir)?;
+    let algos = [Algorithm::MrKCenter, Algorithm::CoresetKMedian, Algorithm::DivideLloyd];
+    let mut rows = Vec::new();
+    for &n in ns {
+        let gen = params.data_config(n, 0);
+        let path = dir.join(format!("ooc_{n}.mrc"));
+        let store = PointStore::from(gen.generate_stream(&path)?);
+        let cfg = params.cluster_config(0);
+        let resident = if n <= oracle_cap {
+            Some(gen.generate().points)
+        } else {
+            None
+        };
+        for algo in algos {
+            let meter = store.meter().expect("file store is metered").clone();
+            meter.reset_peak();
+            let t0 = std::time::Instant::now();
+            let out = run_algorithm_store_with(algo, &store, &cfg, chunk_points, backend)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let matches_resident = match &resident {
+                Some(points) => {
+                    let mem = run_algorithm_with(algo, points, &cfg, backend)?;
+                    Some(
+                        mem.centers == out.centers
+                            && mem.cost.median.to_bits() == out.cost.median.to_bits(),
+                    )
+                }
+                None => None,
+            };
+            rows.push(OocSweepRow {
+                algo: algo.name().to_string(),
+                n,
+                cost_median: out.cost.median,
+                rounds: out.rounds,
+                peak_resident_bytes: meter.peak(),
+                total_bytes: store.total_bytes(),
+                points_per_sec: n as f64 / wall.max(1e-9),
+                matches_resident,
+            });
+        }
+        std::fs::remove_file(&path).ok();
+    }
+    Ok(rows)
+}
+
+/// Report of the E14 CI smoke check ([`ooc_check`]).
+#[derive(Clone, Debug)]
+pub struct OocCheckReport {
+    /// Points in the smoke dataset.
+    pub n: usize,
+    /// Streaming window (in points) the check forced.
+    pub chunk_points: usize,
+    /// Peak host-resident streamed bytes across all checked pipelines.
+    pub peak_resident_bytes: usize,
+    /// The O(chunk) ceiling the peak was asserted against: the largest
+    /// single window any pipeline legitimately loads (one machine-round
+    /// partition or one cost-sweep window).
+    pub resident_bound_bytes: usize,
+    /// Coordinate bytes of the whole dataset.
+    pub total_bytes: usize,
+    /// Per-algorithm bit-identity verdicts (the check fails unless all
+    /// are true; kept for display).
+    pub verdicts: Vec<(String, bool)>,
+}
+
+/// E14 smoke check (CI): stream-generate a small dataset, force a tiny
+/// streaming window, run every streaming coordinator both file-backed and
+/// resident, and hard-assert that (a) centers, costs, and round counts
+/// are bit-identical across backings and (b) the peak resident streamed
+/// bytes stay within the O(chunk) ceiling while that ceiling is strictly
+/// below the dataset size — i.e. the out-of-core path demonstrably
+/// spilled instead of quietly loading everything.
+pub fn ooc_check(
+    params: &ExperimentParams,
+    n: usize,
+    chunk_points: usize,
+    dir: &std::path::Path,
+    backend: &dyn ComputeBackend,
+) -> Result<OocCheckReport> {
+    std::fs::create_dir_all(dir)?;
+    let gen = params.data_config(n, 0);
+    let path = dir.join(format!("ooc_check_{n}.mrc"));
+    let store = PointStore::from(gen.generate_stream(&path)?);
+    let points = gen.generate().points;
+    // Serial machines and a serial cost sweep: the peak then equals the
+    // single largest streamed window, which is what the ceiling bounds.
+    let cfg = ClusterConfig {
+        parallel: false,
+        threads: 1,
+        ..params.cluster_config(0)
+    };
+    let dim = store.dim();
+    // The largest single load any checked pipeline performs: a sampling /
+    // summarize partition (n over the round's machine count), a divide
+    // block (n over ℓ = √(n/k)), or one cost-sweep window (chunk_points
+    // rounded up to the fixed reduction block).
+    let ell = ((n as f64 / cfg.k as f64).sqrt().ceil() as usize).clamp(1, n.max(1));
+    let reps_cap = crate::coordinator::robust::MAX_SUMMARY_REPS;
+    let robust_parts = cfg.machines.min(n).min((reps_cap / cfg.k.max(1)).max(1)).max(1);
+    let block = 16 * 1024;
+    let window = chunk_points.max(block).div_ceil(block) * block;
+    let largest_load = [
+        n.div_ceil(cfg.machines.min(n).max(1)),
+        n.div_ceil(robust_parts),
+        n.div_ceil(ell),
+        window.min(n.max(1)),
+    ]
+    .into_iter()
+    .max()
+    .unwrap();
+    let resident_bound_bytes = largest_load * dim * 4;
+    anyhow::ensure!(
+        resident_bound_bytes < store.total_bytes(),
+        "smoke config cannot spill: ceiling {resident_bound_bytes} >= dataset {} — \
+         raise n or shrink machines/chunk_points",
+        store.total_bytes()
+    );
+
+    let meter = store.meter().expect("file store is metered").clone();
+    let mut verdicts = Vec::new();
+    let mut peak = 0usize;
+    for algo in [Algorithm::MrKCenter, Algorithm::CoresetKMedian, Algorithm::DivideLloyd] {
+        meter.reset_peak();
+        let ooc = run_algorithm_store_with(algo, &store, &cfg, chunk_points, backend)?;
+        let mem = run_algorithm_with(algo, &points, &cfg, backend)?;
+        let ok = mem.centers == ooc.centers
+            && mem.cost.median.to_bits() == ooc.cost.median.to_bits()
+            && mem.cost.center.to_bits() == ooc.cost.center.to_bits()
+            && mem.rounds == ooc.rounds;
+        anyhow::ensure!(ok, "{}: file-backed run diverged from the resident run", algo.name());
+        anyhow::ensure!(
+            meter.peak() <= resident_bound_bytes,
+            "{}: peak resident {} bytes exceeds the O(chunk) ceiling {resident_bound_bytes}",
+            algo.name(),
+            meter.peak()
+        );
+        anyhow::ensure!(meter.current() == 0, "{}: leaked a resident window", algo.name());
+        peak = peak.max(meter.peak());
+        verdicts.push((algo.name().to_string(), ok));
+    }
+    std::fs::remove_file(&path).ok();
+    Ok(OocCheckReport {
+        n,
+        chunk_points,
+        peak_resident_bytes: peak,
+        resident_bound_bytes,
+        total_bytes: store.total_bytes(),
+        verdicts,
+    })
+}
+
 /// E7 — Zipf-skew robustness sweep (the "similar results, omitted" claim).
 pub fn skew_sweep(
     params: &ExperimentParams,
@@ -574,6 +764,35 @@ mod tests {
         assert_eq!(rows.len(), 2);
         for r in rows {
             assert!(r.sample_size > 0);
+        }
+    }
+
+    #[test]
+    fn ooc_check_passes_on_a_spilling_config() {
+        let dir = std::env::temp_dir().join("mrcluster_e14_tests");
+        let rep = ooc_check(&tiny(), 40_000, 1024, &dir, &NativeBackend).unwrap();
+        assert!(rep.peak_resident_bytes > 0, "nothing streamed");
+        assert!(
+            rep.peak_resident_bytes <= rep.resident_bound_bytes,
+            "peak {} vs bound {}",
+            rep.peak_resident_bytes,
+            rep.resident_bound_bytes
+        );
+        assert!(rep.resident_bound_bytes < rep.total_bytes, "config did not spill");
+        assert_eq!(rep.verdicts.len(), 3);
+        assert!(rep.verdicts.iter().all(|(_, ok)| *ok));
+    }
+
+    #[test]
+    fn ooc_sweep_reports_oracle_rows() {
+        let dir = std::env::temp_dir().join("mrcluster_e14_tests");
+        let rows = ooc_sweep(&tiny(), &[3000], 64 * 1024, 10_000, &dir, &NativeBackend).unwrap();
+        assert_eq!(rows.len(), 3, "three streaming algorithms");
+        for r in &rows {
+            assert_eq!(r.matches_resident, Some(true), "{} diverged", r.algo);
+            assert!(r.points_per_sec > 0.0);
+            assert!(r.peak_resident_bytes > 0 && r.peak_resident_bytes <= r.total_bytes);
+            assert!(r.rounds >= 1);
         }
     }
 

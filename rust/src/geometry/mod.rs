@@ -5,7 +5,11 @@
 pub mod matrix;
 pub mod metric;
 pub mod point;
+pub mod store;
 
 pub use matrix::DistanceMatrix;
 pub use metric::{EuclideanSq, Metric, MetricKind};
-pub use point::PointSet;
+pub use point::{chunk_spans, PointSet};
+pub use store::{
+    DatasetHeader, FileStore, PointStore, Resident, ResidentMeter, StoreBlock, StoreWriter,
+};

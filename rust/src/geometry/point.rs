@@ -25,6 +25,25 @@
 use std::fmt;
 use std::sync::Arc;
 
+/// The `(lo, hi)` row ranges [`PointSet::chunks`] splits `len` rows into.
+///
+/// Shared with the file-backed store (`geometry/store.rs`) so an
+/// out-of-core dataset is partitioned on *exactly* the boundaries the
+/// in-memory partitioner would use — a precondition for the file-backed
+/// coordinator runs being bit-identical to in-memory runs.
+pub fn chunk_spans(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts > 0);
+    let per = crate::util::div_ceil(len, parts);
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < len {
+        let end = (start + per).min(len);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
 /// A set of `n` points in `R^dim`, stored row-major; possibly a borrowed
 /// view into storage shared with other sets.
 #[derive(Clone)]
@@ -227,17 +246,10 @@ impl PointSet {
     /// assert!(chunks.iter().all(|c| c.shares_storage(&p))); // all views
     /// ```
     pub fn chunks(&self, parts: usize) -> Vec<PointSet> {
-        assert!(parts > 0);
-        let n = self.len();
-        let per = crate::util::div_ceil(n, parts);
-        let mut out = Vec::new();
-        let mut start = 0;
-        while start < n {
-            let end = (start + per).min(n);
-            out.push(self.view(start, end));
-            start = end;
-        }
-        out
+        chunk_spans(self.len(), parts)
+            .into_iter()
+            .map(|(lo, hi)| self.view(lo, hi))
+            .collect()
     }
 
     /// In-place Fisher–Yates shuffle of the rows ("the mappers arbitrarily
@@ -310,6 +322,21 @@ mod tests {
         // Order preserved across chunk boundaries.
         assert_eq!(cs[0].row(0), &[0.0]);
         assert_eq!(cs[2].row(cs[2].len() - 1), &[9.0]);
+    }
+
+    #[test]
+    fn chunk_spans_match_chunks() {
+        for (n, parts) in [(10usize, 3usize), (2, 5), (1, 1), (100, 7), (16, 16)] {
+            let p = PointSet::from_flat(1, (0..n).map(|i| i as f32).collect());
+            let cs = p.chunks(parts);
+            let spans = chunk_spans(n, parts);
+            assert_eq!(cs.len(), spans.len());
+            for (c, &(lo, hi)) in cs.iter().zip(&spans) {
+                assert_eq!(c.len(), hi - lo);
+                assert_eq!(c.row(0), p.row(lo));
+            }
+        }
+        assert!(chunk_spans(0, 4).is_empty(), "no empty spans for len 0");
     }
 
     #[test]

@@ -1,0 +1,644 @@
+//! Out-of-core point storage: a file-backed sibling of [`PointSet`].
+//!
+//! [`PointSet`] is an in-RAM view over `Arc`-shared storage; this module
+//! adds the storage variant that lets `n ≫ RAM` datasets flow through the
+//! same partition boundaries. A [`PointStore`] is either resident
+//! (`Mem`, wrapping a [`PointSet`]) or file-backed (`File`, wrapping a
+//! [`FileStore`] over the on-disk dataset format), and exposes one
+//! chunk-iterator surface: [`PointStore::blocks`] splits the set on
+//! *exactly* the row ranges [`PointSet::chunks`] would produce (shared
+//! [`chunk_spans`] arithmetic), and each [`StoreBlock`] materializes its
+//! rows on demand with [`StoreBlock::load`] — an O(1) zero-copy view for
+//! resident data, a bounded read that is dropped after use for file-backed
+//! data.
+//!
+//! Because partition boundaries, row order, and the `f32` little-endian
+//! round-trip are all exact, a coordinator run over a `File` store is
+//! bit-identical to the same run over a `Mem` store of the same data
+//! (property-tested in `rust/tests/prop_ooc.rs`).
+//!
+//! # Dataset format (v2, `MRCLSTO2`)
+//!
+//! ```text
+//! magic "MRCLSTO2" (8) | version u32 LE | dim u32 LE | n u64 LE |
+//! seed u64 LE | n·dim f32 LE row-major coordinates
+//! ```
+//!
+//! The 32-byte header carries provenance (`seed`: the generator seed that
+//! produced the payload, 0 for imported data) and is validated on open —
+//! magic, version, plausible `dim`, and the exact file length implied by
+//! `n·dim` — so a truncated or mislabeled file fails loudly instead of
+//! feeding garbage coordinates to a multi-hour run. The legacy headerless
+//! `MRCLPTS1` format (`data/loader.rs`) remains readable for resident
+//! loads; only this format supports out-of-core runs.
+//!
+//! # Resident accounting
+//!
+//! The simulated-cluster charge (`MemSize`, `MRC^0` audits) stays the
+//! *logical* partition size — a real machine holds every byte of its
+//! block whether the host streamed it or not, and file-backed runs must
+//! reproduce the in-memory engine ledger bit-for-bit. What out-of-core
+//! execution changes is the *host* side: [`ResidentMeter`] tracks the
+//! bytes actually materialized from disk at any instant (loads add,
+//! drops subtract), so tests and the E14 experiment can assert that peak
+//! host residency stays O(chunk) while the logical dataset is orders of
+//! magnitude larger.
+
+use crate::geometry::point::{chunk_spans, PointSet};
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Magic bytes opening the v2 dataset-store format.
+pub const STORE_MAGIC: &[u8; 8] = b"MRCLSTO2";
+
+/// Current dataset-store format version (the only one readable).
+pub const STORE_VERSION: u32 = 2;
+
+/// Fixed size of the v2 header preceding the coordinate payload.
+pub const STORE_HEADER_BYTES: u64 = 32;
+
+/// The validated header of a v2 dataset file: shape plus provenance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DatasetHeader {
+    /// Point dimensionality.
+    pub dim: u32,
+    /// Number of points in the payload.
+    pub n: u64,
+    /// Provenance: the generator seed that produced the payload
+    /// (0 for datasets imported from elsewhere).
+    pub seed: u64,
+}
+
+impl DatasetHeader {
+    /// Bytes of coordinate payload this header declares (`n · dim · 4`).
+    pub fn payload_bytes(&self) -> u64 {
+        self.n * self.dim as u64 * 4
+    }
+
+    /// Serialize the 32-byte header.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(STORE_MAGIC)?;
+        w.write_all(&STORE_VERSION.to_le_bytes())?;
+        w.write_all(&self.dim.to_le_bytes())?;
+        w.write_all(&self.n.to_le_bytes())?;
+        w.write_all(&self.seed.to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Read and validate a 32-byte header: magic, version, plausible dim.
+    pub fn read_from(r: &mut impl Read) -> Result<DatasetHeader> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("reading dataset magic")?;
+        anyhow::ensure!(
+            &magic == STORE_MAGIC,
+            "bad magic {:?}: not a {} dataset store",
+            String::from_utf8_lossy(&magic),
+            String::from_utf8_lossy(STORE_MAGIC),
+        );
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4).context("reading store version")?;
+        let version = u32::from_le_bytes(b4);
+        anyhow::ensure!(
+            version == STORE_VERSION,
+            "unsupported dataset-store version {version} (this build reads {STORE_VERSION})"
+        );
+        r.read_exact(&mut b4).context("reading dim")?;
+        let dim = u32::from_le_bytes(b4);
+        anyhow::ensure!(dim > 0 && dim < 1 << 16, "implausible dim {dim}");
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8).context("reading n")?;
+        let n = u64::from_le_bytes(b8);
+        r.read_exact(&mut b8).context("reading seed")?;
+        let seed = u64::from_le_bytes(b8);
+        Ok(DatasetHeader { dim, n, seed })
+    }
+}
+
+/// Host-side residency ledger for a file-backed store: how many payload
+/// bytes are materialized in RAM right now, and the worst case seen.
+///
+/// Loads add their byte count on materialization and subtract it when the
+/// [`Resident`] guard drops; `Mem` loads are zero-copy views and charge
+/// nothing. This is the *host* measure (the analogue of
+/// [`PointSet::owned_bytes`]) — the simulated-machine charge is
+/// unchanged, see the module docs.
+#[derive(Debug, Default)]
+pub struct ResidentMeter {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl ResidentMeter {
+    /// Bytes materialized from this store right now.
+    pub fn current(&self) -> usize {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`ResidentMeter::current`] since the last
+    /// [`ResidentMeter::reset_peak`].
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Restart the high-water mark at the current residency.
+    pub fn reset_peak(&self) {
+        self.peak.store(self.current(), Ordering::Relaxed);
+    }
+
+    fn add(&self, bytes: usize) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn sub(&self, bytes: usize) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
+/// A materialized range of store rows; dereferences to [`PointSet`].
+///
+/// For `Mem` stores this is a zero-copy view; for `File` stores it owns
+/// the freshly-read coordinates and its `Drop` returns the bytes to the
+/// store's [`ResidentMeter`] — the load/process/drop discipline the
+/// out-of-core coordinators follow.
+pub struct Resident {
+    pts: PointSet,
+    meter: Option<Arc<ResidentMeter>>,
+    bytes: usize,
+}
+
+impl Resident {
+    /// The materialized points.
+    pub fn points(&self) -> &PointSet {
+        &self.pts
+    }
+}
+
+impl std::ops::Deref for Resident {
+    type Target = PointSet;
+
+    fn deref(&self) -> &PointSet {
+        &self.pts
+    }
+}
+
+impl Drop for Resident {
+    fn drop(&mut self) {
+        if let Some(m) = &self.meter {
+            m.sub(self.bytes);
+        }
+    }
+}
+
+/// A file-backed dataset in the v2 store format: a validated header plus
+/// the path to re-read ranges from. Cheap to clone; reads open the file
+/// per call, so the handle is `Send + Sync` without holding descriptors.
+#[derive(Clone, Debug)]
+pub struct FileStore {
+    path: PathBuf,
+    header: DatasetHeader,
+    meter: Arc<ResidentMeter>,
+}
+
+impl FileStore {
+    /// Open and validate a v2 dataset file: header fields plus the exact
+    /// file length the header implies (truncation fails here, not mid-run).
+    pub fn open(path: &Path) -> Result<FileStore> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let header = DatasetHeader::read_from(&mut f)
+            .with_context(|| format!("reading header of {}", path.display()))?;
+        let expect = STORE_HEADER_BYTES + header.payload_bytes();
+        let actual = f.metadata()?.len();
+        anyhow::ensure!(
+            actual == expect,
+            "{}: file is {actual} bytes but the header (n = {}, dim = {}) implies {expect}",
+            path.display(),
+            header.n,
+            header.dim,
+        );
+        Ok(FileStore {
+            path: path.to_path_buf(),
+            header,
+            meter: Arc::new(ResidentMeter::default()),
+        })
+    }
+
+    /// The validated header.
+    pub fn header(&self) -> &DatasetHeader {
+        &self.header
+    }
+
+    /// The backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of points in the store.
+    pub fn len(&self) -> usize {
+        self.header.n as usize
+    }
+
+    /// True when the store holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.header.n == 0
+    }
+
+    /// Point dimensionality.
+    pub fn dim(&self) -> usize {
+        self.header.dim as usize
+    }
+
+    /// The residency ledger shared by every clone of this handle.
+    pub fn meter(&self) -> &Arc<ResidentMeter> {
+        &self.meter
+    }
+
+    /// Read rows `lo..hi` into a fresh owned [`PointSet`] (exact `f32`
+    /// little-endian round-trip: the values are bit-identical to what the
+    /// writer was handed).
+    pub fn read_rows(&self, lo: usize, hi: usize) -> Result<PointSet> {
+        assert!(
+            lo <= hi && hi <= self.len(),
+            "read range {lo}..{hi} out of bounds for {} points",
+            self.len()
+        );
+        let d = self.dim();
+        let mut f = std::fs::File::open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        f.seek(SeekFrom::Start(STORE_HEADER_BYTES + (lo * d * 4) as u64))?;
+        let mut bytes = vec![0u8; (hi - lo) * d * 4];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("reading rows {lo}..{hi} of {}", self.path.display()))?;
+        let mut coords = Vec::with_capacity((hi - lo) * d);
+        for c in bytes.chunks_exact(4) {
+            coords.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(PointSet::from_flat(d, coords))
+    }
+}
+
+/// Incremental writer for the v2 dataset format: create with the declared
+/// shape, push rows, finish. Never holds more than the `BufWriter` buffer,
+/// so arbitrarily large datasets can be produced in O(1) memory.
+pub struct StoreWriter {
+    w: BufWriter<std::fs::File>,
+    path: PathBuf,
+    header: DatasetHeader,
+    written: u64,
+}
+
+impl StoreWriter {
+    /// Create the file and write the header; `n` rows must follow.
+    pub fn create(path: &Path, dim: usize, n: usize, seed: u64) -> Result<StoreWriter> {
+        assert!(dim > 0, "dim must be positive");
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        let header = DatasetHeader {
+            dim: dim as u32,
+            n: n as u64,
+            seed,
+        };
+        header.write_to(&mut w)?;
+        Ok(StoreWriter {
+            w,
+            path: path.to_path_buf(),
+            header,
+            written: 0,
+        })
+    }
+
+    /// Append one row (must match the declared `dim`).
+    pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
+        assert_eq!(row.len(), self.header.dim as usize, "row has wrong dimension");
+        for v in row {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Flush, verify the declared row count was written, and reopen the
+    /// result as a validated [`FileStore`].
+    pub fn finish(mut self) -> Result<FileStore> {
+        anyhow::ensure!(
+            self.written == self.header.n,
+            "{}: wrote {} rows but the header declares {}",
+            self.path.display(),
+            self.written,
+            self.header.n,
+        );
+        self.w.flush()?;
+        drop(self.w);
+        FileStore::open(&self.path)
+    }
+}
+
+/// Storage-variant handle the out-of-core data plane is written against:
+/// resident points or a file-backed store, one partitioning surface.
+///
+/// Coordinators that accept a `&PointStore` run unchanged over both
+/// variants; the `Mem` arm costs nothing over a plain [`PointSet`]
+/// (loads are zero-copy views), which is how file-backed runs stay
+/// bit-identical to in-memory runs — they are the same code path.
+#[derive(Clone, Debug)]
+pub enum PointStore {
+    /// Fully resident points (every load is an O(1) view).
+    Mem(PointSet),
+    /// File-backed points (loads read, process, drop).
+    File(FileStore),
+}
+
+impl From<PointSet> for PointStore {
+    fn from(ps: PointSet) -> PointStore {
+        PointStore::Mem(ps)
+    }
+}
+
+impl From<FileStore> for PointStore {
+    fn from(fs: FileStore) -> PointStore {
+        PointStore::File(fs)
+    }
+}
+
+impl PointStore {
+    /// Number of points in the store.
+    pub fn len(&self) -> usize {
+        match self {
+            PointStore::Mem(ps) => ps.len(),
+            PointStore::File(fs) => fs.len(),
+        }
+    }
+
+    /// True when the store holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            PointStore::Mem(ps) => ps.dim(),
+            PointStore::File(fs) => fs.dim(),
+        }
+    }
+
+    /// Logical bytes of the whole dataset (`len · dim · 4`) — the
+    /// `check_mrc0` input-size `N`, independent of what is resident.
+    pub fn total_bytes(&self) -> usize {
+        self.len() * self.dim() * 4
+    }
+
+    /// The residency ledger (`File` stores only; `Mem` loads are views
+    /// and there is nothing to meter).
+    pub fn meter(&self) -> Option<&Arc<ResidentMeter>> {
+        match self {
+            PointStore::Mem(_) => None,
+            PointStore::File(fs) => Some(fs.meter()),
+        }
+    }
+
+    /// Materialize rows `lo..hi`: an O(1) view for `Mem`, a metered read
+    /// for `File`.
+    ///
+    /// # Panics
+    ///
+    /// Panics on an I/O error mid-read (the store was validated on open,
+    /// so this means the file changed underneath the run — there is no
+    /// sane way to continue a deterministic round from that).
+    pub fn load(&self, lo: usize, hi: usize) -> Resident {
+        match self {
+            PointStore::Mem(ps) => Resident {
+                pts: ps.view(lo, hi),
+                meter: None,
+                bytes: 0,
+            },
+            PointStore::File(fs) => {
+                let pts = fs
+                    .read_rows(lo, hi)
+                    .expect("out-of-core read failed mid-run");
+                let bytes = pts.mem_bytes();
+                fs.meter.add(bytes);
+                Resident {
+                    pts,
+                    meter: Some(Arc::clone(&fs.meter)),
+                    bytes,
+                }
+            }
+        }
+    }
+
+    /// Materialize the whole store (small sets, leader-side baselines).
+    pub fn load_all(&self) -> Resident {
+        self.load(0, self.len())
+    }
+
+    /// Split into `parts` nearly-equal contiguous blocks on *exactly* the
+    /// boundaries [`PointSet::chunks`] uses (shared [`chunk_spans`]).
+    /// Blocks are descriptors: no coordinates move until
+    /// [`StoreBlock::load`].
+    pub fn blocks(&self, parts: usize) -> Vec<StoreBlock> {
+        chunk_spans(self.len(), parts)
+            .into_iter()
+            .map(|(lo, hi)| StoreBlock {
+                store: self.clone(),
+                lo,
+                hi,
+            })
+            .collect()
+    }
+}
+
+/// One contiguous partition of a [`PointStore`]: the unit a simulated
+/// machine holds. Carries only `(store handle, lo, hi)` until loaded.
+#[derive(Clone, Debug)]
+pub struct StoreBlock {
+    store: PointStore,
+    /// First row of the block (inclusive).
+    pub lo: usize,
+    /// One past the last row of the block.
+    pub hi: usize,
+}
+
+impl StoreBlock {
+    /// Number of points in the block.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// True when the block holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    /// The owning store.
+    pub fn store(&self) -> &PointStore {
+        &self.store
+    }
+
+    /// Logical bytes a simulated machine holding this partition is
+    /// charged — identical to [`PointSet::mem_bytes`] of the same rows,
+    /// whether or not the host has them materialized.
+    pub fn mem_bytes(&self) -> usize {
+        self.len() * self.store.dim() * 4
+    }
+
+    /// Materialize the block's rows (view for `Mem`, metered read for
+    /// `File`); drop the result to release the residency.
+    pub fn load(&self) -> Resident {
+        self.store.load(self.lo, self.hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("mrcluster_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_ps(n: usize, d: usize) -> PointSet {
+        let mut rng = crate::util::rng::Rng::new(7);
+        PointSet::from_flat(d, (0..n * d).map(|_| rng.f32()).collect())
+    }
+
+    fn write_ps(path: &Path, ps: &PointSet, seed: u64) -> FileStore {
+        let mut w = StoreWriter::create(path, ps.dim(), ps.len(), seed).unwrap();
+        for i in 0..ps.len() {
+            w.push_row(ps.row(i)).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = DatasetHeader {
+            dim: 5,
+            n: 1234,
+            seed: 99,
+        };
+        let mut buf = Vec::new();
+        h.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len() as u64, STORE_HEADER_BYTES);
+        let back = DatasetHeader::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_version_dim_and_truncation() {
+        // Wrong magic.
+        let p = tmpfile("badmagic.mrc");
+        let mut buf = b"NOTMAGIC".to_vec();
+        buf.extend_from_slice(&[0u8; 24]);
+        std::fs::write(&p, &buf).unwrap();
+        assert!(FileStore::open(&p).is_err());
+
+        // Wrong version.
+        let p = tmpfile("badver.mrc");
+        let mut buf = Vec::new();
+        DatasetHeader { dim: 2, n: 1, seed: 0 }.write_to(&mut buf).unwrap();
+        buf[8] = 9; // version -> 9
+        buf.extend_from_slice(&[0u8; 8]); // 1 row of dim 2
+        std::fs::write(&p, &buf).unwrap();
+        let e = FileStore::open(&p).unwrap_err();
+        assert!(format!("{e:#}").contains("version"), "{e:#}");
+
+        // Zero dim.
+        let p = tmpfile("zerodim.mrc");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(STORE_MAGIC);
+        buf.extend_from_slice(&STORE_VERSION.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, &buf).unwrap();
+        assert!(FileStore::open(&p).is_err());
+
+        // Truncated payload: header declares 4 rows, file carries 2.
+        let p = tmpfile("trunc.mrc");
+        let mut buf = Vec::new();
+        DatasetHeader { dim: 3, n: 4, seed: 0 }.write_to(&mut buf).unwrap();
+        buf.extend_from_slice(&[0u8; 2 * 3 * 4]);
+        std::fs::write(&p, &buf).unwrap();
+        let e = FileStore::open(&p).unwrap_err();
+        assert!(format!("{e:#}").contains("implies"), "{e:#}");
+    }
+
+    #[test]
+    fn writer_roundtrip_is_bit_exact() {
+        let ps = sample_ps(257, 3);
+        let fs = write_ps(&tmpfile("rt.mrc"), &ps, 41);
+        assert_eq!(fs.len(), 257);
+        assert_eq!(fs.dim(), 3);
+        assert_eq!(fs.header().seed, 41);
+        let back = fs.read_rows(0, 257).unwrap();
+        assert_eq!(back, ps, "f32 LE round-trip must be exact");
+        // Range reads match the same rows.
+        let mid = fs.read_rows(100, 130).unwrap();
+        assert_eq!(mid, ps.view(100, 130));
+    }
+
+    #[test]
+    fn writer_rejects_short_write() {
+        let p = tmpfile("short.mrc");
+        let mut w = StoreWriter::create(&p, 2, 3, 0).unwrap();
+        w.push_row(&[1.0, 2.0]).unwrap();
+        assert!(w.finish().is_err(), "1 of 3 declared rows written");
+    }
+
+    #[test]
+    fn blocks_match_pointset_chunks() {
+        let ps = sample_ps(103, 2);
+        let fs = write_ps(&tmpfile("blocks.mrc"), &ps, 0);
+        for parts in [1usize, 3, 7, 103, 200] {
+            let chunks = ps.chunks(parts);
+            let blocks = PointStore::from(fs.clone()).blocks(parts);
+            assert_eq!(chunks.len(), blocks.len());
+            for (c, b) in chunks.iter().zip(&blocks) {
+                assert_eq!(b.len(), c.len());
+                assert_eq!(b.mem_bytes(), c.mem_bytes());
+                assert_eq!(*b.load(), *c, "block rows must equal chunk rows");
+            }
+        }
+    }
+
+    #[test]
+    fn mem_loads_are_zero_copy_and_unmetered() {
+        let ps = sample_ps(64, 3);
+        let store = PointStore::from(ps.clone());
+        assert!(store.meter().is_none());
+        let blocks = store.blocks(4);
+        let r = blocks[1].load();
+        assert!(r.points().shares_storage(&ps), "Mem load must be a view");
+        assert_eq!(r.points().owned_bytes(), 0);
+    }
+
+    #[test]
+    fn meter_tracks_load_and_drop() {
+        let ps = sample_ps(100, 3);
+        let fs = write_ps(&tmpfile("meter.mrc"), &ps, 0);
+        let store = PointStore::from(fs);
+        let meter = Arc::clone(store.meter().unwrap());
+        assert_eq!(meter.current(), 0);
+        {
+            let a = store.load(0, 50);
+            assert_eq!(meter.current(), 50 * 3 * 4);
+            let b = store.load(50, 100);
+            assert_eq!(meter.current(), 100 * 3 * 4);
+            drop(a);
+            assert_eq!(meter.current(), 50 * 3 * 4);
+            drop(b);
+        }
+        assert_eq!(meter.current(), 0);
+        assert_eq!(meter.peak(), 100 * 3 * 4, "peak saw both chunks resident");
+        meter.reset_peak();
+        assert_eq!(meter.peak(), 0);
+    }
+}

@@ -57,9 +57,9 @@ pub mod summaries;
 pub mod util;
 
 pub use config::{ClusterConfig, ConstantsProfile};
-pub use coordinator::{run_algorithm, Algorithm, Outcome};
+pub use coordinator::{run_algorithm, run_algorithm_store, Algorithm, Outcome};
 pub use data::DataGenConfig;
-pub use geometry::{MetricKind, PointSet};
+pub use geometry::{MetricKind, PointSet, PointStore};
 
 /// Convenient glob-import surface for examples and downstream users.
 pub mod prelude {
@@ -67,7 +67,7 @@ pub mod prelude {
     pub use crate::config::{ClusterConfig, ConstantsProfile, RuntimeBackendKind};
     pub use crate::coordinator::{run_algorithm, Algorithm, Outcome};
     pub use crate::data::{DataGenConfig, Dataset};
-    pub use crate::geometry::{Metric, MetricKind, PointSet};
+    pub use crate::geometry::{FileStore, Metric, MetricKind, PointSet, PointStore};
     pub use crate::mapreduce::{MrCluster, MrConfig, RunStats};
     pub use crate::metrics::{
         kcenter_cost, kcenter_cost_metric, kcenter_cost_with_outliers, kmeans_cost,

@@ -15,6 +15,8 @@
 //!   fault-sweep              E11: recovery under fault/straggler regimes
 //!   outlier-compare          E12: robust vs plain k-center on contaminated data
 //!   metric-compare           E13: the pipelines across registered metric spaces
+//!   ooc-sweep                E14: file-backed (out-of-core) throughput sweep
+//!   ooc-check                E14: assert file-backed == in-memory, O(chunk) peak
 //!   mrc-check                run Sampling-Lloyd and verify MRC^0 bounds
 //! ```
 //!
@@ -22,10 +24,11 @@
 //! the same dotted keys as the TOML config (see `config/mod.rs`).
 
 use anyhow::{bail, Context, Result};
-use mrcluster::config::AppConfig;
-use mrcluster::coordinator::{run_algorithm_with, Algorithm};
+use mrcluster::config::{AppConfig, DataBacking};
+use mrcluster::coordinator::{run_algorithm_store_with, run_algorithm_with, Algorithm};
 use mrcluster::data::{load_csv, load_f32_bin, save_csv, save_f32_bin};
 use mrcluster::experiments::{self, ExperimentParams};
+use mrcluster::geometry::{FileStore, PointStore};
 use mrcluster::mapreduce::check_mrc0;
 use mrcluster::util::{logging, table::Table};
 use std::path::PathBuf;
@@ -95,19 +98,47 @@ fn params_from(cfg: &AppConfig, repeats: usize) -> ExperimentParams {
     }
 }
 
-fn load_points(
+/// Resolve the input dataset into a [`PointStore`]: `--input` (or
+/// `data.path`) names a file; `data.backing` decides whether it stays on
+/// disk (`file`, `.mrc` only) or is read fully resident (`mem`). With no
+/// path, `mem` generates synthetically and `file` is an error.
+fn load_store(
     cfg: &AppConfig,
     flags: &std::collections::BTreeMap<String, String>,
-) -> Result<mrcluster::PointSet> {
-    if let Some(path) = flags.get("input") {
-        let p = PathBuf::from(path);
-        return if path.ends_with(".csv") {
-            load_csv(&p)
-        } else {
-            load_f32_bin(&p)
-        };
+) -> Result<PointStore> {
+    let path = flags
+        .get("input")
+        .map(PathBuf::from)
+        .or_else(|| cfg.storage.path.clone());
+    match (path, cfg.storage.backing) {
+        (Some(p), DataBacking::File) => {
+            let fs = FileStore::open(&p).with_context(|| {
+                format!(
+                    "opening {} as a file-backed dataset (write one with \
+                     `mrcluster generate --out FILE.mrc`)",
+                    p.display()
+                )
+            })?;
+            Ok(PointStore::from(fs))
+        }
+        (Some(p), DataBacking::Mem) => {
+            let name = p.to_string_lossy().into_owned();
+            let points = if name.ends_with(".csv") {
+                load_csv(&p)?
+            } else if name.ends_with(".mrc") {
+                let fs = FileStore::open(&p)?;
+                fs.read_rows(0, fs.len())?
+            } else {
+                load_f32_bin(&p)?
+            };
+            Ok(PointStore::from(points))
+        }
+        (None, DataBacking::File) => bail!(
+            "data.backing = file needs a dataset path: pass --input FILE.mrc or set \
+             data.path (write one with `mrcluster generate --out FILE.mrc`)"
+        ),
+        (None, DataBacking::Mem) => Ok(PointStore::from(cfg.data.generate().points)),
     }
-    Ok(cfg.data.generate().points)
 }
 
 fn main() -> Result<()> {
@@ -130,6 +161,8 @@ fn main() -> Result<()> {
         "fault-sweep" => cmd_fault_sweep(&cfg, &args)?,
         "outlier-compare" => cmd_outlier_compare(&cfg, &args)?,
         "metric-compare" => cmd_metric_compare(&cfg, &args)?,
+        "ooc-sweep" => cmd_ooc_sweep(&cfg, &args)?,
+        "ooc-check" => cmd_ooc_check(&cfg, &args)?,
         "streaming-compare" => cmd_streaming(&cfg, &args)?,
         "kmeans-check" => cmd_kmeans(&cfg, &args)?,
         "mrc-check" => cmd_mrc_check(&cfg)?,
@@ -145,8 +178,11 @@ usage: mrcluster <command> [--config FILE] [--set section.key=value ...] [flags]
 
 commands:
   info               environment + artifact summary
-  generate           --out FILE [.csv|.bin]: write a synthetic dataset
-  cluster            --algo NAME [--input FILE]: run one algorithm
+  generate           --out FILE [.csv|.bin|.mrc]: write a synthetic dataset
+                     (.mrc streams to disk in O(chunk) memory — any n)
+  cluster            --algo NAME [--input FILE]: run one algorithm; with
+                     --set data.backing=file the input .mrc stays on disk
+                     and is streamed in data.chunk_points windows
   fig1               [--ns LIST] [--ls-cap N] [--repeats R]: Figure 1 tables
   fig2               [--ns LIST] [--repeats R]: Figure 2 tables
   kcenter-compare    [--ns LIST]: E3 sampled-vs-full k-center radii
@@ -163,6 +199,13 @@ commands:
   metric-compare     [--n N] [--metrics LIST]: E13 general metric spaces —
                      the pipelines under l2sq/l2/l1/cosine/chebyshev, each
                      cell replayed and verified bit-identical
+  ooc-sweep          [--ns LIST] [--chunk P] [--oracle-cap N] [--dir D]:
+                     E14 out-of-core throughput — file-backed runs with
+                     peak-resident bytes, points/s, and (below the oracle
+                     cap) bit-identity against the in-memory run
+  ooc-check          [--n N] [--chunk P]: E14 hard check — every streaming
+                     pipeline must match its in-memory twin bit for bit
+                     while peaking below one O(chunk) resident window
   mrc-check          run Sampling-Lloyd, assert MRC^0 resource bounds
                      (including the recovery-memory audit)
 
@@ -175,6 +218,7 @@ cluster --precision NAME is shorthand for --set cluster.precision=NAME.
 
 config keys (TOML [section] key, or --set section.key=value):
   data.n data.k data.dim data.sigma data.alpha data.contamination data.seed
+  data.path data.backing(mem|file) data.chunk_points
   cluster.k cluster.metric(l2sq|l2|l1|cosine|chebyshev)
   cluster.epsilon cluster.profile(theory|practical)
   cluster.machines cluster.mem_limit cluster.parallel cluster.threads
@@ -207,8 +251,22 @@ fn cmd_info(cfg: &AppConfig) -> Result<()> {
 
 fn cmd_generate(cfg: &AppConfig, args: &Args) -> Result<()> {
     let out = PathBuf::from(args.flags.get("out").context("--out FILE required")?);
+    let ext = out.extension().and_then(|e| e.to_str()).unwrap_or("");
+    if ext == "mrc" {
+        // Streamed straight to disk — never materializes the dataset, so
+        // this path writes inputs far larger than RAM.
+        let fs = cfg.data.generate_stream(&out)?;
+        println!(
+            "streamed {} points (dim {}, seed {}) to {} — v2 header carries provenance",
+            fs.len(),
+            fs.dim(),
+            fs.header().seed,
+            out.display()
+        );
+        return Ok(());
+    }
     let data = cfg.data.generate();
-    if out.extension().map(|e| e == "csv").unwrap_or(false) {
+    if ext == "csv" {
         save_csv(&out, &data.points)?;
     } else {
         save_f32_bin(&out, &data.points)?;
@@ -239,11 +297,17 @@ fn cmd_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
         cfg.apply("cluster", "precision", p)?;
     }
     let cfg = &cfg;
-    let points = load_points(cfg, &args.flags)?;
+    let store = load_store(cfg, &args.flags)?;
     let backend = experiments::make_backend(&cfg.cluster);
-    let out = run_algorithm_with(algo, &points, &cfg.cluster, backend.as_ref())?;
+    let out = run_algorithm_store_with(
+        algo,
+        &store,
+        &cfg.cluster,
+        cfg.storage.chunk_points,
+        backend.as_ref(),
+    )?;
     println!("algorithm      : {}", out.algorithm.name());
-    println!("points         : {}", points.len());
+    println!("points         : {}", store.len());
     println!("k              : {}", cfg.cluster.k);
     println!("metric         : {}", cfg.cluster.metric);
     println!(
@@ -258,6 +322,14 @@ fn cmd_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
     println!("wall time      : {:.3}s", out.wall_time.as_secs_f64());
     if let Some(r) = out.reduced_size {
         println!("reduced size   : {r}");
+    }
+    if let Some(meter) = store.meter() {
+        println!("backing        : file (chunk {} points)", cfg.storage.chunk_points);
+        println!(
+            "peak resident  : {:.1} KiB (dataset {:.1} KiB)",
+            meter.peak() as f64 / 1024.0,
+            store.total_bytes() as f64 / 1024.0
+        );
     }
     println!("engine         : {}", out.stats.summary());
     Ok(())
@@ -588,6 +660,103 @@ fn cmd_metric_compare(cfg: &AppConfig, args: &Args) -> Result<()> {
     if !all_deterministic {
         bail!("a metric/algorithm cell failed to replay bit-identically");
     }
+    Ok(())
+}
+
+fn cmd_ooc_sweep(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let ns = match args.flags.get("ns") {
+        Some(s) => parse_ns(s)?,
+        None => vec![100_000, 1_000_000],
+    };
+    let chunk = args
+        .flags
+        .get("chunk")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(cfg.storage.chunk_points);
+    let oracle_cap = args
+        .flags
+        .get("oracle-cap")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(2_000_000);
+    let dir = args
+        .flags
+        .get("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| std::env::temp_dir().join("mrcluster_ooc"));
+    let params = params_from(cfg, 1);
+    let backend = experiments::make_backend(&cfg.cluster);
+    let rows = experiments::ooc_sweep(&params, &ns, chunk, oracle_cap, &dir, backend.as_ref())?;
+    println!("== E14: out-of-core data plane (file-backed runs, chunk = {chunk} points) ==");
+    let mut t = Table::new(vec![
+        "algorithm",
+        "n",
+        "cost",
+        "rounds",
+        "peak resident KiB",
+        "dataset KiB",
+        "points/s",
+        "identical",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.algo.clone(),
+            r.n.to_string(),
+            format!("{:.4}", r.cost_median),
+            r.rounds.to_string(),
+            format!("{:.1}", r.peak_resident_bytes as f64 / 1024.0),
+            format!("{:.1}", r.total_bytes as f64 / 1024.0),
+            format!("{:.0}", r.points_per_sec),
+            match r.matches_resident {
+                Some(true) => "yes".into(),
+                Some(false) => "NO".into(),
+                None => "-".into(),
+            },
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(identical = file-backed output vs in-memory oracle; '-' = n above --oracle-cap)");
+    if rows.iter().any(|r| r.matches_resident == Some(false)) {
+        bail!("a file-backed run diverged from its in-memory oracle");
+    }
+    Ok(())
+}
+
+fn cmd_ooc_check(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let n = args
+        .flags
+        .get("n")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(200_000);
+    let chunk = args
+        .flags
+        .get("chunk")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(4096);
+    let dir = std::env::temp_dir().join("mrcluster_ooc_check");
+    let params = params_from(cfg, 1);
+    let backend = experiments::make_backend(&cfg.cluster);
+    let report = experiments::ooc_check(&params, n, chunk, &dir, backend.as_ref())?;
+    println!(
+        "== E14: out-of-core check (n = {}, chunk = {} points) ==",
+        report.n, report.chunk_points
+    );
+    println!(
+        "peak resident : {:.1} KiB (ceiling {:.1} KiB, dataset {:.1} KiB)",
+        report.peak_resident_bytes as f64 / 1024.0,
+        report.resident_bound_bytes as f64 / 1024.0,
+        report.total_bytes as f64 / 1024.0,
+    );
+    for (algo, ok) in &report.verdicts {
+        println!(
+            "  {algo:<20} bit-identical to mem backing: {}",
+            if *ok { "yes" } else { "NO" }
+        );
+    }
+    println!("ok: streaming pipelines matched their in-memory twins within one O(chunk) window");
     Ok(())
 }
 

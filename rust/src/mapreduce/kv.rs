@@ -7,7 +7,7 @@
 //! convention the paper uses when it counts "the distances from each point
 //! in H to each point in S" as `|H||S| log n` bits.
 
-use crate::geometry::PointSet;
+use crate::geometry::{PointSet, StoreBlock};
 
 /// Approximate in-memory footprint in bytes.
 pub trait MemSize {
@@ -63,6 +63,18 @@ impl MemSize for PointSet {
     }
 }
 
+/// A [`StoreBlock`] partition charges exactly what the equivalent resident
+/// [`PointSet`] partition would: a simulated machine holds every byte of
+/// its block whether the host streamed it from disk or not. Keeping the
+/// two charges byte-identical is what makes the engine ledger (round
+/// stats, `MRC^0` audits) of a file-backed run bit-identical to the
+/// in-memory run's.
+impl MemSize for StoreBlock {
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<PointSet>() + StoreBlock::mem_bytes(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +102,16 @@ mod tests {
     fn pointset_counts_coords() {
         let p = PointSet::from_flat(3, vec![0.0; 300]);
         assert!(p.mem_bytes() >= 1200);
+    }
+
+    #[test]
+    fn store_block_charges_like_resident_partition() {
+        use crate::geometry::PointStore;
+        let p = PointSet::from_flat(3, vec![0.0; 300]);
+        let blocks = PointStore::from(p.clone()).blocks(4);
+        for (c, b) in p.chunks(4).iter().zip(&blocks) {
+            assert_eq!(MemSize::mem_bytes(c), MemSize::mem_bytes(b));
+        }
     }
 
     #[test]

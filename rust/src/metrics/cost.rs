@@ -8,7 +8,7 @@
 //! The plain forms are thin `l2sq` wrappers, so there is exactly one
 //! implementation of each objective.
 
-use crate::geometry::{MetricKind, PointSet};
+use crate::geometry::{MetricKind, PointSet, PointStore};
 use crate::util::pool;
 use std::sync::Mutex;
 
@@ -36,6 +36,23 @@ fn chunk_cost(
     metric: MetricKind,
 ) -> CostSummary {
     let mut s = CostSummary::default();
+    chunk_cost_into(&mut s, points, lo, hi, centers, metric);
+    s
+}
+
+/// Accumulate rows `lo..hi` into a running summary. Accumulating window
+/// after window into one `acc` performs *exactly* the f64 op sequence of a
+/// single [`chunk_cost`] pass over the concatenated range — which is what
+/// lets the out-of-core evaluator ([`eval_costs_store`]) stay bit-identical
+/// to the in-memory one while never holding more than one window.
+fn chunk_cost_into(
+    s: &mut CostSummary,
+    points: &PointSet,
+    lo: usize,
+    hi: usize,
+    centers: &PointSet,
+    metric: MetricKind,
+) {
     for i in lo..hi {
         let row = points.row(i);
         let mut best = f32::INFINITY;
@@ -54,7 +71,6 @@ fn chunk_cost(
             s.center = d;
         }
     }
-    s
 }
 
 /// Evaluate all three objectives under `metric`. `threads = 1` forces a
@@ -97,6 +113,65 @@ pub fn eval_costs_metric(
 /// [`eval_costs_metric`] under the default squared-Euclidean metric.
 pub fn eval_costs(points: &PointSet, centers: &PointSet, threads: usize) -> CostSummary {
     eval_costs_metric(points, centers, MetricKind::L2Sq, threads)
+}
+
+/// Out-of-core [`eval_costs_metric`]: one sequential pass over the store,
+/// loading at most one I/O window (~`window_points` rows, rounded to a
+/// `COST_BLOCK` multiple) at a time.
+///
+/// Bit-identical to `eval_costs_metric` on the same data, both branches:
+/// the sequential branch accumulates every window into one running
+/// summary (`chunk_cost_into` — the identical f64 op sequence as one
+/// full pass), and the pooled branch keeps the window aligned to absolute
+/// `COST_BLOCK` boundaries so the per-block partials *and their in-order
+/// merge* are exactly the in-memory evaluator's. `Mem` stores simply
+/// delegate.
+pub fn eval_costs_store(
+    store: &PointStore,
+    centers: &PointSet,
+    metric: MetricKind,
+    threads: usize,
+    window_points: usize,
+) -> CostSummary {
+    if let PointStore::Mem(ps) = store {
+        return eval_costs_metric(ps, centers, metric, threads);
+    }
+    assert!(!centers.is_empty(), "no centers");
+    assert_eq!(store.dim(), centers.dim(), "dim mismatch");
+    let n = store.len();
+    let window = (window_points.max(COST_BLOCK) / COST_BLOCK) * COST_BLOCK;
+    let mut out = CostSummary::default();
+    let sequential = threads == 1 || n < 10_000;
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + window).min(n);
+        let pts = store.load(lo, hi);
+        let w = hi - lo;
+        if sequential {
+            chunk_cost_into(&mut out, &pts, 0, w, centers, metric);
+        } else {
+            let n_blocks = crate::util::div_ceil(w, COST_BLOCK);
+            let parts: Vec<Mutex<Option<CostSummary>>> =
+                (0..n_blocks).map(|_| Mutex::new(None)).collect();
+            pool::global().run(n_blocks, &|b| {
+                let blo = b * COST_BLOCK;
+                let bhi = (blo + COST_BLOCK).min(w);
+                *parts[b].lock().expect("cost slot poisoned") =
+                    Some(chunk_cost(&pts, blo, bhi, centers, metric));
+            });
+            for slot in parts {
+                let p = slot
+                    .into_inner()
+                    .expect("cost slot poisoned")
+                    .expect("block not evaluated");
+                out.median += p.median;
+                out.means += p.means;
+                out.center = out.center.max(p.center);
+            }
+        }
+        lo = hi;
+    }
+    out
 }
 
 /// k-median objective Σ d(x, C).
@@ -276,6 +351,35 @@ mod tests {
             assert!((seq.median - par.median).abs() / seq.median.max(1e-12) < 1e-9, "{m}");
             assert_eq!(seq.center, par.center, "{m}");
         }
+    }
+
+    #[test]
+    fn store_eval_is_bit_identical_to_in_memory() {
+        use crate::geometry::StoreWriter;
+        let mut rng = crate::util::rng::Rng::new(6);
+        let n = 40_000;
+        let p = PointSet::from_flat(3, (0..n * 3).map(|_| rng.f32()).collect());
+        let c = PointSet::from_flat(3, (0..3 * 20).map(|_| rng.f32()).collect());
+        let dir = std::env::temp_dir().join("mrcluster_cost_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("eval.mrc");
+        let mut w = StoreWriter::create(&path, 3, n, 0).unwrap();
+        for i in 0..n {
+            w.push_row(p.row(i)).unwrap();
+        }
+        let store = PointStore::from(w.finish().unwrap());
+        for threads in [1usize, 4] {
+            let mem = eval_costs_metric(&p, &c, MetricKind::L2Sq, threads);
+            // A window far below n forces many load/process/drop cycles.
+            let ooc = eval_costs_store(&store, &c, MetricKind::L2Sq, threads, 16 * 1024);
+            assert_eq!(mem.median.to_bits(), ooc.median.to_bits(), "threads={threads}");
+            assert_eq!(mem.center.to_bits(), ooc.center.to_bits(), "threads={threads}");
+            assert_eq!(mem.means.to_bits(), ooc.means.to_bits(), "threads={threads}");
+        }
+        // Residency stayed bounded by one window and drained fully.
+        let meter = store.meter().unwrap();
+        assert!(meter.peak() <= 16 * 1024 * 3 * 4, "peak {} over a window", meter.peak());
+        assert_eq!(meter.current(), 0);
     }
 
     #[test]

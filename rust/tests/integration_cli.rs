@@ -20,7 +20,16 @@ fn help_lists_commands_and_keys() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for needle in ["fig1", "fig2", "mrc-check", "cluster.epsilon", "Sampling-LocalSearch"] {
+    for needle in [
+        "fig1",
+        "fig2",
+        "mrc-check",
+        "cluster.epsilon",
+        "Sampling-LocalSearch",
+        "ooc-sweep",
+        "ooc-check",
+        "data.backing",
+    ] {
         assert!(text.contains(needle), "help missing {needle:?}");
     }
 }
@@ -79,6 +88,59 @@ fn generate_then_cluster_roundtrip() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("k-median cost"), "{text}");
     assert!(text.contains("rounds"), "{text}");
+}
+
+#[test]
+fn generate_mrc_then_file_backed_cluster_matches_mem() {
+    let path = tmpdir().join("cli_pts.mrc");
+    let out = bin()
+        .args([
+            "generate",
+            "--out",
+            path.to_str().unwrap(),
+            "--set",
+            "data.n=2000",
+            "--set",
+            "data.k=5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(path.exists());
+
+    let run = |backing: &str| {
+        let set_backing = format!("data.backing={backing}");
+        let out = bin()
+            .args([
+                "cluster",
+                "--algo",
+                "MrKCenter",
+                "--input",
+                path.to_str().unwrap(),
+                "--set",
+                &set_backing,
+                "--set",
+                "cluster.k=5",
+                "--set",
+                "cluster.machines=4",
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{backing}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let file_text = run("file");
+    let mem_text = run("mem");
+    assert!(file_text.contains("backing        : file"), "{file_text}");
+    assert!(file_text.contains("peak resident"), "{file_text}");
+    // The printed objectives must agree exactly across backings.
+    let cost = |t: &str| t.lines().find(|l| l.starts_with("k-median cost")).map(String::from);
+    assert!(cost(&file_text).is_some(), "{file_text}");
+    assert_eq!(cost(&file_text), cost(&mem_text));
 }
 
 #[test]

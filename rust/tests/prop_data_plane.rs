@@ -116,6 +116,51 @@ fn prop_gather_fast_path_equivalence() {
     }
 }
 
+/// Degenerate shapes behave: empty views, full-range views, more chunk
+/// parts than points, and gathers taken *from* a view (indices are
+/// view-relative, contents match the parent rows they alias).
+#[test]
+fn prop_view_and_chunk_edge_cases() {
+    let mut rng = Rng::new(10);
+    for _ in 0..10 {
+        let n = 2 + rng.below(300);
+        let d = 1 + rng.below(4);
+        let p = random_ps(n, d, rng.next_u64());
+
+        // Empty view: no rows, no logical bytes, dim preserved.
+        let lo = rng.below(n);
+        let empty = p.view(lo, lo);
+        assert!(empty.is_empty());
+        assert_eq!(empty.dim(), d);
+        assert_eq!(empty.mem_bytes(), 0);
+        assert_eq!(empty.chunks(3).len(), 0, "an empty set splits into no chunks");
+
+        // Full-range view: indistinguishable from (and aliasing) the parent.
+        let full = p.view(0, n);
+        assert_eq!(full, p);
+        assert!(full.shares_storage(&p));
+
+        // More parts than points: per-chunk size rounds up to one point,
+        // so exactly n single-point chunks come back, in order.
+        let chunks = p.chunks(n + 1 + rng.below(50));
+        assert_eq!(chunks.len(), n);
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.len(), 1);
+            assert_eq!(c.row(0), p.row(i));
+        }
+
+        // Gather from a mid-range view.
+        let vlo = rng.below(n / 2);
+        let vhi = vlo + 1 + rng.below(n - vlo);
+        let view = p.view(vlo, vhi);
+        let idx: Vec<usize> = (0..view.len()).step_by(2).collect();
+        let g = view.gather(&idx);
+        for (pos, &i) in idx.iter().enumerate() {
+            assert_eq!(g.row(pos), p.row(vlo + i), "gather indices must be view-relative");
+        }
+    }
+}
+
 fn run_lloyd(parallel: bool, n: usize, seed: u64) -> (PointSet, Vec<f64>, usize) {
     let data = DataGenConfig {
         n,

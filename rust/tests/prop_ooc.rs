@@ -1,0 +1,163 @@
+//! Property tests of the out-of-core data plane, through the public crate
+//! surface: a file-backed (`PointStore::File`) run of every streaming
+//! coordinator must be bit-identical to the in-memory run on the same
+//! generated dataset, a serial file-backed run must never hold more than
+//! one O(chunk) window of coordinates resident, and the v2 dataset format
+//! must round-trip through `generate_stream` → `FileStore::open`.
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm_store_with, run_algorithm_with, Algorithm};
+use mrcluster::data::DataGenConfig;
+use mrcluster::geometry::{FileStore, PointStore};
+use mrcluster::runtime::NativeBackend;
+use std::path::PathBuf;
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("mrcluster_prop_ooc");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+const STREAMING: [Algorithm; 4] = [
+    Algorithm::MrKCenter,
+    Algorithm::RobustKCenter,
+    Algorithm::CoresetKMedian,
+    Algorithm::DivideLloyd,
+];
+
+/// Every streaming coordinator, several seeds: the file-backed run must
+/// reproduce the in-memory run bit for bit — centers, round count,
+/// reduced size, and the exact cost bits (f64 summation order included).
+#[test]
+fn prop_file_backed_runs_are_bit_identical() {
+    for seed in [11u64, 12, 13] {
+        let gen = DataGenConfig {
+            n: 6000,
+            k: 6,
+            seed,
+            contamination: 0.02,
+            ..Default::default()
+        };
+        let path = tmpfile(&format!("ident_{seed}.mrc"));
+        let store = PointStore::from(gen.generate_stream(&path).unwrap());
+        let points = gen.generate().points;
+        let cfg = ClusterConfig {
+            k: 6,
+            machines: 8,
+            seed,
+            ..Default::default()
+        };
+        for algo in STREAMING {
+            let a = run_algorithm_store_with(algo, &store, &cfg, 64 * 1024, &NativeBackend)
+                .unwrap();
+            let b = run_algorithm_with(algo, &points, &cfg, &NativeBackend).unwrap();
+            assert_eq!(
+                a.centers.flat(),
+                b.centers.flat(),
+                "{}: centers diverged (seed {seed})",
+                algo.name()
+            );
+            assert_eq!(a.rounds, b.rounds, "{}: rounds diverged", algo.name());
+            assert_eq!(a.reduced_size, b.reduced_size, "{}: reduced size", algo.name());
+            assert_eq!(
+                a.cost.median.to_bits(),
+                b.cost.median.to_bits(),
+                "{}: k-median cost bits diverged",
+                algo.name()
+            );
+            assert_eq!(
+                a.cost.center.to_bits(),
+                b.cost.center.to_bits(),
+                "{}: k-center cost bits diverged",
+                algo.name()
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// The E14 hard check through the public experiments API: with serial
+/// machines and a serial cost sweep, the peak resident bytes of every
+/// streaming pipeline stay under one legitimate window — which itself is
+/// a strict fraction of the dataset, so the run genuinely spilled.
+#[test]
+fn prop_serial_file_runs_stay_within_one_window() {
+    use mrcluster::experiments::{ooc_check, ExperimentParams};
+    let params = ExperimentParams {
+        k: 5,
+        sigma: 0.05,
+        alpha: 0.0,
+        contamination: 0.0,
+        seed: 21,
+        repeats: 1,
+        cluster: ClusterConfig {
+            k: 5,
+            machines: 8,
+            epsilon: 0.2,
+            ls_max_swaps: 20,
+            seed: 21,
+            ..Default::default()
+        },
+    };
+    let dir = std::env::temp_dir().join("mrcluster_prop_ooc_check");
+    let report = ooc_check(&params, 40_000, 1024, &dir, &NativeBackend).unwrap();
+    assert!(
+        report.peak_resident_bytes <= report.resident_bound_bytes,
+        "peak {} exceeded the O(chunk) ceiling {}",
+        report.peak_resident_bytes,
+        report.resident_bound_bytes
+    );
+    assert!(
+        report.resident_bound_bytes < report.total_bytes,
+        "the check must exercise a genuine spill"
+    );
+    assert!(report.verdicts.iter().all(|(_, ok)| *ok));
+}
+
+/// Algorithms that hold the full input on one machine refuse file backing
+/// with an actionable error instead of silently loading everything.
+#[test]
+fn prop_non_streaming_algorithms_report_a_clear_error() {
+    let gen = DataGenConfig {
+        n: 500,
+        k: 4,
+        seed: 31,
+        ..Default::default()
+    };
+    let path = tmpfile("refuse.mrc");
+    let store = PointStore::from(gen.generate_stream(&path).unwrap());
+    let cfg = ClusterConfig {
+        k: 4,
+        seed: 31,
+        ..Default::default()
+    };
+    let err = run_algorithm_store_with(Algorithm::SamplingLloyd, &store, &cfg, 4096, &NativeBackend)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no out-of-core path"),
+        "unexpected error: {err:#}"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// v2 dataset format round trip: stream to disk, re-open cold, read back
+/// — header provenance and every coordinate bit must survive.
+#[test]
+fn prop_stream_open_round_trip() {
+    for seed in [41u64, 42] {
+        let gen = DataGenConfig {
+            n: 3000,
+            k: 5,
+            seed,
+            ..Default::default()
+        };
+        let path = tmpfile(&format!("rt_{seed}.mrc"));
+        gen.generate_stream(&path).unwrap();
+        let fs = FileStore::open(&path).unwrap();
+        assert_eq!(fs.header().seed, seed, "header must carry the generator seed");
+        assert_eq!(fs.len(), 3000);
+        let back = fs.read_rows(0, fs.len()).unwrap();
+        assert_eq!(back, gen.generate().points, "payload must be bit-identical");
+        std::fs::remove_file(&path).ok();
+    }
+}
