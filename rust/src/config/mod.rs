@@ -12,6 +12,7 @@ use crate::data::DataGenConfig;
 use crate::geometry::MetricKind;
 use crate::runtime::{AssignPath, Precision};
 use crate::sampling::SampleConstants;
+use crate::sim::{Heterogeneity, NetworkKind, Placement, SimConfig};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 
@@ -118,6 +119,11 @@ pub struct ClusterConfig {
     pub z: usize,
     /// Root PRNG seed for the whole run.
     pub seed: u64,
+    /// Discrete-event timing simulation (`[sim]` section / `sim.*` keys):
+    /// contended network, heterogeneous hosts, rack topology. Off by
+    /// default; enabling it adds a `sim_wallclock` column to every round
+    /// without changing any output (see `crate::sim`).
+    pub sim: SimConfig,
 }
 
 impl Default for ClusterConfig {
@@ -152,6 +158,7 @@ impl Default for ClusterConfig {
             checkpoint: false,
             z: 0,
             seed: 42,
+            sim: SimConfig::default(),
         }
     }
 }
@@ -329,6 +336,46 @@ impl AppConfig {
             ("cluster", "checkpoint") => self.cluster.checkpoint = p(value)?,
             ("cluster", "z") => self.cluster.z = p(value)?,
             ("cluster", "seed") => self.cluster.seed = p(value)?,
+            ("sim", "enabled") => self.cluster.sim.enabled = p(value)?,
+            ("sim", "network") => {
+                self.cluster.sim.network =
+                    NetworkKind::parse(value).map_err(|e| anyhow::anyhow!(e))?
+            }
+            ("sim", "racks") => {
+                self.cluster.sim.racks = p(value)?;
+                anyhow::ensure!(self.cluster.sim.racks > 0, "sim.racks must be positive");
+            }
+            ("sim", "oversub") => {
+                self.cluster.sim.oversub = p(value)?;
+                anyhow::ensure!(self.cluster.sim.oversub >= 1.0, "sim.oversub must be >= 1");
+            }
+            ("sim", "nic_mbps") => {
+                self.cluster.sim.nic_mbps = p(value)?;
+                anyhow::ensure!(self.cluster.sim.nic_mbps > 0.0, "sim.nic_mbps must be > 0");
+            }
+            ("sim", "compute_mbps") => {
+                self.cluster.sim.compute_mbps = p(value)?;
+                anyhow::ensure!(
+                    self.cluster.sim.compute_mbps > 0.0,
+                    "sim.compute_mbps must be > 0"
+                );
+            }
+            ("sim", "latency_us") => {
+                self.cluster.sim.latency_us = p(value)?;
+                anyhow::ensure!(
+                    self.cluster.sim.latency_us >= 0.0,
+                    "sim.latency_us must be >= 0"
+                );
+            }
+            ("sim", "hetero") => {
+                self.cluster.sim.hetero =
+                    Heterogeneity::parse(value).map_err(|e| anyhow::anyhow!(e))?
+            }
+            ("sim", "placement") => {
+                self.cluster.sim.placement =
+                    Placement::parse(value).map_err(|e| anyhow::anyhow!(e))?
+            }
+            ("sim", "seed") => self.cluster.sim.seed = p(value)?,
             (s, k) => anyhow::bail!("unknown config key [{s}] {k}"),
         }
         Ok(())
@@ -473,6 +520,47 @@ mod tests {
         let err = AppConfig::load(None, &[("data.backing".into(), "disk".into())]).unwrap_err();
         assert!(format!("{err:#}").contains("unknown backing"), "{err:#}");
         assert!(AppConfig::load(None, &[("data.chunk_points".into(), "0".into())]).is_err());
+    }
+
+    #[test]
+    fn sim_keys_apply_and_default_off() {
+        let cfg = AppConfig::load(
+            None,
+            &[
+                ("sim.enabled".into(), "true".into()),
+                ("sim.network".into(), "topology".into()),
+                ("sim.racks".into(), "4".into()),
+                ("sim.oversub".into(), "3.5".into()),
+                ("sim.nic_mbps".into(), "10000".into()),
+                ("sim.compute_mbps".into(), "800".into()),
+                ("sim.latency_us".into(), "250".into()),
+                ("sim.hetero".into(), "bimodal:0.2:3".into()),
+                ("sim.placement".into(), "rackaware".into()),
+                ("sim.seed".into(), "99".into()),
+            ],
+        )
+        .unwrap();
+        let s = &cfg.cluster.sim;
+        assert!(s.enabled);
+        assert_eq!(s.network, NetworkKind::Topology);
+        assert_eq!(s.racks, 4);
+        assert!((s.oversub - 3.5).abs() < 1e-12);
+        assert!((s.nic_mbps - 10000.0).abs() < 1e-9);
+        assert!((s.compute_mbps - 800.0).abs() < 1e-9);
+        assert!((s.latency_us - 250.0).abs() < 1e-9);
+        assert_eq!(s.hetero, Heterogeneity::Bimodal { slow_frac: 0.2, slow_factor: 3.0 });
+        assert_eq!(s.placement, Placement::RackAware);
+        assert_eq!(s.seed, 99);
+        // The simulation is strictly opt-in.
+        let d = AppConfig::default();
+        assert!(!d.cluster.sim.enabled);
+        assert_eq!(d.cluster.sim, SimConfig::default());
+        // Bad values fail loudly.
+        assert!(AppConfig::load(None, &[("sim.network".into(), "mesh".into())]).is_err());
+        assert!(AppConfig::load(None, &[("sim.oversub".into(), "0.5".into())]).is_err());
+        assert!(AppConfig::load(None, &[("sim.racks".into(), "0".into())]).is_err());
+        assert!(AppConfig::load(None, &[("sim.hetero".into(), "gamma".into())]).is_err());
+        assert!(AppConfig::load(None, &[("sim.placement".into(), "random".into())]).is_err());
     }
 
     #[test]

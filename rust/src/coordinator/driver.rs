@@ -122,6 +122,9 @@ pub struct Outcome {
     pub cost_median: f64,
     /// Paper-methodology simulated time (Σ rounds max-machine compute).
     pub sim_time: std::time::Duration,
+    /// Discrete-event simulated wall-clock (Σ rounds; see
+    /// [`crate::sim`]). Zero unless `sim.enabled`.
+    pub sim_wallclock: std::time::Duration,
     /// Host wall-clock for the whole run.
     pub wall_time: std::time::Duration,
     /// MapReduce rounds executed (the quantity the paper's theorems bound).
@@ -197,6 +200,7 @@ fn mr_config(cfg: &ClusterConfig) -> MrConfig {
         speculative: cfg.speculative,
         checkpoint: cfg.checkpoint,
         fault_seed: cfg.seed ^ 0xFA17,
+        sim: cfg.sim.clone(),
     }
 }
 
@@ -313,6 +317,7 @@ pub fn run_algorithm_with(
         cost,
         centers,
         sim_time: cluster.stats.sim_time(),
+        sim_wallclock: cluster.stats.sim_wallclock(),
         wall_time,
         rounds: cluster.stats.n_rounds(),
         reduced_size,
@@ -402,6 +407,7 @@ pub fn run_algorithm_store_with(
         cost,
         centers,
         sim_time: cluster.stats.sim_time(),
+        sim_wallclock: cluster.stats.sim_wallclock(),
         wall_time,
         rounds: cluster.stats.n_rounds(),
         reduced_size,

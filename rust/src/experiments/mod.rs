@@ -12,6 +12,7 @@ use crate::data::DataGenConfig;
 use crate::geometry::PointStore;
 use crate::metrics::report::{FigureReport, RunRecord};
 use crate::runtime::ComputeBackend;
+use crate::sim::{Heterogeneity, NetworkKind, Placement, SimConfig};
 use anyhow::Result;
 
 pub use crate::coordinator::driver::make_backend;
@@ -652,6 +653,116 @@ pub fn ooc_check(
     })
 }
 
+/// One row of the E15 topology sweep.
+#[derive(Clone, Debug)]
+pub struct TopologySweepRow {
+    /// Algorithm display name.
+    pub algo: String,
+    /// Simulated machine count of this row.
+    pub machines: usize,
+    /// Network scenario name (`flat` | `racked` | `oversubscribed`).
+    pub scenario: &'static str,
+    /// MapReduce rounds executed (identical across scenarios — the sim
+    /// never steers the algorithm).
+    pub rounds: usize,
+    /// Total shuffled bytes (identical across scenarios, same reason).
+    pub shuffle_bytes: usize,
+    /// Discrete-event simulated wall-clock of the whole run — the only
+    /// column the scenario is allowed to change.
+    pub sim_wallclock: std::time::Duration,
+    /// Centers, costs, rounds, and shuffle bytes are bit-identical to the
+    /// sim-off baseline run (the observation-purity contract).
+    pub matches_baseline: bool,
+}
+
+/// The E15 network scenarios for a given machine count: a flat
+/// uncontended-fabric cluster, a racked cluster with log-normal host
+/// speeds, and an 8x-oversubscribed racked cluster with a bimodal
+/// (slow-population) fleet. Racks hold 16 hosts.
+pub fn e15_scenarios(machines: usize) -> [(&'static str, SimConfig); 3] {
+    let racks = machines.div_ceil(16).max(1);
+    let base = SimConfig { enabled: true, ..SimConfig::default() };
+    [
+        ("flat", SimConfig { network: NetworkKind::Shared, ..base.clone() }),
+        (
+            "racked",
+            SimConfig {
+                network: NetworkKind::Topology,
+                racks,
+                hetero: Heterogeneity::LogNormal(0.5),
+                placement: Placement::RackAware,
+                ..base.clone()
+            },
+        ),
+        (
+            "oversubscribed",
+            SimConfig {
+                network: NetworkKind::Topology,
+                racks,
+                oversub: 8.0,
+                hetero: Heterogeneity::Bimodal { slow_frac: 0.1, slow_factor: 4.0 },
+                placement: Placement::RackAware,
+                ..base
+            },
+        ),
+    ]
+}
+
+/// E15 — topology sweep: run the scalable pipelines across machine counts
+/// and the [`e15_scenarios`] network models, reporting rounds / shuffle
+/// bytes / simulated wall-clock per cell. Every sim-on run is checked
+/// bit-identical (centers, cost, rounds, shuffle bytes) to its sim-off
+/// baseline — the simulation only ever adds the wall-clock column. As
+/// machine counts grow, per-round network overhead (leader incast,
+/// contended uplinks, flow latency) grows with them, which is where the
+/// paper's constant-round pipelines pull ahead of round-heavy ones.
+pub fn topology_sweep(
+    params: &ExperimentParams,
+    n: usize,
+    machine_counts: &[usize],
+    backend: &dyn ComputeBackend,
+) -> Result<Vec<TopologySweepRow>> {
+    let data = params.data_config(n, 0).generate();
+    let mut rows = Vec::new();
+    for &m in machine_counts {
+        let base_cfg = ClusterConfig {
+            machines: m,
+            sim: SimConfig::default(),
+            ..params.cluster_config(0)
+        };
+        for algo in Algorithm::figure2() {
+            let base = run_algorithm_with(algo, &data.points, &base_cfg, backend)?;
+            for (scenario, sim) in e15_scenarios(m) {
+                let cfg = ClusterConfig { sim, ..base_cfg.clone() };
+                let out = run_algorithm_with(algo, &data.points, &cfg, backend)?;
+                let matches_baseline = out.centers == base.centers
+                    && out.cost.median.to_bits() == base.cost.median.to_bits()
+                    && out.rounds == base.rounds
+                    && out.stats.shuffle_bytes() == base.stats.shuffle_bytes();
+                log::info!(
+                    "{} m={} {}: rounds {}, wallclock {:.3}s, identical {}",
+                    algo.name(),
+                    m,
+                    scenario,
+                    out.rounds,
+                    out.sim_wallclock.as_secs_f64(),
+                    matches_baseline
+                );
+                rows.push(TopologySweepRow {
+                    algo: algo.name().to_string(),
+                    machines: m,
+                    scenario,
+                    rounds: out.rounds,
+                    shuffle_bytes: out.stats.shuffle_bytes(),
+                    sim_wallclock: out.sim_wallclock,
+                    matches_baseline,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
 /// E7 — Zipf-skew robustness sweep (the "similar results, omitted" claim).
 pub fn skew_sweep(
     params: &ExperimentParams,
@@ -794,6 +905,29 @@ mod tests {
             assert!(r.peak_resident_bytes > 0 && r.peak_resident_bytes <= r.total_bytes);
             assert!(r.rounds >= 1);
         }
+    }
+
+    #[test]
+    fn topology_sweep_is_pure_observation() {
+        let rows = topology_sweep(&tiny(), 1500, &[8, 16], &NativeBackend).unwrap();
+        // 2 machine counts x 4 algorithms x 3 scenarios.
+        assert_eq!(rows.len(), 24);
+        let mut flat = std::time::Duration::ZERO;
+        let mut oversub = std::time::Duration::ZERO;
+        for r in &rows {
+            let tag = format!("{} m={} {}", r.algo, r.machines, r.scenario);
+            assert!(r.matches_baseline, "{tag}: outputs drifted");
+            assert!(r.sim_wallclock > std::time::Duration::ZERO, "{} {}", r.algo, r.scenario);
+            assert!(r.rounds >= 1 && r.shuffle_bytes > 0, "{}", r.algo);
+            match r.scenario {
+                "flat" => flat += r.sim_wallclock,
+                "oversubscribed" => oversub += r.sim_wallclock,
+                _ => {}
+            }
+        }
+        // Slower links + a slow host population can only stretch the
+        // aggregate simulated makespan.
+        assert!(oversub >= flat, "oversubscribed {oversub:?} < flat {flat:?}");
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
 pub mod sampling;
+pub mod sim;
 pub mod summaries;
 pub mod util;
 
@@ -75,6 +76,7 @@ pub mod prelude {
     };
     pub use crate::runtime::{ComputeBackend, NativeBackend};
     pub use crate::sampling::{IterativeSampleConfig, SampleConstants};
+    pub use crate::sim::{ClusterSim, Heterogeneity, NetworkKind, Placement, SimConfig};
     pub use crate::summaries::{Coreset, CoverageSummary, WeightedSet};
     pub use crate::util::rng::Rng;
 }

@@ -17,6 +17,7 @@
 //!   metric-compare           E13: the pipelines across registered metric spaces
 //!   ooc-sweep                E14: file-backed (out-of-core) throughput sweep
 //!   ooc-check                E14: assert file-backed == in-memory, O(chunk) peak
+//!   topology-sweep           E15: rounds vs simulated wall-clock over topologies
 //!   mrc-check                run Sampling-Lloyd and verify MRC^0 bounds
 //! ```
 //!
@@ -163,6 +164,7 @@ fn main() -> Result<()> {
         "metric-compare" => cmd_metric_compare(&cfg, &args)?,
         "ooc-sweep" => cmd_ooc_sweep(&cfg, &args)?,
         "ooc-check" => cmd_ooc_check(&cfg, &args)?,
+        "topology-sweep" => cmd_topology_sweep(&cfg, &args)?,
         "streaming-compare" => cmd_streaming(&cfg, &args)?,
         "kmeans-check" => cmd_kmeans(&cfg, &args)?,
         "mrc-check" => cmd_mrc_check(&cfg)?,
@@ -206,6 +208,11 @@ commands:
   ooc-check          [--n N] [--chunk P]: E14 hard check — every streaming
                      pipeline must match its in-memory twin bit for bit
                      while peaking below one O(chunk) resident window
+  topology-sweep     [--machines LIST] [--n N] [--json FILE]: E15 cluster
+                     topology sweep — every Figure-2 pipeline under the
+                     discrete-event simulation across {flat, racked,
+                     oversubscribed} networks with heterogeneous hosts;
+                     outputs are verified bit-identical to the sim-off run
   mrc-check          run Sampling-Lloyd, assert MRC^0 resource bounds
                      (including the recovery-memory audit)
 
@@ -230,6 +237,10 @@ config keys (TOML [section] key, or --set section.key=value):
   cluster.fail_prob cluster.straggler_prob cluster.straggler_factor
   cluster.max_task_retries cluster.speculative cluster.checkpoint
   cluster.z cluster.seed
+  sim.enabled sim.network(constant|shared|topology) sim.racks sim.oversub
+  sim.nic_mbps sim.compute_mbps sim.latency_us
+  sim.hetero(none|lognormal[:sigma]|bimodal[:frac[:factor]])
+  sim.placement(roundrobin|rackaware) sim.seed
 ";
 
 fn cmd_info(cfg: &AppConfig) -> Result<()> {
@@ -757,6 +768,80 @@ fn cmd_ooc_check(cfg: &AppConfig, args: &Args) -> Result<()> {
         );
     }
     println!("ok: streaming pipelines matched their in-memory twins within one O(chunk) window");
+    Ok(())
+}
+
+fn cmd_topology_sweep(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let machine_counts = match args.flags.get("machines") {
+        Some(s) => parse_ns(s)?,
+        None => vec![10, 100, 1_000, 10_000],
+    };
+    let n = args
+        .flags
+        .get("n")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(100_000);
+    let params = params_from(cfg, 1);
+    let backend = experiments::make_backend(&cfg.cluster);
+    let rows = experiments::topology_sweep(&params, n, &machine_counts, backend.as_ref())?;
+    println!(
+        "== E15: topology sweep (n = {n}; wall-clock is discrete-event simulated, \
+         outputs verified against the sim-off run) =="
+    );
+    let mut t = Table::new(vec![
+        "algorithm",
+        "machines",
+        "scenario",
+        "rounds",
+        "shuffle KiB",
+        "sim wall-clock s",
+        "identical",
+    ]);
+    let mut all_identical = true;
+    for r in &rows {
+        all_identical &= r.matches_baseline;
+        t.row(vec![
+            r.algo.clone(),
+            r.machines.to_string(),
+            r.scenario.to_string(),
+            r.rounds.to_string(),
+            format!("{:.1}", r.shuffle_bytes as f64 / 1024.0),
+            format!("{:.6}", r.sim_wallclock.as_secs_f64()),
+            if r.matches_baseline { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "(identical = centers, costs, rounds, and shuffle bytes bit-identical to the \
+         same run with sim.enabled = false)"
+    );
+    if let Some(path) = args.flags.get("json") {
+        // Hand-rolled JSON writer (offline build, no serde): one object per
+        // row, floats printed with enough digits to round-trip.
+        let mut out = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            out.push_str(&format!(
+                "  {{\"algo\": \"{}\", \"machines\": {}, \"scenario\": \"{}\", \
+                 \"rounds\": {}, \"shuffle_bytes\": {}, \"sim_wallclock_s\": {:.9}, \
+                 \"matches_baseline\": {}}}{}\n",
+                r.algo,
+                r.machines,
+                r.scenario,
+                r.rounds,
+                r.shuffle_bytes,
+                r.sim_wallclock.as_secs_f64(),
+                r.matches_baseline,
+                if i + 1 == rows.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("]\n");
+        std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+        println!("wrote {} rows to {path}", rows.len());
+    }
+    if !all_identical {
+        bail!("a simulated run diverged from its baseline: the sim must be a pure observer");
+    }
     Ok(())
 }
 

@@ -5,6 +5,7 @@ use super::kv::MemSize;
 use super::recovery::{self, FaultModel, RecoveryLog, TaskFate};
 use super::stats::{RoundStats, RunStats};
 use super::MrError;
+use crate::sim::{ClusterSim, SimConfig, TaskSpec};
 use crate::util::pool::ThreadPool;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -56,6 +57,12 @@ pub struct MrConfig {
     pub checkpoint: bool,
     /// Seed of the deterministic fault/straggler stream.
     pub fault_seed: u64,
+    /// Discrete-event simulation of the cluster's timing (`sim.*` keys):
+    /// when `sim.enabled`, every round also records a deterministic
+    /// [`RoundStats::sim_wallclock`] replayed over a modeled network and
+    /// heterogeneous hosts. Pure observation — outputs, round counts,
+    /// shuffle bytes, and fates are bit-identical with it on or off.
+    pub sim: SimConfig,
 }
 
 impl Default for MrConfig {
@@ -72,6 +79,7 @@ impl Default for MrConfig {
             speculative: false,
             checkpoint: false,
             fault_seed: 0xFA17,
+            sim: SimConfig::default(),
         }
     }
 }
@@ -112,6 +120,9 @@ pub struct MrCluster {
     /// cluster: workers are spawned once in [`MrCluster::new`] and reused,
     /// instead of the previous scoped-thread spawn per round.
     pool: ThreadPool,
+    /// The discrete-event timing observer (`Some` iff `config.sim.enabled`):
+    /// replays each round's deterministic facts over the modeled cluster.
+    sim: Option<ClusterSim>,
 }
 
 impl Default for MrCluster {
@@ -269,11 +280,47 @@ impl MrCluster {
         let fault_rng = crate::util::rng::Rng::new(config.fault_seed);
         // Spawn the workers once; every round of every job reuses them.
         let pool = ThreadPool::new(config.effective_threads());
+        let sim = config
+            .sim
+            .enabled
+            .then(|| ClusterSim::new(&config.sim, config.n_machines));
         MrCluster {
             config,
             stats: RunStats::default(),
             fault_rng,
             pool,
+            sim,
+        }
+    }
+
+    /// The discrete-event simulator attached to this cluster (`Some` iff
+    /// `config.sim.enabled`) — tests use it to replay rounds and inspect
+    /// event traces and host speeds.
+    pub fn sim(&self) -> Option<&ClusterSim> {
+        self.sim.as_ref()
+    }
+
+    /// Simulated wall-clock of a machine round, or zero with sim off.
+    fn sim_machine(&self, specs: &[TaskSpec], broadcast_bytes: usize) -> Duration {
+        match &self.sim {
+            Some(s) => s.machine_round(specs, broadcast_bytes).wallclock,
+            None => Duration::ZERO,
+        }
+    }
+
+    /// Simulated wall-clock of a shuffle round, or zero with sim off.
+    fn sim_shuffle(&self, map: &[TaskSpec], reduce: &[TaskSpec]) -> Duration {
+        match &self.sim {
+            Some(s) => s.shuffle_round(map, reduce).wallclock,
+            None => Duration::ZERO,
+        }
+    }
+
+    /// Simulated wall-clock of a leader round, or zero with sim off.
+    fn sim_leader(&self, work_bytes: usize, attempts: usize) -> Duration {
+        match &self.sim {
+            Some(s) => s.leader_round(work_bytes, attempts).wallclock,
+            None => Duration::ZERO,
         }
     }
 
@@ -416,6 +463,11 @@ impl MrCluster {
         let mut shuffle_bytes = 0usize;
         let mut machines_used = 0usize;
         let mut intermediate: Vec<(K2, V2)> = Vec::new();
+        // Per-machine task specs for the timing simulation. Inputs carry
+        // no `MemSize` bound, so map work is modeled by the bytes the
+        // task emits — deterministic, and proportional to what crosses
+        // the machine's uplink.
+        let mut map_specs: Vec<TaskSpec> = Vec::with_capacity(nm);
         for (m, (d, out)) in results.into_iter().enumerate() {
             if !out.is_empty() || d > Duration::ZERO {
                 machines_used += 1;
@@ -433,10 +485,13 @@ impl MrCluster {
                 || exec_map(&per_machine[m]),
             );
             map_max = map_max.max(recovery::fate_duration(d, &fate, &model, &mut recovery_log));
+            let before = shuffle_bytes;
             for (k, v) in out {
                 shuffle_bytes += k.mem_bytes() + v.mem_bytes();
                 intermediate.push((k, v));
             }
+            let emitted = shuffle_bytes - before;
+            map_specs.push(TaskSpec::new(emitted, emitted, fate.attempts()));
         }
 
         // ---- shuffle: group by key, key -> machine by hash ----
@@ -459,6 +514,12 @@ impl MrCluster {
 
         // ---- reduce phase (timed per machine) ----
         let reduce_fates = self.plan_phase(label, nm)?;
+        // Reduce task r both receives and processes machine_mem[r] bytes.
+        let reduce_specs: Vec<TaskSpec> = machine_mem
+            .iter()
+            .zip(reduce_fates.iter())
+            .map(|(&b, fate)| TaskSpec::new(b, 0, fate.attempts()))
+            .collect();
         let reduce_ref = &reduce;
         let exec_reduce = |pairs: &Vec<(K2, Vec<V2>)>| -> Vec<(K3, V3)> {
             let mut out: Vec<(K3, V3)> = Vec::new();
@@ -497,13 +558,14 @@ impl MrCluster {
         }
 
         self.stats.push(RoundStats {
-            label: label.to_string(),
             map_max,
             reduce_max,
             shuffle_bytes,
             max_machine_mem,
             machines_used: machines_used.max(1),
             recovery: recovery_log,
+            sim_wallclock: self.sim_shuffle(&map_specs, &reduce_specs),
+            ..RoundStats::new(label)
         });
         Ok(output)
     }
@@ -562,6 +624,7 @@ impl MrCluster {
         let mut machine_time = vec![Duration::ZERO; nm.min(parts.len()).max(1)];
         let mut outputs = Vec::with_capacity(parts.len());
         let mut gathered_bytes = 0usize;
+        let mut specs: Vec<TaskSpec> = Vec::with_capacity(parts.len());
         for (i, (d, out)) in results.into_iter().enumerate() {
             let fate = fates[i];
             // Lost output partition: replay from the resident block. The
@@ -578,6 +641,7 @@ impl MrCluster {
             let mt_len = machine_time.len();
             machine_time[i % mt_len] +=
                 recovery::fate_duration(d, &fate, &model, &mut recovery_log);
+            specs.push(TaskSpec::new(parts[i].mem_bytes(), out.mem_bytes(), fate.attempts()));
             gathered_bytes += out.mem_bytes();
             outputs.push(out);
         }
@@ -591,13 +655,13 @@ impl MrCluster {
         }
 
         self.stats.push(RoundStats {
-            label: label.to_string(),
             map_max,
-            reduce_max: Duration::ZERO,
             shuffle_bytes: gathered_bytes,
             max_machine_mem,
             machines_used: parts.len().min(nm),
             recovery: recovery_log,
+            sim_wallclock: self.sim_machine(&specs, extra_mem),
+            ..RoundStats::new(label)
         });
         Ok(outputs)
     }
@@ -663,6 +727,7 @@ impl MrCluster {
         let mut machine_time = vec![Duration::ZERO; nm.min(n_parts).max(1)];
         let mut outputs = Vec::with_capacity(n_parts);
         let mut gathered_bytes = 0usize;
+        let mut specs: Vec<TaskSpec> = Vec::with_capacity(n_parts);
         for (i, (d, out)) in results.into_iter().enumerate() {
             let fate = fates[i];
             let out = if fate.failures > 0 {
@@ -680,6 +745,9 @@ impl MrCluster {
             let mt_len = machine_time.len();
             machine_time[i % mt_len] +=
                 recovery::fate_duration(d, &fate, &model, &mut recovery_log);
+            // Post-round block size: deterministic (the mutation is), and
+            // it is what the machine actually held while computing.
+            specs.push(TaskSpec::new(parts[i].mem_bytes(), out.mem_bytes(), fate.attempts()));
             gathered_bytes += out.mem_bytes();
             outputs.push(out);
         }
@@ -692,13 +760,13 @@ impl MrCluster {
         }
 
         self.stats.push(RoundStats {
-            label: label.to_string(),
             map_max,
-            reduce_max: Duration::ZERO,
             shuffle_bytes: gathered_bytes,
             max_machine_mem,
             machines_used: n_parts.min(nm),
             recovery: recovery_log,
+            sim_wallclock: self.sim_machine(&specs, extra_mem),
+            ..RoundStats::new(label)
         });
         Ok(outputs)
     }
@@ -731,13 +799,12 @@ impl MrCluster {
         let out = replay_lost(fate, out, input_mem, &mut recovery_log, |_| input_mem, &f);
         let d = recovery::fate_duration(measured, &fate, &model, &mut recovery_log);
         self.stats.push(RoundStats {
-            label: label.to_string(),
             map_max: d,
-            reduce_max: Duration::ZERO,
-            shuffle_bytes: 0,
             max_machine_mem: input_mem,
             machines_used: 1,
             recovery: recovery_log,
+            sim_wallclock: self.sim_leader(input_mem, fate.attempts()),
+            ..RoundStats::new(label)
         });
         Ok(out)
     }
@@ -1078,6 +1145,74 @@ mod tests {
         assert_eq!(rec_off.speculative_launched, 0);
         assert_eq!(rec_on.speculative_launched, 8, "every task straggled");
         assert_eq!(rec_on.speculative_wins, 8, "factor 8 > 2 => backup wins");
+    }
+
+    /// `sim.*` is pure timing observation: with the simulation on, every
+    /// output, round count, and shuffle byte stays bit-identical to the
+    /// sim-off run — only `sim_wallclock` appears. And because the
+    /// simulated clock is a function of byte counts and fates (never of
+    /// measured thread durations), it is identical across the pooled and
+    /// sequential executors and across repeats.
+    #[test]
+    fn sim_is_pure_observation_and_deterministic() {
+        let run = |enabled: bool, parallel: bool| {
+            let mut c = MrCluster::new(MrConfig {
+                n_machines: 8,
+                parallel,
+                threads: 4,
+                fail_prob: 0.3,
+                fault_seed: 0xB0B,
+                sim: SimConfig {
+                    enabled,
+                    network: crate::sim::NetworkKind::Topology,
+                    racks: 2,
+                    oversub: 4.0,
+                    hetero: crate::sim::Heterogeneity::LogNormal(0.5),
+                    ..SimConfig::default()
+                },
+                ..Default::default()
+            });
+            let docs: Vec<(usize, String)> =
+                (0..12).map(|i| (i, format!("w{} w{} x", i % 3, i % 5))).collect();
+            let mut words = c
+                .run_round(
+                    "wc",
+                    docs,
+                    |_k, d: &String, emit| {
+                        for w in d.split_whitespace() {
+                            emit(w.to_string(), 1usize);
+                        }
+                    },
+                    |k: &String, vs: &[usize], emit| emit(k.clone(), vs.iter().sum::<usize>()),
+                )
+                .unwrap();
+            words.sort();
+            let parts: Vec<Vec<u64>> = (0..16).map(|i| vec![i as u64; 32]).collect();
+            let sums = c
+                .run_machine_round("sums", &parts, 64, |_i, p: &Vec<u64>| p.iter().sum::<u64>())
+                .unwrap();
+            let fin = c.run_leader_round("final", 256, || 9u8).unwrap();
+            (
+                words,
+                sums,
+                fin,
+                c.stats.n_rounds(),
+                c.stats.shuffle_bytes(),
+                c.stats.sim_wallclock(),
+            )
+        };
+        let off = run(false, false);
+        let on = run(true, false);
+        assert_eq!(off.0, on.0, "outputs must not depend on the sim");
+        assert_eq!(off.1, on.1);
+        assert_eq!(off.2, on.2);
+        assert_eq!(off.3, on.3, "round count must not depend on the sim");
+        assert_eq!(off.4, on.4, "shuffle bytes must not depend on the sim");
+        assert_eq!(off.5, Duration::ZERO, "sim off records no wallclock");
+        assert!(on.5 > Duration::ZERO, "sim on records a wallclock");
+        // Bit-identical across repeats and executors.
+        assert_eq!(on.5, run(true, false).5);
+        assert_eq!(on.5, run(true, true).5);
     }
 
     #[test]

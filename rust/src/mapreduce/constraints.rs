@@ -136,13 +136,10 @@ mod tests {
         let mut s = RunStats::default();
         for i in 0..rounds {
             s.push(RoundStats {
-                label: format!("r{i}"),
                 map_max: Duration::from_millis(1),
-                reduce_max: Duration::ZERO,
-                shuffle_bytes: 0,
                 max_machine_mem: mem,
                 machines_used: machines,
-                recovery: Default::default(),
+                ..RoundStats::new(format!("r{i}"))
             });
         }
         s

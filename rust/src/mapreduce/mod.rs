@@ -36,6 +36,14 @@
 //! first). Stragglers can be mitigated by speculative backups. All fates
 //! are pre-drawn from the seeded fault stream, so faulty runs complete
 //! with outputs bit-identical to the fault-free run, at any thread count.
+//!
+//! **Timing simulation** (see [`crate::sim`]): with `sim.enabled`, every
+//! round additionally records [`RoundStats::sim_wallclock`] — a
+//! discrete-event replay of the round over a modeled cluster (contended
+//! network links, seeded heterogeneous host speeds, rack topology). The
+//! simulation is a pure observer fed by deterministic facts (byte counts,
+//! pre-drawn fates), so enabling it never changes outputs, round counts,
+//! shuffle bytes, or MRC⁰ verdicts — only the extra timing column.
 
 pub mod cluster;
 pub mod constraints;

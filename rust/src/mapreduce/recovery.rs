@@ -83,6 +83,13 @@ impl TaskFate {
     pub fn is_clean(&self) -> bool {
         self.failures == 0 && !self.straggles
     }
+
+    /// Total attempts the task executes: every lost attempt plus the
+    /// surviving one. This is what the discrete-event simulation charges
+    /// as serial rework on the task's host (`sim::TaskSpec::attempts`).
+    pub fn attempts(&self) -> usize {
+        self.failures + 1
+    }
 }
 
 /// Draw the fates of one round's `n_tasks` tasks, in task-index order.

@@ -1,0 +1,152 @@
+//! Per-host compute model: seeded heterogeneity distributions.
+//!
+//! Each simulated host gets a relative speed drawn once, at cluster
+//! construction, from a seeded distribution in host-index order — the
+//! draw never interleaves with the fault stream (`mapreduce/recovery.rs`)
+//! or the data RNG, so enabling the simulation cannot perturb algorithm
+//! outputs. Slow hosts are how stragglers *emerge* in the simulated
+//! cluster: a task landing on a 4x-slow host simply takes 4x longer, and
+//! the round's critical path stretches accordingly — no
+//! `straggler_factor` multiplier involved.
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Distribution of per-host relative compute speeds (1.0 = nominal).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Heterogeneity {
+    /// Homogeneous cluster: every host runs at speed 1.0.
+    None,
+    /// Log-normal speeds: `speed = exp(sigma * z)` with `z` standard
+    /// normal, clamped to `[0.1, 10.0]`. The classic long-tail model of
+    /// mixed-generation fleets.
+    LogNormal(f64),
+    /// A two-population fleet: a `slow_frac` fraction of hosts run at
+    /// `1 / slow_factor` speed, the rest at 1.0.
+    Bimodal {
+        /// Probability a host lands in the slow population.
+        slow_frac: f64,
+        /// Slowdown of the slow population (>= 1.0).
+        slow_factor: f64,
+    },
+}
+
+impl Heterogeneity {
+    /// Parse the `sim.hetero` config value: `none`, `lognormal[:SIGMA]`
+    /// (default sigma 0.5), or `bimodal[:FRAC[:FACTOR]]` (defaults
+    /// 0.1 and 4.0).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("");
+        let num = |p: Option<&str>, default: f64| -> Result<f64, String> {
+            match p {
+                None => Ok(default),
+                Some(v) => v
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad heterogeneity parameter {v:?}")),
+            }
+        };
+        match head {
+            "none" => Ok(Heterogeneity::None),
+            "lognormal" => Ok(Heterogeneity::LogNormal(num(parts.next(), 0.5)?)),
+            "bimodal" => Ok(Heterogeneity::Bimodal {
+                slow_frac: num(parts.next(), 0.1)?,
+                slow_factor: num(parts.next(), 4.0)?,
+            }),
+            other => Err(format!(
+                "unknown heterogeneity {other:?} \
+                 (none | lognormal[:sigma] | bimodal[:frac[:factor]])"
+            )),
+        }
+    }
+
+    /// Draw the `n` host speeds, in host-index order, from a dedicated
+    /// RNG stream derived from `seed`. Pure: same `(self, n, seed)` ⇒
+    /// same speeds, bit-for-bit.
+    pub fn draw_speeds(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed ^ 0x4057_5EED);
+        (0..n)
+            .map(|_| match *self {
+                Heterogeneity::None => 1.0,
+                Heterogeneity::LogNormal(sigma) => {
+                    (sigma * rng.normal()).exp().clamp(0.1, 10.0)
+                }
+                Heterogeneity::Bimodal { slow_frac, slow_factor } => {
+                    if rng.bernoulli(slow_frac) {
+                        1.0 / slow_factor.max(1.0)
+                    } else {
+                        1.0
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+impl fmt::Display for Heterogeneity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Heterogeneity::None => write!(f, "none"),
+            Heterogeneity::LogNormal(sigma) => write!(f, "lognormal:{sigma}"),
+            Heterogeneity::Bimodal { slow_frac, slow_factor } => {
+                write!(f, "bimodal:{slow_frac}:{slow_factor}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_defaults() {
+        assert_eq!(Heterogeneity::parse("none").unwrap(), Heterogeneity::None);
+        assert_eq!(
+            Heterogeneity::parse("lognormal").unwrap(),
+            Heterogeneity::LogNormal(0.5)
+        );
+        assert_eq!(
+            Heterogeneity::parse("lognormal:0.25").unwrap(),
+            Heterogeneity::LogNormal(0.25)
+        );
+        assert_eq!(
+            Heterogeneity::parse("bimodal:0.2:8").unwrap(),
+            Heterogeneity::Bimodal { slow_frac: 0.2, slow_factor: 8.0 }
+        );
+        assert_eq!(
+            Heterogeneity::parse("bimodal").unwrap(),
+            Heterogeneity::Bimodal { slow_frac: 0.1, slow_factor: 4.0 }
+        );
+        assert!(Heterogeneity::parse("gauss").is_err());
+        assert!(Heterogeneity::parse("lognormal:x").is_err());
+        for s in ["none", "lognormal:0.5", "bimodal:0.1:4"] {
+            let h = Heterogeneity::parse(s).unwrap();
+            assert_eq!(h.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn homogeneous_speeds_are_unit() {
+        assert_eq!(Heterogeneity::None.draw_speeds(5, 9), vec![1.0; 5]);
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_seed_sensitive() {
+        let h = Heterogeneity::LogNormal(0.5);
+        assert_eq!(h.draw_speeds(64, 7), h.draw_speeds(64, 7));
+        assert_ne!(h.draw_speeds(64, 7), h.draw_speeds(64, 8));
+        assert!(h
+            .draw_speeds(256, 7)
+            .iter()
+            .all(|&s| (0.1..=10.0).contains(&s)));
+    }
+
+    #[test]
+    fn bimodal_hits_both_populations() {
+        let h = Heterogeneity::Bimodal { slow_frac: 0.5, slow_factor: 4.0 };
+        let speeds = h.draw_speeds(200, 3);
+        assert!(speeds.iter().any(|&s| s == 1.0));
+        assert!(speeds.iter().any(|&s| s == 0.25));
+    }
+}

@@ -1,0 +1,759 @@
+//! Discrete-event cluster simulation: simulated wall-clock for every
+//! MapReduce round, with contended networks and heterogeneous hosts.
+//!
+//! The real engine (`mapreduce/`) executes rounds on actual threads and
+//! measures them with `Instant` — numbers that vary run to run. This
+//! module adds a *deterministic timing observer*: given the round's
+//! deterministic facts (byte counts per task, pre-drawn attempt counts
+//! from the fate stream, seeded host speeds), it replays the round as a
+//! discrete-event simulation over a modeled cluster and reports a
+//! simulated wall-clock that is a pure function of `(inputs, seed,
+//! sim.* config)` — bit-identical across repeats, thread counts, and
+//! machines.
+//!
+//! ## Determinism contract
+//!
+//! * **Observation, never control flow.** The simulation consumes the
+//!   engine's byte counts and fates; nothing flows back. Clustering
+//!   outputs, round counts, shuffle bytes, and MRC⁰ verdicts are
+//!   bit-identical with `sim.enabled` on or off (asserted by the
+//!   scenario matrix).
+//! * **Own RNG stream.** Host speeds are drawn from `sim.seed` at
+//!   cluster construction — the fault stream in `mapreduce/recovery.rs`
+//!   and the data RNG are never touched.
+//! * **No ambient nondeterminism.** No `Instant`, no wall clock, no
+//!   `HashMap` anywhere under `sim/` (checked by a property test);
+//!   events are totally ordered by `(time, seq)`; floating-point work
+//!   happens in a fixed order.
+//!
+//! ## Round shapes
+//!
+//! * [`ClusterSim::machine_round`] — the engine's resident-partition
+//!   round: an optional broadcast of the round's closure payload from
+//!   the leader to every participating host, per-host FIFO execution of
+//!   that host's tasks, then a gather flow per task output back to the
+//!   leader. Gather incast at the leader's ingress link is where
+//!   large-cluster rounds hurt.
+//! * [`ClusterSim::shuffle_round`] — map compute, egress flows over the
+//!   source uplinks (shuffle write), a barrier, ingress flows over the
+//!   destination uplinks (shuffle read), reduce compute.
+//! * [`ClusterSim::leader_round`] — sequential leader-side work.
+//!
+//! A task with `attempts = 1 + failures` simply computes `attempts`
+//! times as long — lost attempts rerun serially on their host, so
+//! injected faults stretch the simulated critical path exactly where
+//! lineage replay stretches the real one. Stragglers are *emergent*:
+//! a slow host (drawn from [`Heterogeneity`]) or a contended uplink
+//! delays that host's chain and the round waits on it; the legacy
+//! `straggler_factor` multiplier plays no part in `sim_wallclock`.
+
+pub mod engine;
+pub mod host;
+pub mod network;
+pub mod placement;
+
+pub use engine::{EventQueue, SimTime, TraceEvent, TraceKind};
+pub use host::Heterogeneity;
+pub use network::{NetSim, NetworkKind, NetworkModel};
+pub use placement::{Placement, Topology};
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// The `sim.*` configuration block: everything the simulated cluster
+/// needs, with `enabled: false` (no simulation, zero overhead) as the
+/// default.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Master switch; when off, `MrCluster` records `sim_wallclock = 0`.
+    pub enabled: bool,
+    /// Contention model (`sim.network`): constant | shared | topology.
+    pub network: NetworkKind,
+    /// Rack count for the topology model (`sim.racks`).
+    pub racks: usize,
+    /// Fabric/uplink oversubscription factor (`sim.oversub`, >= 1.0).
+    pub oversub: f64,
+    /// Per-host NIC bandwidth in megabits/s (`sim.nic_mbps`).
+    pub nic_mbps: f64,
+    /// Per-host compute throughput in megabytes of task input processed
+    /// per second at speed 1.0 (`sim.compute_mbps`).
+    pub compute_mbps: f64,
+    /// Flow start latency in microseconds (`sim.latency_us`) — charged
+    /// once per flow, so it taxes round-heavy pipelines.
+    pub latency_us: f64,
+    /// Host speed distribution (`sim.hetero`).
+    pub hetero: Heterogeneity,
+    /// Task→host placement strategy (`sim.placement`).
+    pub placement: Placement,
+    /// Seed of the simulation's private RNG stream (`sim.seed`).
+    pub seed: u64,
+    /// Record per-round event traces (tests; off in production runs).
+    pub record_trace: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            enabled: false,
+            network: NetworkKind::Constant,
+            racks: 1,
+            oversub: 1.0,
+            nic_mbps: 1000.0,
+            compute_mbps: 500.0,
+            latency_us: 500.0,
+            hetero: Heterogeneity::None,
+            placement: Placement::RoundRobin,
+            seed: 0x51D0,
+            record_trace: false,
+        }
+    }
+}
+
+impl SimConfig {
+    /// NIC bandwidth in bytes/second.
+    pub fn nic_bps(&self) -> f64 {
+        self.nic_mbps * 1e6 / 8.0
+    }
+
+    /// Compute throughput in bytes/second at speed 1.0.
+    pub fn compute_bps(&self) -> f64 {
+        self.compute_mbps * 1e6
+    }
+
+    /// Flow start latency as simulated time.
+    pub fn latency(&self) -> SimTime {
+        SimTime::from_secs_f64(self.latency_us * 1e-6)
+    }
+}
+
+/// One task's deterministic work description, as the engine reports it:
+/// bytes in, bytes out, and the pre-drawn attempt count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskSpec {
+    /// Input bytes one attempt processes.
+    pub work_bytes: usize,
+    /// Output bytes the surviving attempt ships (gather or shuffle).
+    pub out_bytes: usize,
+    /// Total attempts executed (`1 + failures` from the fate stream);
+    /// 0 is treated as 1.
+    pub attempts: usize,
+}
+
+impl TaskSpec {
+    /// Convenience constructor.
+    pub fn new(work_bytes: usize, out_bytes: usize, attempts: usize) -> TaskSpec {
+        TaskSpec { work_bytes, out_bytes, attempts }
+    }
+}
+
+/// The simulation's verdict on one round.
+#[derive(Clone, Debug)]
+pub struct RoundSim {
+    /// Simulated wall-clock of the round (last event's timestamp).
+    pub wallclock: Duration,
+    /// Critical-path lower bound: no schedule could beat the slowest
+    /// single host chain or the slowest uncontended flow (minus 1µs of
+    /// rounding headroom).
+    pub lower_bound: Duration,
+    /// Serial upper bound: all compute plus all flows back to back
+    /// (plus 1µs of rounding headroom). Fair sharing is work-conserving,
+    /// so the simulated round can never exceed it.
+    pub upper_bound: Duration,
+    /// Event trace in processing order (empty unless
+    /// `SimConfig::record_trace`).
+    pub trace: Vec<TraceEvent>,
+}
+
+/// The simulated cluster: topology, link table, and per-host speeds.
+/// Construction is pure; each round method replays one round and is
+/// `&self` — the simulator carries no cross-round mutable state, so a
+/// round's timing depends only on its own inputs.
+#[derive(Clone, Debug)]
+pub struct ClusterSim {
+    cfg: SimConfig,
+    topo: Topology,
+    model: NetworkModel,
+    speeds: Vec<f64>,
+}
+
+impl ClusterSim {
+    /// Build the simulated cluster for `hosts` machines, drawing host
+    /// speeds from `cfg.hetero` under `cfg.seed`.
+    pub fn new(cfg: &SimConfig, hosts: usize) -> ClusterSim {
+        let topo = Topology::new(hosts, cfg.racks);
+        let speeds = cfg.hetero.draw_speeds(topo.hosts, cfg.seed);
+        ClusterSim::with_speeds_topo(cfg, topo, speeds)
+    }
+
+    /// Build with explicit per-host speeds (host count = `speeds.len()`)
+    /// — the hook the analytic oracle tests use.
+    pub fn with_speeds(cfg: &SimConfig, speeds: Vec<f64>) -> ClusterSim {
+        let topo = Topology::new(speeds.len(), cfg.racks);
+        ClusterSim::with_speeds_topo(cfg, topo, speeds)
+    }
+
+    fn with_speeds_topo(cfg: &SimConfig, topo: Topology, speeds: Vec<f64>) -> ClusterSim {
+        assert_eq!(speeds.len(), topo.hosts);
+        let model = NetworkModel::new(cfg.network, topo, cfg.nic_bps(), cfg.oversub);
+        ClusterSim { cfg: cfg.clone(), topo, model, speeds }
+    }
+
+    /// The drawn per-host speeds, in host order.
+    pub fn speeds(&self) -> &[f64] {
+        &self.speeds
+    }
+
+    /// The simulated cluster shape.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Seconds one task's whole attempt chain computes on `host`.
+    fn compute_secs(&self, spec: &TaskSpec, host: usize) -> f64 {
+        spec.work_bytes as f64 * spec.attempts.max(1) as f64
+            / (self.cfg.compute_bps() * self.speeds[host])
+    }
+
+    /// Simulate a resident-partition ("machine") round: broadcast of
+    /// `broadcast_bytes` to each participating host, per-host FIFO
+    /// compute of `tasks` (task `i` placed by `sim.placement`), and a
+    /// gather flow of each task's output back to the leader.
+    pub fn machine_round(&self, tasks: &[TaskSpec], broadcast_bytes: usize) -> RoundSim {
+        let mut run = Run::new(self);
+        for (i, spec) in tasks.iter().enumerate() {
+            let h = self.cfg.placement.host_for(i, &self.topo);
+            run.tasks.push(TaskRt {
+                host: h as u32,
+                compute: SimTime::from_secs_f64(self.compute_secs(spec, h)),
+                out_bytes: spec.out_bytes as f64,
+                in_bytes: 0.0,
+                kind: TaskKind::Gathered,
+            });
+            run.hosts[h].ready.push_back(i as u32);
+        }
+        run.outputs_pending = tasks.len();
+
+        // Bounds, from the same primitives the event loop uses.
+        let lat = self.cfg.latency_us * 1e-6;
+        let mut per_host = vec![0.0f64; self.topo.hosts];
+        let (mut lower, mut upper) = (0.0f64, 0.0f64);
+        for (i, spec) in tasks.iter().enumerate() {
+            let h = self.cfg.placement.host_for(i, &self.topo);
+            per_host[h] += self.compute_secs(spec, h);
+            if h != 0 && spec.out_bytes > 0 {
+                let route = self.model.route_to_leader(h);
+                let solo = lat + self.model.solo_secs(&route, spec.out_bytes as f64);
+                lower = lower.max(solo);
+                upper += solo;
+            }
+        }
+        for h in 0..self.topo.hosts {
+            lower = lower.max(per_host[h]);
+            upper += per_host[h];
+            if broadcast_bytes > 0 && h != 0 && !run.hosts[h].ready.is_empty() {
+                let solo = lat
+                    + self
+                        .model
+                        .solo_secs(&self.model.route_from_leader(h), broadcast_bytes as f64);
+                lower = lower.max(solo);
+                upper += solo;
+            }
+        }
+
+        // t = 0: leader computes immediately; other hosts wait for the
+        // broadcast (if there is one).
+        for h in 0..self.topo.hosts {
+            if run.hosts[h].ready.is_empty() {
+                continue;
+            }
+            if broadcast_bytes > 0 && h != 0 {
+                run.hosts[h].gate = true;
+                let route = self.model.route_from_leader(h);
+                run.launch_flow(route, broadcast_bytes as f64, FlowTag::Broadcast(h as u32));
+            } else {
+                run.open_gate(h);
+            }
+        }
+        run.finish(lower, upper)
+    }
+
+    /// Simulate a shuffle round: `map` tasks compute and write their
+    /// outputs over the source uplinks; when the last byte lands, each
+    /// `reduce` task's input crosses the destination uplink and its
+    /// compute runs. Reduce task `r`'s transfer and compute are both
+    /// sized by its `work_bytes` (the bytes it receives).
+    pub fn shuffle_round(&self, map: &[TaskSpec], reduce: &[TaskSpec]) -> RoundSim {
+        let mut run = Run::new(self);
+        for (i, spec) in map.iter().enumerate() {
+            let h = self.cfg.placement.host_for(i, &self.topo);
+            run.tasks.push(TaskRt {
+                host: h as u32,
+                compute: SimTime::from_secs_f64(self.compute_secs(spec, h)),
+                out_bytes: spec.out_bytes as f64,
+                in_bytes: 0.0,
+                kind: TaskKind::Map,
+            });
+            run.hosts[h].ready.push_back(i as u32);
+        }
+        for (r, spec) in reduce.iter().enumerate() {
+            let h = self.cfg.placement.host_for(r, &self.topo);
+            let id = run.tasks.len() as u32;
+            run.tasks.push(TaskRt {
+                host: h as u32,
+                compute: SimTime::from_secs_f64(self.compute_secs(spec, h)),
+                out_bytes: 0.0,
+                in_bytes: spec.work_bytes as f64,
+                kind: TaskKind::Reduce,
+            });
+            run.reduce_ids.push(id);
+        }
+        run.map_out_pending = map.len();
+        run.reduces_pending = reduce.len();
+
+        let lat = self.cfg.latency_us * 1e-6;
+        let mut per_host = vec![0.0f64; self.topo.hosts];
+        let (mut lower, mut upper) = (0.0f64, 0.0f64);
+        for (i, spec) in map.iter().enumerate() {
+            let h = self.cfg.placement.host_for(i, &self.topo);
+            per_host[h] += self.compute_secs(spec, h);
+            if spec.out_bytes > 0 {
+                let solo = lat
+                    + self
+                        .model
+                        .solo_secs(&self.model.route_shuffle_out(h), spec.out_bytes as f64);
+                lower = lower.max(solo);
+                upper += solo;
+            }
+        }
+        for (r, spec) in reduce.iter().enumerate() {
+            let h = self.cfg.placement.host_for(r, &self.topo);
+            per_host[h] += self.compute_secs(spec, h);
+            if spec.work_bytes > 0 {
+                let solo = lat
+                    + self
+                        .model
+                        .solo_secs(&self.model.route_shuffle_in(h), spec.work_bytes as f64);
+                lower = lower.max(solo);
+                upper += solo;
+            }
+        }
+        for v in &per_host {
+            lower = lower.max(*v);
+            upper += *v;
+        }
+
+        if map.is_empty() {
+            run.fire_barrier();
+        } else {
+            for h in 0..self.topo.hosts {
+                if !run.hosts[h].ready.is_empty() {
+                    run.open_gate(h);
+                }
+            }
+        }
+        run.finish(lower, upper)
+    }
+
+    /// Simulate a leader-only round: `work_bytes × attempts` of compute
+    /// on host 0, no network.
+    pub fn leader_round(&self, work_bytes: usize, attempts: usize) -> RoundSim {
+        let spec = TaskSpec::new(work_bytes, 0, attempts);
+        let secs = self.compute_secs(&spec, 0);
+        let t = SimTime::from_secs_f64(secs);
+        let mut trace = Vec::new();
+        if self.cfg.record_trace {
+            trace.push(TraceEvent { time: SimTime::ZERO, kind: TraceKind::TaskStart, a: 0, b: 0 });
+            trace.push(TraceEvent { time: t, kind: TraceKind::TaskDone, a: 0, b: 0 });
+        }
+        RoundSim {
+            wallclock: t.as_duration(),
+            lower_bound: Duration::from_nanos(t.0.saturating_sub(SLACK_NS)),
+            upper_bound: Duration::from_nanos(t.0 + SLACK_NS),
+            trace,
+        }
+    }
+}
+
+/// Rounding headroom on the analytic bounds: bound arithmetic and event
+/// arithmetic round to nanoseconds at different points, so give the
+/// comparison a microsecond of slack each way.
+const SLACK_NS: u64 = 1_000;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// A flow's start latency elapsed: it enters the network now.
+    FlowJoin(u32),
+    /// A task's attempt chain finished computing.
+    TaskDone(u32),
+}
+
+#[derive(Clone, Copy, Debug)]
+enum FlowTag {
+    /// Round payload reaching a host; opens its gate.
+    Broadcast(u32),
+    /// A task output reaching the leader.
+    Gather,
+    /// A map task's shuffle write landing in the fabric.
+    MapOut,
+    /// A reduce task's shuffle read arriving; readies that task.
+    ReduceIn(u32),
+}
+
+#[derive(Clone, Debug)]
+struct Flow {
+    route: Vec<usize>,
+    bytes: f64,
+    tag: FlowTag,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TaskKind {
+    /// Output gathers to the leader (machine round).
+    Gathered,
+    /// Output shuffles out (map side).
+    Map,
+    /// Consumes a shuffle input (reduce side).
+    Reduce,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct TaskRt {
+    host: u32,
+    compute: SimTime,
+    out_bytes: f64,
+    in_bytes: f64,
+    kind: TaskKind,
+}
+
+#[derive(Clone, Debug, Default)]
+struct HostSched {
+    /// Blocked until the round broadcast arrives.
+    gate: bool,
+    /// A task is computing right now.
+    busy: bool,
+    /// Tasks ready to run, FIFO.
+    ready: VecDeque<u32>,
+}
+
+/// One round's event-loop state. Freshly built per round.
+struct Run {
+    model: NetworkModel,
+    record: bool,
+    net: NetSim,
+    q: EventQueue<Ev>,
+    flows: Vec<Flow>,
+    tasks: Vec<TaskRt>,
+    hosts: Vec<HostSched>,
+    reduce_ids: Vec<u32>,
+    trace: Vec<TraceEvent>,
+    latency: SimTime,
+    now: SimTime,
+    outputs_pending: usize,
+    map_out_pending: usize,
+    reduces_pending: usize,
+    barrier_fired: bool,
+}
+
+impl Run {
+    fn new(sim: &ClusterSim) -> Run {
+        Run {
+            model: sim.model.clone(),
+            record: sim.cfg.record_trace,
+            net: NetSim::new(&sim.model),
+            q: EventQueue::new(),
+            flows: Vec::new(),
+            tasks: Vec::new(),
+            hosts: vec![HostSched::default(); sim.topo.hosts],
+            reduce_ids: Vec::new(),
+            trace: Vec::new(),
+            latency: sim.cfg.latency(),
+            now: SimTime::ZERO,
+            outputs_pending: 0,
+            map_out_pending: 0,
+            reduces_pending: 0,
+            barrier_fired: false,
+        }
+    }
+
+    fn push_trace(&mut self, kind: TraceKind, a: u32, b: u32) {
+        if self.record {
+            self.trace.push(TraceEvent { time: self.now, kind, a, b });
+        }
+    }
+
+    /// Create a flow starting now: it joins the network after the start
+    /// latency.
+    fn launch_flow(&mut self, route: Vec<usize>, bytes: f64, tag: FlowTag) {
+        let fid = self.flows.len() as u32;
+        self.flows.push(Flow { route, bytes, tag });
+        self.q.push(SimTime(self.now.0 + self.latency.0), Ev::FlowJoin(fid));
+    }
+
+    /// Mark a host ready to compute (its broadcast arrived, or there was
+    /// none) and start its first task.
+    fn open_gate(&mut self, h: usize) {
+        self.hosts[h].gate = false;
+        self.push_trace(TraceKind::HostReady, h as u32, 0);
+        self.try_start(h);
+    }
+
+    /// A task became runnable; queue it on its host.
+    fn ready_task(&mut self, t: u32) {
+        let h = self.tasks[t as usize].host as usize;
+        self.hosts[h].ready.push_back(t);
+        self.try_start(h);
+    }
+
+    fn try_start(&mut self, h: usize) {
+        if self.hosts[h].gate || self.hosts[h].busy {
+            return;
+        }
+        let Some(t) = self.hosts[h].ready.pop_front() else {
+            return;
+        };
+        self.hosts[h].busy = true;
+        self.push_trace(TraceKind::TaskStart, t, h as u32);
+        let compute = self.tasks[t as usize].compute;
+        self.q.push(SimTime(self.now.0 + compute.0), Ev::TaskDone(t));
+    }
+
+    /// One map output fully landed (or had no bytes); when all have, the
+    /// shuffle barrier fires and the reduce inputs start flowing.
+    fn map_out_landed(&mut self) {
+        self.map_out_pending -= 1;
+        if self.map_out_pending == 0 && !self.barrier_fired {
+            self.fire_barrier();
+        }
+    }
+
+    fn fire_barrier(&mut self) {
+        self.barrier_fired = true;
+        let ids = std::mem::take(&mut self.reduce_ids);
+        for &r in &ids {
+            let task = self.tasks[r as usize];
+            if task.in_bytes > 0.0 {
+                let route = self.model.route_shuffle_in(task.host as usize);
+                self.launch_flow(route, task.in_bytes, FlowTag::ReduceIn(r));
+            } else {
+                self.ready_task(r);
+            }
+        }
+        self.reduce_ids = ids;
+    }
+
+    fn handle_task_done(&mut self, t: u32) {
+        let task = self.tasks[t as usize];
+        let h = task.host as usize;
+        self.push_trace(TraceKind::TaskDone, t, task.host);
+        self.hosts[h].busy = false;
+        match task.kind {
+            TaskKind::Gathered => {
+                if h == 0 || task.out_bytes <= 0.0 {
+                    self.outputs_pending -= 1;
+                } else {
+                    let route = self.model.route_to_leader(h);
+                    self.launch_flow(route, task.out_bytes, FlowTag::Gather);
+                }
+            }
+            TaskKind::Map => {
+                if task.out_bytes <= 0.0 {
+                    self.map_out_landed();
+                } else {
+                    let route = self.model.route_shuffle_out(h);
+                    self.launch_flow(route, task.out_bytes, FlowTag::MapOut);
+                }
+            }
+            TaskKind::Reduce => {
+                self.reduces_pending -= 1;
+            }
+        }
+        self.try_start(h);
+    }
+
+    fn handle_flow_done(&mut self, fid: u32) {
+        self.push_trace(TraceKind::FlowDone, fid, 0);
+        let tag = self.flows[fid as usize].tag;
+        match tag {
+            FlowTag::Broadcast(h) => self.open_gate(h as usize),
+            FlowTag::Gather => self.outputs_pending -= 1,
+            FlowTag::MapOut => self.map_out_landed(),
+            FlowTag::ReduceIn(r) => self.ready_task(r),
+        }
+    }
+
+    /// Drain the event queue and the network, interleaved in time order
+    /// (heap first on ties), then package the verdict.
+    fn finish(mut self, lower_secs: f64, upper_secs: f64) -> RoundSim {
+        let mut done: Vec<u32> = Vec::new();
+        loop {
+            let t_heap = self.q.peek_time();
+            let t_net = self.net.next_finish();
+            let take_heap = match (t_heap, t_net) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(th), Some((tn, _))) => th <= tn,
+            };
+            if take_heap {
+                let (t, ev) = self.q.pop().unwrap();
+                self.now = t;
+                match ev {
+                    Ev::FlowJoin(fid) => {
+                        self.push_trace(TraceKind::FlowStart, fid, 0);
+                        let Flow { route, bytes, .. } = self.flows[fid as usize].clone();
+                        self.net.join(t, &route, bytes, fid);
+                    }
+                    Ev::TaskDone(t_id) => self.handle_task_done(t_id),
+                }
+            } else {
+                let (t, cid) = t_net.unwrap();
+                self.now = t;
+                done.clear();
+                self.net.complete(t, cid, &mut done);
+                for &fid in &done {
+                    self.handle_flow_done(fid);
+                }
+            }
+        }
+        debug_assert_eq!(self.outputs_pending, 0);
+        debug_assert_eq!(self.reduces_pending, 0);
+        debug_assert!(self.net.is_idle());
+        RoundSim {
+            wallclock: self.now.as_duration(),
+            lower_bound: Duration::from_nanos(
+                SimTime::from_secs_f64(lower_secs).0.saturating_sub(SLACK_NS),
+            ),
+            upper_bound: Duration::from_nanos(SimTime::from_secs_f64(upper_secs).0 + SLACK_NS),
+            trace: self.trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle_cfg() -> SimConfig {
+        SimConfig {
+            enabled: true,
+            network: NetworkKind::Topology,
+            racks: 2,
+            oversub: 1.0,
+            nic_mbps: 800.0,    // 1e8 bytes/s
+            compute_mbps: 100.0, // 1e8 bytes/s
+            latency_us: 0.0,
+            record_trace: true,
+            ..SimConfig::default()
+        }
+    }
+
+    /// 2 racks × 2 hosts, hand-computed machine round (see prop_sim.rs
+    /// for the full derivation): slow host 2 finishes compute at 2.0s,
+    /// its gather lands at 2.4s.
+    #[test]
+    fn machine_round_matches_hand_computation() {
+        let sim = ClusterSim::with_speeds(&oracle_cfg(), vec![1.0, 1.0, 0.5, 1.0]);
+        let tasks = vec![TaskSpec::new(100_000_000, 40_000_000, 1); 4];
+        let r = sim.machine_round(&tasks, 0);
+        assert_eq!(r.wallclock, Duration::from_nanos(2_400_000_000));
+        assert!(r.lower_bound <= r.wallclock && r.wallclock <= r.upper_bound);
+    }
+
+    #[test]
+    fn attempts_scale_compute_and_broadcast_gates_hosts() {
+        let cfg = oracle_cfg();
+        let sim = ClusterSim::with_speeds(&cfg, vec![1.0; 4]);
+        // One task per host, 1e8 work: 1s clean. Host 1's task carries a
+        // failed attempt: 2s. No outputs, no broadcast => wallclock 2s.
+        let mut tasks = vec![TaskSpec::new(100_000_000, 0, 1); 4];
+        tasks[1].attempts = 2;
+        let r = sim.machine_round(&tasks, 0);
+        assert_eq!(r.wallclock, Duration::from_secs(2));
+        // With a 2e7 broadcast the three non-leader hosts share the
+        // leader egress link (cap 1e8, load 3) ... all gates open at
+        // 0.6s, so the straggling host now ends at 2.6s.
+        let r = sim.machine_round(&tasks, 20_000_000);
+        assert_eq!(r.wallclock, Duration::from_nanos(2_600_000_000));
+        assert!(r.lower_bound <= r.wallclock && r.wallclock <= r.upper_bound);
+    }
+
+    #[test]
+    fn shuffle_round_matches_hand_computation() {
+        // Oversub 2 => uplink caps 1e8. 4 maps (1s compute, 5e7 out):
+        // egress 2 flows/uplink at 5e7 => barrier at 2.0s. 4 reduces of
+        // 6e7: ingress 1.2s, compute 0.6s => 3.8s total.
+        let cfg = SimConfig { oversub: 2.0, ..oracle_cfg() };
+        let sim = ClusterSim::with_speeds(&cfg, vec![1.0; 4]);
+        let map = vec![TaskSpec::new(100_000_000, 50_000_000, 1); 4];
+        let reduce = vec![TaskSpec::new(60_000_000, 0, 1); 4];
+        let r = sim.shuffle_round(&map, &reduce);
+        assert_eq!(r.wallclock, Duration::from_nanos(3_800_000_000));
+        assert!(r.lower_bound <= r.wallclock && r.wallclock <= r.upper_bound);
+    }
+
+    #[test]
+    fn leader_round_is_pure_compute() {
+        let sim = ClusterSim::with_speeds(&oracle_cfg(), vec![2.0, 1.0]);
+        // 1e8 bytes × 3 attempts at 2e8 B/s = 1.5s.
+        let r = sim.leader_round(100_000_000, 3);
+        assert_eq!(r.wallclock, Duration::from_nanos(1_500_000_000));
+        assert_eq!(r.trace.len(), 2);
+    }
+
+    #[test]
+    fn rounds_replay_bit_identically() {
+        let cfg = SimConfig {
+            enabled: true,
+            network: NetworkKind::Topology,
+            racks: 4,
+            oversub: 3.0,
+            hetero: Heterogeneity::LogNormal(0.5),
+            record_trace: true,
+            ..SimConfig::default()
+        };
+        let mk = || ClusterSim::new(&cfg, 16);
+        let tasks: Vec<TaskSpec> =
+            (0..24).map(|i| TaskSpec::new(1000 + i * 37, 100 + i * 11, 1 + i % 3)).collect();
+        let reduce: Vec<TaskSpec> = (0..16).map(|i| TaskSpec::new(500 + i * 13, 0, 1)).collect();
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.speeds(), b.speeds());
+        let (ra, rb) = (a.machine_round(&tasks, 4096), b.machine_round(&tasks, 4096));
+        assert_eq!(ra.wallclock, rb.wallclock);
+        assert_eq!(ra.trace, rb.trace);
+        let (sa, sb) = (a.shuffle_round(&tasks, &reduce), b.shuffle_round(&tasks, &reduce));
+        assert_eq!(sa.wallclock, sb.wallclock);
+        assert_eq!(sa.trace, sb.trace);
+    }
+
+    #[test]
+    fn wallclock_within_bounds_across_models() {
+        for kind in [NetworkKind::Constant, NetworkKind::Shared, NetworkKind::Topology] {
+            for racks in [1usize, 3] {
+                let cfg = SimConfig {
+                    enabled: true,
+                    network: kind,
+                    racks,
+                    oversub: 2.5,
+                    hetero: Heterogeneity::Bimodal { slow_frac: 0.3, slow_factor: 4.0 },
+                    ..SimConfig::default()
+                };
+                let sim = ClusterSim::new(&cfg, 9);
+                let tasks: Vec<TaskSpec> = (0..13)
+                    .map(|i| TaskSpec::new(10_000 + i * 997, 900 + i * 53, 1 + i % 2))
+                    .collect();
+                let r = sim.machine_round(&tasks, 2048);
+                assert!(r.lower_bound <= r.wallclock, "{kind} racks {racks}: {r:?}");
+                assert!(r.wallclock <= r.upper_bound, "{kind} racks {racks}: {r:?}");
+                let s = sim.shuffle_round(&tasks, &tasks[..9]);
+                assert!(s.lower_bound <= s.wallclock && s.wallclock <= s.upper_bound);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_round_is_instant() {
+        let sim = ClusterSim::new(&SimConfig::default(), 4);
+        let r = sim.machine_round(&[], 0);
+        assert_eq!(r.wallclock, Duration::ZERO);
+    }
+}

@@ -1,0 +1,492 @@
+//! Contended-bandwidth network models with deterministic fair sharing.
+//!
+//! A *flow* is one logical transfer (a broadcast payload, a gathered task
+//! output, a shuffle segment) traversing a fixed *route* — a sorted list
+//! of link ids. While active, a flow transfers at
+//!
+//! ```text
+//! rate = min(NIC, min over links l of  capacity_l / active_flows_l)
+//! ```
+//!
+//! i.e. every link splits its capacity equally among the flows crossing
+//! it, and no flow exceeds its endpoint NIC. (This is equal-share
+//! splitting, not full max-min water-filling: capacity a NIC-capped flow
+//! leaves on a link is *not* redistributed — a deliberately simple law
+//! that a test can reproduce by hand.) When a flow joins or finishes,
+//! every rate is recomputed; between such events rates are constant, so
+//! completion times are exact closed forms.
+//!
+//! Flows with identical routes form a *class* and always share one rate,
+//! which makes the simulation cheap at 10k-host scale: a class advances a
+//! single `depleted` byte counter, each member stores its constant
+//! virtual finish depth (`depleted`-at-join + bytes) in a `BTreeMap`, and
+//! the next completion is the minimum depth — O(classes) per event
+//! instead of O(flows), with class count bounded by the number of
+//! distinct routes (a handful per round: one per rack plus the leader
+//! links).
+//!
+//! Three models share this machinery:
+//! * [`NetworkKind::Constant`] — no links at all: every flow runs at NIC
+//!   rate, the uncontended baseline.
+//! * [`NetworkKind::Shared`] — one fabric link of capacity
+//!   `NIC × hosts / oversub`, plus dedicated leader ingress/egress links
+//!   of capacity NIC (so gather incast at the coordinator is modeled).
+//! * [`NetworkKind::Topology`] — one uplink per rack of capacity
+//!   `NIC × rack_size / oversub`; cross-rack flows traverse both racks'
+//!   uplinks, intra-rack flows touch none, and the leader keeps its
+//!   ingress/egress links.
+
+use super::engine::SimTime;
+use super::placement::Topology;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Which contention model shapes transfer times.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetworkKind {
+    /// Uncontended: every flow transfers at full NIC rate.
+    Constant,
+    /// A single shared fabric link (capacity `NIC × hosts / oversub`)
+    /// plus leader ingress/egress links.
+    Shared,
+    /// Per-rack uplinks (capacity `NIC × rack_size / oversub`) plus
+    /// leader ingress/egress links.
+    Topology,
+}
+
+impl NetworkKind {
+    /// Parse the `sim.network` config value: `constant` | `shared` |
+    /// `topology`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "constant" => Ok(NetworkKind::Constant),
+            "shared" => Ok(NetworkKind::Shared),
+            "topology" => Ok(NetworkKind::Topology),
+            other => Err(format!(
+                "unknown network model {other:?} (constant | shared | topology)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for NetworkKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetworkKind::Constant => write!(f, "constant"),
+            NetworkKind::Shared => write!(f, "shared"),
+            NetworkKind::Topology => write!(f, "topology"),
+        }
+    }
+}
+
+/// Static network description: link capacities and routing. Built once
+/// per simulated cluster; the per-round dynamic state lives in
+/// [`NetSim`].
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    kind: NetworkKind,
+    topo: Topology,
+    nic: f64,
+    caps: Vec<f64>,
+    leader_in: usize,
+    leader_out: usize,
+}
+
+impl NetworkModel {
+    /// Build the link table for `kind` over `topo`. `nic_bps` is the
+    /// per-host NIC bandwidth in bytes/second; `oversub` divides the
+    /// aggregate fabric/uplink capacity (1.0 = non-blocking).
+    pub fn new(kind: NetworkKind, topo: Topology, nic_bps: f64, oversub: f64) -> NetworkModel {
+        let oversub = oversub.max(1.0);
+        let (caps, leader_in, leader_out) = match kind {
+            NetworkKind::Constant => (Vec::new(), usize::MAX, usize::MAX),
+            NetworkKind::Shared => {
+                let fabric = nic_bps * topo.hosts as f64 / oversub;
+                (vec![fabric, nic_bps, nic_bps], 1, 2)
+            }
+            NetworkKind::Topology => {
+                let mut caps: Vec<f64> = (0..topo.racks)
+                    .map(|r| nic_bps * topo.rack_size(r) as f64 / oversub)
+                    .collect();
+                let leader_in = caps.len();
+                caps.push(nic_bps);
+                let leader_out = caps.len();
+                caps.push(nic_bps);
+                (caps, leader_in, leader_out)
+            }
+        };
+        NetworkModel { kind, topo, nic: nic_bps, caps, leader_in, leader_out }
+    }
+
+    /// Per-flow NIC cap in bytes/second.
+    pub fn nic_bps(&self) -> f64 {
+        self.nic
+    }
+
+    /// Route of a gather flow `host → leader` (host 0): the host's rack
+    /// uplink and the leader rack's uplink if they differ, plus the
+    /// leader ingress link. Sorted ascending.
+    pub fn route_to_leader(&self, host: usize) -> Vec<usize> {
+        match self.kind {
+            NetworkKind::Constant => Vec::new(),
+            NetworkKind::Shared => vec![0, self.leader_in],
+            NetworkKind::Topology => {
+                let r = self.topo.rack_of(host);
+                if r == 0 {
+                    vec![self.leader_in]
+                } else {
+                    vec![0, r, self.leader_in]
+                }
+            }
+        }
+    }
+
+    /// Route of a broadcast flow `leader → host`: mirror of
+    /// [`NetworkModel::route_to_leader`] through the leader egress link.
+    pub fn route_from_leader(&self, host: usize) -> Vec<usize> {
+        match self.kind {
+            NetworkKind::Constant => Vec::new(),
+            NetworkKind::Shared => vec![0, self.leader_out],
+            NetworkKind::Topology => {
+                let r = self.topo.rack_of(host);
+                if r == 0 {
+                    vec![self.leader_out]
+                } else {
+                    vec![0, r, self.leader_out]
+                }
+            }
+        }
+    }
+
+    /// Route of a shuffle segment leaving `host` toward the fabric
+    /// (map-side write). All-to-all traffic is modeled disaggregated:
+    /// egress crosses the source uplink, ingress the destination uplink.
+    pub fn route_shuffle_out(&self, host: usize) -> Vec<usize> {
+        match self.kind {
+            NetworkKind::Constant => Vec::new(),
+            NetworkKind::Shared => vec![0],
+            NetworkKind::Topology => vec![self.topo.rack_of(host)],
+        }
+    }
+
+    /// Route of a shuffle segment arriving at `host` (reduce-side read).
+    pub fn route_shuffle_in(&self, host: usize) -> Vec<usize> {
+        self.route_shuffle_out(host)
+    }
+
+    /// Uncontended transfer time for `bytes` over `route`, in seconds —
+    /// the rate a lone flow would get. Used for the critical-path bounds.
+    pub fn solo_secs(&self, route: &[usize], bytes: f64) -> f64 {
+        let rate = route
+            .iter()
+            .fold(self.nic, |r, &l| r.min(self.caps[l]));
+        bytes / rate
+    }
+}
+
+/// Dynamic fair-share state of one round's flows. Created fresh per
+/// round so class ids are a deterministic function of the round alone.
+#[derive(Clone, Debug)]
+pub struct NetSim {
+    nic: f64,
+    caps: Vec<f64>,
+    link_load: Vec<usize>,
+    classes: Vec<ClassState>,
+    class_ids: BTreeMap<Vec<usize>, usize>,
+    active: usize,
+}
+
+#[derive(Clone, Debug)]
+struct ClassState {
+    route: Vec<usize>,
+    /// Current per-flow rate (bytes/second); constant between events.
+    rate: f64,
+    /// Bytes every still-active member has transferred since it joined
+    /// the class epoch (members join at the current depth).
+    depleted: f64,
+    /// When `depleted` was last advanced.
+    last: SimTime,
+    /// Members keyed by `(virtual finish depth bits, join seq)` — the
+    /// depth is `depleted`-at-join + bytes, constant for the flow's
+    /// lifetime, and nonnegative f64 bits order exactly like the values.
+    q: BTreeMap<(u64, u64), u32>,
+    seq: u64,
+}
+
+impl NetSim {
+    /// Fresh round state over `model`'s links.
+    pub fn new(model: &NetworkModel) -> NetSim {
+        NetSim {
+            nic: model.nic,
+            caps: model.caps.clone(),
+            link_load: vec![0; model.caps.len()],
+            classes: Vec::new(),
+            class_ids: BTreeMap::new(),
+            active: 0,
+        }
+    }
+
+    /// True when no flow is in transfer.
+    pub fn is_idle(&self) -> bool {
+        self.active == 0
+    }
+
+    /// A flow of `bytes` enters the network at `now` over `route`
+    /// (sorted link ids). `token` is returned by the completion that
+    /// finishes it.
+    pub fn join(&mut self, now: SimTime, route: &[usize], bytes: f64, token: u32) {
+        self.advance(now);
+        let cid = match self.class_ids.get(route) {
+            Some(&cid) => cid,
+            None => {
+                let cid = self.classes.len();
+                self.class_ids.insert(route.to_vec(), cid);
+                self.classes.push(ClassState {
+                    route: route.to_vec(),
+                    rate: 0.0,
+                    depleted: 0.0,
+                    last: now,
+                    q: BTreeMap::new(),
+                    seq: 0,
+                });
+                cid
+            }
+        };
+        let class = &mut self.classes[cid];
+        let depth = class.depleted + bytes.max(0.0);
+        let seq = class.seq;
+        class.seq += 1;
+        class.q.insert((depth.to_bits(), seq), token);
+        for &l in route {
+            self.link_load[l] += 1;
+        }
+        self.active += 1;
+        self.refresh_rates();
+    }
+
+    /// The earliest pending completion: `(time, class)`, ties resolved
+    /// toward the lower class id (classes are created in deterministic
+    /// order, so this is a total order).
+    pub fn next_finish(&self) -> Option<(SimTime, usize)> {
+        let mut best: Option<(SimTime, usize)> = None;
+        for (cid, class) in self.classes.iter().enumerate() {
+            let Some((&(depth_bits, _), _)) = class.q.iter().next() else {
+                continue;
+            };
+            let depth = f64::from_bits(depth_bits);
+            let secs = (depth - class.depleted).max(0.0) / class.rate;
+            let t = class.last + SimTime::from_secs_f64(secs);
+            let better = match best {
+                None => true,
+                Some((bt, _)) => t < bt,
+            };
+            if better {
+                best = Some((t, cid));
+            }
+        }
+        best
+    }
+
+    /// Complete the front flow of `class` at `now` (as returned by
+    /// [`NetSim::next_finish`]), plus any class members that reach their
+    /// depth at the same instant; their tokens are appended to `done` in
+    /// deterministic (depth, join-seq) order.
+    pub fn complete(&mut self, now: SimTime, class: usize, done: &mut Vec<u32>) {
+        self.advance(now);
+        let removed_at = done.len();
+        let c = &mut self.classes[class];
+        // Pop the triggering flow unconditionally: nanosecond rounding of
+        // the event timestamp may leave `depleted` a whisker short of the
+        // stored depth, and popping by depth alone would then stall.
+        if let Some((&(depth_bits, seq), _)) = c.q.iter().next() {
+            let depth = f64::from_bits(depth_bits);
+            c.depleted = c.depleted.max(depth);
+            done.push(c.q.remove(&(depth_bits, seq)).unwrap());
+        }
+        while let Some((&(depth_bits, seq), _)) = c.q.iter().next() {
+            if f64::from_bits(depth_bits) > c.depleted {
+                break;
+            }
+            done.push(c.q.remove(&(depth_bits, seq)).unwrap());
+        }
+        let removed = done.len() - removed_at;
+        let route = self.classes[class].route.clone();
+        for &l in &route {
+            self.link_load[l] -= removed;
+        }
+        self.active -= removed;
+        self.refresh_rates();
+    }
+
+    /// Advance every class's depletion counter to `now` at its current
+    /// rate. Classes are independent, so per-class order cannot matter;
+    /// iteration is in class-id order regardless.
+    fn advance(&mut self, now: SimTime) {
+        for class in &mut self.classes {
+            if now > class.last {
+                if !class.q.is_empty() {
+                    let dt = (now.0 - class.last.0) as f64 * 1e-9;
+                    class.depleted += class.rate * dt;
+                }
+                class.last = now;
+            }
+        }
+    }
+
+    /// Recompute every class's equal-share rate from current link loads.
+    fn refresh_rates(&mut self) {
+        for class in &mut self.classes {
+            if class.q.is_empty() {
+                class.rate = 0.0;
+                continue;
+            }
+            let mut rate = self.nic;
+            for &l in &class.route {
+                rate = rate.min(self.caps[l] / self.link_load[l] as f64);
+            }
+            class.rate = rate;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared_model(hosts: usize, nic: f64, oversub: f64) -> NetworkModel {
+        NetworkModel::new(NetworkKind::Shared, Topology::new(hosts, 1), nic, oversub)
+    }
+
+    #[test]
+    fn constant_model_has_no_links() {
+        let m = NetworkModel::new(NetworkKind::Constant, Topology::new(8, 2), 1e8, 4.0);
+        assert!(m.route_to_leader(5).is_empty());
+        assert!(m.route_shuffle_out(5).is_empty());
+        assert_eq!(m.solo_secs(&[], 1e8), 1.0);
+    }
+
+    #[test]
+    fn topology_routes_cross_racks() {
+        let m = NetworkModel::new(NetworkKind::Topology, Topology::new(4, 2), 1e8, 1.0);
+        // Racks {0,1}, {2,3}; links: 0,1 = uplinks, 2 = leader-in, 3 = leader-out.
+        assert_eq!(m.route_to_leader(1), vec![2]); // same rack as leader
+        assert_eq!(m.route_to_leader(3), vec![0, 1, 2]); // cross-rack
+        assert_eq!(m.route_from_leader(2), vec![0, 1, 3]);
+        assert_eq!(m.route_shuffle_out(3), vec![1]);
+        // Uplink capacity = nic * rack_size / oversub = 2e8.
+        assert_eq!(m.solo_secs(&[0], 2e8), 2.0); // nic-capped at 1e8
+    }
+
+    #[test]
+    fn lone_flow_runs_at_nic_rate() {
+        let m = shared_model(4, 1e8, 1.0); // fabric 4e8 >> nic
+        let mut net = NetSim::new(&m);
+        net.join(SimTime::ZERO, &m.route_shuffle_out(1), 1e8, 7);
+        let (t, cid) = net.next_finish().unwrap();
+        assert_eq!(t, SimTime(1_000_000_000));
+        let mut done = Vec::new();
+        net.complete(t, cid, &mut done);
+        assert_eq!(done, vec![7]);
+        assert!(net.is_idle());
+    }
+
+    #[test]
+    fn fabric_fair_share_halves_rates() {
+        // nic 1e8, 2 hosts, oversub 2 => fabric cap 1e8: two flows get
+        // 5e7 each and both finish at 2s (1e8 bytes each, same class).
+        let m = shared_model(2, 1e8, 2.0);
+        let mut net = NetSim::new(&m);
+        net.join(SimTime::ZERO, &m.route_shuffle_out(0), 1e8, 0);
+        net.join(SimTime::ZERO, &m.route_shuffle_out(1), 1e8, 1);
+        let (t, cid) = net.next_finish().unwrap();
+        assert_eq!(t, SimTime(2_000_000_000));
+        let mut done = Vec::new();
+        net.complete(t, cid, &mut done);
+        assert_eq!(done, vec![0, 1]); // same depth: join order
+        assert!(net.is_idle());
+    }
+
+    #[test]
+    fn survivor_speeds_up_after_completion() {
+        // Same fabric (cap 1e8), flows of 1e8 and 2e8 bytes. Fair share
+        // 5e7 each; the small flow ends at 2s, then the big one runs at
+        // nic (1e8) for its remaining 1e8 bytes: done at 3s.
+        let m = shared_model(2, 1e8, 2.0);
+        let mut net = NetSim::new(&m);
+        net.join(SimTime::ZERO, &m.route_shuffle_out(0), 1e8, 0);
+        net.join(SimTime::ZERO, &m.route_shuffle_out(1), 2e8, 1);
+        let mut done = Vec::new();
+        let (t1, c1) = net.next_finish().unwrap();
+        assert_eq!(t1, SimTime(2_000_000_000));
+        net.complete(t1, c1, &mut done);
+        assert_eq!(done, vec![0]);
+        let (t2, c2) = net.next_finish().unwrap();
+        assert_eq!(t2, SimTime(3_000_000_000));
+        net.complete(t2, c2, &mut done);
+        assert_eq!(done, vec![0, 1]);
+        assert!(net.is_idle());
+    }
+
+    #[test]
+    fn late_join_shares_from_arrival() {
+        // Flow A (1e8 bytes) alone for 0.5s at nic 1e8 (fabric ample),
+        // then B joins on the same route; both run at 5e7 (leader-in cap
+        // 1e8 shared). A has 5e7 left -> done at 1.5s.
+        let m = shared_model(4, 1e8, 1.0);
+        let mut net = NetSim::new(&m);
+        net.join(SimTime::ZERO, &m.route_to_leader(1), 1e8, 0);
+        net.join(SimTime(500_000_000), &m.route_to_leader(2), 1e8, 1);
+        let (t1, c1) = net.next_finish().unwrap();
+        assert_eq!(t1, SimTime(1_500_000_000));
+        let mut done = Vec::new();
+        net.complete(t1, c1, &mut done);
+        assert_eq!(done, vec![0]);
+        // B joined at depth 5e7 (depth 1.5e8); at 1.5s depletion is 1e8,
+        // and the remaining 5e7 bytes run at full nic => done at 2.0s.
+        let (t2, _) = net.next_finish().unwrap();
+        assert_eq!(t2, SimTime(2_000_000_000));
+    }
+
+    #[test]
+    fn zero_byte_flow_completes_immediately() {
+        let m = shared_model(2, 1e8, 1.0);
+        let mut net = NetSim::new(&m);
+        net.join(SimTime(42), &m.route_shuffle_out(0), 0.0, 9);
+        let (t, cid) = net.next_finish().unwrap();
+        assert_eq!(t, SimTime(42));
+        let mut done = Vec::new();
+        net.complete(t, cid, &mut done);
+        assert_eq!(done, vec![9]);
+        assert!(net.is_idle());
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        let run = || {
+            let m = NetworkModel::new(
+                NetworkKind::Topology,
+                Topology::new(8, 2),
+                1.25e8,
+                3.0,
+            );
+            let mut net = NetSim::new(&m);
+            let mut log = Vec::new();
+            for h in 0..8usize {
+                net.join(
+                    SimTime(h as u64 * 1_000),
+                    &m.route_to_leader(h),
+                    (h as f64 + 1.0) * 1e7,
+                    h as u32,
+                );
+            }
+            let mut done = Vec::new();
+            while let Some((t, cid)) = net.next_finish() {
+                done.clear();
+                net.complete(t, cid, &mut done);
+                log.push((t, done.clone()));
+            }
+            log
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,152 @@
+//! Cluster shape (hosts grouped into racks) and task-to-host placement.
+//!
+//! Placement only decides *where* a task's bytes and compute land in the
+//! simulated cluster — it never reorders the engine's tasks or touches
+//! their outputs, so it is pure timing observation. The default
+//! `RoundRobin` mirrors the real engine's `i % n_machines` partition
+//! assignment; `RackAware` spreads consecutive tasks across racks first,
+//! trading intra-rack locality for balanced uplink load.
+
+use std::fmt;
+
+/// Shape of the simulated cluster: `hosts` machines packed into `racks`
+/// racks of (up to) `rack_width()` hosts each; the trailing rack may be
+/// short. Host 0 doubles as the coordinator ("leader").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Simulated machine count.
+    pub hosts: usize,
+    /// Configured rack count (clamped to `[1, hosts]`).
+    pub racks: usize,
+}
+
+impl Topology {
+    /// Build a topology, clamping `racks` into `[1, hosts]`.
+    pub fn new(hosts: usize, racks: usize) -> Topology {
+        let hosts = hosts.max(1);
+        Topology { hosts, racks: racks.clamp(1, hosts) }
+    }
+
+    /// Hosts per full rack (ceiling division; the last rack may be short).
+    pub fn rack_width(&self) -> usize {
+        self.hosts.div_ceil(self.racks)
+    }
+
+    /// The rack a host lives in.
+    pub fn rack_of(&self, host: usize) -> usize {
+        host / self.rack_width()
+    }
+
+    /// Number of hosts actually in `rack` (0 for trailing empty racks
+    /// that the clamped ceiling split leaves unused).
+    pub fn rack_size(&self, rack: usize) -> usize {
+        let w = self.rack_width();
+        self.hosts.saturating_sub(rack * w).min(w)
+    }
+
+    /// Racks that actually contain hosts.
+    pub fn occupied_racks(&self) -> usize {
+        self.hosts.div_ceil(self.rack_width())
+    }
+}
+
+/// Strategy mapping task index → host index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// `task % hosts` — mirrors the engine's partition assignment.
+    RoundRobin,
+    /// Stripe tasks across occupied racks first, then round-robin within
+    /// each rack: consecutive tasks land in different racks.
+    RackAware,
+}
+
+impl Placement {
+    /// Parse the `sim.placement` config value: `roundrobin` | `rackaware`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "roundrobin" => Ok(Placement::RoundRobin),
+            "rackaware" => Ok(Placement::RackAware),
+            other => Err(format!(
+                "unknown placement {other:?} (roundrobin | rackaware)"
+            )),
+        }
+    }
+
+    /// The host that task `task` runs on. Pure and total: every task
+    /// maps to a real host for every topology.
+    pub fn host_for(&self, task: usize, topo: &Topology) -> usize {
+        match self {
+            Placement::RoundRobin => task % topo.hosts,
+            Placement::RackAware => {
+                let nr = topo.occupied_racks();
+                let rack = task % nr;
+                let slot = task / nr;
+                let base = rack * topo.rack_width();
+                base + slot % topo.rack_size(rack)
+            }
+        }
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Placement::RoundRobin => write!(f, "roundrobin"),
+            Placement::RackAware => write!(f, "rackaware"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_clamps_and_splits() {
+        let t = Topology::new(5, 3);
+        assert_eq!(t.rack_width(), 2);
+        assert_eq!((t.rack_size(0), t.rack_size(1), t.rack_size(2)), (2, 2, 1));
+        assert_eq!(t.occupied_racks(), 3);
+        assert_eq!(t.rack_of(0), 0);
+        assert_eq!(t.rack_of(3), 1);
+        assert_eq!(t.rack_of(4), 2);
+        // racks > hosts clamps; hosts = 0 clamps to 1.
+        assert_eq!(Topology::new(2, 10).racks, 2);
+        assert_eq!(Topology::new(0, 1).hosts, 1);
+        // 4 hosts / 3 racks: width 2, rack 2 is empty.
+        let t = Topology::new(4, 3);
+        assert_eq!(t.rack_size(2), 0);
+        assert_eq!(t.occupied_racks(), 2);
+    }
+
+    #[test]
+    fn round_robin_matches_engine_partitioning() {
+        let t = Topology::new(4, 2);
+        for task in 0..16 {
+            assert_eq!(Placement::RoundRobin.host_for(task, &t), task % 4);
+        }
+    }
+
+    #[test]
+    fn rack_aware_stripes_racks_and_stays_total() {
+        let t = Topology::new(6, 3); // racks {0,1} {2,3} {4,5}
+        let hosts: Vec<usize> =
+            (0..6).map(|i| Placement::RackAware.host_for(i, &t)).collect();
+        assert_eq!(hosts, vec![0, 2, 4, 1, 3, 5]);
+        // Totality incl. an empty trailing rack and task >> hosts.
+        let odd = Topology::new(4, 3);
+        for task in 0..64 {
+            for p in [Placement::RoundRobin, Placement::RackAware] {
+                assert!(p.host_for(task, &odd) < odd.hosts);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        for s in ["roundrobin", "rackaware"] {
+            assert_eq!(Placement::parse(s).unwrap().to_string(), s);
+        }
+        assert!(Placement::parse("random").is_err());
+    }
+}

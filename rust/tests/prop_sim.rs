@@ -1,0 +1,332 @@
+//! The simulation determinism wall (E15 tentpole, satellite 1).
+//!
+//! The discrete-event simulation in `src/sim/` promises to be a *pure
+//! function* of `(round inputs, sim.* config, sim.seed)`: bit-identical
+//! across repeats and executors, totally ordered in time, and free of
+//! every ambient-nondeterminism source (`Instant`, wall clock, hash-order
+//! iteration). These tests hold it to that promise:
+//!
+//! * same seed ⇒ bit-identical event traces and wall-clocks across
+//!   repeated cluster constructions and across {pooled, sequential}
+//!   engine executors;
+//! * simulated time is monotone within a trace and conserved — every
+//!   round's wall-clock sits between the critical-path lower bound and
+//!   the serial upper bound;
+//! * the `sim/` sources contain no `HashMap`/`HashSet`/`Instant`
+//!   (checked textually via `include_str!` so a regression cannot hide
+//!   behind a lucky iteration order);
+//! * a 2-rack × 2-hosts-per-rack analytic oracle whose completion times
+//!   are derived by hand below and asserted exactly.
+
+use mrcluster::mapreduce::{MrCluster, MrConfig};
+use mrcluster::sim::{
+    ClusterSim, Heterogeneity, NetworkKind, Placement, SimConfig, TaskSpec, TraceEvent,
+};
+use std::time::Duration;
+
+/// A contended, heterogeneous config that exercises every model at once.
+fn stress_cfg() -> SimConfig {
+    SimConfig {
+        enabled: true,
+        network: NetworkKind::Topology,
+        racks: 3,
+        oversub: 4.0,
+        hetero: Heterogeneity::LogNormal(0.5),
+        placement: Placement::RackAware,
+        record_trace: true,
+        ..SimConfig::default()
+    }
+}
+
+fn mixed_tasks(n: usize) -> Vec<TaskSpec> {
+    (0..n).map(|i| TaskSpec::new(10_000 + i * 997, 1_000 + i * 131, 1 + i % 3)).collect()
+}
+
+/// Bit-identical replay: constructing the same simulated cluster twice
+/// and replaying the same rounds yields byte-for-byte equal traces and
+/// wall-clocks — the foundation every other guarantee rests on.
+#[test]
+fn prop_same_seed_same_trace() {
+    for seed in [1u64, 0x51D0, 0xDEAD_BEEF] {
+        let cfg = SimConfig { seed, ..stress_cfg() };
+        let mk = || ClusterSim::new(&cfg, 13);
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.speeds(), b.speeds(), "seed {seed}: speed draw diverged");
+        let tasks = mixed_tasks(29);
+        let reduce = mixed_tasks(13);
+        let (ra, rb) = (a.machine_round(&tasks, 4096), b.machine_round(&tasks, 4096));
+        assert_eq!(ra.wallclock, rb.wallclock, "seed {seed}: machine wallclock");
+        assert_eq!(ra.trace, rb.trace, "seed {seed}: machine trace");
+        let (sa, sb) = (a.shuffle_round(&tasks, &reduce), b.shuffle_round(&tasks, &reduce));
+        assert_eq!(sa.wallclock, sb.wallclock, "seed {seed}: shuffle wallclock");
+        assert_eq!(sa.trace, sb.trace, "seed {seed}: shuffle trace");
+        // A different seed must actually change something (the speeds),
+        // or the heterogeneity model is a no-op.
+        let other = ClusterSim::new(&SimConfig { seed: seed ^ 1, ..cfg.clone() }, 13);
+        assert_ne!(a.speeds(), other.speeds(), "seed is ignored");
+    }
+}
+
+/// The engine-level contract: `sim_wallclock` recorded by a real
+/// `MrCluster` run is identical whether machines execute on the worker
+/// pool or sequentially, and across repeats — the simulation only ever
+/// sees deterministic per-round aggregates, never thread timing.
+#[test]
+fn prop_wallclock_identical_across_executors_and_repeats() {
+    let run = |parallel: bool| {
+        let mut c = MrCluster::new(MrConfig {
+            n_machines: 6,
+            parallel,
+            threads: 3,
+            fail_prob: 0.2,
+            fault_seed: 7,
+            sim: SimConfig { enabled: true, ..stress_cfg() },
+            ..Default::default()
+        });
+        // One shuffle round (word count) + one machine round + a leader
+        // round: all three sim surfaces in a single run.
+        let docs: Vec<(usize, String)> =
+            (0..18).map(|i| (i, format!("a{} b{} c", i % 4, i % 7))).collect();
+        c.run_round(
+            "count",
+            docs,
+            |_k, text: &String, emit| {
+                for w in text.split_whitespace() {
+                    emit(w.to_string(), 1u64);
+                }
+            },
+            |k: &String, vs: &[u64], out| out(k.clone(), vs.iter().sum::<u64>()),
+        )
+        .unwrap();
+        let parts: Vec<Vec<u64>> = (0..12).map(|i| vec![i as u64; 16 + i]).collect();
+        c.run_machine_round("local", &parts, 128, |_i, p: &Vec<u64>| p.iter().sum::<u64>())
+            .unwrap();
+        c.run_leader_round("finish", 4096, || 42u64).unwrap();
+        let per_round: Vec<Duration> =
+            c.stats.rounds.iter().map(|r| r.sim_wallclock).collect();
+        (per_round, c.stats.sim_wallclock())
+    };
+    let (rounds_seq, total_seq) = run(false);
+    let (rounds_pool, total_pool) = run(true);
+    let (rounds_again, total_again) = run(false);
+    assert!(total_seq > Duration::ZERO, "sim recorded nothing");
+    assert!(rounds_seq.iter().all(|d| *d > Duration::ZERO));
+    assert_eq!(rounds_seq, rounds_pool, "pooled vs sequential executor");
+    assert_eq!(total_seq, total_pool);
+    assert_eq!(rounds_seq, rounds_again, "repeat of the same run");
+    assert_eq!(total_seq, total_again);
+}
+
+/// Time is monotone and conserved: within every trace, event timestamps
+/// never decrease (the `(time, seq)` order is total), and the round's
+/// wall-clock lies between the critical-path lower bound (no schedule
+/// beats the slowest host chain / slowest uncontended flow) and the
+/// serial upper bound (fair sharing is work-conserving).
+#[test]
+fn prop_time_monotone_and_conserved() {
+    let heteros = [
+        Heterogeneity::None,
+        Heterogeneity::LogNormal(0.7),
+        Heterogeneity::Bimodal { slow_frac: 0.25, slow_factor: 5.0 },
+    ];
+    let monotone = |trace: &[TraceEvent]| trace.windows(2).all(|w| w[0].time <= w[1].time);
+    for kind in [NetworkKind::Constant, NetworkKind::Shared, NetworkKind::Topology] {
+        for hetero in heteros {
+            for hosts in [1usize, 5, 16] {
+                let cfg = SimConfig {
+                    network: kind,
+                    racks: hosts.div_ceil(4),
+                    oversub: 2.5,
+                    hetero,
+                    ..stress_cfg()
+                };
+                let sim = ClusterSim::new(&cfg, hosts);
+                let tasks = mixed_tasks(hosts * 2 + 3);
+                let r = sim.machine_round(&tasks, 2048);
+                assert!(monotone(&r.trace), "{kind} {hetero:?} {hosts}: machine trace");
+                assert!(
+                    r.lower_bound <= r.wallclock && r.wallclock <= r.upper_bound,
+                    "{kind} {hetero:?} {hosts}: machine {:?} outside [{:?}, {:?}]",
+                    r.wallclock,
+                    r.lower_bound,
+                    r.upper_bound
+                );
+                let s = sim.shuffle_round(&tasks, &mixed_tasks(hosts));
+                assert!(monotone(&s.trace), "{kind} {hetero:?} {hosts}: shuffle trace");
+                assert!(
+                    s.lower_bound <= s.wallclock && s.wallclock <= s.upper_bound,
+                    "{kind} {hetero:?} {hosts}: shuffle {:?} outside [{:?}, {:?}]",
+                    s.wallclock,
+                    s.lower_bound,
+                    s.upper_bound
+                );
+            }
+        }
+    }
+}
+
+/// Textual guarantee behind the tie-breaking contract: nothing under
+/// `src/sim/` may iterate a `HashMap`/`HashSet` (randomized order) or
+/// read the wall clock (`Instant`/`SystemTime`). Doc-comment mentions
+/// are allowed — only code lines count.
+#[test]
+fn prop_sim_sources_are_hash_and_clock_free() {
+    let sources = [
+        ("mod.rs", include_str!("../src/sim/mod.rs")),
+        ("engine.rs", include_str!("../src/sim/engine.rs")),
+        ("host.rs", include_str!("../src/sim/host.rs")),
+        ("network.rs", include_str!("../src/sim/network.rs")),
+        ("placement.rs", include_str!("../src/sim/placement.rs")),
+    ];
+    for (name, src) in sources {
+        let code: Vec<&str> =
+            src.lines().filter(|l| !l.trim_start().starts_with("//")).collect();
+        for forbidden in ["HashMap", "HashSet", "Instant", "SystemTime", "thread_rng"] {
+            let hit = code.iter().find(|l| l.contains(forbidden));
+            assert!(
+                hit.is_none(),
+                "src/sim/{name} contains `{forbidden}` in code: {:?}",
+                hit.unwrap()
+            );
+        }
+    }
+}
+
+/// Analytic oracle: 2 racks × 2 hosts (hosts 0,1 in rack 0; 2,3 in rack
+/// 1), NIC 800 Mbit/s = 1e8 B/s, compute 100 MB/s = 1e8 B/s at speed
+/// 1.0, zero latency, no oversubscription, round-robin placement (task i
+/// on host i), host speeds [1.0, 1.0, 0.5, 1.0].
+fn oracle_sim() -> ClusterSim {
+    let cfg = SimConfig {
+        enabled: true,
+        network: NetworkKind::Topology,
+        racks: 2,
+        oversub: 1.0,
+        nic_mbps: 800.0,
+        compute_mbps: 100.0,
+        latency_us: 0.0,
+        record_trace: true,
+        ..SimConfig::default()
+    };
+    ClusterSim::with_speeds(&cfg, vec![1.0, 1.0, 0.5, 1.0])
+}
+
+/// Machine round, 4 tasks of (work 1e8, out 4e7, 1 attempt), no
+/// broadcast. Hand derivation:
+///
+/// * Compute: hosts 0, 1, 3 run 1e8 B at 1e8 B/s → done at t = 1.0 s.
+///   Host 2 runs at speed 0.5 → done at t = 2.0 s (the emergent
+///   straggler).
+/// * Host 0 is the leader: its output needs no network.
+/// * t = 1.0 s: hosts 1 and 3 each start a 4e7 B gather. Both routes
+///   end at the leader's ingress link (cap 1e8 B/s), so fair sharing
+///   gives each 5e7 B/s → both land at 1.0 + 4e7/5e7 = 1.8 s.
+/// * t = 2.0 s: host 2's gather has the ingress link to itself:
+///   4e7/1e8 = 0.4 s → lands at **2.4 s**, which is the round.
+#[test]
+fn prop_machine_round_oracle_exact() {
+    let sim = oracle_sim();
+    let tasks = vec![TaskSpec::new(100_000_000, 40_000_000, 1); 4];
+    let r = sim.machine_round(&tasks, 0);
+    assert_eq!(r.wallclock, Duration::from_nanos(2_400_000_000));
+    // Conservation around the exact value: the slowest chain (host 2:
+    // 2.0 s compute + 0.4 s solo gather is not a single lower-bound
+    // term, but its compute alone is) bounds below; the serial sum
+    // (1+1+2+1 compute + 3 × 0.4 gathers = 6.2 s) bounds above.
+    assert!(r.lower_bound >= Duration::from_nanos(2_000_000_000 - 1_000_000));
+    assert!(r.upper_bound <= Duration::from_nanos(6_200_000_000 + 1_000_000));
+    assert!(r.lower_bound <= r.wallclock && r.wallclock <= r.upper_bound);
+}
+
+/// Same oracle plus a 2e7 B broadcast and a doubled attempt on host 2's
+/// task. Hand derivation:
+///
+/// * Broadcast: hosts 1, 2, 3 each pull 2e7 B from the leader's egress
+///   link (cap 1e8 B/s, 3-way fair share ~3.33e7 B/s each) → all gates
+///   open at 3 × 2e7 / 1e8 = **0.6 s**. (The leader starts at 0.)
+/// * Host 2's task now carries `attempts = 2`: 2 × 1e8 B at 5e7 B/s =
+///   4.0 s of compute, starting at 0.6 s → done at 4.6 s.
+/// * Its 4e7 B gather then crosses an idle ingress link in 0.4 s
+///   (hosts 1 and 3 finished theirs long before) → round = **5.0 s**.
+#[test]
+fn prop_machine_round_oracle_with_broadcast_and_replay() {
+    let sim = oracle_sim();
+    let mut tasks = vec![TaskSpec::new(100_000_000, 40_000_000, 1); 4];
+    tasks[2].attempts = 2;
+    let r = sim.machine_round(&tasks, 20_000_000);
+    assert_eq!(r.wallclock, Duration::from_nanos(5_000_000_000));
+}
+
+/// Shuffle round under oversubscription 2.0 (rack uplink cap drops to
+/// 2 hosts × 1e8 / 2 = 1e8 B/s), all speeds 1.0. Hand derivation:
+///
+/// * 4 maps of (work 1e8, out 5e7): compute ends at 1.0 s everywhere.
+/// * Egress: the 2 flows per rack share their rack uplink (1e8 B/s) at
+///   5e7 B/s each → 1.0 s → the shuffle barrier fires at **2.0 s**.
+/// * 4 reduces of work 6e7: ingress is symmetric (2 flows per rack
+///   downlink at 5e7 B/s each) → 1.2 s → inputs land at 3.2 s.
+/// * Reduce compute 6e7 / 1e8 = 0.6 s → round = **3.8 s**.
+#[test]
+fn prop_shuffle_round_oracle_exact() {
+    let cfg = SimConfig {
+        enabled: true,
+        network: NetworkKind::Topology,
+        racks: 2,
+        oversub: 2.0,
+        nic_mbps: 800.0,
+        compute_mbps: 100.0,
+        latency_us: 0.0,
+        record_trace: true,
+        ..SimConfig::default()
+    };
+    let sim = ClusterSim::with_speeds(&cfg, vec![1.0; 4]);
+    let map = vec![TaskSpec::new(100_000_000, 50_000_000, 1); 4];
+    let reduce = vec![TaskSpec::new(60_000_000, 0, 1); 4];
+    let r = sim.shuffle_round(&map, &reduce);
+    assert_eq!(r.wallclock, Duration::from_nanos(3_800_000_000));
+    assert!(r.lower_bound <= r.wallclock && r.wallclock <= r.upper_bound);
+}
+
+/// Leader round: 1e8 B × 3 attempts on a speed-2.0 leader (2e8 B/s) =
+/// 1.5 s of pure compute, no network terms at all.
+#[test]
+fn prop_leader_round_oracle_exact() {
+    let cfg = SimConfig {
+        enabled: true,
+        nic_mbps: 800.0,
+        compute_mbps: 100.0,
+        latency_us: 0.0,
+        record_trace: true,
+        ..SimConfig::default()
+    };
+    let sim = ClusterSim::with_speeds(&cfg, vec![2.0, 1.0]);
+    let r = sim.leader_round(100_000_000, 3);
+    assert_eq!(r.wallclock, Duration::from_nanos(1_500_000_000));
+}
+
+/// Contention sanity: the same bytes over a *more* constrained fabric
+/// can never finish sooner. Flat shared fabric vs an 8× oversubscribed
+/// topology, identical tasks and speeds.
+#[test]
+fn prop_oversubscription_never_speeds_a_round_up() {
+    let base = SimConfig {
+        enabled: true,
+        hetero: Heterogeneity::None,
+        record_trace: false,
+        ..SimConfig::default()
+    };
+    let flat = ClusterSim::new(&SimConfig { network: NetworkKind::Shared, ..base.clone() }, 12);
+    let tight = ClusterSim::new(
+        &SimConfig { network: NetworkKind::Topology, racks: 3, oversub: 8.0, ..base },
+        12,
+    );
+    let tasks = mixed_tasks(24);
+    let reduce = mixed_tasks(12);
+    assert!(
+        tight.machine_round(&tasks, 8192).wallclock >= flat.machine_round(&tasks, 8192).wallclock
+    );
+    assert!(
+        tight.shuffle_round(&tasks, &reduce).wallclock
+            >= flat.shuffle_round(&tasks, &reduce).wallclock
+    );
+}

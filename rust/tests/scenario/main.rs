@@ -13,6 +13,12 @@
 //! 4. hostile regimes really do inject work (the retries accounting is
 //!    non-trivial).
 //!
+//! A second axis drives the same pipelines under the discrete-event
+//! timing simulation ({no-sim, flat shared fabric, oversubscribed racks
+//! with heterogeneous hosts} × fault regimes) and asserts the sim is a
+//! *pure observer*: outputs, rounds, and shuffle bytes stay bit-identical
+//! to the no-sim rows, and only `sim_wallclock` differs.
+//!
 //! Costs-vs-oracle assertions on tiny instances live in `oracle.rs`.
 //! Default scale is CI-sized; set `SCENARIO_FULL=1` for the larger matrix
 //! (more machine counts, larger n).
@@ -25,6 +31,8 @@ mod oracle;
 use mrcluster::config::ClusterConfig;
 use mrcluster::coordinator::{run_algorithm, Algorithm, Outcome};
 use mrcluster::mapreduce::check_mrc0;
+use mrcluster::sim::{Heterogeneity, NetworkKind, Placement, SimConfig};
+use std::time::Duration;
 
 /// One fault/straggler regime of the matrix.
 pub struct Regime {
@@ -229,6 +237,106 @@ fn scenario_mr_kcenter() {
 #[ignore = "run via the scenario-matrix CI job (release mode)"]
 fn scenario_streaming() {
     run_matrix(Algorithm::StreamingGuha);
+}
+
+/// The simulation axis of the matrix: no-sim, a flat shared fabric, and
+/// an oversubscribed rack topology with a bimodal (10% of hosts 4x slow)
+/// fleet — the harshest timing environment the models offer.
+fn sim_axes() -> [(&'static str, SimConfig); 3] {
+    [
+        ("no-sim", SimConfig::default()),
+        (
+            "flat-network",
+            SimConfig { enabled: true, network: NetworkKind::Shared, ..SimConfig::default() },
+        ),
+        (
+            "oversubscribed-hetero",
+            SimConfig {
+                enabled: true,
+                network: NetworkKind::Topology,
+                racks: 3,
+                oversub: 8.0,
+                hetero: Heterogeneity::Bimodal { slow_frac: 0.1, slow_factor: 4.0 },
+                placement: Placement::RackAware,
+                ..SimConfig::default()
+            },
+        ),
+    ]
+}
+
+/// Drive `algo` through {sim axes} × {fault regimes} and hold the sim to
+/// its pure-observer contract: every simulated row reproduces the no-sim
+/// row bit for bit (centers, cost bits, rounds, shuffle bytes), zero
+/// wall-clock with sim off, nonzero and repeat-deterministic wall-clock
+/// with sim on.
+fn run_sim_matrix(algo: Algorithm, n: usize) {
+    let k = 5;
+    let points = datasets::clustered(n, k, 0xACE);
+    for regime in [None, Some(&REGIMES[0]), Some(&REGIMES[1])] {
+        let base_cfg = scenario_cfg(k, 8, SEED, regime, true);
+        let baseline = run_algorithm(algo, &points, &base_cfg).unwrap();
+        assert_eq!(
+            baseline.sim_wallclock,
+            Duration::ZERO,
+            "{}: sim off must report zero wall-clock",
+            algo.name()
+        );
+        for (axis, sim) in sim_axes() {
+            if !sim.enabled {
+                continue;
+            }
+            let cfg = ClusterConfig { sim: sim.clone(), ..base_cfg.clone() };
+            let out = run_algorithm(algo, &points, &cfg).unwrap();
+            let tag = format!(
+                "{} / {axis} / regime {}",
+                algo.name(),
+                regime.map(|r| r.name).unwrap_or("none")
+            );
+            assert_eq!(out.centers, baseline.centers, "{tag}: centers diverged");
+            assert_eq!(
+                out.cost.median.to_bits(),
+                baseline.cost.median.to_bits(),
+                "{tag}: cost diverged"
+            );
+            assert_eq!(out.rounds, baseline.rounds, "{tag}: round count changed");
+            assert_eq!(
+                out.stats.shuffle_bytes(),
+                baseline.stats.shuffle_bytes(),
+                "{tag}: shuffle changed"
+            );
+            assert!(out.sim_wallclock > Duration::ZERO, "{tag}: sim recorded nothing");
+            // The wall-clock itself is deterministic: replaying the very
+            // same configuration reproduces it bit for bit.
+            let again = run_algorithm(algo, &points, &cfg).unwrap();
+            assert_eq!(again.sim_wallclock, out.sim_wallclock, "{tag}: wall-clock replay");
+        }
+    }
+}
+
+#[test]
+#[ignore = "run via the sim-matrix CI job (release mode)"]
+fn scenario_sim_parallel_lloyd() {
+    run_sim_matrix(Algorithm::ParallelLloyd, scenario_n());
+}
+
+#[test]
+#[ignore = "run via the sim-matrix CI job (release mode)"]
+fn scenario_sim_sampling_kmedian() {
+    run_sim_matrix(Algorithm::SamplingLloyd, scenario_n());
+}
+
+#[test]
+#[ignore = "run via the sim-matrix CI job (release mode)"]
+fn scenario_sim_mr_kcenter() {
+    run_sim_matrix(Algorithm::MrKCenter, scenario_n());
+}
+
+/// Always-on (non-ignored) slice of the sim axis: one pipeline at small
+/// n, so the pure-observer contract is exercised by plain `cargo test`
+/// on every push, not just by the release matrix job.
+#[test]
+fn sim_axis_is_pure_observation_small() {
+    run_sim_matrix(Algorithm::SamplingLloyd, 600);
 }
 
 /// Satellite: the report's memory-violation path on a *real* run — an
