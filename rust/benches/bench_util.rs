@@ -134,6 +134,28 @@ impl JsonSink {
         ));
     }
 
+    /// Record one serving-mode sample (`mrcluster-serve-bench-v2`): the
+    /// measured `variant` is `ingest`, `epoch_close`, or `query`; `count`
+    /// is the deterministic operation counter for the cell; `per_sec` is
+    /// points/s (ingest), epochs/s (epoch_close), or queries/s (query).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_serve(
+        &mut self,
+        variant: &str,
+        threads: usize,
+        batch: usize,
+        count: u64,
+        p50_us: f64,
+        p99_us: f64,
+        per_sec: f64,
+    ) {
+        self.records.push(format!(
+            "{{\"variant\":\"{variant}\",\"threads\":{threads},\"batch\":{batch},\
+             \"count\":{count},\"p50_us\":{p50_us:.3},\"p99_us\":{p99_us:.3},\
+             \"per_sec\":{per_sec:.3}}}"
+        ));
+    }
+
     /// Write the JSON document (no-op without `--bench-json`).
     pub fn write(&self) -> std::io::Result<()> {
         let Some(path) = &self.path else {

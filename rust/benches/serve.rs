@@ -1,0 +1,101 @@
+//! Bench E16: serving mode — ingest throughput, epoch-close latency, and
+//! concurrent query p50/p99 latency + queries/s across thread counts and
+//! batch sizes.
+//!
+//! All timing goes through [`mrcluster::experiments::serve_bench`], which
+//! runs its **bit-identity oracle gate before timing anything**: the
+//! stream is ingested under a second batch partition fed in reverse order
+//! and the published centers must match the first engine's bitwise (and,
+//! in lossless mode, the one-shot batch pipeline's). A divergence errors
+//! the bench out, so a committed BENCH_serve.json row implies the oracle
+//! passed.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use mrcluster::config::{ClusterConfig, ServeConfig};
+use mrcluster::experiments::{make_backend, serve_bench, ExperimentParams};
+use mrcluster::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    mrcluster::util::logging::init();
+    let n = bench_util::scaled(200_000);
+    let k = 25usize;
+    let mut json = bench_util::JsonSink::from_args_with_schema("mrcluster-serve-bench-v2");
+
+    let cfg = ClusterConfig {
+        k,
+        ..Default::default()
+    };
+    let params = ExperimentParams {
+        k,
+        sigma: 0.05,
+        alpha: 0.0,
+        contamination: 0.0,
+        seed: 11,
+        repeats: 1,
+        cluster: cfg.clone(),
+    };
+    let serve = ServeConfig::default(); // lossless: full oracle gate applies
+    let backend = make_backend(&cfg);
+
+    let batch_sizes = [256usize, 1024, 4096];
+    let thread_counts = [1usize, 2, 4, 8];
+    let queries_per_thread = 64usize;
+
+    let report = serve_bench(
+        &params,
+        &serve,
+        n,
+        &batch_sizes,
+        &thread_counts,
+        queries_per_thread,
+        backend,
+    )?;
+    println!(
+        "oracle check passed (n = {n}): re-partitioned ingest and the one-shot \
+         pipeline published bit-identical centers"
+    );
+
+    let mut t = Table::new(vec![
+        "variant",
+        "threads",
+        "batch",
+        "count",
+        "p50 us",
+        "p99 us",
+        "per sec",
+    ]);
+    for r in &report.rows {
+        t.row(vec![
+            r.variant.to_string(),
+            r.threads.to_string(),
+            r.batch.to_string(),
+            r.count.to_string(),
+            format!("{:.1}", r.p50_us),
+            format!("{:.1}", r.p99_us),
+            format!("{:.0}", r.per_sec),
+        ]);
+        bench_util::emit(
+            &format!("serve.{}.t{}.b{}", r.variant, r.threads, r.batch),
+            r.per_sec,
+            match r.variant {
+                "ingest" => "points/s",
+                "epoch_close" => "epochs/s",
+                _ => "queries/s",
+            },
+        );
+        json.record_serve(
+            r.variant, r.threads, r.batch, r.count, r.p50_us, r.p99_us, r.per_sec,
+        );
+    }
+
+    println!("== E16: serving mode (n = {n}, k = {k}, tau = {}) ==", report.tau);
+    print!("{}", t.render());
+    println!(
+        "counters: epochs = {}, batches = {}, query batches = {}",
+        report.epochs, report.batches, report.queries
+    );
+    json.write()?;
+    Ok(())
+}

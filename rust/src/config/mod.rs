@@ -202,6 +202,22 @@ impl Default for StorageConfig {
     }
 }
 
+/// Serving-layer settings (`[serve]` section / `serve.*` keys); see
+/// `crate::serve`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Per-batch ingest compression size (`serve.tau`). `0` (default) is
+    /// the lossless mode: every ingested point becomes a unit-weight
+    /// sketch entry and epoch re-solves are bit-identical to the one-shot
+    /// batch pipeline. `> 0` compresses each batch to at most `tau`
+    /// weighted representatives before folding — bounded memory, sketch
+    /// invariant to batch arrival order but ε-equivalent under re-splits.
+    pub tau: usize,
+    /// Auto-close the epoch after this many ingested batches
+    /// (`serve.epoch_batches`). `0` (default) = close manually.
+    pub epoch_batches: usize,
+}
+
 /// Top-level launcher configuration.
 #[derive(Clone, Debug, Default)]
 pub struct AppConfig {
@@ -211,6 +227,8 @@ pub struct AppConfig {
     pub storage: StorageConfig,
     /// Clustering/engine settings (`[cluster]`).
     pub cluster: ClusterConfig,
+    /// Serving-layer settings (`[serve]`).
+    pub serve: ServeConfig,
 }
 
 impl AppConfig {
@@ -376,6 +394,8 @@ impl AppConfig {
                     Placement::parse(value).map_err(|e| anyhow::anyhow!(e))?
             }
             ("sim", "seed") => self.cluster.sim.seed = p(value)?,
+            ("serve", "tau") => self.serve.tau = p(value)?,
+            ("serve", "epoch_batches") => self.serve.epoch_batches = p(value)?,
             (s, k) => anyhow::bail!("unknown config key [{s}] {k}"),
         }
         Ok(())
@@ -561,6 +581,28 @@ mod tests {
         assert!(AppConfig::load(None, &[("sim.racks".into(), "0".into())]).is_err());
         assert!(AppConfig::load(None, &[("sim.hetero".into(), "gamma".into())]).is_err());
         assert!(AppConfig::load(None, &[("sim.placement".into(), "random".into())]).is_err());
+    }
+
+    #[test]
+    fn serve_keys_apply_and_default_lossless_manual() {
+        let cfg = AppConfig::load(
+            None,
+            &[
+                ("serve.tau".into(), "64".into()),
+                ("serve.epoch_batches".into(), "16".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.tau, 64);
+        assert_eq!(cfg.serve.epoch_batches, 16);
+        // Defaults: lossless ingest, manual epoch close.
+        let d = AppConfig::default();
+        assert_eq!(d.serve, ServeConfig::default());
+        assert_eq!(d.serve.tau, 0);
+        assert_eq!(d.serve.epoch_batches, 0);
+        // Bad values fail loudly.
+        assert!(AppConfig::load(None, &[("serve.tau".into(), "-1".into())]).is_err());
+        assert!(AppConfig::load(None, &[("serve.nope".into(), "1".into())]).is_err());
     }
 
     #[test]

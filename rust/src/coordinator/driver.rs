@@ -187,7 +187,9 @@ pub fn make_backend(cfg: &ClusterConfig) -> Arc<dyn ComputeBackend> {
     }
 }
 
-fn mr_config(cfg: &ClusterConfig) -> MrConfig {
+/// Engine config derived from the cluster config (shared with the serving
+/// layer so epoch re-solves run under the identical fault/sim regime).
+pub(crate) fn mr_config(cfg: &ClusterConfig) -> MrConfig {
     MrConfig {
         n_machines: cfg.machines,
         mem_limit: cfg.mem_limit,

@@ -138,22 +138,20 @@ fn summarize_and_compose(
         keyed,
         move |i: &usize, s: &CoverageSummary, emit| emit(i % groups, s.clone()),
         |g: &usize, group: &[CoverageSummary], emit| {
-            let folded = group
-                .iter()
-                .cloned()
-                .reduce(Coreset::compose)
+            // compose_all: one canonicalization per reducer, byte-identical
+            // to the pairwise fold (see the CoverageSummary docs).
+            let folded = CoverageSummary::compose_all(group.iter().cloned())
                 .expect("non-empty shuffle group");
             emit(*g, folded);
         },
     )?;
 
-    Ok(merged_groups
-        .into_iter()
-        .map(|(_, s)| s)
-        .reduce(Coreset::compose)
-        .unwrap_or_else(|| {
-            CoverageSummary::from_weighted(WeightedSet::with_capacity(store.dim(), 0), 0.0)
-        }))
+    Ok(
+        CoverageSummary::compose_all(merged_groups.into_iter().map(|(_, s)| s))
+            .unwrap_or_else(|| {
+                CoverageSummary::from_weighted(WeightedSet::with_capacity(store.dim(), 0), 0.0)
+            }),
+    )
 }
 
 /// MapReduce k-center with outliers: per-machine coverage summaries of
@@ -239,11 +237,23 @@ pub fn mr_coreset_kmedian_store(
 ) -> Result<CoresetKMedianResult, MrError> {
     let tau = (4 * cfg.k + cfg.z).max(1);
     let merged = summarize_and_compose(cluster, store, cfg, backend, "coreset-kmedian", tau)?;
-    let summary_size = merged.len();
+    solve_summary_kmedian(cluster, &merged, cfg)
+}
 
-    // Trim up to z suspected outliers (lightest entries; ties resolve by
-    // the canonical order, so the trim is deterministic), but never below
-    // k survivors.
+/// The coreset-k-median pipeline's final round on an already-composed
+/// summary: trim up to `z` suspected outliers (lightest entries; ties
+/// resolve by the canonical order, so the trim is deterministic), but never
+/// below `k` survivors, then run weighted local search on the leader.
+///
+/// Exposed so the serving layer ([`crate::serve`]) can re-solve an epoch
+/// sketch through the exact same leader step (same trim order, same
+/// local-search seed derivation) that the one-shot pipeline uses.
+pub fn solve_summary_kmedian(
+    cluster: &mut MrCluster,
+    merged: &CoverageSummary,
+    cfg: &ClusterConfig,
+) -> Result<CoresetKMedianResult, MrError> {
+    let summary_size = merged.len();
     let reps = merged.reps();
     let trimmed = cfg.z.min(summary_size.saturating_sub(cfg.k));
     let mut order: Vec<usize> = (0..summary_size).collect();

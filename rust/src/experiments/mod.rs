@@ -763,6 +763,292 @@ pub fn topology_sweep(
     Ok(rows)
 }
 
+/// One row of the E16 serving bench: one `(variant, threads, batch)` cell
+/// with its latency distribution and throughput.
+#[derive(Clone, Debug)]
+pub struct ServeBenchRow {
+    /// What was measured: `ingest` | `epoch_close` | `query`.
+    pub variant: &'static str,
+    /// Concurrent client threads (1 for `ingest`/`epoch_close`).
+    pub threads: usize,
+    /// Points per batch (`ingest`/`query`; the epoch-close row reports the
+    /// ingest batch size its epochs were fed with).
+    pub batch: usize,
+    /// Operations measured — a deterministic counter (batches ingested,
+    /// epochs closed, query batches answered), identical across repeat
+    /// runs with the same arguments.
+    pub count: u64,
+    /// Median per-operation latency in microseconds.
+    pub p50_us: f64,
+    /// 99th-percentile per-operation latency in microseconds.
+    pub p99_us: f64,
+    /// Throughput: points/s for `ingest`, epochs/s for `epoch_close`,
+    /// queries/s (batched queries, all threads combined) for `query`.
+    pub per_sec: f64,
+}
+
+/// Report of one E16 run ([`serve_bench`]): deterministic counters plus
+/// the measured rows. The counters (`epochs`, `batches`, `queries`) are
+/// pure functions of the arguments — repeat runs must reproduce them
+/// exactly, which `rust/tests/integration_cli.rs` checks.
+#[derive(Clone, Debug)]
+pub struct ServeBenchReport {
+    /// Points in the ingest stream.
+    pub n: usize,
+    /// Point dimensionality.
+    pub dim: usize,
+    /// Centers per model.
+    pub k: usize,
+    /// `serve.tau` the engines ran with (0 = lossless).
+    pub tau: usize,
+    /// Total epochs closed across the whole run (oracle gate included).
+    pub epochs: u64,
+    /// Total batches ingested across the whole run.
+    pub batches: u64,
+    /// Total query batches answered across the whole run.
+    pub queries: u64,
+    /// The pre-timing bit-identity oracle gate ran and passed (the bench
+    /// errors out before timing anything if it fails).
+    pub oracle_checked: bool,
+    /// The measured cells.
+    pub rows: Vec<ServeBenchRow>,
+}
+
+fn percentile_us(sorted: &[std::time::Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx].as_secs_f64() * 1e6
+}
+
+/// E16 — serving bench: ingest throughput, epoch-close latency, and query
+/// p50/p99 latency + queries/s across thread counts and batch sizes.
+///
+/// Before timing anything, a **bit-identity oracle gate** runs (the same
+/// pattern as `benches/e2e.rs`): the stream is ingested under two
+/// different batch partitions (lossless mode) or two arrival orders of
+/// the same partition (compressed mode), both epochs close, and the
+/// published centers must match bitwise — lossless mode additionally
+/// matches the one-shot batch pipeline on the epoch's canonical point
+/// arrangement. Any divergence errors out, so a reported row implies the
+/// oracle passed.
+pub fn serve_bench(
+    params: &ExperimentParams,
+    serve: &crate::config::ServeConfig,
+    n: usize,
+    batch_sizes: &[usize],
+    thread_counts: &[usize],
+    queries_per_thread: usize,
+    backend: std::sync::Arc<dyn ComputeBackend>,
+) -> Result<ServeBenchReport> {
+    use crate::serve::ServeEngine;
+    use std::time::Instant;
+    anyhow::ensure!(!batch_sizes.is_empty(), "need at least one batch size");
+    anyhow::ensure!(
+        batch_sizes.iter().all(|&b| b >= 1),
+        "batch sizes must be positive"
+    );
+    anyhow::ensure!(
+        !thread_counts.is_empty() && thread_counts.iter().all(|&t| t >= 1),
+        "need at least one (positive) thread count"
+    );
+    anyhow::ensure!(queries_per_thread >= 1, "need at least one query per thread");
+    anyhow::ensure!(n >= 1, "need a non-empty stream");
+    let data = params.data_config(n, 0).generate().points;
+    let dim = data.dim();
+    let cfg = params.cluster_config(0);
+    let mut epochs = 0u64;
+    let mut batches = 0u64;
+    let mut queries = 0u64;
+
+    let ingest_all = |engine: &ServeEngine, batch: usize| -> Result<u64> {
+        let mut fed = 0u64;
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + batch).min(n);
+            engine.ingest(&data.view(lo, hi))?;
+            fed += 1;
+            lo = hi;
+        }
+        Ok(fed)
+    };
+
+    // ---- Pre-timing bit-identity oracle gate ----
+    let b0 = batch_sizes[0];
+    let b1 = *batch_sizes.last().expect("non-empty");
+    let engine_a = ServeEngine::with_backend(dim, &cfg, serve, std::sync::Arc::clone(&backend));
+    batches += ingest_all(&engine_a, b0)?;
+    let close_a = engine_a.close_epoch()?;
+    epochs += 1;
+    let engine_b = ServeEngine::with_backend(dim, &cfg, serve, std::sync::Arc::clone(&backend));
+    if serve.tau == 0 {
+        // Lossless: a *different* batch split, fed in reverse order, must
+        // publish bit-identical centers.
+        let mut spans = Vec::new();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + b1.max(1)).min(n);
+            spans.push((lo, hi));
+            lo = hi;
+        }
+        for &(lo, hi) in spans.iter().rev() {
+            engine_b.ingest(&data.view(lo, hi))?;
+            batches += 1;
+        }
+    } else {
+        // Compressed: the same split, fed in reverse order.
+        let mut spans = Vec::new();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + b0).min(n);
+            spans.push((lo, hi));
+            lo = hi;
+        }
+        for &(lo, hi) in spans.iter().rev() {
+            engine_b.ingest(&data.view(lo, hi))?;
+            batches += 1;
+        }
+    }
+    let close_b = engine_b.close_epoch()?;
+    epochs += 1;
+    anyhow::ensure!(
+        close_a.model.centers == close_b.model.centers,
+        "oracle gate: re-partitioned/re-ordered ingest published different centers"
+    );
+    if serve.tau == 0 {
+        // ...and the one-shot batch pipeline on the canonical arrangement.
+        let canonical = crate::summaries::WeightedSet::unit(data.clone()).canonicalize();
+        let mut cluster =
+            crate::mapreduce::MrCluster::new(crate::coordinator::driver::mr_config(&cfg));
+        let oneshot = crate::coordinator::robust::mr_coreset_kmedian(
+            &mut cluster,
+            canonical.points(),
+            &cfg,
+            backend.as_ref(),
+        )?;
+        anyhow::ensure!(
+            close_a.model.centers == oneshot.centers,
+            "oracle gate: serve epoch diverged from the one-shot batch pipeline"
+        );
+    }
+
+    let mut rows = Vec::new();
+
+    // ---- Ingest throughput per batch size ----
+    for &b in batch_sizes {
+        let engine = ServeEngine::with_backend(dim, &cfg, serve, std::sync::Arc::clone(&backend));
+        let mut lat = Vec::new();
+        let t0 = Instant::now();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + b).min(n);
+            let t = Instant::now();
+            engine.ingest(&data.view(lo, hi))?;
+            lat.push(t.elapsed());
+            lo = hi;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        batches += lat.len() as u64;
+        lat.sort_unstable();
+        rows.push(ServeBenchRow {
+            variant: "ingest",
+            threads: 1,
+            batch: b,
+            count: lat.len() as u64,
+            p50_us: percentile_us(&lat, 0.50),
+            p99_us: percentile_us(&lat, 0.99),
+            per_sec: n as f64 / wall.max(1e-9),
+        });
+    }
+
+    // ---- Epoch-close latency (epochs fed at the first batch size) ----
+    const CLOSE_REPS: usize = 3;
+    let engine = ServeEngine::with_backend(dim, &cfg, serve, std::sync::Arc::clone(&backend));
+    let mut lat = Vec::new();
+    let mut close_wall = 0.0f64;
+    for _ in 0..CLOSE_REPS {
+        batches += ingest_all(&engine, b0)?;
+        let t = Instant::now();
+        engine.close_epoch()?;
+        let d = t.elapsed();
+        close_wall += d.as_secs_f64();
+        lat.push(d);
+        epochs += 1;
+    }
+    lat.sort_unstable();
+    rows.push(ServeBenchRow {
+        variant: "epoch_close",
+        threads: 1,
+        batch: b0,
+        count: CLOSE_REPS as u64,
+        p50_us: percentile_us(&lat, 0.50),
+        p99_us: percentile_us(&lat, 0.99),
+        per_sec: CLOSE_REPS as f64 / close_wall.max(1e-9),
+    });
+
+    // ---- Query latency/throughput across thread counts x batch sizes ----
+    // The engine above has a published model; every cell queries it.
+    anyhow::ensure!(engine.snapshot().is_some(), "no model published for the query phase");
+    for &t in thread_counts {
+        for &b in batch_sizes {
+            let b = b.min(n);
+            let q = engine.query_engine();
+            let t0 = Instant::now();
+            let mut lat: Vec<std::time::Duration> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..t)
+                    .map(|ti| {
+                        let q = q.clone();
+                        let data = &data;
+                        s.spawn(move || {
+                            let mut lat = Vec::with_capacity(queries_per_thread);
+                            for j in 0..queries_per_thread {
+                                // Deterministic per-(thread, iteration) view.
+                                let lo = ((ti * queries_per_thread + j) * b) % (n - b + 1);
+                                let view = data.view(lo, lo + b);
+                                let t = Instant::now();
+                                let r = q.query(&view).expect("model is published");
+                                lat.push(t.elapsed());
+                                assert_eq!(r.assign.len(), b);
+                            }
+                            lat
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("query thread panicked"))
+                    .collect()
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let count = (t * queries_per_thread) as u64;
+            queries += count;
+            lat.sort_unstable();
+            rows.push(ServeBenchRow {
+                variant: "query",
+                threads: t,
+                batch: b,
+                count,
+                p50_us: percentile_us(&lat, 0.50),
+                p99_us: percentile_us(&lat, 0.99),
+                per_sec: count as f64 / wall.max(1e-9),
+            });
+        }
+    }
+
+    Ok(ServeBenchReport {
+        n,
+        dim,
+        k: cfg.k,
+        tau: serve.tau,
+        epochs,
+        batches,
+        queries,
+        oracle_checked: true,
+        rows,
+    })
+}
+
 /// E7 — Zipf-skew robustness sweep (the "similar results, omitted" claim).
 pub fn skew_sweep(
     params: &ExperimentParams,
@@ -928,6 +1214,61 @@ mod tests {
         // Slower links + a slow host population can only stretch the
         // aggregate simulated makespan.
         assert!(oversub >= flat, "oversubscribed {oversub:?} < flat {flat:?}");
+    }
+
+    #[test]
+    fn serve_bench_rows_and_counters_are_deterministic() {
+        let serve = crate::config::ServeConfig::default();
+        let run = || {
+            serve_bench(
+                &tiny(),
+                &serve,
+                600,
+                &[128, 256],
+                &[1, 2],
+                4,
+                std::sync::Arc::new(NativeBackend),
+            )
+            .unwrap()
+        };
+        let a = run();
+        // 2 ingest rows + 1 epoch-close row + (2 threads x 2 batches) query rows.
+        assert_eq!(a.rows.len(), 7);
+        assert!(a.oracle_checked);
+        assert_eq!(a.epochs, 2 + 3, "oracle pair + CLOSE_REPS");
+        assert!(a.batches > 0 && a.queries == (1 + 2) * 2 * 4);
+        for r in &a.rows {
+            assert!(r.count > 0, "{} cell measured nothing", r.variant);
+            assert!(r.per_sec > 0.0 && r.p50_us >= 0.0 && r.p99_us >= r.p50_us);
+        }
+        // Counters are pure functions of the arguments.
+        let b = run();
+        assert_eq!((a.epochs, a.batches, a.queries), (b.epochs, b.batches, b.queries));
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(
+                (x.variant, x.threads, x.batch, x.count),
+                (y.variant, y.threads, y.batch, y.count)
+            );
+        }
+    }
+
+    #[test]
+    fn serve_bench_compressed_mode_gate_passes() {
+        let serve = crate::config::ServeConfig { tau: 16, epoch_batches: 0 };
+        let rep = serve_bench(
+            &tiny(),
+            &serve,
+            500,
+            &[100],
+            &[1],
+            2,
+            std::sync::Arc::new(NativeBackend),
+        )
+        .unwrap();
+        assert_eq!(rep.tau, 16);
+        assert!(rep.oracle_checked);
+        assert_eq!(rep.rows.len(), 1 + 1 + 1);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //!   layer is parameterized over pluggable metric spaces
 //!   ([`geometry::MetricKind`]: `l2sq`/`l2`/`l1`/`cosine`/`chebyshev`,
 //!   selected via `cluster.metric`) — honoring the paper's general-metric
-//!   statement of its algorithms.
+//!   statement of its algorithms. The [`serve`] layer turns the composable
+//!   summaries into a long-lived serving mode: incremental coreset epochs
+//!   with a concurrent, snapshot-isolated query path.
 //! * **L2/L1 (python, build-time only)** — the numeric hot loop
 //!   (blocked nearest-center assignment and Lloyd accumulation) written in
 //!   JAX calling a Pallas kernel, AOT-lowered to HLO-text artifacts.
@@ -53,6 +55,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod sim;
 pub mod summaries;
 pub mod util;
@@ -76,6 +79,7 @@ pub mod prelude {
     };
     pub use crate::runtime::{ComputeBackend, NativeBackend};
     pub use crate::sampling::{IterativeSampleConfig, SampleConstants};
+    pub use crate::serve::{IngestLog, Model, ModelSlot, QueryEngine, QueryResponse, ServeEngine};
     pub use crate::sim::{ClusterSim, Heterogeneity, NetworkKind, Placement, SimConfig};
     pub use crate::summaries::{Coreset, CoverageSummary, WeightedSet};
     pub use crate::util::rng::Rng;

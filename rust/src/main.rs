@@ -18,6 +18,7 @@
 //!   ooc-sweep                E14: file-backed (out-of-core) throughput sweep
 //!   ooc-check                E14: assert file-backed == in-memory, O(chunk) peak
 //!   topology-sweep           E15: rounds vs simulated wall-clock over topologies
+//!   serve-bench              E16: serving-mode ingest/close/query latency bench
 //!   mrc-check                run Sampling-Lloyd and verify MRC^0 bounds
 //! ```
 //!
@@ -165,6 +166,7 @@ fn main() -> Result<()> {
         "ooc-sweep" => cmd_ooc_sweep(&cfg, &args)?,
         "ooc-check" => cmd_ooc_check(&cfg, &args)?,
         "topology-sweep" => cmd_topology_sweep(&cfg, &args)?,
+        "serve-bench" => cmd_serve_bench(&cfg, &args)?,
         "streaming-compare" => cmd_streaming(&cfg, &args)?,
         "kmeans-check" => cmd_kmeans(&cfg, &args)?,
         "mrc-check" => cmd_mrc_check(&cfg)?,
@@ -213,6 +215,13 @@ commands:
                      discrete-event simulation across {flat, racked,
                      oversubscribed} networks with heterogeneous hosts;
                      outputs are verified bit-identical to the sim-off run
+  serve-bench        [--n N] [--batches LIST] [--threads LIST]
+                     [--queries Q] [--json FILE]: E16 serving mode —
+                     ingest throughput, epoch-close latency, and query
+                     p50/p99 + queries/s across thread counts and batch
+                     sizes; a pre-timing bit-identity oracle gate bails
+                     before timing if re-partitioned ingest or the
+                     one-shot pipeline diverges (see serve.* keys)
   mrc-check          run Sampling-Lloyd, assert MRC^0 resource bounds
                      (including the recovery-memory audit)
 
@@ -241,6 +250,7 @@ config keys (TOML [section] key, or --set section.key=value):
   sim.nic_mbps sim.compute_mbps sim.latency_us
   sim.hetero(none|lognormal[:sigma]|bimodal[:frac[:factor]])
   sim.placement(roundrobin|rackaware) sim.seed
+  serve.tau(0=lossless) serve.epoch_batches(0=manual close)
 ";
 
 fn cmd_info(cfg: &AppConfig) -> Result<()> {
@@ -841,6 +851,108 @@ fn cmd_topology_sweep(cfg: &AppConfig, args: &Args) -> Result<()> {
     }
     if !all_identical {
         bail!("a simulated run diverged from its baseline: the sim must be a pure observer");
+    }
+    Ok(())
+}
+
+fn cmd_serve_bench(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let n = args
+        .flags
+        .get("n")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(50_000);
+    let batch_sizes = match args.flags.get("batches") {
+        Some(s) => parse_ns(s)?,
+        None => vec![256, 1024],
+    };
+    let thread_counts = match args.flags.get("threads") {
+        Some(s) => parse_ns(s)?,
+        None => vec![1, 2, 4, 8],
+    };
+    let queries = args
+        .flags
+        .get("queries")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(32);
+    let params = params_from(cfg, 1);
+    let backend = experiments::make_backend(&cfg.cluster);
+    let report = experiments::serve_bench(
+        &params,
+        &cfg.serve,
+        n,
+        &batch_sizes,
+        &thread_counts,
+        queries,
+        backend,
+    )?;
+    println!(
+        "== E16: serving mode (n = {}, dim = {}, k = {}, tau = {}; oracle gate passed \
+         before timing) ==",
+        report.n, report.dim, report.k, report.tau
+    );
+    let mut t = Table::new(vec![
+        "variant",
+        "threads",
+        "batch",
+        "count",
+        "p50 us",
+        "p99 us",
+        "per sec",
+    ]);
+    for r in &report.rows {
+        t.row(vec![
+            r.variant.to_string(),
+            r.threads.to_string(),
+            r.batch.to_string(),
+            r.count.to_string(),
+            format!("{:.1}", r.p50_us),
+            format!("{:.1}", r.p99_us),
+            format!("{:.0}", r.per_sec),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "counters: epochs = {}, batches = {}, query batches = {} (deterministic for \
+         fixed arguments; per_sec is points/s for ingest, epochs/s for epoch_close, \
+         queries/s for query)",
+        report.epochs, report.batches, report.queries
+    );
+    if let Some(path) = args.flags.get("json") {
+        // Hand-rolled JSON writer (offline build, no serde), schema v2:
+        // a header object with the deterministic counters plus one record
+        // per measured (variant, threads, batch) cell.
+        let mut out = String::from("{\n");
+        out.push_str("  \"schema\": \"mrcluster-serve-bench-v2\",\n");
+        out.push_str(&format!(
+            "  \"n\": {}, \"dim\": {}, \"k\": {}, \"tau\": {},\n",
+            report.n, report.dim, report.k, report.tau
+        ));
+        out.push_str(&format!(
+            "  \"epochs\": {}, \"batches\": {}, \"queries\": {},\n",
+            report.epochs, report.batches, report.queries
+        ));
+        out.push_str(&format!("  \"oracle_checked\": {},\n", report.oracle_checked));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in report.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"variant\": \"{}\", \"threads\": {}, \"batch\": {}, \
+                 \"count\": {}, \"p50_us\": {:.3}, \"p99_us\": {:.3}, \
+                 \"per_sec\": {:.3}}}{}\n",
+                r.variant,
+                r.threads,
+                r.batch,
+                r.count,
+                r.p50_us,
+                r.p99_us,
+                r.per_sec,
+                if i + 1 == report.rows.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+        println!("wrote {} rows to {path}", report.rows.len());
     }
     Ok(())
 }

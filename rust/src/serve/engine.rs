@@ -1,0 +1,273 @@
+//! [`ServeEngine`]: ties the ingest log, the epoch re-solve, and the
+//! published-model slot into one long-lived service object.
+
+use super::ingest::IngestLog;
+use super::model::{Model, ModelSlot};
+use super::query::{QueryEngine, QueryResponse};
+use crate::config::{ClusterConfig, ServeConfig};
+use crate::coordinator::driver::{make_backend, mr_config};
+use crate::coordinator::robust::{mr_coreset_kmedian, solve_summary_kmedian};
+use crate::geometry::PointSet;
+use crate::mapreduce::MrCluster;
+use crate::runtime::ComputeBackend;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What one [`ServeEngine::close_epoch`] call did.
+#[derive(Clone, Debug)]
+pub struct EpochClose {
+    /// The published model (already visible to queries when this returns).
+    pub model: Arc<Model>,
+    /// Batches the closed epoch had ingested.
+    pub batches: u64,
+    /// Points the closed epoch had ingested.
+    pub points: u64,
+    /// Representatives in the epoch sketch the re-solve ran on.
+    pub sketch_len: usize,
+    /// Sketch entries trimmed as suspected outliers before the final step.
+    pub trimmed: usize,
+    /// MapReduce rounds the re-solve spent.
+    pub rounds: usize,
+    /// Wall-clock time of the re-solve + publish.
+    pub wall: Duration,
+}
+
+/// The serving engine: single-writer ingest, epoch close through the batch
+/// coordinator machinery, lock-free-for-readers model publication.
+///
+/// Concurrency contract: [`ServeEngine::ingest`] and
+/// [`ServeEngine::close_epoch`] serialize on the internal ingest lock;
+/// queries ([`ServeEngine::query`], or any number of cloned
+/// [`QueryEngine`] handles) touch only the [`ModelSlot`] and the shared
+/// compute kernels, so they never block ingestion and never observe a torn
+/// model. The engine is `Send + Sync`; share it behind an `Arc` to serve
+/// from many threads.
+pub struct ServeEngine {
+    cfg: ClusterConfig,
+    serve: ServeConfig,
+    backend: Arc<dyn ComputeBackend>,
+    ingest: Mutex<IngestLog>,
+    slot: Arc<ModelSlot>,
+}
+
+impl ServeEngine {
+    /// An engine for `dim`-dimensional points, with the compute backend
+    /// resolved from `cfg` (kernel-ladder routing included: `exact`/`gemm`
+    /// kernels and f64/f32 precision all serve).
+    pub fn new(dim: usize, cfg: &ClusterConfig, serve: &ServeConfig) -> ServeEngine {
+        ServeEngine::with_backend(dim, cfg, serve, make_backend(cfg))
+    }
+
+    /// [`ServeEngine::new`] with an explicit backend (shared across
+    /// engines in benches and tests).
+    pub fn with_backend(
+        dim: usize,
+        cfg: &ClusterConfig,
+        serve: &ServeConfig,
+        backend: Arc<dyn ComputeBackend>,
+    ) -> ServeEngine {
+        // Constant per-batch compression seed: a compressed batch summary
+        // must be a pure function of the batch contents (never of its
+        // arrival index) or order invariance would break.
+        let log = IngestLog::new(dim, cfg.metric, serve.tau, cfg.seed ^ 0xB47C1);
+        ServeEngine {
+            cfg: cfg.clone(),
+            serve: serve.clone(),
+            backend,
+            ingest: Mutex::new(log),
+            slot: Arc::new(ModelSlot::new()),
+        }
+    }
+
+    /// Fold one batch into the current epoch. When `serve.epoch_batches`
+    /// is non-zero and the batch count reaches it, the epoch closes
+    /// automatically and the close report is returned.
+    pub fn ingest(&self, batch: &PointSet) -> anyhow::Result<Option<EpochClose>> {
+        let auto_close = {
+            let mut log = self.ingest.lock().unwrap_or_else(|e| e.into_inner());
+            log.ingest(batch, self.backend.as_ref());
+            self.serve.epoch_batches > 0 && log.batches() >= self.serve.epoch_batches as u64
+        };
+        if auto_close {
+            return self.close_epoch().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Close the current epoch: take its sketch, re-solve through the
+    /// coordinator machinery, and publish the model by snapshot swap.
+    ///
+    /// Lossless mode (`serve.tau == 0`) runs the literal one-shot
+    /// coreset-k-median pipeline on the epoch's canonical point
+    /// arrangement — centers are bit-identical to a batch run on the same
+    /// data. Compressed mode re-solves the folded sketch through the same
+    /// trim + weighted-local-search leader round the pipeline's round 3
+    /// uses. Errors if the epoch is empty.
+    pub fn close_epoch(&self) -> anyhow::Result<EpochClose> {
+        let (sketch, epoch, batches, points) = {
+            let mut log = self.ingest.lock().unwrap_or_else(|e| e.into_inner());
+            anyhow::ensure!(
+                !log.is_empty(),
+                "epoch {} has no ingested points",
+                log.epoch()
+            );
+            log.take_epoch()
+        };
+        let t0 = Instant::now();
+        let mut cluster = MrCluster::new(mr_config(&self.cfg));
+        let result = if self.serve.tau == 0 {
+            let epoch_points = sketch.reps().points().clone();
+            mr_coreset_kmedian(&mut cluster, &epoch_points, &self.cfg, self.backend.as_ref())?
+        } else {
+            solve_summary_kmedian(&mut cluster, &sketch, &self.cfg)?
+        };
+        let model = self.slot.publish(Model {
+            epoch,
+            centers: result.centers,
+            metric: self.cfg.metric,
+            summary_size: sketch.len(),
+            total_weight: crate::summaries::Coreset::total_weight(&sketch),
+        });
+        Ok(EpochClose {
+            model,
+            batches,
+            points,
+            sketch_len: sketch.len(),
+            trimmed: result.trimmed,
+            rounds: cluster.stats.n_rounds(),
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Answer one batched query against the current snapshot (`None`
+    /// until the first epoch publishes). Shorthand for
+    /// [`ServeEngine::query_engine`]`.query(batch)`.
+    pub fn query(&self, batch: &PointSet) -> Option<QueryResponse> {
+        self.query_engine().query(batch)
+    }
+
+    /// A cloneable query handle sharing this engine's model slot and
+    /// compute backend — hand one to each serving thread.
+    pub fn query_engine(&self) -> QueryEngine {
+        QueryEngine::new(Arc::clone(&self.slot), Arc::clone(&self.backend))
+    }
+
+    /// The currently published model, if any epoch has closed.
+    pub fn snapshot(&self) -> Option<Arc<Model>> {
+        self.slot.snapshot()
+    }
+
+    /// Batches folded into the open epoch so far.
+    pub fn pending_batches(&self) -> u64 {
+        self.ingest
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .batches()
+    }
+
+    /// Points folded into the open epoch so far.
+    pub fn pending_points(&self) -> u64 {
+        self.ingest
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .points()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::MetricKind;
+
+    fn tiny_cfg() -> ClusterConfig {
+        ClusterConfig {
+            k: 3,
+            machines: 4,
+            ls_max_swaps: 20,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    fn stream(n: usize, seed: u64) -> PointSet {
+        crate::data::DataGenConfig {
+            n,
+            k: 3,
+            dim: 2,
+            sigma: 0.1,
+            seed,
+            ..Default::default()
+        }
+        .generate()
+        .points
+    }
+
+    #[test]
+    fn close_on_empty_epoch_errors() {
+        let engine = ServeEngine::new(2, &tiny_cfg(), &ServeConfig::default());
+        let err = engine.close_epoch().unwrap_err();
+        assert!(format!("{err:#}").contains("no ingested points"), "{err:#}");
+        assert!(engine.snapshot().is_none());
+    }
+
+    #[test]
+    fn ingest_close_query_round_trip() {
+        let engine = ServeEngine::new(2, &tiny_cfg(), &ServeConfig::default());
+        let data = stream(300, 5);
+        for chunk in data.chunks(3) {
+            engine.ingest(&chunk).unwrap();
+        }
+        assert_eq!(engine.pending_batches(), 3);
+        assert_eq!(engine.pending_points(), 300);
+        let close = engine.close_epoch().unwrap();
+        assert_eq!(close.model.epoch, 1);
+        assert_eq!(close.model.centers.len(), 3);
+        assert_eq!(close.points, 300);
+        assert_eq!(close.rounds, 3, "summarize + compose + leader solve");
+        assert_eq!(engine.pending_points(), 0, "epoch reset");
+        let r = engine.query(&data.view(0, 10)).unwrap();
+        assert_eq!(r.epoch, 1);
+        assert_eq!(r.assign.len(), 10);
+        assert!(r.cost.is_finite());
+    }
+
+    #[test]
+    fn auto_close_fires_on_epoch_batches() {
+        let serve = ServeConfig {
+            epoch_batches: 2,
+            ..Default::default()
+        };
+        let engine = ServeEngine::new(2, &tiny_cfg(), &serve);
+        let data = stream(200, 6);
+        assert!(engine.ingest(&data.view(0, 100)).unwrap().is_none());
+        let close = engine
+            .ingest(&data.view(100, 200))
+            .unwrap()
+            .expect("second batch must close the epoch");
+        assert_eq!(close.model.epoch, 1);
+        assert_eq!(close.batches, 2);
+        assert_eq!(engine.snapshot().unwrap().epoch, 1);
+    }
+
+    #[test]
+    fn compressed_mode_serves_with_bounded_sketch() {
+        let serve = ServeConfig {
+            tau: 8,
+            ..Default::default()
+        };
+        let cfg = ClusterConfig {
+            metric: MetricKind::L1,
+            ..tiny_cfg()
+        };
+        let engine = ServeEngine::new(2, &cfg, &serve);
+        let data = stream(400, 7);
+        for chunk in data.chunks(4) {
+            engine.ingest(&chunk).unwrap();
+        }
+        let close = engine.close_epoch().unwrap();
+        assert!(close.sketch_len <= 4 * 8, "tau bound per batch");
+        assert_eq!(close.model.metric, MetricKind::L1);
+        assert!((close.model.total_weight - 400.0).abs() < 1e-9);
+        assert!(engine.query(&data.view(0, 5)).is_some());
+    }
+}

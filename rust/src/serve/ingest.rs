@@ -1,0 +1,197 @@
+//! [`IngestLog`]: fold incoming point batches into the current epoch's
+//! coverage-summary sketch.
+
+use crate::geometry::{MetricKind, PointSet};
+use crate::runtime::ComputeBackend;
+use crate::summaries::{CoverageSummary, WeightedSet};
+
+/// The write side of the serving layer: batches arrive, each is embedded
+/// (or compressed) into weighted representatives, and the representatives
+/// accumulate into the current epoch's sketch.
+///
+/// The accumulation is exactly a [`Coreset::compose`] fold of per-batch
+/// summaries, with the canonicalization deferred to [`IngestLog::sketch`] —
+/// one sort per publish instead of one per batch
+/// ([`CoverageSummary::compose_all`] proves the deferral byte-identical to
+/// the eager fold). Two regimes:
+///
+/// * **lossless** (`tau == 0`, the default): every batch point becomes a
+///   unit-weight representative. The epoch sketch is then the canonical
+///   multiset of all points ingested this epoch — a pure function of the
+///   data multiset, so *any* partition, permutation, or regrouping of the
+///   stream into batches yields bit-identical sketch bytes.
+/// * **compressed** (`tau > 0`): each batch is first summarized down to at
+///   most `tau` weighted representatives
+///   ([`CoverageSummary::build_metric`], fixed seed). Memory stays bounded
+///   by `tau · batches`; the sketch is invariant to batch *arrival order*
+///   (composition is commutative) but only ε-equivalent under
+///   re-splitting, since the per-batch compression sees different blocks.
+///
+/// The log is single-writer: [`crate::serve::ServeEngine`] wraps it in a
+/// `Mutex` that queries never take.
+///
+/// [`Coreset::compose`]: crate::summaries::Coreset::compose
+#[derive(Clone, Debug)]
+pub struct IngestLog {
+    metric: MetricKind,
+    /// Per-batch compression size; `0` = lossless unit-weight embedding.
+    tau: usize,
+    /// Seed for the per-batch compression skeleton. Constant across
+    /// batches, so a compressed batch summary is a pure function of the
+    /// batch contents — the property order invariance rests on.
+    seed: u64,
+    /// Current epoch id (first epoch is 1).
+    epoch: u64,
+    batches: u64,
+    points: u64,
+    /// Accumulated representatives, in arrival order (canonicalized only
+    /// when the sketch is taken).
+    raw: WeightedSet,
+    /// Running max of the per-batch coverage radii (0 while lossless).
+    radius: f64,
+}
+
+impl IngestLog {
+    /// An empty log for `dim`-dimensional points under `metric`, with the
+    /// given per-batch compression size (`tau == 0` = lossless) and
+    /// compression seed.
+    pub fn new(dim: usize, metric: MetricKind, tau: usize, seed: u64) -> IngestLog {
+        IngestLog {
+            metric,
+            tau,
+            seed,
+            epoch: 1,
+            batches: 0,
+            points: 0,
+            raw: WeightedSet::with_capacity(dim, 0),
+            radius: 0.0,
+        }
+    }
+
+    /// Fold one batch into the current epoch. Lossless mode appends every
+    /// point at unit weight; compressed mode first summarizes the batch to
+    /// at most `tau` representatives through `backend`'s assignment kernel.
+    pub fn ingest(&mut self, batch: &PointSet, backend: &dyn ComputeBackend) {
+        assert_eq!(batch.dim(), self.raw.dim(), "ingest batch dim mismatch");
+        self.batches += 1;
+        self.points += batch.len() as u64;
+        if batch.is_empty() {
+            return;
+        }
+        if self.tau == 0 {
+            self.raw.extend(&WeightedSet::unit(batch.clone()));
+        } else {
+            let summary = CoverageSummary::build_metric(
+                batch,
+                self.tau.min(batch.len()),
+                self.seed,
+                backend,
+                self.metric,
+            );
+            self.radius = self.radius.max(summary.radius());
+            self.raw.extend(summary.reps());
+        }
+    }
+
+    /// The current epoch's sketch: the accumulated representatives,
+    /// canonicalized now (the once-per-publish sort), with the running max
+    /// coverage radius. Does not reset the log.
+    pub fn sketch(&self) -> CoverageSummary {
+        CoverageSummary::from_weighted(self.raw.clone(), self.radius)
+    }
+
+    /// Close the current epoch: return `(sketch, epoch id, batches,
+    /// points)` and reset the log for the next epoch (epoch id advances by
+    /// one; counters and accumulator clear).
+    pub fn take_epoch(&mut self) -> (CoverageSummary, u64, u64, u64) {
+        let sketch = self.sketch();
+        let closed = (sketch, self.epoch, self.batches, self.points);
+        self.epoch += 1;
+        self.batches = 0;
+        self.points = 0;
+        self.raw = WeightedSet::with_capacity(self.raw.dim(), 0);
+        self.radius = 0.0;
+        closed
+    }
+
+    /// Current epoch id (the id the *next* close will publish).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Batches folded into the current epoch so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Points ingested into the current epoch so far.
+    pub fn points(&self) -> u64 {
+        self.points
+    }
+
+    /// Representatives currently accumulated (pre-canonicalization).
+    pub fn pending_reps(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// True when nothing has been ingested this epoch.
+    pub fn is_empty(&self) -> bool {
+        self.points == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::summaries::Coreset;
+
+    fn batch(coords: &[f32]) -> PointSet {
+        PointSet::from_flat(1, coords.to_vec())
+    }
+
+    #[test]
+    fn lossless_sketch_is_the_canonical_point_multiset() {
+        let mut log = IngestLog::new(1, MetricKind::L2Sq, 0, 7);
+        log.ingest(&batch(&[3.0, 1.0]), &NativeBackend);
+        log.ingest(&batch(&[2.0]), &NativeBackend);
+        let s = log.sketch();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.total_weight(), 3.0);
+        assert_eq!(s.radius(), 0.0, "lossless sketch has no coverage error");
+        assert_eq!(s.reps().row(0), &[1.0]);
+        assert_eq!(s.reps().row(2), &[3.0]);
+        assert_eq!((log.batches(), log.points()), (2, 3));
+    }
+
+    #[test]
+    fn take_epoch_resets_and_advances() {
+        let mut log = IngestLog::new(1, MetricKind::L2Sq, 0, 7);
+        log.ingest(&batch(&[1.0]), &NativeBackend);
+        let (s, epoch, batches, points) = log.take_epoch();
+        assert_eq!((s.len(), epoch, batches, points), (1, 1, 1, 1));
+        assert!(log.is_empty());
+        assert_eq!(log.epoch(), 2);
+        assert_eq!(log.pending_reps(), 0);
+    }
+
+    #[test]
+    fn compressed_mode_bounds_reps_and_tracks_radius() {
+        let mut log = IngestLog::new(1, MetricKind::L2Sq, 2, 7);
+        log.ingest(&batch(&[0.0, 0.1, 0.2, 5.0]), &NativeBackend);
+        log.ingest(&batch(&[9.0, 9.1, 9.2]), &NativeBackend);
+        assert!(log.pending_reps() <= 4, "2 reps per batch max");
+        let s = log.sketch();
+        assert_eq!(s.total_weight(), 7.0, "weights still cover every point");
+        assert!(s.radius() > 0.0, "compression has coverage error");
+    }
+
+    #[test]
+    fn empty_batches_count_but_add_nothing() {
+        let mut log = IngestLog::new(2, MetricKind::L1, 3, 7);
+        log.ingest(&PointSet::with_capacity(2, 0), &NativeBackend);
+        assert_eq!(log.batches(), 1);
+        assert!(log.is_empty());
+        assert_eq!(log.sketch().len(), 0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Serving layer: incremental coreset epochs + a concurrent query path.
+//!
+//! The batch pipelines end at a one-shot solve, but
+//! [`Coreset::compose`](crate::summaries::Coreset::compose) is an
+//! associative, commutative, bit-deterministic merge — exactly the
+//! primitive the composable-coreset line (Ceccarello et al.) uses to turn
+//! batch clustering into streaming maintenance. This module builds the
+//! long-lived service on it:
+//!
+//! * [`IngestLog`] folds incoming point batches into the current epoch's
+//!   [`CoverageSummary`](crate::summaries::CoverageSummary) sketch. The
+//!   fold is compose-shaped but canonicalizes **once per publish**
+//!   ([`CoverageSummary::compose_all`](crate::summaries::CoverageSummary::compose_all)),
+//!   so a long ingest chain never pays a per-batch re-sort.
+//! * [`ServeEngine::close_epoch`] re-solves the sketch through the
+//!   existing coordinator machinery (the one-shot coreset-k-median
+//!   pipeline in lossless mode, the shared weighted-local-search leader
+//!   round in compressed mode) and publishes a [`Model`] by atomic `Arc`
+//!   snapshot swap ([`ModelSlot`]).
+//! * [`QueryEngine`] answers batched assign/cost queries on the existing
+//!   compute kernels against whichever snapshot it captured. Queries never
+//!   take the ingest lock and never observe a torn model: a captured
+//!   snapshot is an immutable `Arc<Model>`.
+//!
+//! # Epoch lifecycle
+//!
+//! ```text
+//! ingest(b₁) … ingest(bₙ) ──► close_epoch() ──► publish(Arc<Model>) ──► epoch+1
+//!        │                        │                     │
+//!   fold into sketch        re-solve sketch      queries swap to the
+//!   (no canonicalize)      (coordinator rounds)  new snapshot atomically
+//! ```
+//!
+//! # Bit-identical vs ε-equivalent
+//!
+//! | `serve.tau` | epoch sketch | re-solved centers |
+//! |---|---|---|
+//! | `0` (lossless, default) | bit-identical under **any** batch split, arrival order, or regrouping — the sketch is the canonical multiset of the epoch's points | bit-identical to the one-shot batch pipeline on the epoch's canonical point arrangement |
+//! | `> 0` (compressed) | bit-identical under batch *reordering* (compose commutativity); ε-equivalent under re-*splitting* (each batch is lossily summarized before folding) | deterministic per batch partition; ε-equivalent across partitions |
+//!
+//! `rust/tests/prop_serve.rs` property-tests the lossless column and the
+//! compressed column's order invariance; the concurrent stress test there
+//! proves snapshot isolation (every answer maps to exactly one published
+//! epoch).
+
+mod engine;
+mod ingest;
+mod model;
+mod query;
+
+pub use engine::{EpochClose, ServeEngine};
+pub use ingest::IngestLog;
+pub use model::{Model, ModelSlot};
+pub use query::{QueryEngine, QueryResponse};

@@ -1,0 +1,104 @@
+//! [`Model`] and [`ModelSlot`]: the immutable published model and its
+//! atomic snapshot-swap cell.
+
+use crate::geometry::{MetricKind, PointSet};
+use std::sync::{Arc, RwLock};
+
+/// One published epoch's model: the re-solved centers plus enough
+/// provenance to interpret an answer. A `Model` is immutable after
+/// publication — queries hold it through an `Arc`, so no field can change
+/// underneath an in-flight batch.
+#[derive(Clone, Debug)]
+pub struct Model {
+    /// Epoch id this model was solved from (first epoch is 1).
+    pub epoch: u64,
+    /// The k centers.
+    pub centers: PointSet,
+    /// Metric the centers were solved under; queries answer in the same
+    /// geometry.
+    pub metric: MetricKind,
+    /// Representatives in the epoch sketch the re-solve ran on.
+    pub summary_size: usize,
+    /// Total input weight the sketch represented (= the epoch's point
+    /// count in lossless mode).
+    pub total_weight: f64,
+}
+
+/// The snapshot-swap cell between the epoch-close writer and concurrent
+/// query readers.
+///
+/// The **snapshot-swap contract**: [`ModelSlot::publish`] replaces the
+/// slot's `Arc<Model>` under a write lock; [`ModelSlot::snapshot`] clones
+/// the `Arc` under a read lock held only for the pointer copy. A reader
+/// therefore pays O(1) synchronization per *batch* (not per point), never
+/// blocks ingestion (the slot is the only shared state), and can never
+/// observe a torn model: whatever `Arc` it captured points at one fully
+/// published, immutable epoch — before or after any concurrent swap, never
+/// between. `rust/tests/prop_serve.rs` stress-tests the contract under
+/// contention.
+#[derive(Debug, Default)]
+pub struct ModelSlot {
+    slot: RwLock<Option<Arc<Model>>>,
+}
+
+impl ModelSlot {
+    /// An empty slot (no model published yet).
+    pub fn new() -> ModelSlot {
+        ModelSlot::default()
+    }
+
+    /// Atomically swap in a new model; returns the published `Arc`.
+    pub fn publish(&self, model: Model) -> Arc<Model> {
+        let arc = Arc::new(model);
+        let mut slot = self.slot.write().unwrap_or_else(|e| e.into_inner());
+        *slot = Some(Arc::clone(&arc));
+        arc
+    }
+
+    /// Capture the current snapshot, if any epoch has been published.
+    pub fn snapshot(&self) -> Option<Arc<Model>> {
+        self.slot
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Epoch id of the current snapshot, if any.
+    pub fn epoch(&self) -> Option<u64> {
+        self.snapshot().map(|m| m.epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(epoch: u64) -> Model {
+        Model {
+            epoch,
+            centers: PointSet::from_flat(1, vec![epoch as f32]),
+            metric: MetricKind::L2Sq,
+            summary_size: 1,
+            total_weight: 1.0,
+        }
+    }
+
+    #[test]
+    fn empty_slot_has_no_snapshot() {
+        let slot = ModelSlot::new();
+        assert!(slot.snapshot().is_none());
+        assert!(slot.epoch().is_none());
+    }
+
+    #[test]
+    fn publish_swaps_and_old_snapshots_stay_valid() {
+        let slot = ModelSlot::new();
+        slot.publish(model(1));
+        let old = slot.snapshot().unwrap();
+        slot.publish(model(2));
+        // The captured snapshot still reads epoch 1 — immutable under swap.
+        assert_eq!(old.epoch, 1);
+        assert_eq!(old.centers.row(0), &[1.0]);
+        assert_eq!(slot.epoch(), Some(2));
+    }
+}

@@ -1,0 +1,118 @@
+//! [`QueryEngine`]: batched assign/cost queries against a captured model
+//! snapshot.
+
+use super::model::{Model, ModelSlot};
+use crate::geometry::PointSet;
+use crate::runtime::ComputeBackend;
+use std::sync::Arc;
+
+/// The answer to one batched query, computed entirely against a single
+/// captured snapshot — the whole batch reflects exactly one published
+/// epoch (`epoch` says which), never a mix.
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    /// Epoch id of the snapshot this batch was answered against.
+    pub epoch: u64,
+    /// Nearest-center index per query point.
+    pub assign: Vec<u32>,
+    /// Per-point distance surrogate to the assigned center (same
+    /// semantics as [`crate::runtime::AssignOut::sqdist`]: squared
+    /// distance for `l2sq`, the true distance for `l2`/`l1`/`chebyshev`,
+    /// the `1 − cos θ` surrogate for `cosine`).
+    pub dist: Vec<f32>,
+    /// Batch cost: the sum of true metric distances (not surrogates) from
+    /// each point to its center, accumulated serially in point order —
+    /// bit-deterministic at any thread count.
+    pub cost: f64,
+}
+
+/// A cloneable handle answering batched queries against whichever
+/// [`Model`] snapshot each call captures.
+///
+/// Each [`QueryEngine::query`] call captures the snapshot once, then runs
+/// the batch through the configured compute kernel (the same l2sq fast
+/// paths, general-metric kernels, and GEMM/f32 ladder rungs the batch
+/// pipelines use; large batches parallelize over the shared worker pool).
+/// Queries never take the ingest lock, so they never block — and are never
+/// blocked by — ingestion; concurrent epoch closes only swap the slot,
+/// which the already-captured snapshot is immune to.
+#[derive(Clone)]
+pub struct QueryEngine {
+    slot: Arc<ModelSlot>,
+    backend: Arc<dyn ComputeBackend>,
+}
+
+impl QueryEngine {
+    /// A handle over `slot` answering through `backend`.
+    pub fn new(slot: Arc<ModelSlot>, backend: Arc<dyn ComputeBackend>) -> QueryEngine {
+        QueryEngine { slot, backend }
+    }
+
+    /// Answer one batch against the current snapshot; `None` until the
+    /// first epoch publishes.
+    pub fn query(&self, batch: &PointSet) -> Option<QueryResponse> {
+        let model = self.slot.snapshot()?;
+        Some(QueryEngine::answer(&model, self.backend.as_ref(), batch))
+    }
+
+    /// The pure per-batch answer function: assign `batch` to `model`'s
+    /// centers under `model`'s metric. Public so consistency tests can
+    /// serially replay a concurrent run's answers against a pinned model
+    /// through the *identical* code path.
+    pub fn answer(model: &Model, backend: &dyn ComputeBackend, batch: &PointSet) -> QueryResponse {
+        let out = backend.assign_metric(batch, &model.centers, model.metric);
+        let cost = out
+            .sqdist
+            .iter()
+            .map(|&s| model.metric.to_dist_f64(s))
+            .sum();
+        QueryResponse {
+            epoch: model.epoch,
+            assign: out.idx,
+            dist: out.sqdist,
+            cost,
+        }
+    }
+
+    /// Epoch id of the snapshot a query issued now would capture.
+    pub fn current_epoch(&self) -> Option<u64> {
+        self.slot.epoch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::MetricKind;
+    use crate::runtime::NativeBackend;
+
+    fn publish(slot: &ModelSlot, centers: &[f32]) {
+        slot.publish(Model {
+            epoch: 1,
+            centers: PointSet::from_flat(1, centers.to_vec()),
+            metric: MetricKind::L2Sq,
+            summary_size: centers.len(),
+            total_weight: centers.len() as f64,
+        });
+    }
+
+    #[test]
+    fn query_before_first_publish_is_none() {
+        let q = QueryEngine::new(Arc::new(ModelSlot::new()), Arc::new(NativeBackend));
+        assert!(q.query(&PointSet::from_flat(1, vec![1.0])).is_none());
+        assert!(q.current_epoch().is_none());
+    }
+
+    #[test]
+    fn query_assigns_and_costs_against_the_snapshot() {
+        let slot = Arc::new(ModelSlot::new());
+        publish(&slot, &[0.0, 10.0]);
+        let q = QueryEngine::new(Arc::clone(&slot), Arc::new(NativeBackend));
+        let r = q.query(&PointSet::from_flat(1, vec![1.0, 9.0])).unwrap();
+        assert_eq!(r.epoch, 1);
+        assert_eq!(r.assign, vec![0, 1]);
+        // l2sq surrogate is the squared distance; cost is the true metric.
+        assert_eq!(r.dist, vec![1.0, 1.0]);
+        assert!((r.cost - 2.0).abs() < 1e-9);
+    }
+}

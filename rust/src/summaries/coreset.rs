@@ -153,6 +153,64 @@ impl CoverageSummary {
         self.reps.is_empty()
     }
 
+    /// Compose every summary in `summaries` with **one** canonicalization,
+    /// byte-identical to folding them pairwise with [`Coreset::compose`]
+    /// under *any* compose tree. Returns `None` for an empty iterator (the
+    /// composition has no identity element carrying a dimensionality).
+    ///
+    /// A pairwise fold re-sorts the accumulated entries at every step —
+    /// O(depth · m log m) gather work over a long ingest chain. Because
+    /// composition never combines entries arithmetically, the fold's result
+    /// is exactly `canonicalize(multiset union of all entries)` with the
+    /// max radius, so concatenating everything first and canonicalizing
+    /// once produces the identical bytes (entries that tie in the canonical
+    /// order are themselves bitwise equal, so their mutual order cannot
+    /// matter). `rust/tests/prop_serve.rs` pins the equivalence across fold
+    /// depths and tree shapes. This is what the serving layer's epoch
+    /// folding uses to canonicalize once per publish.
+    pub fn compose_all<I>(summaries: I) -> Option<CoverageSummary>
+    where
+        I: IntoIterator<Item = CoverageSummary>,
+    {
+        let mut iter = summaries.into_iter();
+        let first = iter.next()?;
+        let empty_dim = first.reps.dim();
+        let mut radius = first.radius;
+        let mut parts: Vec<WeightedSet> = Vec::new();
+        let mut entries = 0usize;
+        if !first.reps.is_empty() {
+            entries = first.reps.len();
+            parts.push(first.reps);
+        }
+        for s in iter {
+            radius = radius.max(s.radius);
+            if s.reps.is_empty() {
+                continue;
+            }
+            if let Some(head) = parts.first() {
+                assert_eq!(s.reps.dim(), head.dim(), "summary dim mismatch");
+            }
+            entries += s.reps.len();
+            parts.push(s.reps);
+        }
+        let reps = match parts.len() {
+            // All inputs empty: the fold's empty-side shortcut would thread
+            // the (empty) reps through unchanged.
+            0 => WeightedSet::with_capacity(empty_dim, 0),
+            // One non-empty input: its reps are already canonical and the
+            // fold would return them untouched.
+            1 => parts.pop().expect("len checked"),
+            _ => {
+                let mut merged =
+                    WeightedSet::with_capacity(parts[0].dim(), entries);
+                for p in &parts {
+                    merged.extend(p);
+                }
+                merged.canonicalize()
+            }
+        };
+        Some(CoverageSummary { reps, radius })
+    }
 }
 
 impl Coreset for CoverageSummary {
@@ -277,6 +335,49 @@ mod tests {
         let b = CoverageSummary::build_metric(&block, 3, 11, &NativeBackend, MetricKind::L2Sq);
         assert_eq!(a, b);
         assert_eq!(a.radius().to_bits(), b.radius().to_bits());
+    }
+
+    #[test]
+    fn compose_all_matches_pairwise_fold_bitwise() {
+        let blocks: Vec<PointSet> = [
+            &[0.0f32, 0.3, 2.0][..],
+            &[7.0, 7.5],
+            &[3.0, 3.3, 3.4],
+            &[9.0],
+        ]
+        .iter()
+        .map(|c| line(c))
+        .collect();
+        let summaries: Vec<CoverageSummary> = blocks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| CoverageSummary::build(b, 2, i as u64 + 1, &NativeBackend))
+            .collect();
+        let folded = summaries
+            .iter()
+            .cloned()
+            .reduce(Coreset::compose)
+            .unwrap();
+        let once = CoverageSummary::compose_all(summaries.clone()).unwrap();
+        assert_eq!(folded, once);
+        assert_eq!(folded.radius().to_bits(), once.radius().to_bits());
+        // Single summary passes through untouched.
+        let lone = CoverageSummary::compose_all(summaries[..1].to_vec()).unwrap();
+        assert_eq!(lone, summaries[0]);
+    }
+
+    #[test]
+    fn compose_all_handles_empty_inputs_like_the_fold() {
+        let e = CoverageSummary::build(&PointSet::with_capacity(1, 0), 1, 0, &NativeBackend);
+        let a = CoverageSummary::build(&line(&[1.0, 2.0]), 2, 1, &NativeBackend);
+        let all = vec![e.clone(), a.clone(), e.clone()];
+        let folded = all.iter().cloned().reduce(Coreset::compose).unwrap();
+        let once = CoverageSummary::compose_all(all).unwrap();
+        assert_eq!(folded, once);
+        // All-empty and zero-length iterators.
+        let empties = CoverageSummary::compose_all(vec![e.clone(), e.clone()]).unwrap();
+        assert!(empties.is_empty());
+        assert!(CoverageSummary::compose_all(std::iter::empty()).is_none());
     }
 
     #[test]

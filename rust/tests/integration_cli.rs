@@ -336,6 +336,86 @@ fn metric_compare_reports_deterministic_cells() {
 }
 
 #[test]
+fn serve_bench_json_is_schema_v2_with_reproducible_counters() {
+    // Latencies vary run to run; the schema tag, the row structure, and
+    // the operation counters must not. Run the same tiny bench twice and
+    // compare everything deterministic.
+    let run = |tag: &str| {
+        let path = tmpdir().join(format!("serve_bench_{tag}.json"));
+        let out = bin()
+            .args([
+                "serve-bench",
+                "--n",
+                "1500",
+                "--batches",
+                "128,512",
+                "--threads",
+                "1,2",
+                "--queries",
+                "4",
+                "--json",
+                path.to_str().unwrap(),
+                "--set",
+                "data.k=4",
+                "--set",
+                "cluster.k=4",
+                "--set",
+                "cluster.machines=4",
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("oracle gate passed"), "{text}");
+        mrcluster::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap()
+    };
+    let (a, b) = (run("a"), run("b"));
+    for doc in [&a, &b] {
+        assert_eq!(
+            doc.get("schema").and_then(|s| s.as_str()),
+            Some("mrcluster-serve-bench-v2")
+        );
+        assert!(doc.get("oracle_checked").is_some());
+        let rows = doc.get("rows").and_then(|r| r.as_arr()).expect("rows array");
+        // 2 ingest rows + 1 epoch_close row + 2x2 query cells.
+        assert_eq!(rows.len(), 7);
+        for row in rows {
+            for key in ["variant", "threads", "batch", "count", "p50_us", "p99_us", "per_sec"] {
+                assert!(row.get(key).is_some(), "row missing {key}");
+            }
+        }
+        let variant = |i: usize| rows[i].get("variant").unwrap().as_str().unwrap().to_string();
+        assert_eq!(variant(0), "ingest");
+        assert_eq!(variant(2), "epoch_close");
+        assert_eq!(variant(3), "query");
+    }
+    // The deterministic counters must agree exactly across the two runs.
+    for key in ["n", "dim", "k", "tau", "epochs", "batches", "queries"] {
+        assert_eq!(
+            a.get(key).and_then(|v| v.as_usize()),
+            b.get(key).and_then(|v| v.as_usize()),
+            "counter {key} not reproducible"
+        );
+    }
+    let row_counts = |doc: &mrcluster::util::json::Json| -> Vec<(String, usize, usize, usize)> {
+        doc.get("rows")
+            .and_then(|r| r.as_arr())
+            .unwrap()
+            .iter()
+            .map(|r| {
+                (
+                    r.get("variant").unwrap().as_str().unwrap().to_string(),
+                    r.get("threads").unwrap().as_usize().unwrap(),
+                    r.get("batch").unwrap().as_usize().unwrap(),
+                    r.get("count").unwrap().as_usize().unwrap(),
+                )
+            })
+            .collect()
+    };
+    assert_eq!(row_counts(&a), row_counts(&b), "per-row counters not reproducible");
+}
+
+#[test]
 fn mrc_check_passes_on_defaults() {
     let out = bin()
         .args(["mrc-check", "--set", "data.n=30000", "--set", "cluster.machines=16"])
