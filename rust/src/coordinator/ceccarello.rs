@@ -1,0 +1,326 @@
+//! Rival coordinator: Ceccarello, Pietracaprina & Pucci's MapReduce
+//! k-center with outliers (arXiv:1802.09205), behind the same driver
+//! registry as the paper's own pipelines (E17 arena).
+//!
+//! The round shape is deliberately *flatter* than the repo's three-round
+//! [`super::robust`] pipeline — two rounds, trading a bigger leader-side
+//! union for one less synchronization barrier:
+//!
+//! 1. **skeletonize** (machine round, [`StoreBlock`] descriptors): every
+//!    machine runs a Gonzalez farthest-point traversal over its block and
+//!    ships a [`CoverageSummary`] — τ = k + z + √(n/m) weighted
+//!    representatives plus the block's coverage radius. The √(n/m) slack
+//!    is the paper's accuracy term: more representatives per machine means
+//!    a smaller coverage radius, which is the only term the final
+//!    approximation factor pays beyond the sequential greedy's 3x.
+//! 2. **union + outlier-aware greedy** (leader round): the leader takes
+//!    the canonical multiset union of the skeletons
+//!    ([`CoverageSummary::compose_all`] — associative and commutative
+//!    bit-for-bit, so shuffle order and lineage replay cannot change a
+//!    byte) and runs the weighted Charikar greedy with outlier budget `z`
+//!    ([`kcenter_with_outliers_metric`]) over the union.
+//!
+//! Both the per-machine size and the partition count are clamped so the
+//! union never exceeds [`MAX_SUMMARY_REPS`] representatives — the same
+//! guard rail as the robust pipeline, for the same reason: an uncapped
+//! `z` or machine count must not degenerate the "summary" back into the
+//! dataset. The skeleton round streams [`StoreBlock`]s, so the pipeline
+//! runs file-backed with bit-identical output.
+
+use crate::algorithms::outliers::kcenter_with_outliers_metric;
+use crate::config::ClusterConfig;
+use crate::geometry::{PointSet, PointStore, StoreBlock};
+use crate::mapreduce::{MemSize, MrCluster, MrError};
+use crate::runtime::ComputeBackend;
+use crate::summaries::{CoverageSummary, WeightedSet};
+
+use super::robust::MAX_SUMMARY_REPS;
+
+/// Seed-stream separator: the skeleton round draws from
+/// `cfg.seed ^ CECCARELLO_SEED ^ machine`, so this pipeline's traversals
+/// never collide with the robust pipeline's summaries on the same config.
+const CECCARELLO_SEED: u64 = 0xCECA_2018;
+
+/// Result of the Ceccarello-style k-center-with-outliers pipeline.
+#[derive(Clone, Debug)]
+pub struct CeccarelloResult {
+    /// The k centers.
+    pub centers: PointSet,
+    /// Representatives in the union skeleton the leader greedy ran on.
+    pub skeleton_size: usize,
+    /// Skeleton weight the greedy left uncovered (≤ the `z` budget).
+    pub dropped_weight: f64,
+    /// Max coverage radius over the per-machine skeletons (the
+    /// decomposition's contribution to the approximation error).
+    pub skeleton_radius: f64,
+}
+
+/// The skeleton round's shape under the [`MAX_SUMMARY_REPS`] cap:
+/// `(n_parts, tau)` with `n_parts · tau ≤ MAX_SUMMARY_REPS` always. The
+/// requested per-machine size is the paper's τ = k + z + √(n/m); the
+/// partition count is first bounded so every machine affords ≥ k
+/// representatives, then τ is bounded by the remainder.
+fn skeleton_shape(machines: usize, n: usize, k: usize, z: usize) -> (usize, usize) {
+    let max_parts = (MAX_SUMMARY_REPS / k.max(1)).max(1);
+    let n_parts = machines.min(n).min(max_parts).max(1);
+    let per_block = n.div_ceil(n_parts).max(1);
+    let tau_request = k
+        .saturating_add(z)
+        .saturating_add((per_block as f64).sqrt().ceil() as usize);
+    let tau = tau_request.min(MAX_SUMMARY_REPS / n_parts).max(1);
+    (n_parts, tau)
+}
+
+/// Ceccarello et al.'s 2-round MapReduce k-center with `z` outliers:
+/// per-machine Gonzalez skeletons of τ = k + z + √(n/m) representatives
+/// with coverage radii, outlier-aware greedy over the union at the
+/// leader. Resident-input wrapper over
+/// [`mr_ceccarello_kcenter_store`].
+pub fn mr_ceccarello_kcenter(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<CeccarelloResult, MrError> {
+    mr_ceccarello_kcenter_store(cluster, &PointStore::from(points.clone()), cfg, backend)
+}
+
+/// [`mr_ceccarello_kcenter`] over any [`PointStore`] backing. With a
+/// file-backed store each skeleton machine streams only its own block
+/// into memory; the result is bit-identical to the resident run on the
+/// same seed and config.
+pub fn mr_ceccarello_kcenter_store(
+    cluster: &mut MrCluster,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<CeccarelloResult, MrError> {
+    let (n_parts, tau) = skeleton_shape(cfg.machines, store.len(), cfg.k, cfg.z);
+    let blocks = store.blocks(n_parts);
+
+    // ---- Round 1: per-machine Gonzalez skeletons over blocks ----
+    let seed = cfg.seed ^ CECCARELLO_SEED;
+    let metric = cfg.metric;
+    let skeletons: Vec<CoverageSummary> = cluster.run_machine_round(
+        "ceccarello: Gonzalez skeletons",
+        &blocks,
+        0,
+        move |m, block: &StoreBlock| {
+            let part = block.load();
+            CoverageSummary::build_metric(
+                part.points(),
+                tau.min(part.len()).max(1),
+                seed ^ (m as u64),
+                backend,
+                metric,
+            )
+        },
+    )?;
+
+    // ---- Round 2: union + outlier-aware greedy on the leader ----
+    // Composition is a canonical multiset union (no entries are merged
+    // arithmetically), so the union size is exactly the sum of the
+    // skeleton sizes — known before composing, which lets the leader's
+    // memory charge include the greedy's cached |union|² distance matrix
+    // up front. The summary cap keeps the union under MAX_MATRIX here;
+    // the zero-charge branch only matters for direct library callers.
+    let union_size: usize = skeletons.iter().map(CoverageSummary::len).sum();
+    let matrix_bytes = if union_size <= crate::algorithms::outliers::MAX_MATRIX {
+        union_size * union_size * 4
+    } else {
+        0
+    };
+    let leader_mem = skeletons.iter().map(MemSize::mem_bytes).sum::<usize>() + matrix_bytes;
+    let k = cfg.k;
+    let z = cfg.z as f64;
+    let dim = store.dim();
+    let skeletons_ref = &skeletons;
+    let (result, skeleton_radius) = cluster.run_leader_round(
+        "ceccarello: union + outlier greedy",
+        leader_mem,
+        move || {
+            let merged = CoverageSummary::compose_all(skeletons_ref.iter().cloned())
+                .unwrap_or_else(|| {
+                    CoverageSummary::from_weighted(WeightedSet::with_capacity(dim, 0), 0.0)
+                });
+            (
+                kcenter_with_outliers_metric(merged.reps(), k, z, metric),
+                merged.radius(),
+            )
+        },
+    )?;
+
+    Ok(CeccarelloResult {
+        centers: result.centers,
+        skeleton_size: union_size,
+        dropped_weight: result.dropped_weight,
+        skeleton_radius,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+    use crate::mapreduce::MrConfig;
+    use crate::metrics::kcenter_cost_with_outliers;
+    use crate::runtime::NativeBackend;
+
+    fn contaminated(n: usize, k: usize, contamination: f64, seed: u64) -> crate::data::Dataset {
+        DataGenConfig {
+            n,
+            k,
+            sigma: 0.05,
+            contamination,
+            seed,
+            ..Default::default()
+        }
+        .generate()
+    }
+
+    fn cluster(machines: usize) -> MrCluster {
+        MrCluster::new(MrConfig {
+            n_machines: machines,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn two_rounds_and_shapes() {
+        let data = contaminated(2000, 5, 0.01, 61);
+        let z = data.n_outliers();
+        let cfg = ClusterConfig {
+            k: 5,
+            machines: 8,
+            z,
+            seed: 61,
+            ..Default::default()
+        };
+        let mut c = cluster(8);
+        let res = mr_ceccarello_kcenter(&mut c, &data.points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(c.stats.n_rounds(), 2, "skeletonize + leader greedy");
+        assert_eq!(res.centers.len(), 5);
+        assert!(res.skeleton_size <= MAX_SUMMARY_REPS);
+        assert!(res.dropped_weight <= z as f64 + 1e-9);
+        assert!(res.skeleton_radius >= 0.0);
+    }
+
+    #[test]
+    fn shrugs_off_contamination() {
+        let data = contaminated(2000, 5, 0.01, 62);
+        let z = data.n_outliers();
+        assert!(z > 0, "contamination must have produced outliers");
+        let cfg = ClusterConfig {
+            k: 5,
+            machines: 8,
+            z,
+            seed: 62,
+            ..Default::default()
+        };
+        let mut c = cluster(8);
+        let res = mr_ceccarello_kcenter(&mut c, &data.points, &cfg, &NativeBackend).unwrap();
+        let robust_cost = kcenter_cost_with_outliers(&data.points, &res.centers, z);
+        // Same calibration as the robust pipeline's test: planted centers
+        // with z dropped are the reference; the pipeline pays the skeleton
+        // radius plus the greedy's 3x, so 4x is a conservative envelope —
+        // and the √(n/m) skeleton slack keeps the radius term small.
+        let reference = kcenter_cost_with_outliers(&data.points, &data.planted_centers, z);
+        assert!(
+            robust_cost <= reference * 4.0 + 1e-6,
+            "ceccarello {robust_cost} vs reference {reference}"
+        );
+    }
+
+    #[test]
+    fn replays_identically_at_any_machine_count() {
+        let data = contaminated(1000, 4, 0.02, 63);
+        let z = data.n_outliers();
+        for machines in [4usize, 9] {
+            let cfg = ClusterConfig {
+                k: 4,
+                machines,
+                z,
+                seed: 63,
+                ..Default::default()
+            };
+            let a =
+                mr_ceccarello_kcenter(&mut cluster(machines), &data.points, &cfg, &NativeBackend)
+                    .unwrap();
+            let b =
+                mr_ceccarello_kcenter(&mut cluster(machines), &data.points, &cfg, &NativeBackend)
+                    .unwrap();
+            assert_eq!(a.centers, b.centers, "same config must replay identically");
+            assert_eq!(a.dropped_weight.to_bits(), b.dropped_weight.to_bits());
+        }
+    }
+
+    #[test]
+    fn skeleton_shape_invariants_hold_across_the_knob_space() {
+        for machines in [1usize, 4, 100, 1000, 5000] {
+            for n in [1usize, 100, 10_000, 1_000_000] {
+                for k in [1usize, 5, 25, 400] {
+                    for z in [0usize, 10, 1000, 100_000] {
+                        let (n_parts, tau) = skeleton_shape(machines, n, k, z);
+                        assert!(
+                            n_parts * tau <= MAX_SUMMARY_REPS,
+                            "cap violated: machines={machines} n={n} k={k} z={z} \
+                             -> {n_parts} x {tau}"
+                        );
+                        assert!(n_parts >= 1 && tau >= 1);
+                        assert!(n_parts <= machines.min(n.max(1)));
+                    }
+                }
+            }
+        }
+        // The union always fits the greedy's distance-matrix cache.
+        assert!(MAX_SUMMARY_REPS <= crate::algorithms::outliers::MAX_MATRIX);
+    }
+
+    #[test]
+    fn file_backed_run_is_bit_identical_to_resident() {
+        let gen = DataGenConfig {
+            n: 1500,
+            k: 4,
+            sigma: 0.05,
+            contamination: 0.02,
+            seed: 64,
+            ..Default::default()
+        };
+        let data = gen.generate();
+        let z = data.n_outliers();
+        let dir = std::env::temp_dir().join("mrcluster_ceccarello_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = PointStore::from(gen.generate_stream(&dir.join("cecc_ooc.mrc")).unwrap());
+        let cfg = ClusterConfig {
+            k: 4,
+            machines: 6,
+            z,
+            seed: 64,
+            ..Default::default()
+        };
+        let mem =
+            mr_ceccarello_kcenter(&mut cluster(6), &data.points, &cfg, &NativeBackend).unwrap();
+        let ooc =
+            mr_ceccarello_kcenter_store(&mut cluster(6), &store, &cfg, &NativeBackend).unwrap();
+        assert_eq!(mem.centers, ooc.centers, "file-backed centers diverged");
+        assert_eq!(mem.skeleton_size, ooc.skeleton_size);
+        assert_eq!(mem.dropped_weight.to_bits(), ooc.dropped_weight.to_bits());
+        let meter = store.meter().expect("file store is metered");
+        assert_eq!(meter.current(), 0, "every resident window must be dropped");
+        assert!(meter.peak() > 0, "the run must have streamed something");
+    }
+
+    #[test]
+    fn single_machine_degenerate_case() {
+        let data = contaminated(100, 3, 0.0, 65);
+        let cfg = ClusterConfig {
+            k: 3,
+            machines: 1,
+            seed: 65,
+            ..Default::default()
+        };
+        let res =
+            mr_ceccarello_kcenter(&mut cluster(1), &data.points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(res.centers.len(), 3);
+    }
+}

@@ -42,6 +42,15 @@ pub enum Algorithm {
     /// Composable-coreset k-median: weighted local search on the merged
     /// per-machine summaries (Mazzetto et al.; see [`super::robust`]).
     CoresetKMedian,
+    /// Rival 2-round coreset k-median with accuracy-oriented
+    /// `(k/ε²)·polylog(n)` per-machine sizing (Mazzetto et al.,
+    /// arXiv:1904.12728; see [`super::mazzetto`]).
+    MazzettoKMedian,
+    /// Rival 2-round k-center with outliers: per-machine Gonzalez
+    /// skeletons of `k + z + √(n/m)` reps, outlier-aware greedy on the
+    /// union (Ceccarello et al., arXiv:1802.09205; see
+    /// [`super::ceccarello`]).
+    CeccarelloKCenter,
 }
 
 impl Algorithm {
@@ -58,6 +67,8 @@ impl Algorithm {
             Algorithm::StreamingGuha => "Streaming-Guha",
             Algorithm::RobustKCenter => "Robust-kCenter",
             Algorithm::CoresetKMedian => "Coreset-kMedian",
+            Algorithm::MazzettoKMedian => "Mazzetto-kMedian",
+            Algorithm::CeccarelloKCenter => "Ceccarello-kCenter",
         }
     }
 
@@ -81,6 +92,8 @@ impl Algorithm {
                 Algorithm::RobustKCenter
             }
             "coresetkmedian" | "coreset" => Algorithm::CoresetKMedian,
+            "mazzettokmedian" | "mazzetto" => Algorithm::MazzettoKMedian,
+            "ceccarellokcenter" | "ceccarello" => Algorithm::CeccarelloKCenter,
             _ => return None,
         })
     }
@@ -104,6 +117,26 @@ impl Algorithm {
             Algorithm::DivideLloyd,
             Algorithm::SamplingLloyd,
             Algorithm::SamplingLocalSearch,
+        ]
+    }
+
+    /// Every registered pipeline, in registry order — the E17 arena's row
+    /// set (paper algorithms, then the repo's robust pipelines, then the
+    /// rival-paper coordinators).
+    pub fn all() -> [Algorithm; 12] {
+        [
+            Algorithm::ParallelLloyd,
+            Algorithm::DivideLloyd,
+            Algorithm::DivideLocalSearch,
+            Algorithm::SamplingLloyd,
+            Algorithm::SamplingLocalSearch,
+            Algorithm::LocalSearch,
+            Algorithm::MrKCenter,
+            Algorithm::StreamingGuha,
+            Algorithm::RobustKCenter,
+            Algorithm::CoresetKMedian,
+            Algorithm::MazzettoKMedian,
+            Algorithm::CeccarelloKCenter,
         ]
     }
 }
@@ -284,6 +317,14 @@ pub fn run_algorithm_with(
             let r = super::robust::mr_coreset_kmedian(&mut cluster, points, cfg, backend)?;
             (r.centers, Some(r.summary_size))
         }
+        Algorithm::MazzettoKMedian => {
+            let r = super::mazzetto::mr_mazzetto_kmedian(&mut cluster, points, cfg, backend)?;
+            (r.centers, Some(r.coreset_size))
+        }
+        Algorithm::CeccarelloKCenter => {
+            let r = super::ceccarello::mr_ceccarello_kcenter(&mut cluster, points, cfg, backend)?;
+            (r.centers, Some(r.skeleton_size))
+        }
         Algorithm::StreamingGuha => {
             // One-pass hierarchical streaming on a single machine; its
             // memory charge is one block per level (the streaming model's
@@ -331,7 +372,8 @@ pub fn run_algorithm_with(
 ///
 /// For a resident store this is exactly [`run_algorithm`]. For a
 /// file-backed store the streaming coordinators — MapReduce-kCenter,
-/// Robust-kCenter, Coreset-kMedian, Divide-Lloyd / Divide-LocalSearch —
+/// Robust-kCenter, Coreset-kMedian, Mazzetto-kMedian, Ceccarello-kCenter,
+/// Divide-Lloyd / Divide-LocalSearch —
 /// make one sequential pass per round over the backing file, the final
 /// cost sweep streams `chunk_points`-sized windows, and the result is
 /// bit-identical to the resident run on the same seed and config.
@@ -375,6 +417,20 @@ pub fn run_algorithm_store_with(
         Algorithm::CoresetKMedian => {
             let r = super::robust::mr_coreset_kmedian_store(&mut cluster, store, cfg, backend)?;
             (r.centers, Some(r.summary_size))
+        }
+        Algorithm::MazzettoKMedian => {
+            let r =
+                super::mazzetto::mr_mazzetto_kmedian_store(&mut cluster, store, cfg, backend)?;
+            (r.centers, Some(r.coreset_size))
+        }
+        Algorithm::CeccarelloKCenter => {
+            let r = super::ceccarello::mr_ceccarello_kcenter_store(
+                &mut cluster,
+                store,
+                cfg,
+                backend,
+            )?;
+            (r.centers, Some(r.skeleton_size))
         }
         Algorithm::DivideLloyd => {
             let r =
@@ -469,15 +525,25 @@ mod tests {
 
     #[test]
     fn names_roundtrip_through_parse() {
-        for algo in Algorithm::figure1().into_iter().chain([
-            Algorithm::MrKCenter,
-            Algorithm::RobustKCenter,
-            Algorithm::CoresetKMedian,
-        ]) {
+        for algo in Algorithm::all() {
             assert_eq!(Algorithm::parse(algo.name()), Some(algo), "{}", algo.name());
         }
         assert_eq!(Algorithm::parse("sampling-lloyd"), Some(Algorithm::SamplingLloyd));
+        assert_eq!(Algorithm::parse("mazzetto"), Some(Algorithm::MazzettoKMedian));
+        assert_eq!(Algorithm::parse("ceccarello"), Some(Algorithm::CeccarelloKCenter));
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_covers_every_variant_once() {
+        let all = Algorithm::all();
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_ne!(a, b, "duplicate registry entry {}", a.name());
+            }
+        }
+        assert!(all.contains(&Algorithm::MazzettoKMedian));
+        assert!(all.contains(&Algorithm::CeccarelloKCenter));
     }
 
     #[test]

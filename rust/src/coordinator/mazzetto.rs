@@ -1,0 +1,343 @@
+//! Rival coordinator: Mazzetto, Pietracaprina & Pucci's coreset-based
+//! MapReduce k-median (arXiv:1904.12728), behind the same driver registry
+//! as the paper's own pipelines (E17 arena).
+//!
+//! The accuracy-oriented rival: each machine builds a weighted coreset of
+//! ~`(k/ε²) · polylog(n)` representatives — much larger than the robust
+//! pipeline's `4k + z` summaries — so the composed coreset tracks the
+//! k-median objective to within an ε-style factor and the final weighted
+//! local search lands near the sequential solution. The trade is one
+//! fewer round than [`super::robust`] but a bigger shuffle into the
+//! leader:
+//!
+//! 1. **coreset** (machine round, [`StoreBlock`] descriptors): every
+//!    machine compresses its block into a [`CoverageSummary`] of
+//!    τ = min((k/ε²)·log₂ n, cap) weighted representatives via the
+//!    farthest-point traversal (outliers survive as weight-≈1 entries);
+//! 2. **compose + weighted local search** (leader round): the leader
+//!    takes the canonical multiset union of the coresets
+//!    ([`CoverageSummary::compose_all`] — bit-deterministic under any
+//!    arrival order and lineage replay), trims up to `z` suspected
+//!    outliers (lightest entries, canonical tie-break), and runs weighted
+//!    local search ([`local_search_weighted`]) on the survivors.
+//!
+//! Per-machine sizes and the partition count are clamped so the composed
+//! coreset never exceeds [`MAX_SUMMARY_REPS`] representatives — the
+//! polylog sizing is a *request*, and the cap is the leader's memory
+//! envelope. The coreset round streams [`StoreBlock`]s, so the pipeline
+//! runs file-backed with bit-identical output.
+
+use crate::algorithms::local_search::{local_search_weighted, LocalSearchConfig};
+use crate::config::ClusterConfig;
+use crate::geometry::{PointSet, PointStore, StoreBlock};
+use crate::mapreduce::{MemSize, MrCluster, MrError};
+use crate::runtime::ComputeBackend;
+use crate::summaries::{CoverageSummary, WeightedSet};
+
+use super::robust::MAX_SUMMARY_REPS;
+
+/// Seed-stream separator for the coreset round (`cfg.seed ^ MAZZETTO_SEED
+/// ^ machine`), keeping this pipeline's traversals disjoint from the
+/// robust pipeline's on the same config.
+const MAZZETTO_SEED: u64 = 0x3A22_2019;
+
+/// Seed-stream separator for the leader's weighted local search (distinct
+/// from the robust pipeline's `0xC0_5E7` local-search stream).
+const MAZZETTO_LS_SEED: u64 = 0x3A22_E770;
+
+/// Result of the Mazzetto-style coreset k-median pipeline.
+#[derive(Clone, Debug)]
+pub struct MazzettoResult {
+    /// The k centers.
+    pub centers: PointSet,
+    /// Representatives in the composed coreset (before outlier trimming).
+    pub coreset_size: usize,
+    /// Coreset entries trimmed as suspected outliers before local search.
+    pub trimmed: usize,
+}
+
+/// The coreset round's shape under the [`MAX_SUMMARY_REPS`] cap:
+/// `(n_parts, tau)` with `n_parts · tau ≤ MAX_SUMMARY_REPS` always. The
+/// requested per-machine size is the accuracy-oriented
+/// `(k/ε²) · log₂ n`; the partition count is first bounded so every
+/// machine affords ≥ k representatives, then τ is bounded by the
+/// remainder.
+fn coreset_shape(machines: usize, n: usize, k: usize, epsilon: f64) -> (usize, usize) {
+    let max_parts = (MAX_SUMMARY_REPS / k.max(1)).max(1);
+    let n_parts = machines.min(n).min(max_parts).max(1);
+    let eps = if epsilon > 0.0 { epsilon.min(1.0) } else { 0.1 };
+    let request = (k.max(1) as f64 / (eps * eps)) * (n.max(2) as f64).log2();
+    let tau_request = request.min(MAX_SUMMARY_REPS as f64).ceil() as usize;
+    let tau = tau_request.min(MAX_SUMMARY_REPS / n_parts).max(1);
+    (n_parts, tau)
+}
+
+/// Mazzetto et al.'s 2-round coreset MapReduce k-median: per-machine
+/// weighted coresets of ~`(k/ε²)·polylog(n)` representatives composed at
+/// the leader, then weighted local search with up to `z` suspected
+/// outliers trimmed first. Resident-input wrapper over
+/// [`mr_mazzetto_kmedian_store`].
+pub fn mr_mazzetto_kmedian(
+    cluster: &mut MrCluster,
+    points: &PointSet,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<MazzettoResult, MrError> {
+    mr_mazzetto_kmedian_store(cluster, &PointStore::from(points.clone()), cfg, backend)
+}
+
+/// [`mr_mazzetto_kmedian`] over any [`PointStore`] backing. With a
+/// file-backed store each coreset machine streams only its own block into
+/// memory; the result is bit-identical to the resident run on the same
+/// seed and config.
+pub fn mr_mazzetto_kmedian_store(
+    cluster: &mut MrCluster,
+    store: &PointStore,
+    cfg: &ClusterConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<MazzettoResult, MrError> {
+    let (n_parts, tau) = coreset_shape(cfg.machines, store.len(), cfg.k, cfg.epsilon);
+    let blocks = store.blocks(n_parts);
+
+    // ---- Round 1: per-machine weighted coresets over blocks ----
+    let seed = cfg.seed ^ MAZZETTO_SEED;
+    let metric = cfg.metric;
+    let coresets: Vec<CoverageSummary> = cluster.run_machine_round(
+        "mazzetto: weighted coresets",
+        &blocks,
+        0,
+        move |m, block: &StoreBlock| {
+            let part = block.load();
+            CoverageSummary::build_metric(
+                part.points(),
+                tau.min(part.len()).max(1),
+                seed ^ (m as u64),
+                backend,
+                metric,
+            )
+        },
+    )?;
+
+    // ---- Round 2: compose + trim + weighted local search on the leader ----
+    // Composition is a canonical multiset union, so the composed size is
+    // the sum of the per-machine sizes — known up front for the memory
+    // charge and the result record.
+    let coreset_size: usize = coresets.iter().map(CoverageSummary::len).sum();
+    let leader_mem = coresets.iter().map(MemSize::mem_bytes).sum::<usize>();
+    let k = cfg.k;
+    let z = cfg.z;
+    let dim = store.dim();
+    let ls_cfg = LocalSearchConfig {
+        k: cfg.k,
+        min_rel_gain: cfg.ls_min_rel_gain,
+        max_swaps: cfg.ls_max_swaps,
+        candidate_fraction: cfg.ls_candidate_fraction,
+        metric: cfg.metric,
+        seed: cfg.seed ^ MAZZETTO_LS_SEED,
+    };
+    let coresets_ref = &coresets;
+    let ls_ref = &ls_cfg;
+    let (centers, trimmed) = cluster.run_leader_round(
+        "mazzetto: compose + weighted local search",
+        leader_mem,
+        move || {
+            let merged = CoverageSummary::compose_all(coresets_ref.iter().cloned())
+                .unwrap_or_else(|| {
+                    CoverageSummary::from_weighted(WeightedSet::with_capacity(dim, 0), 0.0)
+                });
+            // Trim up to z suspected outliers — the lightest entries, ties
+            // resolved by the canonical order so the trim is deterministic
+            // — but never below k survivors (same discipline as
+            // `super::robust::solve_summary_kmedian`).
+            let reps = merged.reps();
+            let m = reps.len();
+            let trimmed = z.min(m.saturating_sub(k));
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| reps.weight(a).total_cmp(&reps.weight(b)).then(a.cmp(&b)));
+            let mut keep: Vec<usize> = order[trimmed..].to_vec();
+            keep.sort_unstable(); // back to canonical order for local search
+            let survivors = reps.gather(&keep);
+            (local_search_weighted(&survivors, ls_ref).centers, trimmed)
+        },
+    )?;
+
+    Ok(MazzettoResult {
+        centers,
+        coreset_size,
+        trimmed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataGenConfig;
+    use crate::mapreduce::MrConfig;
+    use crate::metrics::kmedian_cost;
+    use crate::runtime::NativeBackend;
+
+    fn blobs(n: usize, k: usize, contamination: f64, seed: u64) -> crate::data::Dataset {
+        DataGenConfig {
+            n,
+            k,
+            sigma: 0.05,
+            contamination,
+            seed,
+            ..Default::default()
+        }
+        .generate()
+    }
+
+    fn cluster(machines: usize) -> MrCluster {
+        MrCluster::new(MrConfig {
+            n_machines: machines,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn two_rounds_and_quality_on_clean_data() {
+        let data = blobs(4000, 8, 0.0, 71);
+        let cfg = ClusterConfig {
+            k: 8,
+            machines: 8,
+            seed: 71,
+            ls_max_swaps: 40,
+            ..Default::default()
+        };
+        let mut c = cluster(8);
+        let res = mr_mazzetto_kmedian(&mut c, &data.points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(c.stats.n_rounds(), 2, "coreset + leader solve");
+        assert_eq!(res.centers.len(), 8);
+        assert_eq!(res.trimmed, 0, "z defaults to 0");
+        assert!(res.coreset_size <= MAX_SUMMARY_REPS);
+        let cost = kmedian_cost(&data.points, &res.centers);
+        let planted = data.planted_cost_median();
+        assert!(cost < planted * 2.0, "cost {cost} vs planted {planted}");
+    }
+
+    #[test]
+    fn accuracy_sizing_grows_the_coreset_beyond_the_robust_summaries() {
+        // The whole point of the rival: at the same config its composed
+        // coreset is at least as large as the robust pipeline's 4k + z
+        // summaries (both under the shared cap), buying accuracy.
+        let (_, robust_tau) = {
+            // Mirror robust.rs's shape at the same knobs.
+            let k = 5usize;
+            let machines = 8usize;
+            let n = 4000usize;
+            let max_parts = (MAX_SUMMARY_REPS / k.max(1)).max(1);
+            let n_parts = machines.min(n).min(max_parts).max(1);
+            (n_parts, (4 * k).min(MAX_SUMMARY_REPS / n_parts).max(1))
+        };
+        let (_, mazzetto_tau) = coreset_shape(8, 4000, 5, 0.1);
+        assert!(
+            mazzetto_tau >= robust_tau,
+            "mazzetto tau {mazzetto_tau} < robust tau {robust_tau}"
+        );
+    }
+
+    #[test]
+    fn trims_suspected_outliers_when_z_is_set() {
+        let data = blobs(2000, 5, 0.01, 72);
+        let z = data.n_outliers();
+        assert!(z > 0, "contamination must have produced outliers");
+        let cfg = ClusterConfig {
+            k: 5,
+            machines: 8,
+            z,
+            seed: 72,
+            ls_max_swaps: 40,
+            ..Default::default()
+        };
+        let mut c = cluster(8);
+        let res = mr_mazzetto_kmedian(&mut c, &data.points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(res.trimmed, z.min(res.coreset_size.saturating_sub(5)));
+        assert!(res.trimmed > 0, "outlier budget must have trimmed entries");
+        assert_eq!(res.centers.len(), 5);
+    }
+
+    #[test]
+    fn replays_identically_at_any_machine_count() {
+        let data = blobs(1000, 4, 0.0, 73);
+        for machines in [4usize, 9] {
+            let cfg = ClusterConfig {
+                k: 4,
+                machines,
+                seed: 73,
+                ls_max_swaps: 20,
+                ..Default::default()
+            };
+            let a = mr_mazzetto_kmedian(&mut cluster(machines), &data.points, &cfg, &NativeBackend)
+                .unwrap();
+            let b = mr_mazzetto_kmedian(&mut cluster(machines), &data.points, &cfg, &NativeBackend)
+                .unwrap();
+            assert_eq!(a.centers, b.centers, "same config must replay identically");
+        }
+    }
+
+    #[test]
+    fn coreset_shape_invariants_hold_across_the_knob_space() {
+        for machines in [1usize, 4, 100, 1000, 5000] {
+            for n in [1usize, 100, 10_000, 1_000_000] {
+                for k in [1usize, 5, 25, 400] {
+                    for eps in [0.0f64, 0.05, 0.1, 0.5, 1.0] {
+                        let (n_parts, tau) = coreset_shape(machines, n, k, eps);
+                        assert!(
+                            n_parts * tau <= MAX_SUMMARY_REPS,
+                            "cap violated: machines={machines} n={n} k={k} eps={eps} \
+                             -> {n_parts} x {tau}"
+                        );
+                        assert!(n_parts >= 1 && tau >= 1);
+                        assert!(n_parts <= machines.min(n.max(1)));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn file_backed_run_is_bit_identical_to_resident() {
+        let gen = DataGenConfig {
+            n: 1500,
+            k: 4,
+            sigma: 0.05,
+            seed: 74,
+            ..Default::default()
+        };
+        let data = gen.generate();
+        let dir = std::env::temp_dir().join("mrcluster_mazzetto_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = PointStore::from(gen.generate_stream(&dir.join("mazz_ooc.mrc")).unwrap());
+        let cfg = ClusterConfig {
+            k: 4,
+            machines: 6,
+            seed: 74,
+            ls_max_swaps: 20,
+            ..Default::default()
+        };
+        let mem = mr_mazzetto_kmedian(&mut cluster(6), &data.points, &cfg, &NativeBackend).unwrap();
+        let ooc =
+            mr_mazzetto_kmedian_store(&mut cluster(6), &store, &cfg, &NativeBackend).unwrap();
+        assert_eq!(mem.centers, ooc.centers, "file-backed centers diverged");
+        assert_eq!(mem.coreset_size, ooc.coreset_size);
+        let meter = store.meter().expect("file store is metered");
+        assert_eq!(meter.current(), 0, "every resident window must be dropped");
+        assert!(meter.peak() > 0, "the run must have streamed something");
+    }
+
+    #[test]
+    fn single_machine_degenerate_case() {
+        let data = blobs(100, 3, 0.0, 75);
+        let cfg = ClusterConfig {
+            k: 3,
+            machines: 1,
+            seed: 75,
+            ls_max_swaps: 20,
+            ..Default::default()
+        };
+        let res =
+            mr_mazzetto_kmedian(&mut cluster(1), &data.points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(res.centers.len(), 3);
+    }
+}

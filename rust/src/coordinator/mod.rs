@@ -13,15 +13,21 @@
 //! Beyond the paper, [`robust`] adds the outlier-robust pipelines built on
 //! the composable summary layer ([`crate::summaries`]): k-center with
 //! outliers (Ceccarello et al.) and composable-coreset k-median (Mazzetto
-//! et al.).
+//! et al.). The E17 arena adds the rival papers' own 2-round pipelines as
+//! first-class competitors behind the same registry: [`mazzetto`]
+//! (coreset k-median, accuracy-oriented sizing, arXiv:1904.12728) and
+//! [`ceccarello`] (Gonzalez-skeleton k-center with outliers,
+//! arXiv:1802.09205).
 //!
 //! [`driver::run_algorithm`] is the single entry point used by the CLI,
 //! examples, and benches.
 
+pub mod ceccarello;
 pub mod divide;
 pub mod driver;
 pub mod kcenter;
 pub mod kmedian;
+pub mod mazzetto;
 pub mod mr_iterative_sample;
 pub mod parallel_lloyd;
 pub mod robust;

@@ -19,6 +19,7 @@
 //!   ooc-check                E14: assert file-backed == in-memory, O(chunk) peak
 //!   topology-sweep           E15: rounds vs simulated wall-clock over topologies
 //!   serve-bench              E16: serving-mode ingest/close/query latency bench
+//!   arena                    E17: every pipeline x datasets x metrics shootout
 //!   mrc-check                run Sampling-Lloyd and verify MRC^0 bounds
 //! ```
 //!
@@ -167,6 +168,7 @@ fn main() -> Result<()> {
         "ooc-check" => cmd_ooc_check(&cfg, &args)?,
         "topology-sweep" => cmd_topology_sweep(&cfg, &args)?,
         "serve-bench" => cmd_serve_bench(&cfg, &args)?,
+        "arena" => cmd_arena(&cfg, &args)?,
         "streaming-compare" => cmd_streaming(&cfg, &args)?,
         "kmeans-check" => cmd_kmeans(&cfg, &args)?,
         "mrc-check" => cmd_mrc_check(&cfg)?,
@@ -222,12 +224,20 @@ commands:
                      sizes; a pre-timing bit-identity oracle gate bails
                      before timing if re-partitioned ingest or the
                      one-shot pipeline diverges (see serve.* keys)
+  arena              [--n N] [--contamination LIST] [--metrics LIST]
+                     [--ls-cap N] [--json FILE]: E17 competitor arena —
+                     every registered pipeline (incl. the rival Mazzetto
+                     and Ceccarello coordinators) x {clustered, skewed,
+                     adversarial} datasets x metrics, with per-cell replay
+                     bit-identity, sim observation-purity across the E15
+                     topologies, and a small-n exact-oracle ratio gate
   mrc-check          run Sampling-Lloyd, assert MRC^0 resource bounds
                      (including the recovery-memory audit)
 
 algorithms: Parallel-Lloyd, Divide-Lloyd, Divide-LocalSearch,
             Sampling-Lloyd, Sampling-LocalSearch, LocalSearch, MrKCenter,
-            Streaming-Guha, Robust-kCenter, Coreset-kMedian
+            Streaming-Guha, Robust-kCenter, Coreset-kMedian,
+            Mazzetto-kMedian, Ceccarello-kCenter
 
 cluster --metric NAME is shorthand for --set cluster.metric=NAME;
 cluster --precision NAME is shorthand for --set cluster.precision=NAME.
@@ -851,6 +861,178 @@ fn cmd_topology_sweep(cfg: &AppConfig, args: &Args) -> Result<()> {
     }
     if !all_identical {
         bail!("a simulated run diverged from its baseline: the sim must be a pure observer");
+    }
+    Ok(())
+}
+
+fn cmd_arena(cfg: &AppConfig, args: &Args) -> Result<()> {
+    use mrcluster::geometry::MetricKind;
+    let n = args
+        .flags
+        .get("n")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(20_000);
+    let contaminations: Vec<f64> = match args.flags.get("contamination") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("bad contamination {x:?}"))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![0.0, 0.02],
+    };
+    let metrics: Vec<MetricKind> = match args.flags.get("metrics") {
+        Some(s) => s
+            .split(',')
+            .map(|m| {
+                MetricKind::parse(m.trim())
+                    .with_context(|| format!("unknown metric {m:?} (see `mrcluster help`)"))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![MetricKind::L2Sq],
+    };
+    let ls_cap = args
+        .flags
+        .get("ls-cap")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(5_000);
+    let params = params_from(cfg, 1);
+    let backend = experiments::make_backend(&cfg.cluster);
+    let rep = experiments::arena(&params, n, &contaminations, &metrics, ls_cap, backend.as_ref())?;
+
+    println!(
+        "== E17: competitor arena (n = {n} per dataset; every cell replayed and run \
+         under the three E15 topologies) =="
+    );
+    let mut t = Table::new(vec![
+        "dataset",
+        "contam",
+        "metric",
+        "algorithm",
+        "kmedian cost",
+        "kcenter cost",
+        "rounds",
+        "shuffle KiB",
+        "flat s",
+        "racked s",
+        "oversub s",
+        "det",
+        "sim-pure",
+    ]);
+    for r in &rep.rows {
+        t.row(vec![
+            r.dataset.to_string(),
+            format!("{:.2}", r.contamination),
+            r.metric.to_string(),
+            r.algo.clone(),
+            format!("{:.2}", r.cost_median),
+            format!("{:.3}", r.cost_center),
+            r.rounds.to_string(),
+            format!("{:.1}", r.shuffle_bytes as f64 / 1024.0),
+            format!("{:.4}", r.wallclock_flat.as_secs_f64()),
+            format!("{:.4}", r.wallclock_racked.as_secs_f64()),
+            format!("{:.4}", r.wallclock_oversub.as_secs_f64()),
+            if r.deterministic { "yes".into() } else { "NO".into() },
+            if r.matches_baseline { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("== oracle leg: 48-point companion vs brute-force optimum ==");
+    let mut o = Table::new(vec![
+        "algorithm",
+        "metric",
+        "objective",
+        "cost",
+        "exact OPT",
+        "ratio",
+        "bound",
+        "ok",
+    ]);
+    for r in &rep.oracle {
+        o.row(vec![
+            r.algo.clone(),
+            r.metric.to_string(),
+            r.objective.to_string(),
+            format!("{:.4}", r.cost),
+            format!("{:.4}", r.opt),
+            format!("{:.2}", r.ratio),
+            format!("{:.0}", r.bound),
+            if r.ok { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print!("{}", o.render());
+
+    if let Some(path) = args.flags.get("json") {
+        // Hand-rolled JSON writer (offline build, no serde).
+        let mut out = String::from("{\n  \"rows\": [\n");
+        for (i, r) in rep.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"dataset\": \"{}\", \"contamination\": {:.4}, \"metric\": \"{}\", \
+                 \"algo\": \"{}\", \"cost_median\": {:.9}, \"cost_center\": {:.9}, \
+                 \"rounds\": {}, \"shuffle_bytes\": {}, \"reduced\": {}, \
+                 \"wallclock_flat_s\": {:.9}, \"wallclock_racked_s\": {:.9}, \
+                 \"wallclock_oversub_s\": {:.9}, \"deterministic\": {}, \
+                 \"matches_baseline\": {}}}{}\n",
+                r.dataset,
+                r.contamination,
+                r.metric,
+                r.algo,
+                r.cost_median,
+                r.cost_center,
+                r.rounds,
+                r.shuffle_bytes,
+                r.reduced.map_or("null".to_string(), |v| v.to_string()),
+                r.wallclock_flat.as_secs_f64(),
+                r.wallclock_racked.as_secs_f64(),
+                r.wallclock_oversub.as_secs_f64(),
+                r.deterministic,
+                r.matches_baseline,
+                if i + 1 == rep.rows.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ],\n  \"oracle\": [\n");
+        for (i, r) in rep.oracle.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"algo\": \"{}\", \"metric\": \"{}\", \"objective\": \"{}\", \
+                 \"cost\": {:.9}, \"opt\": {:.9}, \"ratio\": {:.9}, \"bound\": {:.1}, \
+                 \"ok\": {}}}{}\n",
+                r.algo,
+                r.metric,
+                r.objective,
+                r.cost,
+                r.opt,
+                r.ratio,
+                r.bound,
+                r.ok,
+                if i + 1 == rep.oracle.len() { "" } else { "," }
+            ));
+        }
+        out.push_str(&format!(
+            "  ],\n  \"all_deterministic\": {},\n  \"all_match_baseline\": {},\n  \
+             \"oracle_ok\": {}\n}}\n",
+            rep.all_deterministic, rep.all_match_baseline, rep.oracle_ok
+        ));
+        std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+        println!(
+            "wrote {} arena rows + {} oracle rows to {path}",
+            rep.rows.len(),
+            rep.oracle.len()
+        );
+    }
+
+    if !rep.all_deterministic {
+        bail!("an arena cell diverged on replay: the determinism contract is broken");
+    }
+    if !rep.all_match_baseline {
+        bail!("a simulated run diverged from its baseline: the sim must be a pure observer");
+    }
+    if !rep.oracle_ok {
+        bail!("a pipeline blew its documented approximation envelope on the oracle companion");
     }
     Ok(())
 }

@@ -57,6 +57,14 @@ impl Json {
         }
     }
 
+    /// The boolean payload, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
@@ -308,6 +316,8 @@ mod tests {
     #[test]
     fn scalars() {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
         assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));

@@ -117,3 +117,96 @@ pub fn exact_kcenter_outliers_metric(
     });
     best
 }
+
+/// One row of the arena approximation table: which objective a pipeline is
+/// held to, and the documented envelope factor it must stay under against
+/// the brute-force oracle. (`#[allow]`s as above: each including target
+/// compiles its own copy and may use a subset.)
+#[allow(dead_code)]
+pub struct ArenaBound {
+    /// The registered pipeline this row gates.
+    pub algo: mrcluster::coordinator::Algorithm,
+    /// True: gate the max-distance objective against the exact k-center
+    /// optimum. False: gate the summed-distance objective against the
+    /// exact k-median optimum.
+    pub kcenter_objective: bool,
+    /// The documented approximation envelope (ratio vs the exact OPT).
+    pub factor: f64,
+}
+
+/// The full arena table: every registered pipeline with its documented
+/// envelope — 12x the exact k-center OPT for the k-center pipelines
+/// (MapReduce-kCenter's Theorem-3.7 factor plus summary slack; Ceccarello
+/// et al.'s skeleton greedy sits under the same envelope), 15x the exact
+/// k-median OPT for everything else (the weakest pipeline's constant with
+/// slack; Mazzetto et al.'s accuracy-oriented coreset sits far under it).
+/// Ratios compare true-distance objectives, so the factors are
+/// metric-uniform (under `l2sq` the reported costs are real Euclidean
+/// distances, not squared surrogates).
+#[allow(dead_code)]
+pub fn arena_bounds() -> Vec<ArenaBound> {
+    use mrcluster::coordinator::Algorithm;
+    Algorithm::all()
+        .into_iter()
+        .map(|algo| {
+            let kcenter_objective = matches!(
+                algo,
+                Algorithm::MrKCenter | Algorithm::RobustKCenter | Algorithm::CeccarelloKCenter
+            );
+            ArenaBound {
+                algo,
+                kcenter_objective,
+                factor: if kcenter_objective { 12.0 } else { 15.0 },
+            }
+        })
+        .collect()
+}
+
+/// Table-driven arena assertion: run every registered pipeline on
+/// `points` under `metric`, verify replay bit-identity, and assert each
+/// lands within its [`arena_bounds`] envelope of the exact brute-force
+/// optimum — one pass instead of per-pipeline test copies. `cfg` supplies
+/// the shared knobs; `k` and `metric` override it per call.
+#[allow(dead_code)]
+pub fn assert_arena_bounds(
+    points: &PointSet,
+    k: usize,
+    metric: MetricKind,
+    cfg: &mrcluster::config::ClusterConfig,
+) {
+    use mrcluster::coordinator::run_algorithm_with;
+    use mrcluster::runtime::NativeBackend;
+    let opt_median = exact_kmedian_metric(points, k, metric);
+    let opt_center = exact_kcenter_metric(points, k, metric);
+    assert!(
+        opt_median.is_finite() && opt_median > 0.0 && opt_center > 0.0,
+        "{metric}: degenerate oracle instance"
+    );
+    let cfg = mrcluster::config::ClusterConfig {
+        k,
+        metric,
+        ..cfg.clone()
+    };
+    for b in arena_bounds() {
+        let out = run_algorithm_with(b.algo, points, &cfg, &NativeBackend).unwrap();
+        let replay = run_algorithm_with(b.algo, points, &cfg, &NativeBackend).unwrap();
+        assert_eq!(
+            out.centers,
+            replay.centers,
+            "{} under {metric} is nondeterministic",
+            b.algo.name()
+        );
+        let (objective, cost, opt) = if b.kcenter_objective {
+            ("kcenter", kcenter_cost_metric(points, &out.centers, metric), opt_center)
+        } else {
+            ("kmedian", kmedian_cost_metric(points, &out.centers, metric), opt_median)
+        };
+        assert!(
+            cost <= opt * b.factor + 1e-6,
+            "{} under {metric}: {objective} cost {cost} vs exact OPT {opt} \
+             (documented envelope {}x)",
+            b.algo.name(),
+            b.factor
+        );
+    }
+}

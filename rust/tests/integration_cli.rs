@@ -29,6 +29,9 @@ fn help_lists_commands_and_keys() {
         "ooc-sweep",
         "ooc-check",
         "data.backing",
+        "arena",
+        "Mazzetto-kMedian",
+        "Ceccarello-kCenter",
     ] {
         assert!(text.contains(needle), "help missing {needle:?}");
     }
@@ -154,6 +157,8 @@ fn cluster_all_algorithms_tiny() {
         "MrKCenter",
         "Robust-kCenter",
         "Coreset-kMedian",
+        "Mazzetto-kMedian",
+        "Ceccarello-kCenter",
     ] {
         let out = bin()
             .args([
@@ -413,6 +418,54 @@ fn serve_bench_json_is_schema_v2_with_reproducible_counters() {
             .collect()
     };
     assert_eq!(row_counts(&a), row_counts(&b), "per-row counters not reproducible");
+}
+
+#[test]
+fn arena_runs_every_pipeline_and_gates_pass() {
+    // Tiny arena through the real binary: the command itself bails if a
+    // cell diverges on replay, the sim perturbs a run, or a pipeline blows
+    // its oracle envelope — success already certifies the gates. On top,
+    // the JSON artifact must carry every registered pipeline and the three
+    // top-level verdicts as true.
+    let path = tmpdir().join("arena.json");
+    let out = bin()
+        .args([
+            "arena",
+            "--n",
+            "300",
+            "--contamination",
+            "0.0",
+            "--metrics",
+            "l2sq",
+            "--json",
+            path.to_str().unwrap(),
+            "--set",
+            "data.k=4",
+            "--set",
+            "cluster.k=4",
+            "--set",
+            "cluster.machines=4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["E17", "Mazzetto-kMedian", "Ceccarello-kCenter", "sim-pure", "oracle"] {
+        assert!(text.contains(needle), "stdout missing {needle:?}: {text}");
+    }
+    assert!(!text.contains("NO"), "{text}");
+    let doc =
+        mrcluster::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    for key in ["all_deterministic", "all_match_baseline", "oracle_ok"] {
+        assert_eq!(
+            doc.get(key).and_then(|v| v.as_bool()),
+            Some(true),
+            "verdict {key} must be true"
+        );
+    }
+    // 3 datasets x 12 pipelines (n = 300 keeps LocalSearch under the cap).
+    assert_eq!(doc.get("rows").and_then(|r| r.as_arr()).unwrap().len(), 36);
+    assert_eq!(doc.get("oracle").and_then(|r| r.as_arr()).unwrap().len(), 12);
 }
 
 #[test]

@@ -1,0 +1,194 @@
+//! E17 arena properties, end to end:
+//!
+//! 1. **Table-driven approximation wall.** Every registered pipeline —
+//!    including the rival Mazzetto and Ceccarello coordinators — is held
+//!    to its documented approximation envelope against the brute-force
+//!    oracle on a 48-point instance, across `l2sq`, `l1`, and
+//!    `chebyshev`, through the shared `tests/common` arena table instead
+//!    of per-pipeline test copies.
+//! 2. **Executor-independent replay.** Every arena cell (dataset regime x
+//!    algorithm) is bit-identical across the pooled and sequential
+//!    executors and across repeated runs — the engine's determinism
+//!    contract extended to the full shootout matrix.
+//! 3. **Lossy-regime recovery.** Both rival coordinators reproduce their
+//!    fault-free outputs bit-for-bit under injected failures
+//!    (`fail_prob = 0.05`, the scenario harness's lossy regime).
+
+mod common;
+
+use mrcluster::config::ClusterConfig;
+use mrcluster::coordinator::{run_algorithm_with, Algorithm};
+use mrcluster::data::DataGenConfig;
+use mrcluster::geometry::{MetricKind, PointSet};
+use mrcluster::runtime::NativeBackend;
+use mrcluster::util::rng::Rng;
+
+/// Three tight 2-D blobs, 16 points each: small enough for the exact
+/// combination oracle, separated widely enough that the envelopes hold by
+/// margin (the `prop_metrics.rs` tri-blob construction at n = 48).
+fn tri_blobs_48() -> PointSet {
+    let centers = [[1.0f32, 0.2], [0.2, 1.0], [1.5, 1.5]];
+    let mut rng = Rng::new(0xB10B);
+    let mut p = PointSet::with_capacity(2, 48);
+    for c in &centers {
+        for _ in 0..16 {
+            p.push(&[
+                c[0] + (rng.f32() - 0.5) * 0.2,
+                c[1] + (rng.f32() - 0.5) * 0.2,
+            ]);
+        }
+    }
+    p
+}
+
+/// The arena's adversarial regime (mirrors `tests/scenario/datasets.rs`):
+/// a near-duplicate mass, a collinear filament, extreme outliers.
+fn adversarial(n: usize, seed: u64) -> PointSet {
+    let mut rng = Rng::new(seed ^ 0xAD5A);
+    let mut flat = Vec::with_capacity(n * 3);
+    let heavy = n * 7 / 10;
+    let line = n * 2 / 10;
+    for _ in 0..heavy {
+        for _ in 0..3 {
+            flat.push(0.5 + (rng.f32() - 0.5) * 1e-4);
+        }
+    }
+    for i in 0..line {
+        let t = i as f32 / line.max(1) as f32;
+        let c = t * 2.0 - 1.0;
+        flat.extend_from_slice(&[c, c, c]);
+    }
+    let rest = n - heavy - line;
+    for i in 0..rest {
+        let s = (i + 1) as f32;
+        flat.extend_from_slice(&[50.0 * s, -30.0 * s, 80.0]);
+    }
+    PointSet::from_flat(3, flat)
+}
+
+fn arena_cfg(k: usize, machines: usize, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        k,
+        epsilon: 0.2,
+        machines,
+        seed,
+        ls_max_swaps: 40,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_pipeline_beats_its_documented_envelope_on_the_oracle() {
+    let points = tri_blobs_48();
+    let cfg = arena_cfg(3, 3, 81);
+    for metric in [MetricKind::L2Sq, MetricKind::L1, MetricKind::Chebyshev] {
+        common::assert_arena_bounds(&points, 3, metric, &cfg);
+    }
+}
+
+#[test]
+fn every_arena_cell_replays_identically_across_executors_and_runs() {
+    let n = 300;
+    let seed = 82u64;
+    let datasets: Vec<(&str, PointSet, usize)> = vec![
+        (
+            "clustered",
+            DataGenConfig { n, k: 4, dim: 3, sigma: 0.05, seed, ..Default::default() }
+                .generate()
+                .points,
+            0,
+        ),
+        (
+            "skewed",
+            DataGenConfig {
+                n,
+                k: 4,
+                dim: 3,
+                sigma: 0.05,
+                alpha: 1.2,
+                seed: seed ^ 1,
+                ..Default::default()
+            }
+            .generate()
+            .points,
+            0,
+        ),
+        ("adversarial", adversarial(n, seed ^ 2), n / 10),
+    ];
+    for (name, points, z) in &datasets {
+        for algo in Algorithm::all() {
+            let pooled = ClusterConfig {
+                z: *z,
+                parallel: true,
+                ..arena_cfg(4, 6, seed)
+            };
+            let sequential = ClusterConfig {
+                parallel: false,
+                threads: 1,
+                ..pooled.clone()
+            };
+            let a = run_algorithm_with(algo, points, &pooled, &NativeBackend).unwrap();
+            let b = run_algorithm_with(algo, points, &pooled, &NativeBackend).unwrap();
+            let c = run_algorithm_with(algo, points, &sequential, &NativeBackend).unwrap();
+            let d = run_algorithm_with(algo, points, &sequential, &NativeBackend).unwrap();
+            for (tag, other) in [("pooled repeat", &b), ("sequential", &c), ("sequential repeat", &d)]
+            {
+                assert_eq!(
+                    a.centers,
+                    other.centers,
+                    "{name}/{}: {tag} centers diverged",
+                    algo.name()
+                );
+                assert_eq!(
+                    a.cost.median.to_bits(),
+                    other.cost.median.to_bits(),
+                    "{name}/{}: {tag} cost diverged",
+                    algo.name()
+                );
+                assert_eq!(a.rounds, other.rounds, "{name}/{}: {tag}", algo.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn rival_coordinators_recover_bit_identically_under_lossy_faults() {
+    let gen = DataGenConfig {
+        n: 800,
+        k: 4,
+        dim: 3,
+        sigma: 0.05,
+        contamination: 0.01,
+        seed: 83,
+        ..Default::default()
+    };
+    let data = gen.generate();
+    let z = data.n_outliers();
+    for algo in [Algorithm::MazzettoKMedian, Algorithm::CeccarelloKCenter] {
+        let clean_cfg = ClusterConfig {
+            z,
+            fail_prob: 0.0,
+            straggler_prob: 0.0,
+            ..arena_cfg(4, 6, 83)
+        };
+        let lossy_cfg = ClusterConfig {
+            fail_prob: 0.05,
+            ..clean_cfg.clone()
+        };
+        let clean = run_algorithm_with(algo, &data.points, &clean_cfg, &NativeBackend).unwrap();
+        let lossy = run_algorithm_with(algo, &data.points, &lossy_cfg, &NativeBackend).unwrap();
+        assert_eq!(
+            clean.centers,
+            lossy.centers,
+            "{}: lossy recovery changed the centers",
+            algo.name()
+        );
+        assert_eq!(
+            clean.cost.median.to_bits(),
+            lossy.cost.median.to_bits(),
+            "{}: lossy recovery changed the cost",
+            algo.name()
+        );
+        assert_eq!(clean.rounds, lossy.rounds, "{}", algo.name());
+    }
+}

@@ -18,11 +18,13 @@ fn tmpfile(name: &str) -> PathBuf {
     dir.join(name)
 }
 
-const STREAMING: [Algorithm; 4] = [
+const STREAMING: [Algorithm; 6] = [
     Algorithm::MrKCenter,
     Algorithm::RobustKCenter,
     Algorithm::CoresetKMedian,
     Algorithm::DivideLloyd,
+    Algorithm::MazzettoKMedian,
+    Algorithm::CeccarelloKCenter,
 ];
 
 /// Every streaming coordinator, several seeds: the file-backed run must

@@ -204,7 +204,7 @@ fn run_matrix(algo: Algorithm) {
     }
 }
 
-// The five matrix tests are `#[ignore]`d so the debug tier-1 `cargo test`
+// The seven matrix tests are `#[ignore]`d so the debug tier-1 `cargo test`
 // stays fast; the CI `scenario-matrix` job runs them in release with
 // `--include-ignored` (and locally: `cargo test --release --test scenario
 // -- --include-ignored`, optionally with SCENARIO_FULL=1).
@@ -237,6 +237,18 @@ fn scenario_mr_kcenter() {
 #[ignore = "run via the scenario-matrix CI job (release mode)"]
 fn scenario_streaming() {
     run_matrix(Algorithm::StreamingGuha);
+}
+
+#[test]
+#[ignore = "run via the scenario-matrix CI job (release mode)"]
+fn scenario_mazzetto_kmedian() {
+    run_matrix(Algorithm::MazzettoKMedian);
+}
+
+#[test]
+#[ignore = "run via the scenario-matrix CI job (release mode)"]
+fn scenario_ceccarello_kcenter() {
+    run_matrix(Algorithm::CeccarelloKCenter);
 }
 
 /// The simulation axis of the matrix: no-sim, a flat shared fabric, and

@@ -108,6 +108,38 @@ fn robust_kcenter_within_constant_of_exact_best_z_drop_optimum() {
 }
 
 #[test]
+fn rival_coordinators_within_envelope_of_exact_optimum() {
+    // The arena's rival pipelines under the hostile fault regime: the
+    // Mazzetto coreset k-median must land within the same 10x envelope as
+    // the paper's k-median pipelines (its coreset is near-lossless at this
+    // scale, so the observed ratio tracks weighted local search), and the
+    // Ceccarello skeleton k-center within the 6x envelope the robust
+    // pipeline is held to (greedy factor 3 plus skeleton radius slack).
+    for seed in [15u64, 16] {
+        let points = tiny_blobs(42, 3, seed);
+        let opt_median = exact_kmedian(&points, 3);
+        let opt_center = exact_kcenter(&points, 3);
+        assert!(opt_median > 0.0 && opt_center > 0.0);
+        let out =
+            run_algorithm(Algorithm::MazzettoKMedian, &points, &oracle_cluster_cfg(3, seed))
+                .unwrap();
+        let cost = kmedian_cost(&points, &out.centers);
+        assert!(
+            cost <= opt_median * 10.0 + 1e-6,
+            "seed {seed} Mazzetto: cost {cost} vs exact OPT {opt_median}"
+        );
+        let out =
+            run_algorithm(Algorithm::CeccarelloKCenter, &points, &oracle_cluster_cfg(3, seed))
+                .unwrap();
+        let radius = kcenter_cost(&points, &out.centers);
+        assert!(
+            radius <= opt_center * 6.0 + 1e-6,
+            "seed {seed} Ceccarello: radius {radius} vs exact OPT {opt_center}"
+        );
+    }
+}
+
+#[test]
 fn outlier_oracle_agrees_with_hand_computation() {
     // Points {0, 1, 2, 50} on a line, k = 1, z = 1: drop 50, put the
     // center at 1 (cost 1) — any other choice pays more.
